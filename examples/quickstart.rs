@@ -1,0 +1,58 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! Builds a 2-rank balanced toy network with collective spike exchange,
+//! runs 100 ms of model time on the PJRT backend (the AOT-compiled Pallas
+//! LIF kernel) when artifacts are available, and prints rates.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use nestgpu::engine::{SimConfig, Simulator};
+use nestgpu::harness::run_cluster;
+use nestgpu::models::balanced::{build_balanced, BalancedConfig};
+use nestgpu::runtime::BackendKind;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let backend = if artifacts.join("manifest.json").exists() {
+        println!("backend: PJRT (AOT artifacts from {})", artifacts.display());
+        BackendKind::Pjrt { artifacts }
+    } else {
+        println!("backend: native (run `make artifacts` for the PJRT path)");
+        BackendKind::Native
+    };
+
+    let cfg = SimConfig {
+        backend,
+        seed: 42,
+        ..Default::default()
+    };
+    let bal = BalancedConfig {
+        scale: 0.01,   // 112 neurons per rank
+        k_scale: 0.01, // K_in = 113
+        ..Default::default()
+    };
+    println!(
+        "balanced network: {} neurons/rank, K_in = {}, collective exchange\n",
+        bal.neurons_per_rank(),
+        bal.kin_e() + bal.kin_i()
+    );
+
+    let results = run_cluster(
+        2,
+        &cfg,
+        &move |sim: &mut Simulator| build_balanced(sim, &bal),
+        100.0,
+    )?;
+
+    for r in &results {
+        let rate = r.n_spikes as f64 / r.n_neurons as f64 / 0.1;
+        println!(
+            "rank {}: {} neurons, {} connections, {} images, {} spikes \
+             ({rate:.1} sp/s), RTF {:.2}",
+            r.rank, r.n_neurons, r.n_connections, r.n_images, r.n_spikes, r.rtf
+        );
+    }
+    println!("\nconstruction phases (rank 0): {:?}", results[0].phases);
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Validation example (Appendix A, quick version): offboard vs onboard
+//! construction of the downscaled cortical microcircuit, compared through
+//! the EMD protocol over firing rate, CV ISI and Pearson correlation.
+//!
+//! This is the runnable version of the protocol behind Figs. 7–8 (the
+//! bench `fig7_8_validation` runs the fuller sweep).
+
+use nestgpu::connection::{ConnRule, NodeSet, SynSpec};
+use nestgpu::engine::{SimConfig, Simulator};
+use nestgpu::harness::run_single;
+use nestgpu::models::microcircuit::{Microcircuit, BG_RATE_HZ};
+use nestgpu::node::LifParams;
+use nestgpu::stats::validate::{StatDistributions, ValidationReport};
+use nestgpu::stats::SpikeData;
+use nestgpu::util::table::median_iqr;
+
+const T_MS: f64 = 300.0;
+const SEEDS: u64 = 3;
+
+fn build(sim: &mut Simulator) {
+    let mc = Microcircuit::new(0.01, 0.01);
+    let sizes = mc.sizes();
+    let params = LifParams::default();
+    let mut bases = [0u32; 8];
+    for p in 0..8 {
+        if let NodeSet::Range { start, .. } = sim.create_neurons(sizes[p], &params) {
+            bases[p] = start;
+        }
+    }
+    for p in 0..8 {
+        let gen = sim.create_poisson(mc.k_ext(p) as f64 * BG_RATE_HZ);
+        sim.connect(
+            &gen,
+            &NodeSet::range(bases[p], sizes[p]),
+            &ConnRule::AllToAll,
+            &SynSpec::new(mc.weight_ext(), 1),
+        );
+    }
+    for t in 0..8 {
+        for s in 0..8 {
+            let k = mc.indegree(t, s);
+            if k > 0 {
+                sim.connect(
+                    &NodeSet::range(bases[s], sizes[s]),
+                    &NodeSet::range(bases[t], sizes[t]),
+                    &ConnRule::FixedIndegree { k },
+                    &SynSpec::new(mc.weight(t, s), mc.delay_steps(s, 0.1) as u32),
+                );
+            }
+        }
+    }
+}
+
+fn run_set(offboard: bool, seed0: u64) -> Vec<StatDistributions> {
+    let n = Microcircuit::new(0.01, 0.01).total_neurons() as u32;
+    (0..SEEDS)
+        .map(|i| {
+            let cfg = SimConfig {
+                seed: seed0 + i,
+                offboard,
+                ..Default::default()
+            };
+            let r = run_single(&cfg, &build, T_MS).expect("run");
+            let d = SpikeData::from_events(&r.spikes, 0, n, (T_MS / 0.1) as u32, 0.1);
+            StatDistributions::from_spikes(&d, 100, 2.0)
+        })
+        .collect()
+}
+
+fn main() {
+    println!("validating onboard vs offboard construction ({SEEDS} seeds/set, T={T_MS} ms)...\n");
+    let ref_a = run_set(true, 10);
+    let ref_b = run_set(true, 20);
+    let new = run_set(false, 30);
+    let report = ValidationReport::build(&ref_a, &ref_b, &new);
+
+    for (name, cmp) in [
+        ("firing rate ", &report.rates),
+        ("CV ISI      ", &report.cv_isi),
+        ("correlation ", &report.correlations),
+    ] {
+        println!(
+            "{name}: EMD code-vs-code median {:.4} | seed-vs-seed median {:.4} | compatible: {}",
+            median_iqr(&cmp.cross_code).0,
+            median_iqr(&cmp.cross_seed).0,
+            cmp.compatible(2.0)
+        );
+    }
+    println!(
+        "\nverdict: onboard construction statistically compatible with offboard: {}",
+        report.all_compatible(2.0)
+    );
+}

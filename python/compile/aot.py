@@ -1,0 +1,80 @@
+"""AOT bridge: lower the L2 model to HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from ``python/``)::
+
+    python -m compile.aot --out ../artifacts
+
+Writes ``lif_b<N>.hlo.txt`` for each block size plus ``manifest.json``
+recording block sizes and the parameter packing order the Rust side must use.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.lif import NUM_PARAMS, PARAM_ORDER
+
+# Block sizes to AOT-compile. The runtime picks the largest block <= the
+# remaining padded neuron count, so a rank with 40k neurons does 4 calls at
+# 8192 + 8 calls at 1024 rather than 40 calls at 1024.
+BLOCK_SIZES = (256, 1024, 8192)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_block(n: int) -> str:
+    fn, args = model.rank_step_abstract(n)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--blocks", type=int, nargs="*", default=list(BLOCK_SIZES))
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    entries = []
+    for n in args.blocks:
+        text = lower_block(n)
+        fname = f"lif_b{n}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        entries.append({"block": n, "file": fname})
+        print(f"aot: wrote {fname} ({len(text)} chars)")
+
+    manifest = {
+        "kernel": "iaf_psc_exp",
+        "version": 1,
+        "num_params": NUM_PARAMS,
+        "param_order": list(PARAM_ORDER),
+        "blocks": entries,
+        # 6 array inputs + params; 5 array outputs as a tuple.
+        "inputs": ["v", "i_ex", "i_in", "r", "w_ex", "w_in", "params"],
+        "outputs": ["v", "i_ex", "i_in", "r", "spike"],
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"aot: wrote manifest.json ({len(entries)} blocks)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Pure-jnp oracle for the L1 Pallas LIF kernel.
+
+This is the correctness reference for ``lif.py`` (and, transitively, for the
+Rust native backend, which mirrors the same update): the exact-integration
+iaf_psc_exp scheme written as plain jax.numpy, with the propagators computed
+from the biophysical parameters.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from .lif import NUM_PARAMS, PARAM_ORDER
+
+
+@dataclass(frozen=True)
+class LifParams:
+    """Biophysical iaf_psc_exp parameters (NEST defaults unless noted)."""
+
+    tau_m: float = 10.0       # membrane time constant (ms)
+    c_m: float = 250.0        # membrane capacitance (pF)
+    tau_syn_ex: float = 0.5   # excitatory synaptic time constant (ms)
+    tau_syn_in: float = 0.5   # inhibitory synaptic time constant (ms)
+    e_l: float = -65.0        # resting potential (mV); state v is V_m - E_L
+    v_th: float = -50.0       # spike threshold (mV, absolute)
+    v_reset: float = -65.0    # reset potential (mV, absolute)
+    t_ref: float = 2.0        # refractory period (ms)
+    i_e: float = 0.0          # constant input current (pA)
+    dt: float = 0.1           # integration step (ms)
+
+    def propagators(self) -> dict:
+        """Exact propagator matrix entries for step dt (as in NEST)."""
+        h = self.dt
+        p22 = math.exp(-h / self.tau_m)
+        p11ex = math.exp(-h / self.tau_syn_ex)
+        p11in = math.exp(-h / self.tau_syn_in)
+
+        def p21(tau_syn: float, p11: float) -> float:
+            if abs(tau_syn - self.tau_m) < 1e-9:
+                # degenerate limit tau_syn -> tau_m: h/C * exp(-h/tau)
+                return h / self.c_m * p22
+            return (
+                self.tau_m * tau_syn
+                / (self.c_m * (self.tau_m - tau_syn))
+                * (p22 - p11)
+            )
+
+        p21ex = p21(self.tau_syn_ex, p11ex)
+        p21in = p21(self.tau_syn_in, p11in)
+        p20 = self.tau_m / self.c_m * (1.0 - p22)
+        return {
+            "p22": p22,
+            "p21ex": p21ex,
+            "p21in": p21in,
+            "p20": p20,
+            "p11ex": p11ex,
+            "p11in": p11in,
+            "theta": self.v_th - self.e_l,
+            "v_reset": self.v_reset - self.e_l,
+            "t_ref": round(self.t_ref / h),
+            "i_e": self.i_e,
+        }
+
+    def packed(self) -> jnp.ndarray:
+        """Parameter vector in PARAM_ORDER, as consumed by the kernel."""
+        props = self.propagators()
+        return jnp.asarray([props[k] for k in PARAM_ORDER], dtype=jnp.float32)
+
+
+def lif_update_ref(v, i_ex, i_in, r, w_ex, w_in, params):
+    """Reference LIF update; semantics identical to kernels.lif._lif_kernel."""
+    assert params.shape == (NUM_PARAMS,)
+    p22, p21ex, p21in, p20, p11ex, p11in, theta, v_reset, t_ref, i_e = [
+        params[i] for i in range(NUM_PARAMS)
+    ]
+    not_ref = r <= 0.0
+    v_prop = p22 * v + p21ex * i_ex + p21in * i_in + p20 * i_e
+    v_new = jnp.where(not_ref, v_prop, v)
+    i_ex_new = p11ex * i_ex + w_ex
+    i_in_new = p11in * i_in + w_in
+    spike = jnp.logical_and(not_ref, v_new >= theta)
+    v_new = jnp.where(spike, v_reset, v_new)
+    r_new = jnp.where(spike, t_ref, jnp.maximum(r - 1.0, 0.0))
+    return v_new, i_ex_new, i_in_new, r_new, spike.astype(jnp.float32)

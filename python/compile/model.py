@@ -1,0 +1,44 @@
+"""Layer-2 JAX model: the per-rank, per-timestep neuron-state update.
+
+The paper's state-propagation loop interleaves (a) spike delivery through the
+connection structures — owned by the Rust Layer-3 coordinator — and (b) the
+device-side neuron dynamics update — this module. ``rank_step`` is the
+computation the coordinator calls once per time step per state block: it
+wraps the Layer-1 Pallas kernel so that the lowered HLO contains the kernel
+body inline.
+
+This module is build-time only. ``aot.py`` lowers ``rank_step`` once per
+block size to HLO text under ``artifacts/``; Python never runs on the
+request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lif
+from .kernels.lif import NUM_PARAMS
+
+
+def rank_step(v, i_ex, i_in, r, w_ex, w_in, params):
+    """One propagation step for a block of neurons.
+
+    Thin by design: the coordination (ring buffers, spike routing, MPI) is
+    Layer 3's contribution in this paper; the device kernel is the fused LIF
+    update. Returns ``(v', i_ex', i_in', r', spike)``.
+    """
+    return lif.lif_update(v, i_ex, i_in, r, w_ex, w_in, params,
+                          block=min(lif.BLOCK, v.shape[0]))
+
+
+def rank_step_abstract(n: int):
+    """(lowerable_fn, example_args) for a block array of ``n`` neurons."""
+    f32 = jnp.float32
+    state = jax.ShapeDtypeStruct((n,), f32)
+    params = jax.ShapeDtypeStruct((NUM_PARAMS,), f32)
+
+    def fn(v, i_ex, i_in, r, w_ex, w_in, p):
+        return rank_step(v, i_ex, i_in, r, w_ex, w_in, p)
+
+    return fn, (state, state, state, state, state, state, params)

@@ -1,0 +1,61 @@
+"""Emit golden test vectors for the Rust PJRT runtime integration test.
+
+Runs the L1 oracle on a deterministic input block and writes
+``artifacts/testvec.json`` with inputs, packed params and expected outputs;
+``rust/tests/it_runtime.rs`` loads the AOT artifact, executes it through the
+PJRT CPU client and asserts allclose against these vectors.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.ref import LifParams, lif_update_ref
+
+N = 256  # must match one of the AOT block sizes
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(20250710)
+    v = rng.uniform(-5.0, 16.0, N).astype(np.float32)
+    i_ex = rng.uniform(0.0, 400.0, N).astype(np.float32)
+    i_in = rng.uniform(-400.0, 0.0, N).astype(np.float32)
+    r = rng.integers(0, 3, N).astype(np.float32)
+    w_ex = rng.uniform(0.0, 80.0, N).astype(np.float32)
+    w_in = rng.uniform(-80.0, 0.0, N).astype(np.float32)
+    params = np.asarray(LifParams().packed(), dtype=np.float32)
+
+    outs = lif_update_ref(*(jnp.asarray(a) for a in (v, i_ex, i_in, r, w_ex, w_in)),
+                          jnp.asarray(params))
+    vec = {
+        "block": N,
+        "inputs": {
+            "v": v.tolist(), "i_ex": i_ex.tolist(), "i_in": i_in.tolist(),
+            "r": r.tolist(), "w_ex": w_ex.tolist(), "w_in": w_in.tolist(),
+            "params": params.tolist(),
+        },
+        "outputs": {
+            "v": np.asarray(outs[0]).tolist(),
+            "i_ex": np.asarray(outs[1]).tolist(),
+            "i_in": np.asarray(outs[2]).tolist(),
+            "r": np.asarray(outs[3]).tolist(),
+            "spike": np.asarray(outs[4]).tolist(),
+        },
+    }
+    path = os.path.join(args.out, "testvec.json")
+    with open(path, "w") as f:
+        json.dump(vec, f)
+    print(f"testvec: wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Allow `pytest python/tests` from the repo root as well as `pytest tests`
+# from python/: make the `compile` package importable either way.
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

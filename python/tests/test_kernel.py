@@ -1,0 +1,165 @@
+"""L1 correctness: Pallas LIF kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the device kernel: every behaviour
+(subthreshold integration, spiking, reset, refractoriness, synaptic decay)
+is asserted against ``ref.lif_update_ref``, plus hypothesis sweeps over
+shapes and value ranges.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lif, ref
+from compile.kernels.ref import LifParams, lif_update_ref
+
+
+def _state(n, seed=0, v_range=(-5.0, 20.0)):
+    rng = np.random.default_rng(seed)
+    v = rng.uniform(*v_range, n).astype(np.float32)
+    i_ex = rng.uniform(0.0, 500.0, n).astype(np.float32)
+    i_in = rng.uniform(-500.0, 0.0, n).astype(np.float32)
+    r = rng.integers(0, 4, n).astype(np.float32)
+    w_ex = rng.uniform(0.0, 100.0, n).astype(np.float32)
+    w_in = rng.uniform(-100.0, 0.0, n).astype(np.float32)
+    return tuple(jnp.asarray(a) for a in (v, i_ex, i_in, r, w_ex, w_in))
+
+
+def _run_both(n, seed=0, params=None, block=None):
+    p = (params or LifParams()).packed()
+    args = _state(n, seed)
+    block = block or min(lif.BLOCK, n)
+    out_k = lif.lif_update(*args, p, block=block)
+    out_r = lif_update_ref(*args, p)
+    return out_k, out_r
+
+
+@pytest.mark.parametrize("n", [1, 7, 64, 256, 1024, 4096])
+def test_kernel_matches_ref(n):
+    block = n if n < lif.BLOCK else lif.BLOCK
+    out_k, out_r = _run_both(n, block=block)
+    for k, r, name in zip(out_k, out_r, ["v", "i_ex", "i_in", "r", "spike"]):
+        np.testing.assert_allclose(k, r, rtol=1e-6, atol=1e-6, err_msg=name)
+
+
+def test_kernel_multi_block_grid():
+    """Grid > 1: BlockSpec tiling must partition the state correctly."""
+    out_k, out_r = _run_both(4 * 256, block=256)
+    for k, r in zip(out_k, out_r):
+        # fma/reassociation differences between the tiled and untiled
+        # lowering show up at the last ulp of f32
+        np.testing.assert_allclose(k, r, rtol=2e-5, atol=1e-6)
+
+
+def test_subthreshold_decay_towards_rest():
+    """With no input, V decays exponentially to 0 (= E_L) and never spikes."""
+    p = LifParams()
+    packed = p.packed()
+    n = 128
+    v = jnp.full((n,), 5.0, jnp.float32)
+    z = jnp.zeros((n,), jnp.float32)
+    props = p.propagators()
+    for _ in range(50):
+        v, _, _, _, s = lif.lif_update(v, z, z, z, z, z, packed, block=n)
+        assert float(s.sum()) == 0.0
+    expect = 5.0 * props["p22"] ** 50
+    np.testing.assert_allclose(np.asarray(v), expect, rtol=1e-4)
+
+
+def test_spike_and_reset_and_refractory():
+    """Driving V over theta spikes once, resets, and stays clamped t_ref steps."""
+    p = LifParams(t_ref=0.5)  # 5 steps at dt=0.1
+    packed = p.packed()
+    props = p.propagators()
+    n = 8
+    v = jnp.full((n,), props["theta"] + 1.0, jnp.float32)
+    z = jnp.zeros((n,), jnp.float32)
+    v, _, _, r, s = lif.lif_update(v, z, z, z, z, z, packed, block=n)
+    assert float(s.sum()) == n  # all spiked
+    np.testing.assert_allclose(np.asarray(v), props["v_reset"], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(r), props["t_ref"])
+    # during refractoriness no integration happens and no second spike occurs
+    big = jnp.full((n,), 1e4, jnp.float32)
+    for step in range(int(props["t_ref"])):
+        v, _, _, r, s = lif.lif_update(v, big, z, r, z, z, packed, block=n)
+        assert float(s.sum()) == 0.0, f"spiked during refractory step {step}"
+        np.testing.assert_allclose(np.asarray(v), props["v_reset"], rtol=1e-6)
+
+
+def test_synaptic_current_jump_and_decay():
+    p = LifParams()
+    packed = p.packed()
+    props = p.propagators()
+    n = 4
+    z = jnp.zeros((n,), jnp.float32)
+    w = jnp.full((n,), 40.0, jnp.float32)
+    _, i_ex, i_in, _, _ = lif.lif_update(z, z, z, z, w, -w, packed, block=n)
+    np.testing.assert_allclose(np.asarray(i_ex), 40.0)
+    np.testing.assert_allclose(np.asarray(i_in), -40.0)
+    _, i_ex2, i_in2, _, _ = lif.lif_update(z, i_ex, i_in, z, z, z, packed, block=n)
+    np.testing.assert_allclose(np.asarray(i_ex2), 40.0 * props["p11ex"], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(i_in2), -40.0 * props["p11in"], rtol=1e-6)
+
+
+def test_constant_current_fixed_point():
+    """With I_e only, V converges to tau_m/C_m * I_e (below threshold)."""
+    p = LifParams(i_e=300.0)
+    packed = p.packed()
+    n = 16
+    v = jnp.zeros((n,), jnp.float32)
+    z = jnp.zeros((n,), jnp.float32)
+    for _ in range(3000):
+        v, _, _, _, _ = lif.lif_update(v, z, z, z, z, z, packed, block=n)
+    np.testing.assert_allclose(np.asarray(v), p.tau_m / p.c_m * 300.0, rtol=1e-3)
+
+
+def test_equal_time_constants_degenerate_propagator():
+    p = LifParams(tau_syn_ex=10.0, tau_syn_in=10.0, tau_m=10.0)
+    props = p.propagators()
+    assert math.isfinite(props["p21ex"]) and props["p21ex"] > 0
+    out_k, out_r = _run_both(64, params=p, block=64)
+    for k, r in zip(out_k, out_r):
+        np.testing.assert_allclose(k, r, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([1, 3, 16, 100, 256]),
+    seed=st.integers(0, 2**31 - 1),
+    tau_m=st.floats(1.0, 50.0),
+    tau_syn=st.floats(0.1, 10.0),
+    t_ref=st.floats(0.0, 5.0),
+)
+def test_hypothesis_kernel_vs_ref(n, seed, tau_m, tau_syn, t_ref):
+    p = LifParams(tau_m=tau_m, tau_syn_ex=tau_syn, tau_syn_in=tau_syn,
+                  t_ref=t_ref)
+    out_k, out_r = _run_both(n, seed=seed, params=p, block=n)
+    for k, r in zip(out_k, out_r):
+        np.testing.assert_allclose(k, r, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_multi_step_trajectory(seed):
+    """10-step closed-loop trajectory stays in lockstep with the oracle."""
+    p = LifParams().packed()
+    kv = rv = _state(64, seed)[:4]
+    w = _state(64, seed + 1)[4:6]
+    kv, rv = list(kv), list(rv)
+    for _ in range(10):
+        ko = lif.lif_update(*kv, *w, p, block=64)
+        ro = lif_update_ref(*rv, *w, p)
+        kv, rv = list(ko[:4]), list(ro[:4])
+        np.testing.assert_allclose(ko[4], ro[4])
+    for k, r in zip(kv, rv):
+        np.testing.assert_allclose(k, r, rtol=1e-5, atol=1e-5)
+
+
+def test_spike_flag_is_binary():
+    out_k, _ = _run_both(1024, seed=3)
+    s = np.asarray(out_k[4])
+    assert set(np.unique(s)).issubset({0.0, 1.0})

@@ -1,0 +1,60 @@
+//! Figs. 10–11 (Appendix C): the Fig. 6 construction breakdown repeated at
+//! different network scales (paper: scale 10 and 30 vs the main text's 20;
+//! here proportionally smaller workloads with the same 1:2:3 ratios).
+
+use nestgpu::engine::SimConfig;
+use nestgpu::harness::experiments::{balanced_weak_scaling, write_result};
+use nestgpu::models::balanced::BalancedConfig;
+use nestgpu::remote::levels::{GpuMemLevel, ALL_LEVELS};
+use nestgpu::util::json::Json;
+use nestgpu::util::table::{fmt_secs, Table};
+
+const RANKS: [usize; 4] = [2, 4, 8, 16];
+const MAX_LIVE: usize = 8;
+
+fn main() {
+    let mut all = Vec::new();
+    for (fig, scale) in [("fig10 (scale 10)", 0.01), ("fig11 (scale 30)", 0.03)] {
+        let bal = BalancedConfig {
+            scale,
+            k_scale: scale,
+            ..Default::default()
+        };
+        let cfg = SimConfig::default();
+        println!(
+            "{fig}: {} neurons/rank, {} synapses/rank",
+            bal.neurons_per_rank(),
+            bal.synapses_per_rank()
+        );
+        let pts = balanced_weak_scaling(&RANKS, &ALL_LEVELS, &bal, &cfg, MAX_LIVE, 1, 2, 0.0);
+        let mut t = Table::new(
+            &format!("{fig} — creation+connection / preparation vs ranks"),
+            &["ranks", "level", "creation+conn", "preparation", "mode"],
+        );
+        for p in &pts {
+            t.row(vec![
+                p.virtual_ranks.to_string(),
+                p.level.name().into(),
+                fmt_secs(p.agg.creation_and_connection_s),
+                fmt_secs(p.agg.preparation_s),
+                if p.estimated { "estimated".into() } else { "simulated".into() },
+            ]);
+            all.push(Json::obj(vec![
+                ("figure", Json::str(fig)),
+                ("ranks", Json::num(p.virtual_ranks as f64)),
+                ("level", Json::str(p.level.name())),
+                (
+                    "creation_and_connection_s",
+                    Json::num(p.agg.creation_and_connection_s),
+                ),
+                ("preparation_s", Json::num(p.agg.preparation_s)),
+                ("estimated", Json::Bool(p.estimated)),
+            ]));
+        }
+        t.print();
+        println!();
+        let _ = GpuMemLevel::L0;
+    }
+    println!("paper shape check: times scale ~linearly with the scale parameter");
+    write_result("fig10_11", &Json::Arr(all));
+}

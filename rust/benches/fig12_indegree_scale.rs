@@ -1,0 +1,81 @@
+//! Fig. 12 (Appendix D): balanced network with the `in_degree_scale`
+//! parameter — fewer neurons per rank, proportionally higher in-degree,
+//! constant synapse count and constant total input (weights divided by the
+//! in-degree scale). GPU memory level 0, as in the paper.
+//!
+//! Expected shape: node creation and simulation preparation times
+//! *decrease* with in_degree_scale (fewer neurons ⇒ fewer image nodes ⇒
+//! smaller maps to build and sort).
+
+use nestgpu::engine::SimConfig;
+use nestgpu::harness::experiments::{balanced_weak_scaling, write_result};
+use nestgpu::models::balanced::BalancedConfig;
+use nestgpu::remote::levels::GpuMemLevel;
+use nestgpu::util::json::Json;
+use nestgpu::util::table::{fmt_secs, Table};
+
+const RANKS: [usize; 3] = [2, 4, 8];
+const IDS: [f64; 4] = [1.0, 2.0, 5.0, 10.0];
+
+fn main() {
+    let mut t = Table::new(
+        "Fig. 12 — in-degree scale sweep (GPU memory level 0)",
+        &[
+            "ids",
+            "ranks",
+            "neurons/rank",
+            "K_in",
+            "creation+conn",
+            "preparation",
+        ],
+    );
+    let mut rows = Vec::new();
+    for &ids in &IDS {
+        let bal = BalancedConfig {
+            scale: 0.02,
+            k_scale: 0.02,
+            in_degree_scale: ids,
+            ..Default::default()
+        };
+        let cfg = SimConfig {
+            level: GpuMemLevel::L0,
+            ..Default::default()
+        };
+        let pts = balanced_weak_scaling(
+            &RANKS,
+            &[GpuMemLevel::L0],
+            &bal,
+            &cfg,
+            8,
+            1,
+            2,
+            0.0,
+        );
+        for p in &pts {
+            t.row(vec![
+                format!("{ids}"),
+                p.virtual_ranks.to_string(),
+                bal.neurons_per_rank().to_string(),
+                (bal.kin_e() + bal.kin_i()).to_string(),
+                fmt_secs(p.agg.creation_and_connection_s),
+                fmt_secs(p.agg.preparation_s),
+            ]);
+            rows.push(Json::obj(vec![
+                ("in_degree_scale", Json::num(ids)),
+                ("ranks", Json::num(p.virtual_ranks as f64)),
+                (
+                    "creation_and_connection_s",
+                    Json::num(p.agg.creation_and_connection_s),
+                ),
+                ("preparation_s", Json::num(p.agg.preparation_s)),
+                ("synapses_per_rank", Json::num(bal.synapses_per_rank() as f64)),
+            ]));
+        }
+    }
+    t.print();
+    println!(
+        "\npaper shape check: synapses/rank constant across ids; creation and \
+         preparation times shrink as in_degree_scale grows"
+    );
+    write_result("fig12", &Json::Arr(rows));
+}

@@ -1,0 +1,88 @@
+//! Fig. 13 (Appendix E): difference between simulated and estimated
+//! neuron/device creation + connection times at GPU memory level 0, as a
+//! percentage and in absolute terms with a linear fit over rank count.
+//!
+//! The paper observes <10% divergence at 256 nodes, growing with system
+//! size (jitter, thread migration); the estimator measures the same code
+//! path, so small differences are expected on this substrate too.
+
+use nestgpu::engine::SimConfig;
+use nestgpu::harness::experiments::{balanced_weak_scaling, write_result};
+use nestgpu::models::balanced::BalancedConfig;
+use nestgpu::remote::levels::GpuMemLevel;
+use nestgpu::util::json::Json;
+use nestgpu::util::table::Table;
+
+const RANKS: [usize; 3] = [2, 4, 8];
+
+fn main() {
+    let bal = BalancedConfig {
+        scale: 0.02,
+        k_scale: 0.02,
+        ..Default::default()
+    };
+    let cfg = SimConfig {
+        level: GpuMemLevel::L0,
+        ..Default::default()
+    };
+    let mut t = Table::new(
+        "Fig. 13 — simulated vs estimated creation+connection time (level 0)",
+        &["ranks", "simulated (s)", "estimated (s)", "diff (s)", "diff (%)"],
+    );
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    let mut rows = Vec::new();
+    for &vr in &RANKS {
+        // live (simulated)
+        let sim_pts =
+            balanced_weak_scaling(&[vr], &[GpuMemLevel::L0], &bal, &cfg, 64, 2, 2, 0.0);
+        // estimated: force estimation mode by setting max_live below vr
+        let est_pts =
+            balanced_weak_scaling(&[vr], &[GpuMemLevel::L0], &bal, &cfg, 0, 1, 2, 0.0);
+        let s = sim_pts[0].agg.creation_and_connection_s;
+        let e = est_pts[0].agg.creation_and_connection_s;
+        let diff = s - e;
+        let pct = 100.0 * diff / e.max(1e-12);
+        t.row(vec![
+            vr.to_string(),
+            format!("{s:.4}"),
+            format!("{e:.4}"),
+            format!("{diff:+.4}"),
+            format!("{pct:+.1}%"),
+        ]);
+        xs.push(vr as f64);
+        ys.push(diff);
+        rows.push(Json::obj(vec![
+            ("ranks", Json::num(vr as f64)),
+            ("simulated_s", Json::num(s)),
+            ("estimated_s", Json::num(e)),
+            ("diff_s", Json::num(diff)),
+            ("diff_pct", Json::num(pct)),
+        ]));
+    }
+    t.print();
+
+    // linear fit diff = a + b * ranks (the paper extrapolates to 4096 nodes)
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(&ys).map(|(x, y)| x * y).sum();
+    let b = (n * sxy - sx * sy) / (n * sxx - sx * sx).max(1e-12);
+    let a = (sy - b * sx) / n;
+    let extrapolated = a + b * 4096.0;
+    println!(
+        "\nlinear fit: diff(ranks) = {a:.4} + {b:.6} * ranks; extrapolation to \
+         4096 ranks: {extrapolated:.2} s (paper: ~14 s at 4096 nodes)"
+    );
+
+    write_result(
+        "fig13",
+        &Json::obj(vec![
+            ("rows", Json::Arr(rows)),
+            ("fit_a", Json::num(a)),
+            ("fit_b", Json::num(b)),
+            ("extrapolated_4096", Json::num(extrapolated)),
+        ]),
+    );
+}

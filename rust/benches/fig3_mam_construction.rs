@@ -1,0 +1,117 @@
+//! Fig. 3: offboard vs onboard construction of the Multi-Area Model.
+//!
+//! Panel (a): network-construction time split into its subtasks
+//! (initialization, neuron+device creation, local connection, remote
+//! connection, simulation preparation) for both construction methods.
+//! Panel (b): state propagation as real-time factor (box statistics over
+//! seeds).
+//!
+//! Paper reference (32 V100s, natural density): offboard 686 s vs onboard
+//! 55.5 s (>10x), with local/remote connection speedups of 20x/9x and
+//! comparable RTF (~16 vs ~15). Our substrate is a simulated device on one
+//! CPU, so absolute numbers differ; the comparison *shape* (onboard wins
+//! construction, RTF unchanged) is the reproduction target.
+
+use nestgpu::engine::{SimConfig, Simulator};
+use nestgpu::harness::experiments::{aggregate, write_result};
+use nestgpu::harness::run_cluster;
+use nestgpu::models::mam::{MamConfig, MamModel};
+use nestgpu::util::json::Json;
+use nestgpu::util::table::{fmt_secs, mean_std, median_iqr, Table};
+
+const RANKS: usize = 8;
+const SEEDS: u64 = 3;
+const T_MS: f64 = 50.0;
+
+fn mam() -> MamModel {
+    MamModel::new(MamConfig {
+        n_scale: 0.003,
+        k_scale: 0.04,
+        chi: 1.9,
+        kcc_base: 1500.0,
+    })
+}
+
+fn run(offboard: bool) -> (nestgpu::harness::experiments::Agg, Vec<f64>) {
+    let mut runs = Vec::new();
+    let mut rtfs = Vec::new();
+    for seed in 0..SEEDS {
+        let cfg = SimConfig {
+            seed: 1000 + seed,
+            offboard,
+            record_spikes: false,
+            ..Default::default()
+        };
+        let builder = move |sim: &mut Simulator| {
+            let m = mam();
+            let packing = m.pack(RANKS);
+            m.build(sim, &packing);
+        };
+        let results = run_cluster(RANKS, &cfg, &builder, T_MS).expect("mam run");
+        rtfs.extend(results.iter().map(|r| r.rtf));
+        runs.push(results);
+    }
+    (aggregate(&runs), rtfs)
+}
+
+fn main() {
+    println!("MAM: 32 areas packed on {RANKS} ranks, {SEEDS} seeds, T={T_MS} ms\n");
+    let (off, off_rtf) = run(true);
+    let (on, on_rtf) = run(false);
+
+    let mut t = Table::new(
+        "Fig. 3a — construction time by subtask (mean over ranks & seeds)",
+        &["subtask", "offboard", "onboard", "speedup"],
+    );
+    let row = |name: &str, a: f64, b: f64| {
+        vec![
+            name.to_string(),
+            fmt_secs(a),
+            fmt_secs(b),
+            format!("{:.1}x", a / b.max(1e-9)),
+        ]
+    };
+    t.row(row("neuron+device creation", off.node_creation_s, on.node_creation_s));
+    t.row(row("local connection", off.local_conn_s, on.local_conn_s));
+    t.row(row("remote connection", off.remote_conn_s, on.remote_conn_s));
+    t.row(row("simulation preparation", off.preparation_s, on.preparation_s));
+    t.row(row("TOTAL construction", off.construction_s, on.construction_s));
+    t.print();
+
+    let (off_mean, off_sd) = mean_std(&off_rtf);
+    let (on_mean, on_sd) = mean_std(&on_rtf);
+    let (off_med, _, _) = median_iqr(&off_rtf);
+    let (on_med, _, _) = median_iqr(&on_rtf);
+    let mut t2 = Table::new(
+        "Fig. 3b — state propagation (real-time factor)",
+        &["version", "mean", "sd", "median"],
+    );
+    t2.row(vec![
+        "offboard".into(),
+        format!("{off_mean:.2}"),
+        format!("{off_sd:.2}"),
+        format!("{off_med:.2}"),
+    ]);
+    t2.row(vec![
+        "onboard".into(),
+        format!("{on_mean:.2}"),
+        format!("{on_sd:.2}"),
+        format!("{on_med:.2}"),
+    ]);
+    t2.print();
+    println!(
+        "\npaper shape check: onboard construction {:.1}x faster; RTF ratio {:.2} (expect ~1)",
+        off.construction_s / on.construction_s.max(1e-9),
+        off_mean / on_mean.max(1e-9)
+    );
+
+    write_result(
+        "fig3",
+        &Json::obj(vec![
+            ("offboard", off.to_json()),
+            ("onboard", on.to_json()),
+            ("offboard_rtf", Json::arr_f64(&off_rtf)),
+            ("onboard_rtf", Json::arr_f64(&on_rtf)),
+        ]),
+    );
+}

@@ -1,0 +1,119 @@
+//! Fig. 4: weak scaling of the balanced network — network construction (a)
+//! and state propagation RTF (b) vs number of nodes, for all four GPU
+//! memory levels, plus level 3 with spike recording disabled.
+//!
+//! The paper runs 32–256 Leonardo nodes (128–1024 GPUs) at scale 20; here
+//! the workload is scaled down and worlds above MAX_LIVE ranks use the
+//! paper's estimation methodology (construction/preparation only).
+//! Expected shape: higher levels construct faster and propagate faster;
+//! disabling recording cuts ~20% of propagation.
+
+use nestgpu::engine::{SimConfig, Simulator};
+use nestgpu::harness::experiments::{aggregate, balanced_weak_scaling, write_result};
+use nestgpu::harness::run_cluster;
+use nestgpu::models::balanced::{build_balanced, BalancedConfig};
+use nestgpu::remote::levels::{GpuMemLevel, ALL_LEVELS};
+use nestgpu::util::json::Json;
+use nestgpu::util::table::{fmt_secs, Table};
+
+const RANKS: [usize; 5] = [2, 4, 8, 16, 32];
+const MAX_LIVE: usize = 8;
+const T_MS: f64 = 50.0;
+
+fn bal() -> BalancedConfig {
+    BalancedConfig {
+        scale: 0.02,
+        k_scale: 0.02,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let cfg = SimConfig {
+        record_spikes: true,
+        ..Default::default()
+    };
+    println!(
+        "balanced network, scale {:.3} ({} neurons/rank), live up to {MAX_LIVE} ranks\n",
+        bal().scale,
+        bal().neurons_per_rank()
+    );
+    let pts = balanced_weak_scaling(&RANKS, &ALL_LEVELS, &bal(), &cfg, MAX_LIVE, 2, 2, T_MS);
+
+    let mut ta = Table::new(
+        "Fig. 4a — network construction time vs ranks",
+        &["ranks", "level0", "level1", "level2", "level3", "mode"],
+    );
+    for &vr in &RANKS {
+        let cell = |lvl: GpuMemLevel| {
+            pts.iter()
+                .find(|p| p.virtual_ranks == vr && p.level == lvl)
+                .map(|p| fmt_secs(p.agg.construction_s))
+                .unwrap_or_default()
+        };
+        let est = pts
+            .iter()
+            .find(|p| p.virtual_ranks == vr)
+            .map(|p| p.estimated)
+            .unwrap_or(false);
+        ta.row(vec![
+            vr.to_string(),
+            cell(GpuMemLevel::L0),
+            cell(GpuMemLevel::L1),
+            cell(GpuMemLevel::L2),
+            cell(GpuMemLevel::L3),
+            if est { "estimated".into() } else { "simulated".into() },
+        ]);
+    }
+    ta.print();
+
+    // Fig. 4b: RTF (live runs only) + level 3 without recording
+    let mut tb = Table::new(
+        "Fig. 4b — state propagation (RTF) vs ranks (live runs)",
+        &["ranks", "level0", "level1", "level2", "level3", "L3 no-rec"],
+    );
+    for &vr in RANKS.iter().filter(|&&v| v <= MAX_LIVE) {
+        let cell = |lvl: GpuMemLevel| {
+            pts.iter()
+                .find(|p| p.virtual_ranks == vr && p.level == lvl)
+                .map(|p| format!("{:.2}", p.agg.rtf))
+                .unwrap_or_default()
+        };
+        // level 3 with recording disabled
+        let mut cfg_norec = cfg.clone();
+        cfg_norec.record_spikes = false;
+        cfg_norec.level = GpuMemLevel::L3;
+        let b = bal();
+        let norec = run_cluster(
+            vr,
+            &cfg_norec,
+            &move |sim: &mut Simulator| build_balanced(sim, &b),
+            T_MS,
+        )
+        .expect("no-rec run");
+        let norec_agg = aggregate(&[norec]);
+        tb.row(vec![
+            vr.to_string(),
+            cell(GpuMemLevel::L0),
+            cell(GpuMemLevel::L1),
+            cell(GpuMemLevel::L2),
+            cell(GpuMemLevel::L3),
+            format!("{:.2}", norec_agg.rtf),
+        ]);
+    }
+    tb.print();
+    println!("\npaper shape check: higher levels faster; no-recording ~20% faster RTF");
+
+    let rows: Vec<Json> = pts
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("ranks", Json::num(p.virtual_ranks as f64)),
+                ("level", Json::str(p.level.name())),
+                ("estimated", Json::Bool(p.estimated)),
+                ("agg", p.agg.to_json()),
+            ])
+        })
+        .collect();
+    write_result("fig4", &Json::Arr(rows));
+}

@@ -1,0 +1,110 @@
+//! Fig. 5: peak GPU memory per rank for the balanced network vs number of
+//! nodes, for the four GPU memory levels — measured (simulated + estimated
+//! at small scale) plus the analytic full-scale extrapolation at the
+//! paper's scale 20 including the A100 64 GB line and the level-0 plateau
+//! beyond P ≈ K_in.
+
+use nestgpu::engine::SimConfig;
+use nestgpu::harness::experiments::{balanced_weak_scaling, fig5_model_rows, write_result};
+use nestgpu::memory::model::A100_BYTES;
+use nestgpu::models::balanced::BalancedConfig;
+use nestgpu::remote::levels::{GpuMemLevel, ALL_LEVELS};
+use nestgpu::util::json::Json;
+use nestgpu::util::table::{fmt_bytes, Table};
+
+const RANKS: [usize; 5] = [2, 4, 8, 16, 32];
+const MAX_LIVE: usize = 8;
+
+fn main() {
+    let bal = BalancedConfig {
+        scale: 0.02,
+        k_scale: 0.02,
+        ..Default::default()
+    };
+    let cfg = SimConfig::default();
+    let pts = balanced_weak_scaling(&RANKS, &ALL_LEVELS, &bal, &cfg, MAX_LIVE, 1, 2, 0.0);
+
+    let mut t = Table::new(
+        "Fig. 5 (measured) — device memory peak per rank vs ranks",
+        &["ranks", "level0", "level1", "level2", "level3", "mode"],
+    );
+    for &vr in &RANKS {
+        let cell = |lvl: GpuMemLevel| {
+            pts.iter()
+                .find(|p| p.virtual_ranks == vr && p.level == lvl)
+                .map(|p| fmt_bytes(p.agg.device_peak as u64))
+                .unwrap_or_default()
+        };
+        let est = pts
+            .iter()
+            .find(|p| p.virtual_ranks == vr)
+            .map(|p| p.estimated)
+            .unwrap_or(false);
+        t.row(vec![
+            vr.to_string(),
+            cell(GpuMemLevel::L0),
+            cell(GpuMemLevel::L1),
+            cell(GpuMemLevel::L2),
+            cell(GpuMemLevel::L3),
+            if est { "estimated".into() } else { "simulated".into() },
+        ]);
+    }
+    t.print();
+
+    // full-scale analytic extrapolation (the paper's dashed curves)
+    let nodes = [32u64, 64, 128, 256, 512, 1024, 2048, 3072, 4096];
+    let mut t2 = Table::new(
+        "Fig. 5 (analytic, scale 20) — predicted per-GPU peak vs Leonardo nodes",
+        &["nodes", "level0", "level1", "level2", "level3", "fits A100?"],
+    );
+    let mut model_json = Vec::new();
+    for &n in &nodes {
+        let mut cells = vec![n.to_string()];
+        let mut fits = Vec::new();
+        for lvl in ALL_LEVELS {
+            let (_, peak) = fig5_model_rows(&[n], lvl, 20.0)[0];
+            cells.push(fmt_bytes(peak));
+            fits.push(peak <= A100_BYTES);
+            model_json.push(Json::obj(vec![
+                ("nodes", Json::num(n as f64)),
+                ("level", Json::str(lvl.name())),
+                ("peak_bytes", Json::num(peak as f64)),
+            ]));
+        }
+        cells.push(
+            ALL_LEVELS
+                .iter()
+                .zip(&fits)
+                .map(|(l, &f)| format!("{}{}", l.name().trim_start_matches("level"), if f { "y" } else { "N" }))
+                .collect::<Vec<_>>()
+                .join(" "),
+        );
+        t2.row(cells);
+    }
+    t2.print();
+    println!(
+        "A100 limit = {}; paper shape check: level-0 plateaus from ~3072 nodes \
+         (P > K_in) and reaches 4096 nodes within the A100 budget",
+        fmt_bytes(A100_BYTES)
+    );
+
+    let measured: Vec<Json> = pts
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("ranks", Json::num(p.virtual_ranks as f64)),
+                ("level", Json::str(p.level.name())),
+                ("estimated", Json::Bool(p.estimated)),
+                ("device_peak", Json::num(p.agg.device_peak)),
+                ("device_peak_sd", Json::num(p.agg.device_peak_sd)),
+            ])
+        })
+        .collect();
+    write_result(
+        "fig5",
+        &Json::obj(vec![
+            ("measured", Json::Arr(measured)),
+            ("model_scale20", Json::Arr(model_json)),
+        ]),
+    );
+}

@@ -1,0 +1,86 @@
+//! Fig. 6: balanced-network construction-time breakdown vs number of nodes
+//! per GPU memory level — (a) neuron/device creation + connection, (b)
+//! simulation preparation — with both estimated (bars) and simulated
+//! (markers) values.
+//!
+//! Expected shape (paper): level 0 scales worst in (a); in (b) levels 0
+//! and 1 behave alike (host-resident maps) while levels 2/3 profit from
+//! device-side sorting of the maps.
+
+use nestgpu::engine::SimConfig;
+use nestgpu::harness::experiments::{balanced_weak_scaling, write_result, ScalingPoint};
+use nestgpu::models::balanced::BalancedConfig;
+use nestgpu::remote::levels::{GpuMemLevel, ALL_LEVELS};
+use nestgpu::util::json::Json;
+use nestgpu::util::table::{fmt_secs, Table};
+
+const RANKS: [usize; 5] = [2, 4, 8, 16, 32];
+const MAX_LIVE: usize = 8;
+
+fn print_panel(pts: &[ScalingPoint], title: &str, get: impl Fn(&ScalingPoint) -> f64) {
+    let mut t = Table::new(
+        title,
+        &["ranks", "level0", "level1", "level2", "level3", "mode"],
+    );
+    for &vr in &RANKS {
+        let cell = |lvl: GpuMemLevel| {
+            pts.iter()
+                .find(|p| p.virtual_ranks == vr && p.level == lvl)
+                .map(|p| fmt_secs(get(p)))
+                .unwrap_or_default()
+        };
+        let est = pts
+            .iter()
+            .find(|p| p.virtual_ranks == vr)
+            .map(|p| p.estimated)
+            .unwrap_or(false);
+        t.row(vec![
+            vr.to_string(),
+            cell(GpuMemLevel::L0),
+            cell(GpuMemLevel::L1),
+            cell(GpuMemLevel::L2),
+            cell(GpuMemLevel::L3),
+            if est { "estimated".into() } else { "simulated".into() },
+        ]);
+    }
+    t.print();
+}
+
+fn main() {
+    let bal = BalancedConfig {
+        scale: 0.02,
+        k_scale: 0.02,
+        ..Default::default()
+    };
+    let cfg = SimConfig::default();
+    // construction only (t_ms = 0): both live and estimated points measure
+    // the same code path
+    let pts = balanced_weak_scaling(&RANKS, &ALL_LEVELS, &bal, &cfg, MAX_LIVE, 2, 2, 0.0);
+
+    print_panel(
+        &pts,
+        "Fig. 6a — neuron & device creation + connection time",
+        |p| p.agg.creation_and_connection_s,
+    );
+    println!();
+    print_panel(&pts, "Fig. 6b — simulation preparation time", |p| {
+        p.agg.preparation_s
+    });
+
+    let rows: Vec<Json> = pts
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("ranks", Json::num(p.virtual_ranks as f64)),
+                ("level", Json::str(p.level.name())),
+                ("estimated", Json::Bool(p.estimated)),
+                (
+                    "creation_and_connection_s",
+                    Json::num(p.agg.creation_and_connection_s),
+                ),
+                ("preparation_s", Json::num(p.agg.preparation_s)),
+            ])
+        })
+        .collect();
+    write_result("fig6", &Json::Arr(rows));
+}

@@ -1,0 +1,155 @@
+//! Figs. 7–8 (Appendix A): statistical validation of the onboard
+//! construction method against the offboard baseline on the cortical
+//! microcircuit.
+//!
+//! Three sets of runs (two offboard with different seeds, one onboard):
+//! for each the per-population distributions of firing rate, CV ISI and
+//! pairwise Pearson correlation are computed; Fig. 8 compares the pairwise
+//! EMD between code paths against the EMD between seeds — compatible when
+//! the code-vs-code distances fall within the seed-vs-seed spread.
+
+use nestgpu::connection::{ConnRule, NodeSet, SynSpec};
+use nestgpu::engine::{SimConfig, Simulator};
+use nestgpu::harness::run_single;
+use nestgpu::models::microcircuit::{Microcircuit, BG_RATE_HZ};
+use nestgpu::node::LifParams;
+use nestgpu::stats::validate::{StatDistributions, ValidationReport};
+use nestgpu::stats::SpikeData;
+use nestgpu::util::json::Json;
+use nestgpu::util::table::{mean_std, median_iqr, Table};
+
+const SEEDS_PER_SET: u64 = 4;
+const T_MS: f64 = 500.0;
+
+fn build_microcircuit(sim: &mut Simulator, mc: &Microcircuit) {
+    let sizes = mc.sizes();
+    let params = LifParams::default();
+    let mut bases = [0u32; 8];
+    for p in 0..8 {
+        let set = sim.create_neurons(sizes[p], &params);
+        if let NodeSet::Range { start, .. } = set {
+            bases[p] = start;
+        }
+    }
+    for p in 0..8 {
+        let gen = sim.create_poisson(mc.k_ext(p) as f64 * BG_RATE_HZ);
+        sim.connect(
+            &gen,
+            &NodeSet::range(bases[p], sizes[p]),
+            &ConnRule::AllToAll,
+            &SynSpec::new(mc.weight_ext(), 1),
+        );
+    }
+    for t in 0..8 {
+        for s in 0..8 {
+            let k = mc.indegree(t, s);
+            if k == 0 {
+                continue;
+            }
+            sim.connect(
+                &NodeSet::range(bases[s], sizes[s]),
+                &NodeSet::range(bases[t], sizes[t]),
+                &ConnRule::FixedIndegree { k },
+                &SynSpec::new(mc.weight(t, s), mc.delay_steps(s, 0.1) as u32),
+            );
+        }
+    }
+}
+
+fn run_set(offboard: bool, seed0: u64) -> Vec<StatDistributions> {
+    let mc = Microcircuit::new(0.02, 0.02);
+    let n_total = mc.total_neurons() as u32;
+    (0..SEEDS_PER_SET)
+        .map(|i| {
+            let cfg = SimConfig {
+                seed: seed0 + i,
+                offboard,
+                record_spikes: true,
+                ..Default::default()
+            };
+            let r = run_single(
+                &cfg,
+                &|sim: &mut Simulator| build_microcircuit(sim, &Microcircuit::new(0.02, 0.02)),
+                T_MS,
+            )
+            .expect("microcircuit run");
+            let data = SpikeData::from_events(&r.spikes, 0, n_total, (T_MS / 0.1) as u32, 0.1);
+            StatDistributions::from_spikes(&data, 200, 2.0)
+        })
+        .collect()
+}
+
+fn main() {
+    println!(
+        "microcircuit (2% scale), {SEEDS_PER_SET} seeds per set, T={T_MS} ms\n"
+    );
+    let ref_a = run_set(true, 100);
+    let ref_b = run_set(true, 200);
+    let new = run_set(false, 300);
+
+    // Fig. 7: population statistics summary (first set of each code path)
+    let mut t7 = Table::new(
+        "Fig. 7 — distribution summaries (offboard vs onboard)",
+        &["statistic", "offboard mean", "onboard mean"],
+    );
+    let m = |xs: &Vec<f64>| mean_std(xs).0;
+    t7.row(vec![
+        "firing rate (sp/s)".into(),
+        format!("{:.2}", m(&ref_a[0].rates)),
+        format!("{:.2}", m(&new[0].rates)),
+    ]);
+    t7.row(vec![
+        "CV ISI".into(),
+        format!("{:.3}", m(&ref_a[0].cv_isi)),
+        format!("{:.3}", m(&new[0].cv_isi)),
+    ]);
+    t7.row(vec![
+        "Pearson correlation".into(),
+        format!("{:.4}", m(&ref_a[0].correlations)),
+        format!("{:.4}", m(&new[0].correlations)),
+    ]);
+    t7.print();
+
+    // Fig. 8: EMD box comparison
+    let report = ValidationReport::build(&ref_a, &ref_b, &new);
+    let mut t8 = Table::new(
+        "Fig. 8 — EMD: code-vs-code vs seed-vs-seed (median)",
+        &["statistic", "code-vs-code", "seed-vs-seed", "compatible"],
+    );
+    let emd_row = |name: &str, c: &nestgpu::stats::validate::EmdComparison| {
+        vec![
+            name.to_string(),
+            format!("{:.4}", median_iqr(&c.cross_code).0),
+            format!("{:.4}", median_iqr(&c.cross_seed).0),
+            format!("{}", c.compatible(2.0)),
+        ]
+    };
+    t8.row(emd_row("firing rate", &report.rates));
+    t8.row(emd_row("CV ISI", &report.cv_isi));
+    t8.row(emd_row("correlation", &report.correlations));
+    t8.print();
+    println!(
+        "\npaper check: onboard adds no variability beyond seed changes -> all compatible: {}",
+        report.all_compatible(2.0)
+    );
+
+    write_result_json(&report);
+}
+
+fn write_result_json(report: &ValidationReport) {
+    let cmp = |c: &nestgpu::stats::validate::EmdComparison| {
+        Json::obj(vec![
+            ("cross_code", Json::arr_f64(&c.cross_code)),
+            ("cross_seed", Json::arr_f64(&c.cross_seed)),
+        ])
+    };
+    nestgpu::harness::experiments::write_result(
+        "fig7_8",
+        &Json::obj(vec![
+            ("rates", cmp(&report.rates)),
+            ("cv_isi", cmp(&report.cv_isi)),
+            ("correlations", cmp(&report.correlations)),
+            ("all_compatible", Json::Bool(report.all_compatible(2.0))),
+        ]),
+    );
+}

@@ -1,0 +1,229 @@
+//! §Perf microbenches: the coordinator's hot paths, measured in isolation.
+//!
+//! 1. connection sort-by-source (the dominant preparation cost, Fig. 6b);
+//! 2. spike delivery inner loop (ring-buffer accumulate);
+//! 3. (R, L) map merge (`RemoteConnect`'s ensure_images);
+//! 4. p2p exchange round-trip (2-rank world);
+//! 5. PJRT kernel call overhead vs the native backend, per block size.
+//!
+//! Results feed the EXPERIMENTS.md §Perf before/after log.
+
+use std::time::Instant;
+
+use nestgpu::comm::{CommWorld, Communicator, SpikeRecord};
+use nestgpu::connection::Connections;
+use nestgpu::memory::{MemKind, Tracker};
+use nestgpu::node::neuron::LifParams;
+use nestgpu::node::RingBuffers;
+use nestgpu::remote::pair_map::PairMap;
+use nestgpu::runtime::{native::NativeBackend, Backend, StateChunk};
+use nestgpu::util::json::Json;
+use nestgpu::util::rng::Rng;
+use nestgpu::util::table::{fmt_secs, Table};
+
+fn time<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn bench_sort(n_conns: usize, n_nodes: usize) -> (f64, f64) {
+    let mut rng = Rng::new(7);
+    let secs = time(3, || {
+        let mut tr = Tracker::new();
+        let mut c = Connections::new();
+        for _ in 0..n_conns {
+            c.push(
+                rng.below(n_nodes as u32),
+                rng.below(n_nodes as u32),
+                1.0,
+                1,
+                0,
+                &mut tr,
+            );
+        }
+        let t0 = Instant::now();
+        c.sort_by_source(n_nodes, &mut tr);
+        std::hint::black_box(t0.elapsed());
+    });
+    // measure the sort alone
+    let mut tr = Tracker::new();
+    let mut c = Connections::new();
+    for _ in 0..n_conns {
+        c.push(rng.below(n_nodes as u32), 0, 1.0, 1, 0, &mut tr);
+    }
+    let t0 = Instant::now();
+    c.sort_by_source(n_nodes, &mut tr);
+    let sort_only = t0.elapsed().as_secs_f64();
+    (secs, n_conns as f64 / sort_only)
+}
+
+fn bench_delivery(n_targets: usize) -> f64 {
+    let mut tr = Tracker::new();
+    let mut conns = Connections::new();
+    let mut rng = Rng::new(3);
+    for _ in 0..n_targets {
+        conns.push(0, rng.below(10_000), 1.0, 1 + (rng.below(14) as u16), 0, &mut tr);
+    }
+    conns.sort_by_source(10_001, &mut tr);
+    let lut: Vec<u32> = (0..10_001).collect();
+    let mut rb = RingBuffers::new(10_001, 16, &mut tr);
+    let per_call = time(200, || {
+        let rng_range = conns.outgoing(0);
+        let targets = &conns.target.as_slice()[rng_range.clone()];
+        let ports = &conns.port.as_slice()[rng_range.clone()];
+        let delays = &conns.delay.as_slice()[rng_range.clone()];
+        let weights = &conns.weight.as_slice()[rng_range];
+        for i in 0..targets.len() {
+            rb.add(lut[targets[i] as usize], ports[i], delays[i], weights[i], 1);
+        }
+        rb.advance();
+    });
+    n_targets as f64 / per_call // synapse events per second
+}
+
+fn bench_map_merge(map_size: usize, batch: usize) -> f64 {
+    let mut tr = Tracker::new();
+    let mut map = PairMap::new(MemKind::Device);
+    let mut next = 0u32;
+    let base: Vec<u32> = (0..map_size as u32).map(|i| i * 3).collect();
+    map.ensure_images(&base, &mut tr, || {
+        let v = next;
+        next += 1;
+        v
+    });
+    let news: Vec<u32> = (0..batch as u32).map(|i| i * 3 + 1).collect();
+    time(20, || {
+        let mut m2 = PairMap::new(MemKind::Device);
+        let mut nx = 0u32;
+        m2.ensure_images(&base, &mut tr, || {
+            let v = nx;
+            nx += 1;
+            v
+        });
+        m2.ensure_images(&news, &mut tr, || {
+            let v = nx;
+            nx += 1;
+            v
+        });
+    })
+}
+
+fn bench_exchange(packet_len: usize) -> f64 {
+    let world = CommWorld::new(2);
+    let mut comms = world.communicators();
+    let c1 = comms.pop().unwrap();
+    let mut c0 = comms.pop().unwrap();
+    let handle = std::thread::spawn(move || {
+        let mut c1 = c1;
+        for _ in 0..201 {
+            let out = vec![vec![], vec![]];
+            let _ = c1.exchange(out);
+        }
+    });
+    let pkt: Vec<SpikeRecord> = (0..packet_len as u32)
+        .map(|i| SpikeRecord { pos: i, mult: 1 })
+        .collect();
+    let per_round = time(200, || {
+        let out = vec![vec![], pkt.clone()];
+        let _ = c0.exchange(out);
+    });
+    handle.join().unwrap();
+    per_round
+}
+
+fn bench_backends() -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    let params = LifParams::default().packed(0.1);
+    let mut tr = Tracker::new();
+    for &n in &[1024usize, 8192] {
+        let mut chunk = StateChunk::new(n, params, &mut tr);
+        let mut nat = NativeBackend::new();
+        let t = time(50, || {
+            nat.step(&mut chunk).unwrap();
+        });
+        out.push((format!("native n={n}"), n as f64 / t));
+    }
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let mut pjrt = nestgpu::runtime::pjrt::PjrtBackend::load(&dir).unwrap();
+        for &n in &[1024usize, 8192] {
+            let mut chunk = StateChunk::new(n, params, &mut tr);
+            let t = time(50, || {
+                pjrt.step(&mut chunk).unwrap();
+            });
+            out.push((format!("pjrt   n={n}"), n as f64 / t));
+        }
+    } else {
+        println!("(skipping PJRT backend bench: run `make artifacts`)");
+    }
+    out
+}
+
+fn main() {
+    let mut t = Table::new("§Perf — coordinator hot paths", &["path", "metric", "value"]);
+    let mut json = Vec::new();
+
+    let (_, sort_rate) = bench_sort(2_000_000, 100_000);
+    t.row(vec![
+        "connection sort-by-source".into(),
+        "conns/s".into(),
+        format!("{:.2e}", sort_rate),
+    ]);
+    json.push(Json::obj(vec![
+        ("path", Json::str("sort")),
+        ("conns_per_s", Json::num(sort_rate)),
+    ]));
+
+    let deliv = bench_delivery(10_000);
+    t.row(vec![
+        "spike delivery (10k fanout)".into(),
+        "syn events/s".into(),
+        format!("{:.2e}", deliv),
+    ]);
+    json.push(Json::obj(vec![
+        ("path", Json::str("delivery")),
+        ("events_per_s", Json::num(deliv)),
+    ]));
+
+    let merge = bench_map_merge(100_000, 10_000);
+    t.row(vec![
+        "map merge (100k + 10k)".into(),
+        "s/call".into(),
+        fmt_secs(merge),
+    ]);
+    json.push(Json::obj(vec![
+        ("path", Json::str("map_merge")),
+        ("secs", Json::num(merge)),
+    ]));
+
+    let xch = bench_exchange(1_000);
+    t.row(vec![
+        "p2p exchange round (1k spikes)".into(),
+        "s/round".into(),
+        fmt_secs(xch),
+    ]);
+    json.push(Json::obj(vec![
+        ("path", Json::str("exchange")),
+        ("secs_per_round", Json::num(xch)),
+    ]));
+
+    for (name, rate) in bench_backends() {
+        t.row(vec![
+            format!("backend step {name}"),
+            "neuron updates/s".into(),
+            format!("{:.2e}", rate),
+        ]);
+        json.push(Json::obj(vec![
+            ("path", Json::str(&format!("backend {name}"))),
+            ("updates_per_s", Json::num(rate)),
+        ]));
+    }
+
+    t.print();
+    nestgpu::harness::experiments::write_result("perf_hotpaths", &Json::Arr(json));
+}

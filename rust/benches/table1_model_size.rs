@@ -1,0 +1,39 @@
+//! Table 1: scalable balanced network model size as a function of the
+//! number of compute nodes (scale 20, 4 GPUs per node, K_in = 11,250).
+//!
+//! Regenerates the paper's rows exactly (these are analytic — the paper's
+//! table documents the weak-scaling workload, not a measurement).
+
+use nestgpu::memory::model::table1_row;
+use nestgpu::util::json::Json;
+use nestgpu::util::table::Table;
+
+fn main() {
+    let nodes = [32u64, 64, 96, 128, 192, 256];
+    let mut t = Table::new(
+        "Table 1 — balanced network size vs compute nodes (scale = 20)",
+        &["Nodes", "GPUs", "Neurons (x1e6)", "Synapses (x1e12)"],
+    );
+    let mut rows = Vec::new();
+    for &n in &nodes {
+        let (nodes, gpus, neurons, synapses) = table1_row(n, 4, 20.0);
+        t.row(vec![
+            nodes.to_string(),
+            gpus.to_string(),
+            format!("{:.1}", neurons as f64 / 1e6),
+            format!("{:.2}", synapses as f64 / 1e12),
+        ]);
+        rows.push(Json::obj(vec![
+            ("nodes", Json::num(nodes as f64)),
+            ("gpus", Json::num(gpus as f64)),
+            ("neurons", Json::num(neurons as f64)),
+            ("synapses", Json::num(synapses as f64)),
+        ]));
+    }
+    t.print();
+    println!(
+        "paper check: 32 nodes -> 28.8e6 neurons / 0.32e12 synapses; \
+         256 nodes -> 230.4e6 / 2.59e12"
+    );
+    nestgpu::harness::experiments::write_result("table1", &Json::Arr(rows));
+}

@@ -1,0 +1,322 @@
+//! In-process MPI world: one thread per rank, shared-memory transport.
+
+use std::sync::{Arc, Barrier, Condvar, Mutex};
+
+use super::{
+    Communicator, GroupId, Rank, SpikeRecord, TrafficStats, MSG_HEADER_BYTES,
+    SPIKE_RECORD_BYTES,
+};
+
+/// Shared state of one communicator world.
+struct Shared {
+    n: usize,
+    /// exchange mailbox: `slots[from][to]`
+    slots: Mutex<Vec<Vec<Option<Vec<SpikeRecord>>>>>,
+    barrier: Barrier,
+    groups: Mutex<Vec<Arc<GroupShared>>>,
+    group_gate: Condvar,
+}
+
+struct GroupShared {
+    members: Vec<Rank>,
+    slots: Mutex<Vec<Option<Vec<u32>>>>,
+    barrier: Barrier,
+}
+
+/// Factory for a world of `n` thread-rank communicators.
+pub struct CommWorld {
+    shared: Arc<Shared>,
+}
+
+impl CommWorld {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        let shared = Arc::new(Shared {
+            n,
+            slots: Mutex::new(vec![vec![None; n]; n]),
+            barrier: Barrier::new(n),
+            groups: Mutex::new(Vec::new()),
+            group_gate: Condvar::new(),
+        });
+        CommWorld { shared }
+    }
+
+    /// Handles for all ranks (consume and move each into its rank thread).
+    pub fn communicators(&self) -> Vec<ThreadComm> {
+        (0..self.shared.n)
+            .map(|r| ThreadComm {
+                rank: r,
+                shared: Arc::clone(&self.shared),
+                groups_registered: 0,
+                traffic: TrafficStats::default(),
+            })
+            .collect()
+    }
+}
+
+/// Per-rank communicator handle (exclusively owned by the rank's thread).
+pub struct ThreadComm {
+    rank: Rank,
+    shared: Arc<Shared>,
+    groups_registered: usize,
+    traffic: TrafficStats,
+}
+
+impl Communicator for ThreadComm {
+    fn rank(&self) -> Rank {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.shared.n
+    }
+
+    fn exchange(&mut self, outgoing: Vec<Vec<SpikeRecord>>) -> Vec<Vec<SpikeRecord>> {
+        assert_eq!(outgoing.len(), self.shared.n, "one packet slot per rank");
+        // account sends (empty packets are suppressed: the paper's
+        // point-to-point scheme only messages processes with spikes)
+        for (to, pkt) in outgoing.iter().enumerate() {
+            if to != self.rank && !pkt.is_empty() {
+                self.traffic.p2p_messages += 1;
+                self.traffic.p2p_bytes +=
+                    MSG_HEADER_BYTES + pkt.len() as u64 * SPIKE_RECORD_BYTES;
+            }
+        }
+        // post sends
+        {
+            let mut slots = self.shared.slots.lock().unwrap();
+            for (to, pkt) in outgoing.into_iter().enumerate() {
+                slots[self.rank][to] = Some(pkt);
+            }
+        }
+        self.shared.barrier.wait();
+        // drain receives
+        let incoming = {
+            let mut slots = self.shared.slots.lock().unwrap();
+            (0..self.shared.n)
+                .map(|from| slots[from][self.rank].take().unwrap_or_default())
+                .collect::<Vec<_>>()
+        };
+        // second barrier: nobody may start the next round before all reads
+        self.shared.barrier.wait();
+        incoming
+    }
+
+    fn register_group(&mut self, members: Vec<Rank>) -> GroupId {
+        assert!(
+            members.iter().all(|&m| m < self.shared.n),
+            "group member out of range"
+        );
+        let idx = self.groups_registered;
+        self.groups_registered += 1;
+        let mut groups = self.shared.groups.lock().unwrap();
+        if groups.len() <= idx {
+            // first rank to arrive creates the group
+            groups.push(Arc::new(GroupShared {
+                barrier: Barrier::new(members.len()),
+                slots: Mutex::new(vec![None; members.len()]),
+                members,
+            }));
+            self.shared.group_gate.notify_all();
+        } else {
+            assert_eq!(
+                groups[idx].members, members,
+                "collective group registration diverged between ranks"
+            );
+        }
+        idx
+    }
+
+    fn allgather(&mut self, group: GroupId, data: &[u32]) -> Vec<Vec<u32>> {
+        // wait until the group exists (another rank may still be registering)
+        let g = {
+            let mut groups = self.shared.groups.lock().unwrap();
+            while groups.len() <= group {
+                groups = self.shared.group_gate.wait(groups).unwrap();
+            }
+            Arc::clone(&groups[group])
+        };
+        let me = g
+            .members
+            .iter()
+            .position(|&m| m == self.rank)
+            .expect("allgather by non-member rank");
+        self.traffic.coll_calls += 1;
+        // MPI_Allgather cost model: each member's payload traverses the
+        // wire to every other member.
+        self.traffic.coll_bytes += MSG_HEADER_BYTES
+            + data.len() as u64 * 4 * (g.members.len() as u64 - 1).max(0);
+        {
+            let mut slots = g.slots.lock().unwrap();
+            slots[me] = Some(data.to_vec());
+        }
+        g.barrier.wait();
+        let all = {
+            let slots = g.slots.lock().unwrap();
+            slots
+                .iter()
+                .map(|s| s.clone().unwrap_or_default())
+                .collect::<Vec<_>>()
+        };
+        g.barrier.wait();
+        // last pass clears own slot for the next call
+        {
+            let mut slots = g.slots.lock().unwrap();
+            slots[me] = None;
+        }
+        g.barrier.wait();
+        all
+    }
+
+    fn barrier(&mut self) {
+        self.shared.barrier.wait();
+    }
+
+    fn traffic(&self) -> TrafficStats {
+        self.traffic
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn run_world<F, T>(n: usize, f: F) -> Vec<T>
+    where
+        F: Fn(ThreadComm) -> T + Send + Sync + Copy,
+        T: Send,
+    {
+        let world = CommWorld::new(n);
+        let comms = world.communicators();
+        thread::scope(|s| {
+            let handles: Vec<_> = comms
+                .into_iter()
+                .map(|c| s.spawn(move || f(c)))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn exchange_routes_point_to_point() {
+        let out = run_world(3, |mut c| {
+            let me = c.rank();
+            // rank r sends (pos = 100*r + to) to every other rank
+            let outgoing: Vec<Vec<SpikeRecord>> = (0..3)
+                .map(|to| {
+                    if to == me {
+                        vec![]
+                    } else {
+                        vec![SpikeRecord {
+                            pos: (100 * me + to) as u32,
+                            mult: 1,
+                        }]
+                    }
+                })
+                .collect();
+            c.exchange(outgoing)
+        });
+        for (me, incoming) in out.iter().enumerate() {
+            for (from, pkt) in incoming.iter().enumerate() {
+                if from == me {
+                    assert!(pkt.is_empty());
+                } else {
+                    assert_eq!(pkt.len(), 1);
+                    assert_eq!(pkt[0].pos, (100 * from + me) as u32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exchange_multiple_rounds_no_crosstalk() {
+        let out = run_world(4, |mut c| {
+            let me = c.rank() as u32;
+            let mut got = Vec::new();
+            for round in 0..5u32 {
+                let outgoing: Vec<Vec<SpikeRecord>> = (0..4)
+                    .map(|_| {
+                        vec![SpikeRecord {
+                            pos: me * 1000 + round,
+                            mult: 1,
+                        }]
+                    })
+                    .collect();
+                let incoming = c.exchange(outgoing);
+                got.push(incoming);
+            }
+            got
+        });
+        for rounds in &out {
+            for (round, incoming) in rounds.iter().enumerate() {
+                for (from, pkt) in incoming.iter().enumerate() {
+                    assert_eq!(pkt[0].pos, from as u32 * 1000 + round as u32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_over_subgroup() {
+        let out = run_world(4, |mut c| {
+            let me = c.rank();
+            // all ranks register the same group collectively
+            let g = c.register_group(vec![1, 2, 3]);
+            if me == 0 {
+                return vec![];
+            }
+            let data = vec![me as u32; me]; // variable-length payloads
+            let all = c.allgather(g, &data);
+            assert_eq!(all.len(), 3);
+            all.into_iter().flatten().collect::<Vec<u32>>()
+        });
+        for me in 1..4 {
+            let expect: Vec<u32> = (1..4u32).flat_map(|m| vec![m; m as usize]).collect();
+            assert_eq!(out[me], expect);
+        }
+        assert!(out[0].is_empty());
+    }
+
+    #[test]
+    fn allgather_repeated_calls() {
+        let out = run_world(2, |mut c| {
+            let g = c.register_group(vec![0, 1]);
+            let mut acc = Vec::new();
+            for round in 0..3u32 {
+                let all = c.allgather(g, &[c.rank() as u32 + 10 * round]);
+                acc.extend(all.into_iter().flatten());
+            }
+            acc
+        });
+        assert_eq!(out[0], vec![0, 1, 10, 11, 20, 21]);
+        assert_eq!(out[1], vec![0, 1, 10, 11, 20, 21]);
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        let out = run_world(2, |mut c| {
+            let pkt = vec![SpikeRecord { pos: 1, mult: 1 }; 10];
+            let mut outgoing = vec![vec![]; 2];
+            outgoing[1 - c.rank()] = pkt;
+            c.exchange(outgoing);
+            c.traffic()
+        });
+        for t in out {
+            assert_eq!(t.p2p_messages, 1);
+            assert_eq!(t.p2p_bytes, MSG_HEADER_BYTES + 10 * SPIKE_RECORD_BYTES);
+        }
+    }
+
+    #[test]
+    fn empty_packets_not_counted() {
+        let out = run_world(2, |mut c| {
+            c.exchange(vec![vec![], vec![]]);
+            c.traffic()
+        });
+        for t in out {
+            assert_eq!(t.p2p_messages, 0);
+            assert_eq!(t.p2p_bytes, 0);
+        }
+    }
+}

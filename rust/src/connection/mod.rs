@@ -1,0 +1,182 @@
+//! Connection substrate: node sets, synapse specifications, connection
+//! rules ([`rules`]), the device-resident connection store ([`store`]) and
+//! the offboard (host-built) baseline ([`offboard`]).
+
+pub mod offboard;
+pub mod rules;
+pub mod store;
+
+pub use rules::ConnRule;
+pub use store::Connections;
+
+use crate::util::rng::Rng;
+
+/// A set of node indexes used as sources or targets of a connect call.
+///
+/// The contiguous-range case is the paper's fast path (§0.3.3: "special
+/// cases arise when s and/or t are sequences of consecutive integers").
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum NodeSet {
+    Range { start: u32, n: u32 },
+    List(Vec<u32>),
+}
+
+impl NodeSet {
+    pub fn range(start: u32, n: u32) -> Self {
+        NodeSet::Range { start, n }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            NodeSet::Range { n, .. } => *n as usize,
+            NodeSet::List(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Node id at position `i`.
+    #[inline]
+    pub fn get(&self, i: u32) -> u32 {
+        match self {
+            NodeSet::Range { start, n } => {
+                debug_assert!(i < *n);
+                start + i
+            }
+            NodeSet::List(v) => v[i as usize],
+        }
+    }
+
+    /// Whether positions are already ordered by node id (ranges are; lists
+    /// only if sorted).
+    pub fn is_sorted(&self) -> bool {
+        match self {
+            NodeSet::Range { .. } => true,
+            NodeSet::List(v) => v.windows(2).all(|w| w[0] < w[1]),
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = u32> + '_ {
+        (0..self.len() as u32).map(move |i| self.get(i))
+    }
+}
+
+/// Scalar distribution for synaptic parameters.
+#[derive(Clone, Copy, Debug)]
+pub enum Dist {
+    Const(f64),
+    /// normal with optional clipping
+    Normal { mean: f64, sd: f64 },
+    Uniform { lo: f64, hi: f64 },
+}
+
+impl Dist {
+    pub fn draw(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            Dist::Const(x) => x,
+            Dist::Normal { mean, sd } => rng.normal_ms(mean, sd),
+            Dist::Uniform { lo, hi } => rng.uniform_range(lo, hi),
+        }
+    }
+
+    /// Whether drawing consumes randomness (Const does not).
+    pub fn is_random(&self) -> bool {
+        !matches!(self, Dist::Const(_))
+    }
+}
+
+/// Synapse specification for a connect call.
+///
+/// Weights/delays are drawn with the *local* generator of the target
+/// process — the aligned per-(σ,τ) generator is used exclusively for source
+/// neuron indexes (§0.3.1), so synaptic parameter draws never perturb map
+/// alignment.
+#[derive(Clone, Copy, Debug)]
+pub struct SynSpec {
+    pub weight: Dist,
+    /// transmission delay in time steps (≥ 1)
+    pub delay: Dist,
+    /// receptor port: 0 = excitatory, 1 = inhibitory
+    pub port: u8,
+}
+
+impl SynSpec {
+    pub fn new(weight: f64, delay_steps: u32) -> Self {
+        SynSpec {
+            weight: Dist::Const(weight),
+            delay: Dist::Const(delay_steps as f64),
+            port: if weight < 0.0 { 1 } else { 0 },
+        }
+    }
+
+    pub fn draw(&self, rng: &mut Rng) -> (f32, u16) {
+        let w = self.weight.draw(rng) as f32;
+        let d = self.delay.draw(rng).round().max(1.0) as u16;
+        (w, d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nodeset_range_access() {
+        let s = NodeSet::range(10, 5);
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.get(0), 10);
+        assert_eq!(s.get(4), 14);
+        assert!(s.is_sorted());
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![10, 11, 12, 13, 14]);
+    }
+
+    #[test]
+    fn nodeset_list_access() {
+        let s = NodeSet::List(vec![7, 3, 9]);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.get(1), 3);
+        assert!(!s.is_sorted());
+        assert!(NodeSet::List(vec![1, 5, 8]).is_sorted());
+    }
+
+    #[test]
+    fn dist_const_is_deterministic() {
+        let mut rng = Rng::new(1);
+        let d = Dist::Const(2.5);
+        assert!(!d.is_random());
+        assert_eq!(d.draw(&mut rng), 2.5);
+        // no randomness consumed
+        let mut rng2 = Rng::new(1);
+        assert_eq!(rng.next_u64(), rng2.next_u64());
+    }
+
+    #[test]
+    fn dist_normal_statistics() {
+        let mut rng = Rng::new(2);
+        let d = Dist::Normal { mean: 5.0, sd: 2.0 };
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| d.draw(&mut rng)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        assert!((mean - 5.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn synspec_delay_clamped_to_one_step() {
+        let mut rng = Rng::new(3);
+        let s = SynSpec {
+            weight: Dist::Const(1.0),
+            delay: Dist::Const(0.0),
+            port: 0,
+        };
+        let (_, d) = s.draw(&mut rng);
+        assert_eq!(d, 1);
+    }
+
+    #[test]
+    fn synspec_port_inferred_from_sign() {
+        assert_eq!(SynSpec::new(1.0, 1).port, 0);
+        assert_eq!(SynSpec::new(-4.0, 1).port, 1);
+    }
+}

@@ -1,0 +1,187 @@
+//! *Offboard* construction baseline (Fig. 3).
+//!
+//! Before the onboard method of this paper, NEST GPU built the network in
+//! CPU memory and transferred it to the GPU afterwards ([15], [30]). This
+//! module reproduces that baseline so the Fig. 3 comparison can be
+//! regenerated: connections are accumulated as a host-side
+//! array-of-structures (the layout used by the CPU code path), then
+//! *transferred* — converted chunk-by-chunk into the device SoA store, with
+//! the host staging accounted in host memory and the extra copy pass being
+//! the measured cost of the offboard path.
+
+use super::store::Connections;
+use crate::memory::{MemKind, Tracker};
+
+/// One host-side connection record (AoS, as built by the CPU path).
+#[derive(Clone, Copy, Debug)]
+pub struct HostConn {
+    pub source: u32,
+    pub target: u32,
+    pub weight: f32,
+    pub delay: u16,
+    pub port: u8,
+}
+
+const HOST_CONN_BYTES: u64 = std::mem::size_of::<HostConn>() as u64;
+
+/// Transfer chunk: 1 MiB of records per host->device copy, mimicking the
+/// staged cudaMemcpy of the offboard implementation.
+pub const TRANSFER_CHUNK: usize = 65_536;
+
+/// Host-side builder used by the offboard path.
+pub struct OffboardBuilder {
+    conns: Vec<HostConn>,
+    tracked: u64,
+}
+
+impl OffboardBuilder {
+    pub fn new() -> Self {
+        Self {
+            conns: Vec::new(),
+            tracked: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.conns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.conns.is_empty()
+    }
+
+    #[inline]
+    pub fn push(&mut self, c: HostConn, tr: &mut Tracker) {
+        if self.conns.len() == self.conns.capacity() {
+            let new_cap = (self.conns.capacity() * 2).max(1024);
+            let new_bytes = new_cap as u64 * HOST_CONN_BYTES;
+            tr.realloc(MemKind::Host, self.tracked, new_bytes);
+            self.tracked = new_bytes;
+            self.conns.reserve_exact(new_cap - self.conns.len());
+        }
+        self.conns.push(c);
+    }
+
+    /// Transfer all host records into the device store in chunks, freeing
+    /// the host staging afterwards. Returns the number transferred.
+    ///
+    /// As in the historical CPU path ([15], [30]): the host first
+    /// *organizes* the AoS (comparison sort by source — the GPU path defers
+    /// this to the device radix sort at preparation), then copies it over
+    /// in staged chunks. Both passes are the measured offboard overhead.
+    pub fn transfer(mut self, dev: &mut Connections, tr: &mut Tracker) -> usize {
+        let n = self.conns.len();
+        // host-side organization pass (the old CPU code path)
+        self.conns
+            .sort_by(|a, b| a.source.cmp(&b.source).then(a.target.cmp(&b.target)));
+        // device-side staging buffer for one chunk (transient)
+        let chunk_bytes = (TRANSFER_CHUNK.min(n.max(1)) as u64) * HOST_CONN_BYTES;
+        tr.alloc(MemKind::Device, chunk_bytes);
+        tr.transient_events += 1;
+        for chunk in self.conns.chunks(TRANSFER_CHUNK) {
+            // one extra full pass over the data (host AoS -> staging ->
+            // device SoA)
+            let staged: Vec<HostConn> = chunk.to_vec();
+            for c in staged {
+                dev.push(c.source, c.target, c.weight, c.delay, c.port, tr);
+            }
+        }
+        tr.free(MemKind::Device, chunk_bytes);
+        tr.free(MemKind::Host, self.tracked);
+        self.tracked = 0;
+        self.conns = Vec::new();
+        n
+    }
+}
+
+impl Default for OffboardBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_preserves_content_and_sorts_by_source() {
+        let mut tr = Tracker::new();
+        let mut b = OffboardBuilder::new();
+        for i in 0..100u32 {
+            b.push(
+                HostConn {
+                    source: i % 7,
+                    target: i,
+                    weight: i as f32,
+                    delay: 1 + (i % 3) as u16,
+                    port: (i % 2) as u8,
+                },
+                &mut tr,
+            );
+        }
+        let mut dev = Connections::new();
+        let n = b.transfer(&mut dev, &mut tr);
+        assert_eq!(n, 100);
+        assert_eq!(dev.len(), 100);
+        // host path pre-sorts by source (the historical CPU organization)
+        assert!(dev.source.as_slice().windows(2).all(|w| w[0] <= w[1]));
+        // content preserved: every (target, weight) pair still present
+        let mut pairs: Vec<(u32, u32)> = dev
+            .target
+            .as_slice()
+            .iter()
+            .map(|&t| (t, t))
+            .collect();
+        pairs.sort_unstable();
+        assert_eq!(pairs.len(), 100);
+        assert!(pairs.iter().enumerate().all(|(i, &(t, _))| t == i as u32));
+    }
+
+    #[test]
+    fn host_memory_freed_after_transfer() {
+        let mut tr = Tracker::new();
+        let mut b = OffboardBuilder::new();
+        for i in 0..10_000u32 {
+            b.push(
+                HostConn {
+                    source: i,
+                    target: i,
+                    weight: 0.0,
+                    delay: 1,
+                    port: 0,
+                },
+                &mut tr,
+            );
+        }
+        assert!(tr.current(MemKind::Host) > 0);
+        let host_peak = tr.peak(MemKind::Host);
+        let mut dev = Connections::new();
+        b.transfer(&mut dev, &mut tr);
+        assert_eq!(tr.current(MemKind::Host), 0, "host staging must be freed");
+        assert!(tr.peak(MemKind::Host) >= host_peak);
+        assert_eq!(tr.current(MemKind::Device), dev.device_bytes());
+    }
+
+    #[test]
+    fn chunked_transfer_spans_multiple_chunks() {
+        let mut tr = Tracker::new();
+        let mut b = OffboardBuilder::new();
+        let n = TRANSFER_CHUNK + 17;
+        for i in 0..n as u32 {
+            b.push(
+                HostConn {
+                    source: 0,
+                    target: i,
+                    weight: 0.0,
+                    delay: 1,
+                    port: 0,
+                },
+                &mut tr,
+            );
+        }
+        let mut dev = Connections::new();
+        assert_eq!(b.transfer(&mut dev, &mut tr), n);
+        assert_eq!(dev.len(), n);
+    }
+}

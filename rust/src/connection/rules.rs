@@ -1,0 +1,332 @@
+//! Connection rules and their aligned source-index streams.
+//!
+//! The paper's construction correctness hinges on one invariant: for a
+//! remote connect call, the *source* MPI process must regenerate exactly
+//! the sequence of source-neuron indexes that the *target* MPI process
+//! draws while creating the connections (§0.3.1, the `RemoteConnect` source
+//! variant). We enforce that by construction: each rule has one generator
+//! that emits `(source_pos, target_pos)` pairs, drawing source positions
+//! from the **aligned** generator and target positions from the **local**
+//! generator; the sources-only replay runs the same code with a sink that
+//! ignores targets and a dummy local generator is never consumed for source
+//! positions.
+
+use crate::util::rng::Rng;
+
+/// Deterministic and probabilistic connection rules (cf. connectivity
+/// concepts of [44] and §0.3.3/§0.3.5).
+#[derive(Clone, Debug)]
+pub enum ConnRule {
+    /// position i -> position i (requires equal set sizes)
+    OneToOne,
+    /// every source to every target
+    AllToAll,
+    /// for each target, `k` sources drawn uniformly (multapses allowed)
+    FixedIndegree { k: u32 },
+    /// for each source, `k` targets drawn uniformly (multapses allowed)
+    FixedOutdegree { k: u32 },
+    /// `n` connections with both endpoints drawn uniformly
+    FixedTotalNumber { n: u64 },
+    /// §0.3.5 assigned-nodes: endpoints already drawn by the distributed
+    /// fixed-in-degree driver, given as (source_pos, target_pos) pairs
+    AssignedNodes(Vec<(u32, u32)>),
+}
+
+impl ConnRule {
+    /// Can the rule leave some positions of the source set without any
+    /// connection? (Those rules benefit from the ξ-flagging of §0.3.3.)
+    pub fn may_skip_sources(&self) -> bool {
+        matches!(
+            self,
+            ConnRule::FixedIndegree { .. }
+                | ConnRule::FixedTotalNumber { .. }
+                | ConnRule::AssignedNodes(_)
+        )
+    }
+
+    /// Number of connections the call will create (exact for every rule).
+    pub fn conn_count(&self, n_source: usize, n_target: usize) -> u64 {
+        match self {
+            ConnRule::OneToOne => n_source.min(n_target) as u64,
+            ConnRule::AllToAll => n_source as u64 * n_target as u64,
+            ConnRule::FixedIndegree { k } => *k as u64 * n_target as u64,
+            ConnRule::FixedOutdegree { k } => *k as u64 * n_source as u64,
+            ConnRule::FixedTotalNumber { n } => *n,
+            ConnRule::AssignedNodes(pairs) => pairs.len() as u64,
+        }
+    }
+
+    /// The ξ heuristic of §0.3.3: the ratio between the estimated number of
+    /// newly created connections and the size of the source set; flagging
+    /// pays off when this is below the threshold.
+    pub fn source_use_ratio(&self, n_source: usize, n_target: usize) -> f64 {
+        if n_source == 0 {
+            return f64::INFINITY;
+        }
+        self.conn_count(n_source, n_target) as f64 / n_source as f64
+    }
+
+    /// Generate the full `(source_pos, target_pos)` stream.
+    ///
+    /// `aligned` is the per-(σ,τ) generator `RNG[σ,τ]` — consumed *only*
+    /// for source positions; `local` is the target process's private
+    /// generator — consumed for target positions.
+    pub fn generate(
+        &self,
+        n_source: usize,
+        n_target: usize,
+        aligned: &mut Rng,
+        local: &mut Rng,
+        mut sink: impl FnMut(u32, u32),
+    ) {
+        match self {
+            ConnRule::OneToOne => {
+                assert_eq!(
+                    n_source, n_target,
+                    "one-to-one requires equal source/target sizes"
+                );
+                for i in 0..n_source as u32 {
+                    sink(i, i);
+                }
+            }
+            ConnRule::AllToAll => {
+                for j in 0..n_target as u32 {
+                    for i in 0..n_source as u32 {
+                        sink(i, j);
+                    }
+                }
+            }
+            ConnRule::FixedIndegree { k } => {
+                for j in 0..n_target as u32 {
+                    for _ in 0..*k {
+                        sink(aligned.below(n_source as u32), j);
+                    }
+                }
+            }
+            ConnRule::FixedOutdegree { k } => {
+                for i in 0..n_source as u32 {
+                    for _ in 0..*k {
+                        sink(i, local.below(n_target as u32));
+                    }
+                }
+            }
+            ConnRule::FixedTotalNumber { n } => {
+                for _ in 0..*n {
+                    let i = aligned.below(n_source as u32);
+                    let j = local.below(n_target as u32);
+                    sink(i, j);
+                }
+            }
+            ConnRule::AssignedNodes(pairs) => {
+                for &(i, j) in pairs {
+                    sink(i, j);
+                }
+            }
+        }
+    }
+
+    /// Source-only replay (the `RemoteConnect` *source variant*): consumes
+    /// the aligned generator identically to [`generate`], emitting only the
+    /// source positions. Must never touch a local generator.
+    pub fn replay_sources(
+        &self,
+        n_source: usize,
+        n_target: usize,
+        aligned: &mut Rng,
+        mut sink: impl FnMut(u32),
+    ) {
+        match self {
+            ConnRule::OneToOne => {
+                for i in 0..n_source.min(n_target) as u32 {
+                    sink(i);
+                }
+            }
+            ConnRule::AllToAll => {
+                for _ in 0..n_target as u32 {
+                    for i in 0..n_source as u32 {
+                        sink(i);
+                    }
+                }
+            }
+            ConnRule::FixedIndegree { k } => {
+                for _ in 0..n_target as u32 {
+                    for _ in 0..*k {
+                        sink(aligned.below(n_source as u32));
+                    }
+                }
+            }
+            ConnRule::FixedOutdegree { k } => {
+                // target draws happen on the target process only (local
+                // generator); the aligned stream is untouched for this rule
+                for i in 0..n_source as u32 {
+                    for _ in 0..*k {
+                        sink(i);
+                    }
+                }
+            }
+            ConnRule::FixedTotalNumber { n } => {
+                for _ in 0..*n {
+                    sink(aligned.below(n_source as u32));
+                }
+            }
+            ConnRule::AssignedNodes(pairs) => {
+                for &(i, _) in pairs {
+                    sink(i);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The core alignment invariant: generate() and replay_sources() emit
+    /// the same source-position stream from the same aligned generator.
+    fn assert_aligned(rule: ConnRule, ns: usize, nt: usize) {
+        let mut a1 = Rng::new(99);
+        let mut a2 = Rng::new(99);
+        let mut local = Rng::new(7);
+        let mut gen_src = Vec::new();
+        rule.generate(ns, nt, &mut a1, &mut local, |s, _| gen_src.push(s));
+        let mut rep_src = Vec::new();
+        rule.replay_sources(ns, nt, &mut a2, |s| rep_src.push(s));
+        // fixed-outdegree consumes local randomness for targets; source
+        // streams must match for every rule regardless
+        assert_eq!(gen_src, rep_src, "{rule:?}");
+        // and the aligned generators end in the same state
+        assert_eq!(a1.next_u64(), a2.next_u64(), "{rule:?}");
+    }
+
+    #[test]
+    fn alignment_all_rules() {
+        assert_aligned(ConnRule::OneToOne, 13, 13);
+        assert_aligned(ConnRule::AllToAll, 5, 7);
+        assert_aligned(ConnRule::FixedIndegree { k: 9 }, 31, 17);
+        assert_aligned(ConnRule::FixedOutdegree { k: 4 }, 11, 23);
+        assert_aligned(ConnRule::FixedTotalNumber { n: 101 }, 19, 29);
+        assert_aligned(
+            ConnRule::AssignedNodes(vec![(0, 1), (5, 2), (0, 0)]),
+            7,
+            3,
+        );
+    }
+
+    #[test]
+    fn local_rng_does_not_affect_alignment() {
+        // different local generators must not change the source stream
+        let rule = ConnRule::FixedTotalNumber { n: 50 };
+        let collect = |local_seed: u64| {
+            let mut a = Rng::new(5);
+            let mut l = Rng::new(local_seed);
+            let mut src = Vec::new();
+            rule.generate(10, 10, &mut a, &mut l, |s, _| src.push(s));
+            src
+        };
+        assert_eq!(collect(1), collect(999));
+    }
+
+    #[test]
+    fn conn_counts_exact() {
+        assert_eq!(ConnRule::OneToOne.conn_count(5, 5), 5);
+        assert_eq!(ConnRule::AllToAll.conn_count(4, 6), 24);
+        assert_eq!(ConnRule::FixedIndegree { k: 3 }.conn_count(100, 7), 21);
+        assert_eq!(ConnRule::FixedOutdegree { k: 3 }.conn_count(7, 100), 21);
+        assert_eq!(ConnRule::FixedTotalNumber { n: 42 }.conn_count(9, 9), 42);
+    }
+
+    #[test]
+    fn generated_counts_match_conn_count() {
+        for rule in [
+            ConnRule::OneToOne,
+            ConnRule::AllToAll,
+            ConnRule::FixedIndegree { k: 5 },
+            ConnRule::FixedOutdegree { k: 5 },
+            ConnRule::FixedTotalNumber { n: 77 },
+        ] {
+            let (ns, nt) = (12, 12);
+            let mut count = 0u64;
+            rule.generate(ns, nt, &mut Rng::new(1), &mut Rng::new(2), |_, _| {
+                count += 1
+            });
+            assert_eq!(count, rule.conn_count(ns, nt), "{rule:?}");
+        }
+    }
+
+    #[test]
+    fn fixed_indegree_gives_each_target_k_inputs() {
+        let k = 8;
+        let (ns, nt) = (50usize, 20usize);
+        let mut indeg = vec![0u32; nt];
+        ConnRule::FixedIndegree { k }.generate(
+            ns,
+            nt,
+            &mut Rng::new(3),
+            &mut Rng::new(4),
+            |s, t| {
+                assert!((s as usize) < ns);
+                indeg[t as usize] += 1;
+            },
+        );
+        assert!(indeg.iter().all(|&d| d == k));
+    }
+
+    #[test]
+    fn fixed_outdegree_gives_each_source_k_outputs() {
+        let k = 6;
+        let (ns, nt) = (15usize, 40usize);
+        let mut outdeg = vec![0u32; ns];
+        ConnRule::FixedOutdegree { k }.generate(
+            ns,
+            nt,
+            &mut Rng::new(3),
+            &mut Rng::new(4),
+            |s, t| {
+                assert!((t as usize) < nt);
+                outdeg[s as usize] += 1;
+            },
+        );
+        assert!(outdeg.iter().all(|&d| d == k));
+    }
+
+    #[test]
+    fn fixed_indegree_sources_roughly_uniform() {
+        let (ns, nt, k) = (20usize, 500usize, 40u32);
+        let mut hits = vec![0u32; ns];
+        ConnRule::FixedIndegree { k }.generate(
+            ns,
+            nt,
+            &mut Rng::new(8),
+            &mut Rng::new(9),
+            |s, _| hits[s as usize] += 1,
+        );
+        let expect = (nt as u32 * k) as f64 / ns as f64;
+        for &h in &hits {
+            assert!((h as f64 - expect).abs() < 5.0 * expect.sqrt());
+        }
+    }
+
+    #[test]
+    fn may_skip_sources_classification() {
+        assert!(!ConnRule::OneToOne.may_skip_sources());
+        assert!(!ConnRule::AllToAll.may_skip_sources());
+        assert!(!ConnRule::FixedOutdegree { k: 1 }.may_skip_sources());
+        assert!(ConnRule::FixedIndegree { k: 1 }.may_skip_sources());
+        assert!(ConnRule::FixedTotalNumber { n: 1 }.may_skip_sources());
+    }
+
+    #[test]
+    fn xi_ratio() {
+        // K_in * N_target / N_source (paper's heuristic expression)
+        let r = ConnRule::FixedIndegree { k: 10 }.source_use_ratio(1000, 5);
+        assert!((r - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "one-to-one")]
+    fn one_to_one_size_mismatch_panics() {
+        ConnRule::OneToOne.generate(3, 4, &mut Rng::new(1), &mut Rng::new(2), |_, _| {});
+    }
+}

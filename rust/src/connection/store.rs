@@ -1,0 +1,246 @@
+//! Device-resident connection store.
+//!
+//! Connections are stored as a structure-of-arrays in (simulated) GPU
+//! memory, grown in fixed-size blocks, and sorted with the source-neuron
+//! index as the first key at preparation time ([30], §0.3.6): with that
+//! order, all connections outgoing from a node are contiguous, so spike
+//! delivery only needs the node's *first connection index* plus its
+//! *out-degree* (level 3) — or just the first index, with the out-degree
+//! recomputed on the fly from the next node's first index (level 2).
+
+use crate::memory::tracker::{Tracker, TrackedVec};
+use crate::memory::MemKind;
+
+/// SoA connection store (one per rank).
+pub struct Connections {
+    pub source: TrackedVec<u32>,
+    pub target: TrackedVec<u32>,
+    pub weight: TrackedVec<f32>,
+    pub delay: TrackedVec<u16>,
+    pub port: TrackedVec<u8>,
+    /// CSR offsets per node after [`Connections::sort_by_source`]:
+    /// `first_out[s] .. first_out[s+1]` index this node's outgoing
+    /// connections. Length = n_nodes + 1.
+    first_out: Vec<u32>,
+    sorted: bool,
+}
+
+impl Connections {
+    pub fn new() -> Self {
+        Self {
+            source: TrackedVec::new(MemKind::Device),
+            target: TrackedVec::new(MemKind::Device),
+            weight: TrackedVec::new(MemKind::Device),
+            delay: TrackedVec::new(MemKind::Device),
+            port: TrackedVec::new(MemKind::Device),
+            first_out: Vec::new(),
+            sorted: false,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.source.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_sorted(&self) -> bool {
+        self.sorted
+    }
+
+    /// Append one connection (construction phase; invalidates sorting).
+    #[inline]
+    pub fn push(
+        &mut self,
+        source: u32,
+        target: u32,
+        weight: f32,
+        delay: u16,
+        port: u8,
+        tr: &mut Tracker,
+    ) {
+        debug_assert!(delay >= 1, "delays are >= 1 step");
+        self.source.push(source, tr);
+        self.target.push(target, tr);
+        self.weight.push(weight, tr);
+        self.delay.push(delay, tr);
+        self.port.push(port, tr);
+        self.sorted = false;
+    }
+
+    /// Rewrite the source ids of connections `[start, len)` through `map`
+    /// (`RemoteConnect` step: temporary source positions -> image-neuron
+    /// local indexes, Eq. 5/6 final step). `u32::MAX` entries in `map` mark
+    /// positions that must not occur.
+    pub fn remap_sources(&mut self, start: usize, map: &[u32]) {
+        for s in &mut self.source.as_mut_slice()[start..] {
+            let img = map[*s as usize];
+            debug_assert!(img != u32::MAX, "unmapped source position {s}");
+            *s = img;
+        }
+        self.sorted = false;
+    }
+
+    /// Sort by source index (stable; preserves creation order within a
+    /// node) and build the CSR offsets for `n_nodes` nodes. The scratch
+    /// (u64 keys + u32 permutation) is accounted as a transient device
+    /// allocation — it is the dominant term of the Fig. 5 memory peak.
+    pub fn sort_by_source(&mut self, n_nodes: usize, tr: &mut Tracker) {
+        let n = self.len();
+        // §Perf iteration 2: source indexes are bounded by the node count,
+        // so a single-pass stable *counting scatter* replaces the generic
+        // radix argsort (one count pass + one scatter pass per array
+        // instead of up to four radix passes over a permutation). The
+        // scatter permutation is accounted as the transient device scratch
+        // — the dominant term of the Fig. 5 memory peak.
+        let scratch = (n * 4) as u64;
+        tr.alloc(MemKind::Device, scratch);
+        tr.transient_events += 1;
+        // counting pass -> CSR offsets
+        self.first_out = vec![0u32; n_nodes + 1];
+        for &s in self.source.as_slice() {
+            debug_assert!((s as usize) < n_nodes, "source {s} out of node space");
+            self.first_out[s as usize + 1] += 1;
+        }
+        for i in 0..n_nodes {
+            self.first_out[i + 1] += self.first_out[i];
+        }
+        // stable scatter permutation: destination slot per connection
+        let mut cursor = self.first_out.clone();
+        let mut perm: Vec<u32> = vec![0; n];
+        for (i, &s) in self.source.as_slice().iter().enumerate() {
+            perm[i] = cursor[s as usize];
+            cursor[s as usize] += 1;
+        }
+        fn scatter<T: Copy + Default>(perm: &[u32], xs: &[T]) -> Vec<T> {
+            let mut out = vec![T::default(); xs.len()];
+            for (i, &x) in xs.iter().enumerate() {
+                out[perm[i] as usize] = x;
+            }
+            out
+        }
+        let src = scatter(&perm, self.source.as_slice());
+        let tgt = scatter(&perm, self.target.as_slice());
+        let w = scatter(&perm, self.weight.as_slice());
+        let d = scatter(&perm, self.delay.as_slice());
+        let p = scatter(&perm, self.port.as_slice());
+        self.source.replace(src, tr);
+        self.target.replace(tgt, tr);
+        self.weight.replace(w, tr);
+        self.delay.replace(d, tr);
+        self.port.replace(p, tr);
+        tr.free(MemKind::Device, scratch);
+        self.sorted = true;
+    }
+
+    /// First connection index of a node (valid after sorting).
+    #[inline]
+    pub fn first(&self, node: u32) -> u32 {
+        debug_assert!(self.sorted);
+        self.first_out[node as usize]
+    }
+
+    /// Out-degree of a node, computed on the fly from the CSR offsets (the
+    /// level-2 representation).
+    #[inline]
+    pub fn out_degree(&self, node: u32) -> u32 {
+        debug_assert!(self.sorted);
+        self.first_out[node as usize + 1] - self.first_out[node as usize]
+    }
+
+    /// The connection index range outgoing from `node`.
+    #[inline]
+    pub fn outgoing(&self, node: u32) -> std::ops::Range<usize> {
+        debug_assert!(self.sorted, "outgoing() requires sort_by_source()");
+        self.first_out[node as usize] as usize..self.first_out[node as usize + 1] as usize
+    }
+
+    /// Borrow the full CSR offsets (n_nodes + 1 entries).
+    pub fn first_out(&self) -> &[u32] {
+        &self.first_out
+    }
+
+    /// Total device bytes of the SoA arrays.
+    pub fn device_bytes(&self) -> u64 {
+        self.source.bytes()
+            + self.target.bytes()
+            + self.weight.bytes()
+            + self.delay.bytes()
+            + self.port.bytes()
+    }
+}
+
+impl Default for Connections {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store_with(conns: &[(u32, u32)]) -> (Connections, Tracker) {
+        let mut tr = Tracker::new();
+        let mut c = Connections::new();
+        for &(s, t) in conns {
+            c.push(s, t, 1.0, 1, 0, &mut tr);
+        }
+        (c, tr)
+    }
+
+    #[test]
+    fn sort_groups_by_source_and_builds_csr() {
+        let (mut c, mut tr) = store_with(&[(2, 0), (0, 1), (2, 2), (1, 3), (0, 4)]);
+        c.sort_by_source(3, &mut tr);
+        assert_eq!(c.source.as_slice(), &[0, 0, 1, 2, 2]);
+        // stable: creation order preserved within node 0 and node 2
+        assert_eq!(c.target.as_slice(), &[1, 4, 3, 0, 2]);
+        assert_eq!(c.outgoing(0), 0..2);
+        assert_eq!(c.outgoing(1), 2..3);
+        assert_eq!(c.outgoing(2), 3..5);
+        assert_eq!(c.out_degree(0), 2);
+        assert_eq!(c.out_degree(1), 1);
+        assert_eq!(c.first(2), 3);
+    }
+
+    #[test]
+    fn nodes_without_connections_have_empty_ranges() {
+        let (mut c, mut tr) = store_with(&[(3, 0)]);
+        c.sort_by_source(5, &mut tr);
+        assert_eq!(c.outgoing(0), 0..0);
+        assert_eq!(c.outgoing(4), 1..1);
+        assert_eq!(c.out_degree(4), 0);
+    }
+
+    #[test]
+    fn remap_sources_rewrites_tail() {
+        let (mut c, mut tr) = store_with(&[(9, 0)]);
+        // two "remote" connections with temporary source positions 0 and 1
+        c.push(0, 5, 1.0, 1, 0, &mut tr);
+        c.push(1, 6, 1.0, 1, 0, &mut tr);
+        let map = vec![100, 200];
+        c.remap_sources(1, &map);
+        assert_eq!(c.source.as_slice(), &[9, 100, 200]);
+    }
+
+    #[test]
+    fn sort_accounts_transient_peak() {
+        let (mut c, mut tr) = store_with(&[(1, 0), (0, 0)]);
+        let before_peak = tr.peak(MemKind::Device);
+        c.sort_by_source(2, &mut tr);
+        assert!(tr.peak(MemKind::Device) > before_peak);
+        // steady state unchanged by the transient
+        assert_eq!(tr.current(MemKind::Device), c.device_bytes());
+    }
+
+    #[test]
+    fn empty_store_sorts() {
+        let (mut c, mut tr) = store_with(&[]);
+        c.sort_by_source(4, &mut tr);
+        assert_eq!(c.outgoing(3), 0..0);
+        assert!(c.is_sorted());
+    }
+}

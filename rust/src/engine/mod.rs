@@ -1,0 +1,8 @@
+//! The per-rank simulation engine: construction facade (`Create`,
+//! `Connect`, `RemoteConnect`), simulation preparation, and the state
+//! propagation loop with point-to-point and collective spike exchange.
+
+pub mod simulator;
+mod step;
+
+pub use simulator::{SimConfig, SimResult, Simulator};

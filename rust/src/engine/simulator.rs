@@ -1,0 +1,462 @@
+//! The per-rank simulator facade.
+//!
+//! Mirrors the NEST GPU lifecycle (§0.5): initialization → neuron and
+//! device creation → local/remote connection → simulation preparation →
+//! state propagation, with each phase timed for the Fig. 3/6 breakdowns.
+
+use crate::comm::Communicator;
+use crate::connection::offboard::{HostConn, OffboardBuilder};
+use crate::connection::{ConnRule, Connections, NodeSet, SynSpec};
+use crate::memory::{MemKind, Tracker};
+use crate::node::device::{PoissonGenerator, SpikeRecorder};
+use crate::node::{LifParams, NodeKind, NodeSpace, RingBuffers};
+use crate::remote::{GpuMemLevel, RemoteState};
+use crate::runtime::{Backend, BackendKind, StateChunk};
+use crate::util::rng::Rng;
+use crate::util::timer::{Phase, PhaseTimer, PhaseTimes};
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// integration step (ms); the paper uses 0.1
+    pub dt_ms: f64,
+    /// GPU memory level (§0.3.6); NEST GPU default is level 2
+    pub level: GpuMemLevel,
+    /// ξ threshold for used-source flagging (§0.3.3); paper default 1.0
+    pub xi: f64,
+    /// master seed (construction + devices)
+    pub seed: u64,
+    pub backend: BackendKind,
+    /// disabled for benchmarking runs, as in the paper
+    pub record_spikes: bool,
+    /// ring-buffer depth in steps (max supported delay)
+    pub max_delay_steps: u16,
+    /// use the offboard (CPU-built) construction baseline of Fig. 3
+    pub offboard: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            dt_ms: 0.1,
+            level: GpuMemLevel::default(),
+            xi: 1.0,
+            seed: 123,
+            backend: BackendKind::Native,
+            record_spikes: true,
+            max_delay_steps: 32,
+            offboard: false,
+        }
+    }
+}
+
+/// Outcome of one rank's run (metrics of the paper's figures).
+#[derive(Clone, Debug, Default)]
+pub struct SimResult {
+    pub rank: usize,
+    pub phases: PhaseTimes,
+    /// wall-clock propagation time / model time (Eq. 21)
+    pub rtf: f64,
+    pub model_time_ms: f64,
+    pub n_neurons: u64,
+    pub n_images: u64,
+    pub n_connections: u64,
+    pub map_entries: u64,
+    pub device_peak: u64,
+    pub device_current: u64,
+    pub host_peak: u64,
+    pub spikes: Vec<(u32, u32)>,
+    pub n_spikes: u64,
+    pub p2p_bytes: u64,
+    pub coll_bytes: u64,
+}
+
+/// One population of neurons created by a `create_neurons` call.
+struct Population {
+    /// first node index
+    node_base: u32,
+    /// first state index (ring buffer space)
+    state_base: u32,
+    n: u32,
+    /// packed kernel parameters (chunk-grouping key)
+    packed: [f32; crate::node::neuron::NUM_PARAMS],
+}
+
+/// The per-rank simulator.
+pub struct Simulator {
+    pub cfg: SimConfig,
+    comm: Box<dyn Communicator>,
+    pub nodes: NodeSpace,
+    pub conns: Connections,
+    pub remote: RemoteState,
+    pub tracker: Tracker,
+    pub timer: PhaseTimer,
+    /// state chunks, materialized at prepare(): consecutive populations
+    /// with identical packed parameters and contiguous node/state ranges
+    /// share one chunk (§Perf iteration 4 — fewer, larger kernel calls)
+    pub(super) chunks: Vec<StateChunk>,
+    /// per chunk: (first node index, first state index, total neurons)
+    pub(super) chunk_meta: Vec<(u32, u32, u32)>,
+    pops: Vec<Population>,
+    pub(super) buffers: Option<RingBuffers>,
+    pub(super) poissons: Vec<PoissonGenerator>,
+    pub recorder: SpikeRecorder,
+    local_rng: Rng,
+    pub(super) backend: Option<Box<dyn Backend>>,
+    offboard_local: Option<OffboardBuilder>,
+    /// host mirrors of (first, count) for GML 0/1 (image spike delivery
+    /// goes through the host on those levels)
+    pub(super) host_first_count: Option<(Vec<u32>, Vec<u32>)>,
+    /// node index -> state index (u32::MAX for non-neurons); built at prepare
+    pub(super) state_lut: Vec<u32>,
+    pub(super) step_now: u32,
+    prepared: bool,
+    n_state: u32,
+}
+
+impl Simulator {
+    /// Initialization phase: simulator state, communicator binding.
+    pub fn new(comm: Box<dyn Communicator>, cfg: SimConfig) -> Self {
+        let mut timer = PhaseTimer::new();
+        timer.enter(Phase::Initialization);
+        let rank = comm.rank();
+        let n_ranks = comm.size();
+        let remote = RemoteState::new(cfg.seed, rank, n_ranks, cfg.level, cfg.xi);
+        let local_rng = Rng::stream(cfg.seed, &[0x6C6F63616C, rank as u64]); // "local"
+        let offboard_local = cfg.offboard.then(OffboardBuilder::new);
+        let record = cfg.record_spikes;
+        let mut sim = Self {
+            cfg,
+            comm,
+            nodes: NodeSpace::new(),
+            conns: Connections::new(),
+            remote,
+            tracker: Tracker::new(),
+            timer,
+            chunks: Vec::new(),
+            chunk_meta: Vec::new(),
+            pops: Vec::new(),
+            buffers: None,
+            poissons: Vec::new(),
+            recorder: SpikeRecorder::new(record),
+            local_rng,
+            backend: None,
+            offboard_local,
+            host_first_count: None,
+            state_lut: Vec::new(),
+            step_now: 0,
+            prepared: false,
+            n_state: 0,
+        };
+        sim.timer.stop();
+        sim
+    }
+
+    pub fn rank(&self) -> usize {
+        self.comm.rank()
+    }
+    pub fn n_ranks(&self) -> usize {
+        self.comm.size()
+    }
+
+    /// Neuron and device creation phase: one population per call.
+    pub fn create_neurons(&mut self, n: u32, params: &LifParams) -> NodeSet {
+        assert!(!self.prepared);
+        self.timer.enter(Phase::NodeCreation);
+        let pop_idx = self.pops.len() as u16;
+        let node_base = self.nodes.create_neurons(pop_idx, n);
+        let packed = params.packed(self.cfg.dt_ms);
+        if self.cfg.offboard {
+            // offboard baseline: state initialized on the host, then copied
+            // to the device (the extra pass is the measured cost of the old
+            // path; onboard initializes in place at prepare time)
+            let host_bytes = (n as u64) * 7 * 4;
+            self.tracker.alloc(MemKind::Host, host_bytes);
+            let staged: Vec<f32> = vec![0.0; n as usize * 7];
+            std::hint::black_box(&staged);
+            self.tracker.free(MemKind::Host, host_bytes);
+        }
+        self.pops.push(Population {
+            node_base,
+            state_base: self.n_state,
+            n,
+            packed,
+        });
+        self.n_state += n;
+        self.timer.stop();
+        NodeSet::range(node_base, n)
+    }
+
+    /// Create a Poisson generator device firing at `rate_hz` into each of
+    /// its future targets independently.
+    pub fn create_poisson(&mut self, rate_hz: f64) -> NodeSet {
+        assert!(!self.prepared);
+        self.timer.enter(Phase::NodeCreation);
+        let dev = self.poissons.len() as u16;
+        let node = self.nodes.create_device(dev);
+        let rng = Rng::stream(self.cfg.seed, &[0x706F6973, self.rank() as u64, dev as u64]);
+        self.poissons.push(PoissonGenerator::new(node, rate_hz, rng));
+        self.timer.stop();
+        NodeSet::range(node, 1)
+    }
+
+    /// Local connection phase (both endpoints on this rank).
+    pub fn connect(&mut self, s: &NodeSet, t: &NodeSet, rule: &ConnRule, syn: &SynSpec) {
+        assert!(!self.prepared);
+        self.timer.enter(Phase::LocalConnection);
+        // local draws use the rank-private generator; the rule API takes
+        // separate source/target generators (needed for the aligned remote
+        // path), so fork an independent source stream off the local one
+        let mut pairs: Vec<(u32, u32)> = Vec::new();
+        {
+            let mut src_rng = Rng::new(self.local_rng.next_u64());
+            rule.generate(s.len(), t.len(), &mut src_rng, &mut self.local_rng, |sp, tp| {
+                pairs.push((sp, tp));
+            });
+        }
+        if let Some(builder) = self.offboard_local.as_mut() {
+            for (sp, tp) in pairs {
+                let (w, d) = syn.draw(&mut self.local_rng);
+                builder.push(
+                    HostConn {
+                        source: s.get(sp),
+                        target: t.get(tp),
+                        weight: w,
+                        delay: d,
+                        port: syn.port,
+                    },
+                    &mut self.tracker,
+                );
+            }
+        } else {
+            for (sp, tp) in pairs {
+                let (w, d) = syn.draw(&mut self.local_rng);
+                self.conns
+                    .push(s.get(sp), t.get(tp), w, d, syn.port, &mut self.tracker);
+            }
+        }
+        self.timer.stop();
+    }
+
+    /// Register an MPI group for collective communication (collective call:
+    /// all ranks, same order, same members).
+    pub fn register_group(&mut self, members: Vec<usize>) -> usize {
+        let comm_group = self.comm.register_group(members.clone());
+        self.remote.register_group(comm_group, members)
+    }
+
+    /// Remote connection phase: SPMD `RemoteConnect(σ, s, τ, t, …)`.
+    ///
+    /// Every rank calls this with identical arguments; each rank performs
+    /// its part (target-side map+connection construction, source-side
+    /// replay, or collective H bookkeeping) without any communication.
+    #[allow(clippy::too_many_arguments)]
+    pub fn remote_connect(
+        &mut self,
+        src_rank: usize,
+        s: &NodeSet,
+        tgt_rank: usize,
+        t: &NodeSet,
+        rule: &ConnRule,
+        syn: &SynSpec,
+        group: Option<usize>,
+    ) {
+        assert!(!self.prepared);
+        if src_rank == tgt_rank {
+            if src_rank == self.rank() {
+                self.connect(s, t, rule, syn);
+            }
+            return;
+        }
+        self.timer.enter(Phase::RemoteConnection);
+        let me = self.rank();
+        if let Some(g) = group {
+            // Eq. 12: every member mirrors H
+            if self.remote.groups[g].member_index(me).is_some() {
+                self.remote
+                    .note_group_call(g, src_rank, s, &mut self.tracker);
+            }
+        }
+        if me == tgt_rank {
+            let conn_start = self.conns.len();
+            let out = self.remote.connect_target(
+                src_rank,
+                s,
+                t,
+                rule,
+                syn,
+                group,
+                &mut self.nodes,
+                &mut self.conns,
+                &mut self.local_rng,
+                &mut self.tracker,
+            );
+            if self.cfg.offboard && out.conns_created > 0 {
+                // offboard baseline: the previous implementation assembled
+                // remote connections and maps on the host and copied them
+                // over — a full AoS round-trip (device SoA -> host AoS ->
+                // host organization sort -> device SoA), the measured
+                // overhead of the old path
+                let bytes = out.conns_created * 16;
+                self.tracker.alloc(MemKind::Host, bytes);
+                let end = self.conns.len();
+                let mut staged: Vec<HostConn> = Vec::with_capacity(end - conn_start);
+                for k in conn_start..end {
+                    staged.push(HostConn {
+                        source: self.conns.source.as_slice()[k],
+                        target: self.conns.target.as_slice()[k],
+                        weight: self.conns.weight.as_slice()[k],
+                        delay: self.conns.delay.as_slice()[k],
+                        port: self.conns.port.as_slice()[k],
+                    });
+                }
+                staged
+                    .sort_by(|a, b| a.source.cmp(&b.source).then(a.target.cmp(&b.target)));
+                for (k, c) in (conn_start..end).zip(staged.into_iter()) {
+                    self.conns.source.as_mut_slice()[k] = c.source;
+                    self.conns.target.as_mut_slice()[k] = c.target;
+                    self.conns.weight.as_mut_slice()[k] = c.weight;
+                    self.conns.delay.as_mut_slice()[k] = c.delay;
+                    self.conns.port.as_mut_slice()[k] = c.port;
+                }
+                self.tracker.free(MemKind::Host, bytes);
+            }
+        } else if me == src_rank {
+            self.remote
+                .connect_source(tgt_rank, s, t.len(), rule, group, &mut self.tracker);
+        }
+        self.timer.stop();
+    }
+
+    /// Simulation preparation (§0.5): sort connections, build routing
+    /// tables, allocate ring buffers, load the dynamics backend.
+    pub fn prepare(&mut self) -> anyhow::Result<()> {
+        assert!(!self.prepared, "prepare() called twice");
+        self.timer.enter(Phase::Preparation);
+        if let Some(builder) = self.offboard_local.take() {
+            builder.transfer(&mut self.conns, &mut self.tracker);
+        }
+        let m = self.nodes.m() as usize;
+        self.conns.sort_by_source(m, &mut self.tracker);
+        self.remote.prepare(m, &mut self.tracker);
+
+        // level-dependent residency of the per-node first/count structures
+        match self.cfg.level {
+            GpuMemLevel::L0 | GpuMemLevel::L1 => {
+                // host mirrors used for image spike delivery
+                let first: Vec<u32> = self.conns.first_out().to_vec();
+                let count: Vec<u32> = (0..m as u32)
+                    .map(|node| self.conns.out_degree(node))
+                    .collect();
+                self.tracker
+                    .alloc(MemKind::Host, (first.len() * 4 + count.len() * 4) as u64);
+                self.host_first_count = Some((first, count));
+            }
+            GpuMemLevel::L2 => {
+                // first index on device (part of the CSR); count on the fly
+                self.tracker.alloc(MemKind::Device, ((m + 1) * 4) as u64);
+            }
+            GpuMemLevel::L3 => {
+                // first + count on device
+                self.tracker
+                    .alloc(MemKind::Device, ((m + 1) * 4 + m * 4) as u64);
+            }
+        }
+
+        self.build_chunks();
+
+        // node -> state translation table for the delivery hot loop
+        self.state_lut = (0..self.nodes.m())
+            .map(|node| self.state_of(node).unwrap_or(u32::MAX))
+            .collect();
+
+        self.buffers = Some(RingBuffers::new(
+            self.n_state as usize,
+            self.cfg.max_delay_steps,
+            &mut self.tracker,
+        ));
+        self.backend = Some(self.cfg.backend.create()?);
+        self.prepared = true;
+        self.timer.stop();
+        Ok(())
+    }
+
+    /// State index of a neuron node (ring-buffer addressing).
+    #[inline]
+    pub(super) fn state_of(&self, node: u32) -> Option<u32> {
+        match self.nodes.kind(node) {
+            NodeKind::Neuron { chunk: pop, offset } => {
+                Some(self.pops[pop as usize].state_base + offset)
+            }
+            _ => None,
+        }
+    }
+
+
+    pub(super) fn comm_mut(&mut self) -> &mut dyn Communicator {
+        self.comm.as_mut()
+    }
+    pub(super) fn is_prepared(&self) -> bool {
+        self.prepared
+    }
+    pub(super) fn n_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+    pub(super) fn chunk_info(&self, i: usize) -> (u32, u32, u32) {
+        self.chunk_meta[i]
+    }
+
+    /// Materialize the state chunks: group consecutive populations with
+    /// identical packed parameters and contiguous node/state ranges into
+    /// one chunk each — fewer, larger device-kernel invocations per step
+    /// (§Perf iteration 4).
+    fn build_chunks(&mut self) {
+        debug_assert!(self.chunks.is_empty());
+        let mut i = 0usize;
+        while i < self.pops.len() {
+            let first = &self.pops[i];
+            let (node_base, state_base) = (first.node_base, first.state_base);
+            let packed = first.packed;
+            let mut n = first.n;
+            let mut j = i + 1;
+            while j < self.pops.len() {
+                let p = &self.pops[j];
+                let contiguous = p.node_base == node_base + n
+                    && p.state_base == state_base + n;
+                if contiguous && p.packed == packed {
+                    n += p.n;
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            self.chunks
+                .push(StateChunk::new(n as usize, packed, &mut self.tracker));
+            self.chunk_meta.push((node_base, state_base, n));
+            i = j;
+        }
+    }
+
+    /// Collect the run metrics (after `simulate`, or after `prepare` in
+    /// estimation mode).
+    pub fn result(&self, rtf: f64, model_time_ms: f64) -> SimResult {
+        let tr = &self.tracker;
+        SimResult {
+            rank: self.rank(),
+            phases: self.timer.times,
+            rtf,
+            model_time_ms,
+            n_neurons: self.nodes.n_neurons() as u64,
+            n_images: self.nodes.n_images() as u64,
+            n_connections: self.conns.len() as u64,
+            map_entries: self.remote.total_map_entries() as u64,
+            device_peak: tr.peak(MemKind::Device),
+            device_current: tr.current(MemKind::Device),
+            host_peak: tr.peak(MemKind::Host),
+            spikes: self.recorder.events.clone(),
+            n_spikes: self.recorder.events.len() as u64,
+            p2p_bytes: self.comm.traffic().p2p_bytes,
+            coll_bytes: self.comm.traffic().coll_bytes,
+        }
+    }
+}

@@ -1,0 +1,246 @@
+//! State propagation: the per-step pipeline with spike routing and
+//! delivery (Appendix F; Figs. 1–2).
+//!
+//! Per time step:
+//! 1. service Poisson generators into the ring buffers;
+//! 2. hand the current ring-buffer slots to the dynamics backend (the
+//!    AOT-compiled Pallas kernel via PJRT, or the native reference);
+//! 3. collect spikes; deliver locally through the source-sorted connection
+//!    array; route remotely by map *positions* via the (T, P) tables
+//!    (point-to-point) and the (G, Q) tables (collective);
+//! 4. exchange: all-to-all-v of p2p packets + one Allgather per group;
+//! 5. deliver incoming remote spikes through the image neurons' outgoing
+//!    connections (host-staged on GPU memory levels 0/1).
+
+use std::time::Instant;
+
+use crate::comm::SpikeRecord;
+use crate::memory::MemKind;
+use crate::node::RingBuffers;
+use crate::remote::GpuMemLevel;
+
+use super::simulator::{SimResult, Simulator};
+use crate::connection::Connections;
+use crate::util::timer::Phase;
+
+/// Deliver through `node`'s outgoing connections into the ring buffers.
+/// Free function over the split-out pieces so the borrows stay field-local.
+#[inline]
+fn deliver_outgoing(
+    conns: &Connections,
+    state_lut: &[u32],
+    rb: &mut RingBuffers,
+    node: u32,
+    mult: u16,
+) {
+    let rng = conns.outgoing(node);
+    let targets = &conns.target.as_slice()[rng.clone()];
+    let ports = &conns.port.as_slice()[rng.clone()];
+    let delays = &conns.delay.as_slice()[rng.clone()];
+    let weights = &conns.weight.as_slice()[rng];
+    for i in 0..targets.len() {
+        let state = state_lut[targets[i] as usize];
+        debug_assert!(state != u32::MAX, "connection targets a non-neuron");
+        rb.add(state, ports[i], delays[i], weights[i], mult);
+    }
+}
+
+impl Simulator {
+    /// Run the propagation loop for `t_ms` of model time; returns the
+    /// per-rank metrics including the real-time factor (Eq. 21).
+    pub fn simulate(&mut self, t_ms: f64) -> anyhow::Result<SimResult> {
+        assert!(self.is_prepared(), "call prepare() before simulate()");
+        let steps = (t_ms / self.cfg.dt_ms).round() as u32;
+        self.timer.enter(Phase::Propagation);
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            self.step_once()?;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        self.timer.stop();
+        let rtf = if t_ms > 0.0 { wall / (t_ms / 1e3) } else { 0.0 };
+        Ok(self.result(rtf, t_ms))
+    }
+
+    /// One integration step.
+    pub fn step_once(&mut self) -> anyhow::Result<()> {
+        assert!(self.is_prepared(), "call prepare() before stepping");
+        let dt = self.cfg.dt_ms;
+        let n_ranks = self.n_ranks();
+
+        // ---- 1) devices: Poisson input through their outgoing connections
+        {
+            let rb = self.buffers.as_mut().unwrap();
+            let conns = &self.conns;
+            let lut = &self.state_lut;
+            for g in self.poissons.iter_mut() {
+                for k in conns.outgoing(g.node) {
+                    let mult = g.draw_mult(dt);
+                    if mult > 0 {
+                        let state = lut[conns.target.as_slice()[k] as usize];
+                        rb.add(
+                            state,
+                            conns.port.as_slice()[k],
+                            conns.delay.as_slice()[k],
+                            conns.weight.as_slice()[k],
+                            mult,
+                        );
+                    }
+                }
+            }
+        }
+
+        // ---- 2) dynamics: ring-buffer slots -> backend -> spike flags
+        {
+            let state_bases: Vec<usize> = (0..self.n_chunks())
+                .map(|i| self.chunk_info(i).1 as usize)
+                .collect();
+            let rb = self.buffers.as_mut().unwrap();
+            let (ex, inh) = rb.current();
+            let backend = self.backend.as_mut().unwrap();
+            for (i, chunk) in self.chunks.iter_mut().enumerate() {
+                let n = chunk.n;
+                let a = state_bases[i];
+                chunk.w_ex[..n].copy_from_slice(&ex[a..a + n]);
+                chunk.w_in[..n].copy_from_slice(&inh[a..a + n]);
+                backend.step(chunk)?;
+            }
+            rb.advance();
+        }
+
+        // ---- 3) collect spikes, record, deliver locally, route remotely
+        let mut spiking_nodes: Vec<u32> = Vec::new();
+        for i in 0..self.n_chunks() {
+            let (node_base, _, _) = self.chunk_info(i);
+            for off in self.chunks[i].spiking() {
+                spiking_nodes.push(node_base + off);
+            }
+        }
+        let step_now = self.step_now;
+        for &node in &spiking_nodes {
+            self.recorder.record(step_now, node);
+        }
+
+        {
+            let rb = self.buffers.as_mut().unwrap();
+            for &node in &spiking_nodes {
+                deliver_outgoing(&self.conns, &self.state_lut, rb, node, 1);
+            }
+        }
+
+        // p2p routing: map positions into per-target packets (Fig. 15b)
+        let mut packets: Vec<Vec<SpikeRecord>> = vec![Vec::new(); n_ranks];
+        if let Some(tp) = self.remote.tp.as_ref() {
+            for &node in &spiking_nodes {
+                for (tau, pos) in tp.route(node) {
+                    packets[tau as usize].push(SpikeRecord { pos, mult: 1 });
+                }
+            }
+        }
+
+        // collective routing: positions in H per group (Fig. 2)
+        let n_groups = self.remote.groups.len();
+        let mut group_bufs: Vec<Vec<u32>> = vec![Vec::new(); n_groups];
+        if let Some(gq) = self.remote.gq.as_ref() {
+            for &node in &spiking_nodes {
+                for (g, pos) in gq.route(node) {
+                    group_bufs[g as usize].push(pos);
+                }
+            }
+        }
+
+        // ---- 4) exchange + 5) remote delivery
+        if n_ranks > 1 {
+            let incoming = self.comm_mut().exchange(packets);
+            for (sigma, pkt) in incoming.into_iter().enumerate() {
+                if pkt.is_empty() {
+                    continue;
+                }
+                self.deliver_p2p_packet(sigma, &pkt);
+            }
+        }
+        for g in 0..n_groups {
+            if self.remote.groups[g].member_index(self.rank()).is_none() {
+                continue;
+            }
+            let comm_group = self.remote.groups[g].comm_group;
+            let data = std::mem::take(&mut group_bufs[g]);
+            let all = self.comm_mut().allgather(comm_group, &data);
+            for (mi, positions) in all.into_iter().enumerate() {
+                if self.remote.groups[g].members[mi] == self.rank() {
+                    continue; // own spikes were delivered locally
+                }
+                self.deliver_collective(g, mi, &positions);
+            }
+        }
+
+        self.step_now += 1;
+        Ok(())
+    }
+
+
+    /// Deliver an incoming p2p packet from rank σ: positions -> L (image
+    /// index) -> outgoing connections. On GPU memory levels 0/1 the map and
+    /// the first/count structures live in host memory, so the translation
+    /// is staged through the host before the device delivery pass (the
+    /// measured cost of the lower levels).
+    fn deliver_p2p_packet(&mut self, sigma: usize, pkt: &[SpikeRecord]) {
+        let host_staged = matches!(self.cfg.level, GpuMemLevel::L0 | GpuMemLevel::L1);
+        if host_staged {
+            let bytes = (pkt.len() * 8) as u64;
+            self.tracker.alloc(MemKind::Host, bytes);
+            self.tracker.transient_events += 1;
+            self.tracker.free(MemKind::Host, bytes);
+        }
+        let map = &self.remote.p2p_maps[sigma];
+        let staged: Vec<(u32, u16)> = pkt.iter().map(|r| (map.l_at(r.pos), r.mult)).collect();
+        let rb = self.buffers.as_mut().unwrap();
+        if host_staged {
+            // the host mirror of (first, count) drives the lookup
+            let (first, count) = self.host_first_count.as_ref().unwrap();
+            for (image, mult) in staged {
+                debug_assert!(self.nodes.is_image(image));
+                let a = first[image as usize] as usize;
+                let b = a + count[image as usize] as usize;
+                for k in a..b {
+                    let state = self.state_lut[self.conns.target.as_slice()[k] as usize];
+                    rb.add(
+                        state,
+                        self.conns.port.as_slice()[k],
+                        self.conns.delay.as_slice()[k],
+                        self.conns.weight.as_slice()[k],
+                        mult,
+                    );
+                }
+            }
+        } else {
+            for (image, mult) in staged {
+                debug_assert!(self.nodes.is_image(image));
+                deliver_outgoing(&self.conns, &self.state_lut, rb, image, mult);
+            }
+        }
+    }
+
+    /// Deliver collective spikes from group member `mi`: positions in H ->
+    /// I image array (−1 = no image here) -> outgoing connections (Fig. 2).
+    fn deliver_collective(&mut self, g: usize, mi: usize, positions: &[u32]) {
+        let gs = &self.remote.groups[g];
+        let images: Vec<u32> = positions
+            .iter()
+            .filter_map(|&pos| {
+                let img = gs.i_arr[mi][pos as usize];
+                (img >= 0).then_some(img as u32)
+            })
+            .collect();
+        if matches!(self.cfg.level, GpuMemLevel::L0 | GpuMemLevel::L1) {
+            let bytes = (images.len() * 4) as u64;
+            self.tracker.alloc(MemKind::Host, bytes);
+            self.tracker.transient_events += 1;
+            self.tracker.free(MemKind::Host, bytes);
+        }
+        let rb = self.buffers.as_mut().unwrap();
+        for image in images {
+            deliver_outgoing(&self.conns, &self.state_lut, rb, image, 1);
+        }
+    }
+}

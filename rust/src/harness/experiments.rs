@@ -1,0 +1,236 @@
+//! Shared experiment drivers for the paper's tables and figures.
+//!
+//! Each bench binary (rust/benches/) calls into these, prints the
+//! paper-style table and writes machine-readable results to
+//! `target/bench_results/<name>.json`.
+
+use std::path::PathBuf;
+
+use crate::engine::{SimConfig, SimResult};
+use crate::models::balanced::{build_balanced, BalancedConfig};
+use crate::remote::GpuMemLevel;
+use crate::util::json::Json;
+use crate::util::table::mean_std;
+
+/// Aggregated per-configuration metrics (mean over ranks and repeats).
+#[derive(Clone, Debug, Default)]
+pub struct Agg {
+    pub node_creation_s: f64,
+    pub local_conn_s: f64,
+    pub remote_conn_s: f64,
+    pub creation_and_connection_s: f64,
+    pub preparation_s: f64,
+    pub construction_s: f64,
+    pub rtf: f64,
+    pub rtf_sd: f64,
+    pub device_peak: f64,
+    pub device_peak_sd: f64,
+    pub n_neurons: f64,
+    pub n_connections: f64,
+    pub n_images: f64,
+}
+
+/// Aggregate over all ranks of all repeats.
+pub fn aggregate(runs: &[Vec<SimResult>]) -> Agg {
+    let all: Vec<&SimResult> = runs.iter().flatten().collect();
+    let f = |get: &dyn Fn(&SimResult) -> f64| -> (f64, f64) {
+        let xs: Vec<f64> = all.iter().map(|r| get(r)).collect();
+        mean_std(&xs)
+    };
+    let (node_creation_s, _) = f(&|r| r.phases.node_creation.as_secs_f64());
+    let (local_conn_s, _) = f(&|r| r.phases.local_connection.as_secs_f64());
+    let (remote_conn_s, _) = f(&|r| r.phases.remote_connection.as_secs_f64());
+    let (creation_and_connection_s, _) =
+        f(&|r| r.phases.creation_and_connection().as_secs_f64());
+    let (preparation_s, _) = f(&|r| r.phases.preparation.as_secs_f64());
+    let (construction_s, _) = f(&|r| r.phases.construction().as_secs_f64());
+    let (rtf, rtf_sd) = f(&|r| r.rtf);
+    let (device_peak, device_peak_sd) = f(&|r| r.device_peak as f64);
+    let (n_neurons, _) = f(&|r| r.n_neurons as f64);
+    let (n_connections, _) = f(&|r| r.n_connections as f64);
+    let (n_images, _) = f(&|r| r.n_images as f64);
+    Agg {
+        node_creation_s,
+        local_conn_s,
+        remote_conn_s,
+        creation_and_connection_s,
+        preparation_s,
+        construction_s,
+        rtf,
+        rtf_sd,
+        device_peak,
+        device_peak_sd,
+        n_neurons,
+        n_connections,
+        n_images,
+    }
+}
+
+impl Agg {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("node_creation_s", Json::num(self.node_creation_s)),
+            ("local_conn_s", Json::num(self.local_conn_s)),
+            ("remote_conn_s", Json::num(self.remote_conn_s)),
+            (
+                "creation_and_connection_s",
+                Json::num(self.creation_and_connection_s),
+            ),
+            ("preparation_s", Json::num(self.preparation_s)),
+            ("construction_s", Json::num(self.construction_s)),
+            ("rtf", Json::num(self.rtf)),
+            ("rtf_sd", Json::num(self.rtf_sd)),
+            ("device_peak", Json::num(self.device_peak)),
+            ("device_peak_sd", Json::num(self.device_peak_sd)),
+            ("n_neurons", Json::num(self.n_neurons)),
+            ("n_connections", Json::num(self.n_connections)),
+            ("n_images", Json::num(self.n_images)),
+        ])
+    }
+}
+
+/// Write a bench's JSON result under `target/bench_results/`.
+pub fn write_result(name: &str, value: &Json) {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("target")
+        .join("bench_results");
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join(format!("{name}.json"));
+    if std::fs::write(&path, value.to_string()).is_ok() {
+        println!("[written {}]", path.display());
+    }
+}
+
+/// A weak-scaling measurement point for the balanced network.
+#[derive(Clone, Debug)]
+pub struct ScalingPoint {
+    pub virtual_ranks: usize,
+    pub level: GpuMemLevel,
+    /// true = estimation mode (k live ranks dry-running the virtual world)
+    pub estimated: bool,
+    pub agg: Agg,
+}
+
+/// Run the balanced-network weak-scaling protocol (Figs. 4–6, 10–11):
+/// live runs for small worlds, the paper's estimation methodology above
+/// `max_live_ranks`.
+#[allow(clippy::too_many_arguments)]
+pub fn balanced_weak_scaling(
+    rank_counts: &[usize],
+    levels: &[GpuMemLevel],
+    bal: &BalancedConfig,
+    sim_cfg: &SimConfig,
+    max_live_ranks: usize,
+    live_repeats: usize,
+    estimate_live: usize,
+    t_ms: f64,
+) -> Vec<ScalingPoint> {
+    let mut out = Vec::new();
+    for &vr in rank_counts {
+        for &level in levels {
+            let mut cfg = sim_cfg.clone();
+            cfg.level = level;
+            let bal = bal.clone();
+            let builder =
+                move |sim: &mut crate::engine::Simulator| build_balanced(sim, &bal);
+            if vr <= max_live_ranks {
+                let mut runs = Vec::new();
+                for rep in 0..live_repeats {
+                    let mut c = cfg.clone();
+                    c.seed = cfg.seed + rep as u64;
+                    let r = if t_ms > 0.0 {
+                        crate::harness::run_cluster(vr, &c, &builder, t_ms)
+                    } else {
+                        crate::harness::run_construction_only(vr, &c, &builder)
+                    }
+                    .expect("live run");
+                    runs.push(r);
+                }
+                out.push(ScalingPoint {
+                    virtual_ranks: vr,
+                    level,
+                    estimated: false,
+                    agg: aggregate(&runs),
+                });
+            } else {
+                let r = crate::harness::estimate_cluster(
+                    estimate_live.min(vr),
+                    vr,
+                    &cfg,
+                    &builder,
+                )
+                .expect("estimation run");
+                out.push(ScalingPoint {
+                    virtual_ranks: vr,
+                    level,
+                    estimated: true,
+                    agg: aggregate(&[r]),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Analytic device-peak rows for Fig. 5's full-scale extrapolation:
+/// (Leonardo nodes, predicted per-GPU peak bytes) at `scale`.
+pub fn fig5_model_rows(nodes: &[u64], level: GpuMemLevel, scale: f64) -> Vec<(u64, u64)> {
+    nodes
+        .iter()
+        .map(|&n| {
+            let procs = n * 4; // 4 GPUs per Leonardo node
+            let b = crate::memory::model::predict_balanced(scale, procs, level);
+            (n, b.peak())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::SimConfig;
+
+    #[test]
+    fn weak_scaling_runs_live_and_estimated() {
+        let bal = BalancedConfig {
+            scale: 0.002,
+            k_scale: 0.002,
+            ..Default::default()
+        };
+        let cfg = SimConfig::default();
+        let pts = balanced_weak_scaling(
+            &[2, 8],
+            &[GpuMemLevel::L0, GpuMemLevel::L3],
+            &bal,
+            &cfg,
+            4,   // live up to 4 ranks
+            1,   // one repeat
+            2,   // two live ranks for estimation
+            0.0, // construction only
+        );
+        assert_eq!(pts.len(), 4);
+        assert!(!pts[0].estimated && pts[2].estimated);
+        for p in &pts {
+            assert!(p.agg.n_connections > 0.0);
+            assert!(p.agg.device_peak > 0.0);
+        }
+        // level 3 keeps maps on device: higher device peak than level 0
+        let l0 = pts
+            .iter()
+            .find(|p| p.virtual_ranks == 8 && p.level == GpuMemLevel::L0)
+            .unwrap();
+        let l3 = pts
+            .iter()
+            .find(|p| p.virtual_ranks == 8 && p.level == GpuMemLevel::L3)
+            .unwrap();
+        assert!(l3.agg.device_peak >= l0.agg.device_peak);
+    }
+
+    #[test]
+    fn fig5_model_plateau() {
+        let rows = fig5_model_rows(&[1024, 3072, 4096], GpuMemLevel::L0, 20.0);
+        let (_, a) = rows[1];
+        let (_, b) = rows[2];
+        assert!((b as f64 - a as f64).abs() / (a as f64) < 0.02);
+    }
+}

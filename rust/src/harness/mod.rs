@@ -1,0 +1,221 @@
+//! Multi-rank experiment harness.
+//!
+//! [`Cluster::run`] spawns one thread per MPI rank (each with its own
+//! communicator handle and, if configured, its own PJRT client), executes
+//! an SPMD model-builder closure on every rank, and collects the per-rank
+//! metrics. [`Cluster::estimate`] implements the paper's estimation
+//! methodology: `k` live ranks dry-run network construction and simulation
+//! preparation *as if* they were ranks of a much larger world — valid
+//! because the construction algorithm is communication-free — which is how
+//! the paper projects 4,096-node configurations from a single node.
+
+pub mod experiments;
+
+use std::thread;
+
+use crate::comm::{CommWorld, NullComm};
+use crate::engine::{SimConfig, SimResult, Simulator};
+
+/// An SPMD model script: runs identically on every rank, building that
+/// rank's share of the network (`Create`/`Connect`/`RemoteConnect` calls
+/// with identical arguments everywhere).
+pub trait ModelBuilder: Sync {
+    fn build(&self, sim: &mut Simulator);
+}
+
+impl<F: Fn(&mut Simulator) + Sync> ModelBuilder for F {
+    fn build(&self, sim: &mut Simulator) {
+        self(sim)
+    }
+}
+
+/// Run a live simulation over `n_ranks` thread-ranks: build, prepare,
+/// propagate `t_ms`, return per-rank results (rank order).
+pub fn run_cluster<M: ModelBuilder>(
+    n_ranks: usize,
+    cfg: &SimConfig,
+    model: &M,
+    t_ms: f64,
+) -> anyhow::Result<Vec<SimResult>> {
+    let world = CommWorld::new(n_ranks);
+    let comms = world.communicators();
+    let results: Vec<anyhow::Result<SimResult>> = thread::scope(|s| {
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                let cfg = cfg.clone();
+                s.spawn(move || -> anyhow::Result<SimResult> {
+                    let mut sim = Simulator::new(Box::new(comm), cfg);
+                    model.build(&mut sim);
+                    sim.prepare()?;
+                    sim.simulate(t_ms)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("rank thread panicked"))
+            .collect()
+    });
+    results.into_iter().collect()
+}
+
+/// Estimation (dry-run) mode: each of the `live_ranks` behaves as the
+/// corresponding rank of a *virtual* world of `virtual_ranks`, performing
+/// construction + preparation only (no propagation, no communication).
+///
+/// Returns one result per live rank; memory/time metrics are samples of the
+/// virtual configuration's per-rank distribution (the paper averages over
+/// several such runs, cf. "estimated" vs "simulated" in Figs. 5-6).
+pub fn estimate_cluster<M: ModelBuilder>(
+    live_ranks: usize,
+    virtual_ranks: usize,
+    cfg: &SimConfig,
+    model: &M,
+) -> anyhow::Result<Vec<SimResult>> {
+    assert!(live_ranks <= virtual_ranks);
+    let results: Vec<anyhow::Result<SimResult>> = thread::scope(|s| {
+        let handles: Vec<_> = (0..live_ranks)
+            .map(|rank| {
+                let cfg = cfg.clone();
+                s.spawn(move || -> anyhow::Result<SimResult> {
+                    let comm = NullComm::new(rank, virtual_ranks);
+                    let mut sim = Simulator::new(Box::new(comm), cfg);
+                    model.build(&mut sim);
+                    sim.prepare()?;
+                    Ok(sim.result(0.0, 0.0))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("estimation thread panicked"))
+            .collect()
+    });
+    results.into_iter().collect()
+}
+
+/// Run construction + preparation only on a live world (no propagation):
+/// used by construction-time benches where spiking is irrelevant.
+pub fn run_construction_only<M: ModelBuilder>(
+    n_ranks: usize,
+    cfg: &SimConfig,
+    model: &M,
+) -> anyhow::Result<Vec<SimResult>> {
+    let world = CommWorld::new(n_ranks);
+    let comms = world.communicators();
+    let results: Vec<anyhow::Result<SimResult>> = thread::scope(|s| {
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                let cfg = cfg.clone();
+                s.spawn(move || -> anyhow::Result<SimResult> {
+                    let mut sim = Simulator::new(Box::new(comm), cfg);
+                    model.build(&mut sim);
+                    sim.prepare()?;
+                    Ok(sim.result(0.0, 0.0))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("rank thread panicked"))
+            .collect()
+    });
+    results.into_iter().collect()
+}
+
+/// Keep only the communicator-independent part of a world: helper to run a
+/// single-rank simulation without threads (examples, tests).
+pub fn run_single<M: ModelBuilder>(
+    cfg: &SimConfig,
+    model: &M,
+    t_ms: f64,
+) -> anyhow::Result<SimResult> {
+    let world = CommWorld::new(1);
+    let comm = world.communicators().pop().unwrap();
+    let mut sim = Simulator::new(Box::new(comm), cfg.clone());
+    model.build(&mut sim);
+    sim.prepare()?;
+    sim.simulate(t_ms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::connection::{ConnRule, NodeSet, SynSpec};
+    use crate::node::LifParams;
+
+    /// Two ranks, one remote connection 0->1, driven by a Poisson input on
+    /// rank 0: the remote spike must reach rank 1's neuron.
+    struct TinyModel;
+    impl ModelBuilder for TinyModel {
+        fn build(&self, sim: &mut Simulator) {
+            let params = LifParams::default();
+            let neurons = sim.create_neurons(4, &params);
+            if sim.rank() == 0 {
+                let gen = sim.create_poisson(50_000.0);
+                sim.connect(&gen, &neurons, &ConnRule::AllToAll, &SynSpec::new(500.0, 1));
+            }
+            // remote: rank 0 neurons -> rank 1 neurons (SPMD call on both)
+            sim.remote_connect(
+                0,
+                &NodeSet::range(0, 4),
+                1,
+                &NodeSet::range(0, 4),
+                &ConnRule::AllToAll,
+                &SynSpec::new(800.0, 2),
+                None,
+            );
+        }
+    }
+
+    #[test]
+    fn spikes_cross_ranks_p2p() {
+        let cfg = SimConfig::default();
+        let results = run_cluster(2, &cfg, &TinyModel, 50.0).unwrap();
+        assert_eq!(results.len(), 2);
+        let r0 = &results[0];
+        let r1 = &results[1];
+        assert!(r0.n_spikes > 0, "rank 0 neurons must fire under drive");
+        assert!(
+            r1.n_spikes > 0,
+            "rank 1 neurons must fire from remote spikes alone"
+        );
+        assert!(r0.p2p_bytes > 0, "rank 0 must have sent spike packets");
+        assert_eq!(r1.n_images, 4);
+    }
+
+    #[test]
+    fn estimation_matches_live_structures() {
+        // dry-run rank 1 of a virtual 2-rank world: structure sizes must
+        // match the live run exactly
+        let cfg = SimConfig::default();
+        let live = run_cluster(2, &cfg, &TinyModel, 0.0).unwrap();
+        let est = estimate_cluster(2, 2, &cfg, &TinyModel).unwrap();
+        for (l, e) in live.iter().zip(est.iter()) {
+            assert_eq!(l.n_neurons, e.n_neurons);
+            assert_eq!(l.n_images, e.n_images);
+            assert_eq!(l.n_connections, e.n_connections);
+            assert_eq!(l.map_entries, e.map_entries);
+        }
+    }
+
+    #[test]
+    fn single_rank_runs() {
+        let cfg = SimConfig::default();
+        let r = run_single(
+            &cfg,
+            &|sim: &mut Simulator| {
+                let n = sim.create_neurons(10, &LifParams::default());
+                let g = sim.create_poisson(20_000.0);
+                sim.connect(&g, &n, &ConnRule::AllToAll, &SynSpec::new(300.0, 1));
+                sim.connect(&n, &n, &ConnRule::FixedIndegree { k: 2 }, &SynSpec::new(10.0, 1));
+            },
+            20.0,
+        )
+        .unwrap();
+        assert!(r.n_spikes > 0);
+        assert_eq!(r.n_images, 0);
+    }
+}

@@ -1,0 +1,20 @@
+//! # nestgpu-rs
+//!
+//! Reproduction of *"Scalable Construction of Spiking Neural Networks using
+//! up to thousands of GPUs"* (CS.DC 2025): the NEST GPU onboard network
+//! construction method — communication-free per-rank construction of the
+//! point-to-point and collective spike-routing maps — implemented as a
+//! three-layer Rust + JAX + Pallas stack. See `DESIGN.md` for the full
+//! system inventory and the hardware substitutions.
+
+pub mod comm;
+pub mod connection;
+pub mod engine;
+pub mod harness;
+pub mod memory;
+pub mod models;
+pub mod node;
+pub mod remote;
+pub mod runtime;
+pub mod stats;
+pub mod util;

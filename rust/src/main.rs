@@ -1,0 +1,229 @@
+//! `nestgpu` — launcher CLI for the reproduction.
+//!
+//! Subcommands (argument parsing is in-tree; clap is not in the offline
+//! crate set):
+//!
+//!   nestgpu info
+//!   nestgpu balanced  [--ranks N] [--scale S] [--k-scale K] [--level 0..3]
+//!                     [--t-ms T] [--seed X] [--p2p] [--pjrt] [--offboard]
+//!   nestgpu mam       [--ranks N] [--n-scale S] [--k-scale K] [--chi C]
+//!                     [--t-ms T] [--seed X] [--pjrt] [--offboard]
+//!   nestgpu estimate  [--live K] [--ranks N] [--scale S] [--level 0..3]
+//!   nestgpu validate  [--seeds N] [--t-ms T]
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use nestgpu::engine::{SimConfig, SimResult, Simulator};
+use nestgpu::harness::{estimate_cluster, run_cluster};
+use nestgpu::models::balanced::{build_balanced, BalancedConfig};
+use nestgpu::models::mam::{MamConfig, MamModel};
+use nestgpu::remote::GpuMemLevel;
+use nestgpu::runtime::BackendKind;
+use nestgpu::util::table::{fmt_bytes, fmt_secs, Table};
+
+struct Args {
+    flags: HashMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut flags = HashMap::new();
+        let mut bools = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    bools.push(name.to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Self { flags, bools }
+    }
+
+    fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        self.flags
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+}
+
+fn backend(args: &Args) -> BackendKind {
+    if args.has("pjrt") {
+        let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        BackendKind::Pjrt { artifacts }
+    } else {
+        BackendKind::Native
+    }
+}
+
+fn sim_config(args: &Args) -> SimConfig {
+    SimConfig {
+        seed: args.get("seed", 123u64),
+        level: GpuMemLevel::from_index(args.get("level", 2usize)).unwrap_or_default(),
+        backend: backend(args),
+        offboard: args.has("offboard"),
+        record_spikes: !args.has("no-record"),
+        ..Default::default()
+    }
+}
+
+fn print_results(results: &[SimResult], t_ms: f64) {
+    let mut t = Table::new(
+        "results",
+        &["rank", "neurons", "conns", "images", "spikes", "rate/s", "RTF", "constr", "dev peak"],
+    );
+    for r in results {
+        let rate = if t_ms > 0.0 {
+            r.n_spikes as f64 / r.n_neurons.max(1) as f64 / (t_ms / 1e3)
+        } else {
+            0.0
+        };
+        t.row(vec![
+            r.rank.to_string(),
+            r.n_neurons.to_string(),
+            r.n_connections.to_string(),
+            r.n_images.to_string(),
+            r.n_spikes.to_string(),
+            format!("{rate:.1}"),
+            format!("{:.2}", r.rtf),
+            fmt_secs(r.phases.construction().as_secs_f64()),
+            fmt_bytes(r.device_peak),
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_balanced(args: &Args) -> anyhow::Result<()> {
+    let ranks = args.get("ranks", 2usize);
+    let bal = BalancedConfig {
+        scale: args.get("scale", 0.01f64),
+        k_scale: args.get("k-scale", 0.01f64),
+        in_degree_scale: args.get("in-degree-scale", 1.0f64),
+        j_pa: args.get("j", BalancedConfig::default().j_pa),
+        g: args.get("g", BalancedConfig::default().g),
+        rate_ext_hz: args.get("rate-ext", BalancedConfig::default().rate_ext_hz),
+        j_ext_pa: args.get("j-ext", BalancedConfig::default().j_ext_pa),
+        collective: !args.has("p2p"),
+        ..Default::default()
+    };
+    let t_ms = args.get("t-ms", 100.0f64);
+    println!(
+        "balanced: {ranks} ranks x {} neurons, K_in {}, {} exchange, level {}",
+        bal.neurons_per_rank(),
+        bal.kin_e() + bal.kin_i(),
+        if bal.collective { "collective" } else { "p2p" },
+        sim_config(args).level.name(),
+    );
+    let cfg = sim_config(args);
+    let results = run_cluster(
+        ranks,
+        &cfg,
+        &move |sim: &mut Simulator| build_balanced(sim, &bal),
+        t_ms,
+    )?;
+    print_results(&results, t_ms);
+    Ok(())
+}
+
+fn cmd_mam(args: &Args) -> anyhow::Result<()> {
+    let ranks = args.get("ranks", 4usize);
+    let mam_cfg = MamConfig {
+        n_scale: args.get("n-scale", 0.001f64),
+        k_scale: args.get("k-scale", 0.01f64),
+        chi: args.get("chi", 1.9f64),
+        kcc_base: 1500.0,
+    };
+    let t_ms = args.get("t-ms", 100.0f64);
+    let m = MamModel::new(mam_cfg.clone());
+    println!(
+        "MAM: {} neurons over 32 areas on {ranks} ranks (chi {}), p2p exchange",
+        m.total_neurons(),
+        mam_cfg.chi
+    );
+    let cfg = sim_config(args);
+    let results = run_cluster(
+        ranks,
+        &cfg,
+        &move |sim: &mut Simulator| {
+            let m = MamModel::new(mam_cfg.clone());
+            let p = m.pack(sim.n_ranks());
+            m.build(sim, &p);
+        },
+        t_ms,
+    )?;
+    print_results(&results, t_ms);
+    Ok(())
+}
+
+fn cmd_estimate(args: &Args) -> anyhow::Result<()> {
+    let live = args.get("live", 2usize);
+    let ranks = args.get("ranks", 1024usize);
+    let bal = BalancedConfig {
+        scale: args.get("scale", 0.01f64),
+        k_scale: args.get("k-scale", 0.01f64),
+        ..Default::default()
+    };
+    println!(
+        "estimation: {live} live ranks dry-running a {ranks}-rank world \
+         (construction + preparation only)"
+    );
+    let cfg = sim_config(args);
+    let results = estimate_cluster(
+        live,
+        ranks,
+        &cfg,
+        &move |sim: &mut Simulator| build_balanced(sim, &bal),
+    )?;
+    print_results(&results, 0.0);
+    Ok(())
+}
+
+fn cmd_info() {
+    println!("nestgpu-rs — Scalable Construction of Spiking Neural Networks (CS.DC 2025)");
+    println!("three-layer reproduction: Rust coordinator / JAX model / Pallas kernel (AOT via PJRT)");
+    println!();
+    println!("GPU memory levels: 0..3 (default 2); communication: p2p + collective");
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    println!(
+        "artifacts: {} ({})",
+        artifacts.display(),
+        if artifacts.join("manifest.json").exists() {
+            "present"
+        } else {
+            "missing — run `make artifacts`"
+        }
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("info");
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+    match cmd {
+        "balanced" => cmd_balanced(&args),
+        "mam" => cmd_mam(&args),
+        "estimate" => cmd_estimate(&args),
+        "info" | "--help" | "-h" => {
+            cmd_info();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'; try: info | balanced | mam | estimate");
+            std::process::exit(2);
+        }
+    }
+}

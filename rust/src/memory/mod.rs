@@ -1,0 +1,14 @@
+//! GPU/CPU memory accounting.
+//!
+//! The paper's Fig. 5 characterizes the *peak* GPU memory per process —
+//! including transient construction buffers — because the transient peak is
+//! what triggers out-of-memory failures and thus defines the scalability
+//! limit. Our simulated device tracks every device-side allocation
+//! explicitly ([`Tracker`]); [`model`] additionally provides the analytic
+//! full-scale predictor used for the paper-scale extrapolations (the dashed
+//! "estimated" curves and the A100 limit line).
+
+pub mod model;
+pub mod tracker;
+
+pub use tracker::{MemKind, Tracker};

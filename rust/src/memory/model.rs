@@ -1,0 +1,246 @@
+//! Analytic GPU-memory model for the scalable balanced network.
+//!
+//! The paper extrapolates configurations beyond what could be run (Fig. 5's
+//! dashed "estimated" curves, the 4,096-node level-0 plateau, the JUPITER
+//! projection in the Discussion). This module provides the corresponding
+//! closed-form predictor for *this* implementation's data structures: given
+//! the model scale, the number of processes, and the GPU memory level, it
+//! returns the expected per-rank device-memory breakdown.
+//!
+//! The structural terms mirror §0.3:
+//! - connections: 16 B/connection (u32 source, u32 target, f32 weight,
+//!   u16 delay, u8 port, 1 B pad), sorted by source;
+//! - p2p/collective maps: 8 B per image entry (R + L), plus per-image
+//!   first-index (4 B, level ≥ 2) and out-degree count (4 B, level 3);
+//! - collective host arrays `H` + image arrays `I`: 8 B per entry, mirrored
+//!   per remote rank;
+//! - neuron state: 9 f32 arrays (v, i_ex, i_in, r, w_ex, w_in, spike + 2
+//!   scratch) per neuron;
+//! - spike ring buffers: 2 ports x `delay_slots` x f32 per neuron;
+//! - transient sort scratch: 12 B per connection of the largest sort
+//!   segment (keys u64 + permutation u32), the dominant Fig. 5 peak term.
+//!
+//! The *expected number of distinct sources* from a remote rank follows the
+//! balls-in-bins form `M·(1 − (1 − 1/(P·M))^(M·K))` which produces exactly
+//! the paper's level-0 plateau once `P` exceeds the in-degree: level 0 maps
+//! only used sources, so the total image count saturates at `≈ M·K_in`.
+
+use super::MemKind;
+use crate::remote::levels::GpuMemLevel;
+
+/// Baseline balanced-network constants (§0.4.2).
+pub const NEURONS_PER_SCALE: u64 = 11_250;
+pub const K_IN: u64 = 11_250;
+
+/// Bytes per stored connection.
+pub const BYTES_PER_CONN: u64 = 16;
+/// Bytes per (R, L) map entry.
+pub const BYTES_PER_MAP_ENTRY: u64 = 8;
+/// f32 state arrays per neuron in the runtime block layout.
+pub const STATE_ARRAYS: u64 = 9;
+/// Ring-buffer delay slots (2 ports).
+pub const DELAY_SLOTS: u64 = 16;
+/// Number of segments the preparation sort processes at a time; the
+/// transient scratch peak is one segment's keys+permutation.
+pub const SORT_SEGMENTS: u64 = 16;
+
+/// NVIDIA A100 (Leonardo Booster custom) device memory.
+pub const A100_BYTES: u64 = 64 * (1 << 30);
+/// NVIDIA V100 (JUSUF) device memory.
+pub const V100_BYTES: u64 = 16 * (1 << 30);
+
+/// Per-rank memory breakdown predicted by the model (bytes).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemBreakdown {
+    pub connections: u64,
+    pub maps: u64,
+    pub first_counts: u64,
+    pub collective_hi: u64,
+    pub neuron_state: u64,
+    pub ring_buffers: u64,
+    pub transient_peak: u64,
+}
+
+impl MemBreakdown {
+    /// Steady-state device bytes.
+    pub fn steady(&self) -> u64 {
+        self.connections
+            + self.maps
+            + self.first_counts
+            + self.collective_hi
+            + self.neuron_state
+            + self.ring_buffers
+    }
+
+    /// Peak device bytes (steady + transient construction peak).
+    pub fn peak(&self) -> u64 {
+        self.steady() + self.transient_peak
+    }
+}
+
+/// Expected number of *distinct* values after `draws` uniform draws from a
+/// population of `pop` values.
+pub fn expected_distinct(pop: f64, draws: f64) -> f64 {
+    if pop <= 0.0 {
+        return 0.0;
+    }
+    pop * (1.0 - (1.0 - 1.0 / pop).powf(draws))
+}
+
+/// Predict the per-rank device memory for the scalable balanced network at
+/// `scale`, with `procs` MPI processes, at GPU memory level `level`.
+pub fn predict_balanced(scale: f64, procs: u64, level: GpuMemLevel) -> MemBreakdown {
+    let m = (NEURONS_PER_SCALE as f64 * scale).round(); // neurons per rank
+    let k = K_IN as f64; // in-degree per neuron
+    let p = procs as f64;
+    let conns = m * k; // connections stored per rank (targets local)
+
+    // Incoming connections drawn uniformly over the whole distributed
+    // population; per remote source rank the expected distinct sources:
+    let draws_per_source_rank = conns / p;
+    let distinct_per_rank = expected_distinct(m, draws_per_source_rank);
+    let used_images = (p - 1.0).max(0.0) * distinct_per_rank;
+    // Level >= 1 creates an image for every source passed to RemoteConnect
+    // (the full remote population), regardless of use:
+    let all_images = (p - 1.0).max(0.0) * m;
+    let images = match level {
+        GpuMemLevel::L0 => used_images,
+        _ => all_images,
+    };
+
+    // --- device-resident structures by level (§0.3.6) ---
+    let map_bytes = images * BYTES_PER_MAP_ENTRY as f64;
+    let first_bytes = images * 4.0;
+    let count_bytes = images * 4.0;
+    let (maps_dev, first_counts_dev) = match level {
+        GpuMemLevel::L0 | GpuMemLevel::L1 => (0.0, 0.0),
+        GpuMemLevel::L2 => (map_bytes, first_bytes),
+        GpuMemLevel::L3 => (map_bytes, first_bytes + count_bytes),
+    };
+
+    // Collective H/I arrays: H mirrored for every remote rank (4 B), I of
+    // the same length (4 B). With level >= 1 every remote neuron appears in
+    // H; with level 0 H still holds the union of RemoteConnect source
+    // arguments (the full population for this model — H is placement-bound,
+    // not flag-bound), but resides on the host for levels 0-1.
+    let hi_entries = (p - 1.0).max(0.0) * m;
+    let hi_dev = match level {
+        GpuMemLevel::L0 | GpuMemLevel::L1 => 0.0,
+        _ => hi_entries * 8.0,
+    };
+
+    let neuron_state = m * STATE_ARRAYS as f64 * 4.0;
+    let ring = (m + images) as f64 * 0.0 + m * DELAY_SLOTS as f64 * 2.0 * 4.0;
+
+    // Transient peak: sort scratch over the largest segment + the
+    // RemoteConnect temporaries (l, b, ũ, s̃ over the source set).
+    let sort_scratch = conns / SORT_SEGMENTS as f64 * 12.0;
+    let rc_temp = m * (4.0 + 1.0 + 4.0 + 4.0);
+    let transient = sort_scratch + rc_temp;
+
+    MemBreakdown {
+        connections: (conns * BYTES_PER_CONN as f64) as u64,
+        maps: maps_dev as u64,
+        first_counts: first_counts_dev as u64,
+        collective_hi: hi_dev as u64,
+        neuron_state: neuron_state as u64,
+        ring_buffers: ring as u64,
+        transient_peak: transient as u64,
+    }
+}
+
+/// Which memory the (R, L) maps / first / count structures live in for a
+/// given level (used by the runtime structures; duplicated here for the
+/// analytic model's documentation value).
+pub fn map_residency(level: GpuMemLevel) -> MemKind {
+    match level {
+        GpuMemLevel::L0 | GpuMemLevel::L1 => MemKind::Host,
+        _ => MemKind::Device,
+    }
+}
+
+/// Model-size rows of Table 1: (nodes, gpus, neurons, synapses) at scale 20.
+pub fn table1_row(nodes: u64, gpus_per_node: u64, scale: f64) -> (u64, u64, u64, u64) {
+    let gpus = nodes * gpus_per_node;
+    let neurons = (NEURONS_PER_SCALE as f64 * scale) as u64 * gpus;
+    let synapses = neurons * K_IN;
+    (nodes, gpus, neurons, synapses)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expected_distinct_limits() {
+        // few draws from a large population: ~all distinct
+        let d = expected_distinct(1e9, 100.0);
+        assert!((d - 100.0).abs() < 0.01);
+        // many draws from a small population: saturates at the population
+        let d = expected_distinct(100.0, 1e6);
+        assert!((d - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn table1_matches_paper() {
+        // Paper Table 1: 32 nodes, 128 GPUs -> 28.8e6 neurons, 0.32e12 syn
+        let (_, gpus, neurons, syn) = table1_row(32, 4, 20.0);
+        assert_eq!(gpus, 128);
+        assert_eq!(neurons, 28_800_000);
+        assert_eq!(syn, 324_000_000_000);
+        // 256 nodes -> 230.4e6 neurons, 2.59e12 synapses
+        let (_, _, neurons, syn) = table1_row(256, 4, 20.0);
+        assert_eq!(neurons, 230_400_000);
+        assert!((syn as f64 / 1e12 - 2.592).abs() < 0.01);
+    }
+
+    #[test]
+    fn level0_plateaus_beyond_indegree() {
+        // Paper: from ~3072 nodes (12288 gpus... the paper says 3072 nodes =
+        // 12288 ranks? no: 4 GPUs/node -> procs = 4*nodes) the level-0 peak
+        // plateaus because P exceeds K_in and the used-image maps saturate.
+        let scale = 20.0;
+        let a = predict_balanced(scale, 11_250, GpuMemLevel::L0);
+        let b = predict_balanced(scale, 22_500, GpuMemLevel::L0);
+        let rel = (b.peak() as f64 - a.peak() as f64) / a.peak() as f64;
+        assert!(rel.abs() < 0.01, "level-0 peak should plateau, rel={rel}");
+    }
+
+    #[test]
+    fn higher_levels_grow_with_procs() {
+        let scale = 20.0;
+        let a = predict_balanced(scale, 128, GpuMemLevel::L3);
+        let b = predict_balanced(scale, 1024, GpuMemLevel::L3);
+        assert!(b.peak() > a.peak(), "level-3 peak must grow with procs");
+    }
+
+    #[test]
+    fn levels_ordered_by_device_usage() {
+        let scale = 20.0;
+        let p = 512;
+        let l0 = predict_balanced(scale, p, GpuMemLevel::L0).steady();
+        let l1 = predict_balanced(scale, p, GpuMemLevel::L1).steady();
+        let l2 = predict_balanced(scale, p, GpuMemLevel::L2).steady();
+        let l3 = predict_balanced(scale, p, GpuMemLevel::L3).steady();
+        assert!(l0 <= l1 && l1 <= l2 && l2 <= l3, "{l0} {l1} {l2} {l3}");
+    }
+
+    #[test]
+    fn scale20_fits_a100_at_moderate_procs() {
+        // Paper: scale 20 runs on A100 (64 GB) up to 1024 GPUs for all
+        // levels except where the map growth exceeds the budget.
+        let l0 = predict_balanced(20.0, 1024, GpuMemLevel::L0);
+        assert!(l0.peak() < A100_BYTES, "L0 @1024 procs must fit A100");
+        // connections dominate (§Discussion: "memory peak depends primarily
+        // on the number of connections")
+        assert!(l0.connections > l0.steady() / 2);
+    }
+
+    #[test]
+    fn residency_matches_levels() {
+        assert_eq!(map_residency(GpuMemLevel::L0), MemKind::Host);
+        assert_eq!(map_residency(GpuMemLevel::L1), MemKind::Host);
+        assert_eq!(map_residency(GpuMemLevel::L2), MemKind::Device);
+        assert_eq!(map_residency(GpuMemLevel::L3), MemKind::Device);
+    }
+}

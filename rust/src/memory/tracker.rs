@@ -1,0 +1,265 @@
+//! Explicit allocation tracker for the simulated GPU device.
+//!
+//! Every data structure of the simulator registers its residency (device or
+//! host) and its size here; the tracker maintains current and peak byte
+//! counts per memory kind. The GPU-memory-level machinery (§0.3.6) is what
+//! decides *which* structures go where; the tracker is how Fig. 5's peak
+//! curves are measured on this substrate.
+
+/// Which memory a structure lives in. The paper's GPU memory levels move
+/// remote-connection structures between the two.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemKind {
+    /// Simulated GPU memory (the scarce resource; Fig. 5 tracks its peak).
+    Device,
+    /// Host (CPU) memory ("typically underutilized", §0.5).
+    Host,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct Usage {
+    current: u64,
+    peak: u64,
+}
+
+impl Usage {
+    fn add(&mut self, bytes: u64) {
+        self.current += bytes;
+        self.peak = self.peak.max(self.current);
+    }
+    fn sub(&mut self, bytes: u64) {
+        debug_assert!(self.current >= bytes, "free exceeds allocation");
+        self.current = self.current.saturating_sub(bytes);
+    }
+}
+
+/// Per-rank memory tracker.
+#[derive(Debug, Default)]
+pub struct Tracker {
+    device: Usage,
+    host: Usage,
+    /// count of transient (alloc+free within one operation) device peaks
+    pub transient_events: u64,
+}
+
+impl Tracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn alloc(&mut self, kind: MemKind, bytes: u64) {
+        match kind {
+            MemKind::Device => self.device.add(bytes),
+            MemKind::Host => self.host.add(bytes),
+        }
+    }
+
+    pub fn free(&mut self, kind: MemKind, bytes: u64) {
+        match kind {
+            MemKind::Device => self.device.sub(bytes),
+            MemKind::Host => self.host.sub(bytes),
+        }
+    }
+
+    /// Account a transient buffer: allocated, used inside `f`, then freed.
+    /// This is how construction temporaries (the `l`, `b`, `ũ`, `s̃` arrays
+    /// of §0.3.3 and sort scratch) contribute to the *peak* without
+    /// contributing to the steady state.
+    pub fn transient<T>(&mut self, kind: MemKind, bytes: u64, f: impl FnOnce() -> T) -> T {
+        self.alloc(kind, bytes);
+        self.transient_events += 1;
+        let out = f();
+        self.free(kind, bytes);
+        out
+    }
+
+    /// Adjust accounting when a tracked vector grows (old freed, new alloc'd).
+    pub fn realloc(&mut self, kind: MemKind, old_bytes: u64, new_bytes: u64) {
+        // order matters for peak fidelity: device reallocs hold both copies
+        // momentarily (cudaMalloc+copy+free), so peak sees old+new.
+        self.alloc(kind, new_bytes);
+        self.free(kind, old_bytes);
+    }
+
+    pub fn current(&self, kind: MemKind) -> u64 {
+        match kind {
+            MemKind::Device => self.device.current,
+            MemKind::Host => self.host.current,
+        }
+    }
+
+    pub fn peak(&self, kind: MemKind) -> u64 {
+        match kind {
+            MemKind::Device => self.device.peak,
+            MemKind::Host => self.host.peak,
+        }
+    }
+}
+
+/// A vector whose heap usage is registered with a [`Tracker`].
+///
+/// Grows in fixed-size blocks (`BLOCK_ELEMS` elements), mirroring the
+/// paper's "arrays organized in fixed-size blocks that are allocated
+/// dynamically in order to use GPU memory efficiently" (§0.3.1).
+#[derive(Debug)]
+pub struct TrackedVec<T: Copy> {
+    data: Vec<T>,
+    kind: MemKind,
+    tracked_bytes: u64,
+}
+
+/// Elements per allocation block (64 KiB of u32).
+pub const BLOCK_ELEMS: usize = 16 * 1024;
+
+impl<T: Copy> TrackedVec<T> {
+    pub fn new(kind: MemKind) -> Self {
+        Self {
+            data: Vec::new(),
+            kind,
+            tracked_bytes: 0,
+        }
+    }
+
+    pub fn with_capacity(kind: MemKind, cap: usize, tr: &mut Tracker) -> Self {
+        let mut v = Self::new(kind);
+        v.reserve_blocks(cap, tr);
+        v
+    }
+
+    fn reserve_blocks(&mut self, needed: usize, tr: &mut Tracker) {
+        if needed <= self.data.capacity() {
+            return;
+        }
+        // Capacity grows geometrically (like the device allocator pooling
+        // blocks) but is *accounted* in fixed-size blocks; growing one
+        // block at a time would make pushes quadratic (§Perf iteration 1).
+        let geometric = self.data.capacity().saturating_mul(2);
+        let new_cap = needed
+            .max(geometric)
+            .div_ceil(BLOCK_ELEMS)
+            * BLOCK_ELEMS;
+        self.data.reserve_exact(new_cap - self.data.len());
+        let new_bytes = (self.data.capacity() * std::mem::size_of::<T>()) as u64;
+        tr.realloc(self.kind, self.tracked_bytes, new_bytes);
+        self.tracked_bytes = new_bytes;
+    }
+
+    pub fn push(&mut self, x: T, tr: &mut Tracker) {
+        self.reserve_blocks(self.data.len() + 1, tr);
+        self.data.push(x);
+    }
+
+    pub fn extend_from_slice(&mut self, xs: &[T], tr: &mut Tracker) {
+        self.reserve_blocks(self.data.len() + xs.len(), tr);
+        self.data.extend_from_slice(xs);
+    }
+
+    pub fn replace(&mut self, xs: Vec<T>, tr: &mut Tracker) {
+        self.data.clear();
+        self.extend_from_slice(&xs, tr);
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        &self.data
+    }
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+    pub fn bytes(&self) -> u64 {
+        self.tracked_bytes
+    }
+    pub fn kind(&self) -> MemKind {
+        self.kind
+    }
+
+    /// Release the tracked bytes (call before drop when tracker is external).
+    pub fn release(&mut self, tr: &mut Tracker) {
+        tr.free(self.kind, self.tracked_bytes);
+        self.tracked_bytes = 0;
+        self.data = Vec::new();
+    }
+}
+
+impl<T: Copy> std::ops::Index<usize> for TrackedVec<T> {
+    type Output = T;
+    fn index(&self, i: usize) -> &T {
+        &self.data[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracks_transients() {
+        let mut t = Tracker::new();
+        t.alloc(MemKind::Device, 100);
+        t.transient(MemKind::Device, 1000, || {});
+        assert_eq!(t.current(MemKind::Device), 100);
+        assert_eq!(t.peak(MemKind::Device), 1100);
+        assert_eq!(t.transient_events, 1);
+    }
+
+    #[test]
+    fn host_and_device_are_independent() {
+        let mut t = Tracker::new();
+        t.alloc(MemKind::Host, 50);
+        t.alloc(MemKind::Device, 70);
+        t.free(MemKind::Host, 50);
+        assert_eq!(t.current(MemKind::Host), 0);
+        assert_eq!(t.peak(MemKind::Host), 50);
+        assert_eq!(t.current(MemKind::Device), 70);
+    }
+
+    #[test]
+    fn realloc_peak_sees_both_copies() {
+        let mut t = Tracker::new();
+        t.alloc(MemKind::Device, 100);
+        t.realloc(MemKind::Device, 100, 200);
+        assert_eq!(t.current(MemKind::Device), 200);
+        assert_eq!(t.peak(MemKind::Device), 300);
+    }
+
+    #[test]
+    fn tracked_vec_grows_in_blocks() {
+        let mut t = Tracker::new();
+        let mut v: TrackedVec<u32> = TrackedVec::new(MemKind::Device);
+        v.push(1, &mut t);
+        assert_eq!(
+            t.current(MemKind::Device),
+            (BLOCK_ELEMS * 4) as u64,
+            "first push allocates one block"
+        );
+        for i in 0..BLOCK_ELEMS {
+            v.push(i as u32, &mut t);
+        }
+        assert_eq!(t.current(MemKind::Device), (2 * BLOCK_ELEMS * 4) as u64);
+        assert_eq!(v.len(), BLOCK_ELEMS + 1);
+    }
+
+    #[test]
+    fn tracked_vec_release() {
+        let mut t = Tracker::new();
+        let mut v: TrackedVec<u64> = TrackedVec::with_capacity(MemKind::Host, 10, &mut t);
+        v.extend_from_slice(&[1, 2, 3], &mut t);
+        assert!(t.current(MemKind::Host) > 0);
+        v.release(&mut t);
+        assert_eq!(t.current(MemKind::Host), 0);
+    }
+
+    #[test]
+    fn tracked_vec_replace() {
+        let mut t = Tracker::new();
+        let mut v: TrackedVec<u32> = TrackedVec::new(MemKind::Device);
+        v.extend_from_slice(&[5, 4, 3], &mut t);
+        v.replace(vec![1, 2], &mut t);
+        assert_eq!(v.as_slice(), &[1, 2]);
+    }
+}

@@ -1,0 +1,173 @@
+//! The Potjans–Diesmann cortical microcircuit [46]: 8 populations (L2/3,
+//! L4, L5, L6 × E/I) under ~1 mm² of cortex. It is the intra-area building
+//! block of the Multi-Area Model (§0.4.1) and the single-area validation
+//! workload (Appendix A).
+//!
+//! Connectivity is given as pairwise connection probabilities; we convert
+//! them to in-degrees (`K = p · N_src`) and instantiate `fixed_indegree`
+//! connections, the standard downscaling-friendly reading of the model.
+
+/// Population labels in canonical order.
+pub const POP_NAMES: [&str; 8] = [
+    "L23E", "L23I", "L4E", "L4I", "L5E", "L5I", "L6E", "L6I",
+];
+
+/// Full-scale population sizes (neurons).
+pub const POP_SIZES: [u32; 8] = [20_683, 5_834, 21_915, 5_479, 4_850, 1_065, 14_395, 2_948];
+
+/// Connection probabilities `P[target][source]` (Potjans & Diesmann 2014,
+/// Table 5).
+pub const CONN_PROBS: [[f64; 8]; 8] = [
+    // from:  L23E    L23I    L4E     L4I     L5E     L5I     L6E     L6I
+    [0.1009, 0.1689, 0.0437, 0.0818, 0.0323, 0.0000, 0.0076, 0.0000], // to L23E
+    [0.1346, 0.1371, 0.0316, 0.0515, 0.0755, 0.0000, 0.0042, 0.0000], // to L23I
+    [0.0077, 0.0059, 0.0497, 0.1350, 0.0067, 0.0003, 0.0453, 0.0000], // to L4E
+    [0.0691, 0.0029, 0.0794, 0.1597, 0.0033, 0.0000, 0.1057, 0.0000], // to L4I
+    [0.1004, 0.0622, 0.0505, 0.0057, 0.0831, 0.3726, 0.0204, 0.0000], // to L5E
+    [0.0548, 0.0269, 0.0257, 0.0022, 0.0600, 0.3158, 0.0086, 0.0000], // to L5I
+    [0.0156, 0.0066, 0.0211, 0.0166, 0.0572, 0.0197, 0.0396, 0.2252], // to L6E
+    [0.0364, 0.0010, 0.0034, 0.0005, 0.0277, 0.0080, 0.0658, 0.1443], // to L6I
+];
+
+/// External (background) in-degrees per population.
+pub const K_EXT: [u32; 8] = [1600, 1500, 2100, 1900, 2000, 1900, 2900, 2100];
+
+/// Background Poisson rate per external synapse (spikes/s).
+pub const BG_RATE_HZ: f64 = 8.0;
+
+/// Reference synaptic strength (pA): PSC amplitude for PSP ≈ 0.15 mV.
+pub const W_REF_PA: f64 = 87.8;
+/// Relative inhibitory strength g (inhibitory weight = −g · w).
+pub const G_REL: f64 = 4.0;
+/// Mean delays (ms): excitatory / inhibitory.
+pub const DELAY_E_MS: f64 = 1.5;
+pub const DELAY_I_MS: f64 = 0.75;
+
+/// Microcircuit scaled by `n_scale` (population sizes) and `k_scale`
+/// (in-degrees; weights are scaled by 1/k_scale to preserve input).
+#[derive(Clone, Debug)]
+pub struct Microcircuit {
+    pub n_scale: f64,
+    pub k_scale: f64,
+}
+
+impl Microcircuit {
+    pub fn new(n_scale: f64, k_scale: f64) -> Self {
+        Self { n_scale, k_scale }
+    }
+
+    /// Scaled population sizes (≥ 2 neurons each).
+    pub fn sizes(&self) -> [u32; 8] {
+        let mut out = [0u32; 8];
+        for (i, &n) in POP_SIZES.iter().enumerate() {
+            out[i] = ((n as f64 * self.n_scale).round() as u32).max(2);
+        }
+        out
+    }
+
+    pub fn total_neurons(&self) -> u64 {
+        self.sizes().iter().map(|&n| n as u64).sum()
+    }
+
+    /// Scaled in-degree from source population `s` to target `t`
+    /// (`K = p · N_src_full · k_scale`).
+    pub fn indegree(&self, t: usize, s: usize) -> u32 {
+        (CONN_PROBS[t][s] * POP_SIZES[s] as f64 * self.k_scale).round() as u32
+    }
+
+    /// Scaled external in-degree.
+    pub fn k_ext(&self, t: usize) -> u32 {
+        ((K_EXT[t] as f64 * self.k_scale).round() as u32).max(1)
+    }
+
+    /// Synaptic weight (pA) for a projection, with the 1/k_scale
+    /// compensation and the doubled L4E→L23E exception.
+    pub fn weight(&self, t: usize, s: usize) -> f64 {
+        let w = W_REF_PA / self.k_scale;
+        if s % 2 == 1 {
+            -G_REL * w
+        } else if t == 0 && s == 2 {
+            2.0 * w // L4E -> L23E
+        } else {
+            w
+        }
+    }
+
+    /// External drive weight (pA).
+    pub fn weight_ext(&self) -> f64 {
+        W_REF_PA / self.k_scale
+    }
+
+    /// Delay in steps for a projection at `dt_ms`.
+    pub fn delay_steps(&self, s: usize, dt_ms: f64) -> u32 {
+        let d = if s % 2 == 0 { DELAY_E_MS } else { DELAY_I_MS };
+        (d / dt_ms).round().max(1.0) as u32
+    }
+
+    /// Total internal synapses at this scaling.
+    pub fn total_synapses(&self) -> u64 {
+        let sizes = self.sizes();
+        let mut total = 0u64;
+        for t in 0..8 {
+            for s in 0..8 {
+                total += self.indegree(t, s) as u64 * sizes[t] as u64;
+            }
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_scale_counts_match_paper() {
+        let mc = Microcircuit::new(1.0, 1.0);
+        assert_eq!(mc.total_neurons(), 77_169);
+        // ~0.3e9 synapses at full scale (Potjans-Diesmann: ~0.3 billion)
+        let syn = mc.total_synapses();
+        assert!((2.5e8..3.5e8).contains(&(syn as f64)), "syn={syn}");
+    }
+
+    #[test]
+    fn known_indegrees() {
+        let mc = Microcircuit::new(1.0, 1.0);
+        // K(L23E <- L23E) = 0.1009 * 20683 ≈ 2087
+        assert_eq!(mc.indegree(0, 0), 2087);
+        // zero-probability projections have zero in-degree
+        assert_eq!(mc.indegree(0, 5), 0);
+    }
+
+    #[test]
+    fn weights_sign_and_exception() {
+        let mc = Microcircuit::new(1.0, 1.0);
+        assert!(mc.weight(0, 0) > 0.0);
+        assert!(mc.weight(0, 1) < 0.0);
+        assert_eq!(mc.weight(0, 2), 2.0 * W_REF_PA); // L4E->L23E doubled
+        assert_eq!(mc.weight(3, 1), -G_REL * W_REF_PA);
+    }
+
+    #[test]
+    fn downscaling_preserves_input_strength() {
+        let mc = Microcircuit::new(0.1, 0.1);
+        // K * w invariant under k_scale
+        let full = Microcircuit::new(1.0, 1.0);
+        let kw_full = full.indegree(0, 0) as f64 * full.weight(0, 0);
+        let kw_down = mc.indegree(0, 0) as f64 * mc.weight(0, 0);
+        assert!((kw_full - kw_down).abs() / kw_full < 0.02);
+    }
+
+    #[test]
+    fn delay_steps_at_reference_dt() {
+        let mc = Microcircuit::new(1.0, 1.0);
+        assert_eq!(mc.delay_steps(0, 0.1), 15); // 1.5 ms excitatory
+        assert_eq!(mc.delay_steps(1, 0.1), 8); // 0.75 ms inhibitory
+    }
+
+    #[test]
+    fn tiny_scale_keeps_minimum_population() {
+        let mc = Microcircuit::new(1e-6, 1e-3);
+        assert!(mc.sizes().iter().all(|&n| n >= 2));
+    }
+}

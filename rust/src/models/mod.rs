@@ -1,0 +1,8 @@
+//! The benchmark models of §0.4: the cortical microcircuit (the building
+//! block of the Multi-Area Model), the 32-area MAM with area packing, and
+//! the scalable balanced network (the "HPC benchmark").
+
+pub mod balanced;
+pub mod mam;
+pub mod microcircuit;
+pub mod packing;

@@ -1,0 +1,220 @@
+//! Area packing (§0.4.1, Appendix B): distribute the MAM's areas over a
+//! smaller number of GPUs while balancing the load, based on the classic
+//! 0–1 knapsack problem. The weight of an area is the sum of its total
+//! incoming connections and its neuron count; each area is assigned exactly
+//! once. The packing runs at model-initialization time from the
+//! connectivity data, before any neuron or connection is instantiated.
+
+/// One area's packing weight.
+#[derive(Clone, Copy, Debug)]
+pub struct AreaWeight {
+    pub area: usize,
+    /// incoming connections + neurons
+    pub weight: u64,
+}
+
+/// Assignment of areas to GPUs (one entry per area: the GPU index).
+#[derive(Clone, Debug)]
+pub struct Packing {
+    pub gpu_of_area: Vec<usize>,
+    pub n_gpus: usize,
+}
+
+impl Packing {
+    /// Areas assigned to a GPU.
+    pub fn areas_of(&self, gpu: usize) -> Vec<usize> {
+        self.gpu_of_area
+            .iter()
+            .enumerate()
+            .filter(|(_, &g)| g == gpu)
+            .map(|(a, _)| a)
+            .collect()
+    }
+
+    /// Load (sum of weights) per GPU.
+    pub fn loads(&self, weights: &[AreaWeight]) -> Vec<u64> {
+        let mut loads = vec![0u64; self.n_gpus];
+        for w in weights {
+            loads[self.gpu_of_area[w.area]] += w.weight;
+        }
+        loads
+    }
+
+    /// max/mean load imbalance.
+    pub fn imbalance(&self, weights: &[AreaWeight]) -> f64 {
+        let loads = self.loads(weights);
+        let max = *loads.iter().max().unwrap_or(&0) as f64;
+        let mean = loads.iter().sum::<u64>() as f64 / self.n_gpus.max(1) as f64;
+        if mean <= 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+/// Pack areas onto `n_gpus` GPUs.
+///
+/// Following the paper: the capacity per GPU is the ideal share
+/// (total/n_gpus); GPUs are filled one after another by solving a 0–1
+/// knapsack over the remaining areas (DP over scaled weights), and the
+/// leftovers spill onto the last GPU. A final LPT (longest-processing-time)
+/// rebalancing pass fixes pathological spills.
+pub fn pack_areas(weights: &[AreaWeight], n_gpus: usize) -> Packing {
+    assert!(n_gpus >= 1);
+    assert!(!weights.is_empty());
+    let n = weights.len();
+    let total: u64 = weights.iter().map(|w| w.weight).sum();
+    let capacity = total.div_ceil(n_gpus as u64);
+    // DP resolution: keep the knapsack table small
+    let unit = (capacity / 2048).max(1);
+
+    let mut assigned = vec![usize::MAX; n];
+    let mut remaining: Vec<usize> = (0..n).collect();
+    for gpu in 0..n_gpus {
+        if remaining.is_empty() {
+            break;
+        }
+        if gpu == n_gpus - 1 {
+            for &a in &remaining {
+                assigned[weights[a].area] = gpu;
+            }
+            remaining.clear();
+            break;
+        }
+        let cap_units = (capacity / unit) as usize;
+        // 0-1 knapsack maximizing packed weight within capacity
+        let mut best: Vec<u64> = vec![0; cap_units + 1];
+        let mut choice: Vec<Vec<bool>> = vec![vec![false; cap_units + 1]; remaining.len()];
+        for (i, &a) in remaining.iter().enumerate() {
+            let w_units = ((weights[a].weight + unit - 1) / unit) as usize;
+            let value = weights[a].weight;
+            if w_units > cap_units {
+                continue;
+            }
+            for c in (w_units..=cap_units).rev() {
+                let cand = best[c - w_units] + value;
+                if cand > best[c] {
+                    best[c] = cand;
+                    choice[i][c] = true;
+                }
+            }
+        }
+        // backtrack
+        let mut c = cap_units;
+        let mut taken = vec![false; remaining.len()];
+        for i in (0..remaining.len()).rev() {
+            if choice[i][c] {
+                taken[i] = true;
+                let w_units =
+                    ((weights[remaining[i]].weight + unit - 1) / unit) as usize;
+                c -= w_units;
+            }
+        }
+        // nothing fit (single huge area): force the largest remaining one
+        if !taken.iter().any(|&t| t) {
+            let (imax, _) = remaining
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &a)| weights[a].weight)
+                .unwrap();
+            taken[imax] = true;
+        }
+        let mut next_remaining = Vec::new();
+        for (i, &a) in remaining.iter().enumerate() {
+            if taken[i] {
+                assigned[weights[a].area] = gpu;
+            } else {
+                next_remaining.push(a);
+            }
+        }
+        remaining = next_remaining;
+    }
+
+    // LPT rebalancing pass: move areas off the most loaded GPU while it
+    // reduces the maximum load
+    let mut packing = Packing {
+        gpu_of_area: assigned,
+        n_gpus,
+    };
+    let mut improved = true;
+    while improved {
+        improved = false;
+        let loads = packing.loads(weights);
+        let (hi, &hi_load) = loads.iter().enumerate().max_by_key(|(_, &l)| l).unwrap();
+        let (lo, &lo_load) = loads.iter().enumerate().min_by_key(|(_, &l)| l).unwrap();
+        if hi == lo {
+            break;
+        }
+        // smallest area on hi that helps
+        let mut candidates: Vec<usize> = packing.areas_of(hi);
+        candidates.sort_by_key(|&a| weights[a].weight);
+        for a in candidates {
+            let w = weights[a].weight;
+            if lo_load + w < hi_load {
+                packing.gpu_of_area[a] = lo;
+                improved = true;
+                break;
+            }
+        }
+    }
+    packing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn weights(ws: &[u64]) -> Vec<AreaWeight> {
+        ws.iter()
+            .enumerate()
+            .map(|(area, &weight)| AreaWeight { area, weight })
+            .collect()
+    }
+
+    #[test]
+    fn every_area_assigned_once() {
+        let w = weights(&[5, 9, 3, 7, 1, 8, 2, 6]);
+        let p = pack_areas(&w, 3);
+        assert_eq!(p.gpu_of_area.len(), 8);
+        assert!(p.gpu_of_area.iter().all(|&g| g < 3));
+        let total: usize = (0..3).map(|g| p.areas_of(g).len()).sum();
+        assert_eq!(total, 8);
+    }
+
+    #[test]
+    fn single_gpu_takes_everything() {
+        let w = weights(&[5, 9, 3]);
+        let p = pack_areas(&w, 1);
+        assert!(p.gpu_of_area.iter().all(|&g| g == 0));
+        assert_eq!(p.loads(&w), vec![17]);
+    }
+
+    #[test]
+    fn as_many_gpus_as_areas_spreads_them() {
+        let w = weights(&[10, 10, 10, 10]);
+        let p = pack_areas(&w, 4);
+        let loads = p.loads(&w);
+        assert!(loads.iter().all(|&l| l == 10), "loads={loads:?}");
+    }
+
+    #[test]
+    fn balanced_within_factor_two() {
+        // 32 synthetic areas, skewed weights (like MAM areas)
+        let ws: Vec<u64> = (0..32).map(|i| 100 + (i * 37) % 400).collect();
+        let w = weights(&ws);
+        for n_gpus in [2, 4, 8, 16] {
+            let p = pack_areas(&w, n_gpus);
+            let imb = p.imbalance(&w);
+            assert!(imb < 1.6, "{n_gpus} gpus: imbalance {imb}");
+        }
+    }
+
+    #[test]
+    fn huge_single_area_does_not_stall() {
+        let w = weights(&[1_000_000, 1, 1, 1]);
+        let p = pack_areas(&w, 2);
+        // the huge area must be alone-ish; all assigned
+        assert!(p.gpu_of_area.iter().all(|&g| g < 2));
+    }
+}

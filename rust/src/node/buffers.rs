@@ -1,0 +1,153 @@
+//! Input spike ring buffers (Appendix F, Fig. 16c).
+//!
+//! Each neuron has a circular buffer per receptor port; a delivered spike
+//! is accumulated into the slot shifted from the current time step by its
+//! delay, adding `multiplicity × weight`. The layout is slot-major
+//! (`[slot][neuron]`) so that reading the current step's input for all
+//! neurons of a rank — the hand-off to the device kernel — is a contiguous
+//! slice per port.
+
+use crate::memory::{MemKind, Tracker};
+
+/// Ring buffers for `n` neurons, `slots` delay slots and 2 receptor ports.
+pub struct RingBuffers {
+    n: usize,
+    slots: usize,
+    cursor: usize,
+    /// excitatory accumulation, `[slot][neuron]` flattened
+    ex: Vec<f32>,
+    /// inhibitory accumulation
+    inh: Vec<f32>,
+    tracked: u64,
+}
+
+impl RingBuffers {
+    /// `max_delay` in steps (the buffer needs max_delay + 1 slots so that a
+    /// delay of `max_delay` lands on a slot not yet consumed).
+    pub fn new(n: usize, max_delay: u16, tr: &mut Tracker) -> Self {
+        let slots = max_delay as usize + 1;
+        let bytes = (n * slots * 2 * 4) as u64;
+        tr.alloc(MemKind::Device, bytes);
+        Self {
+            n,
+            slots,
+            cursor: 0,
+            ex: vec![0.0; n * slots],
+            inh: vec![0.0; n * slots],
+            tracked: bytes,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+    pub fn n_slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Accumulate a spike: `delay` steps from now, on `port`, adding
+    /// `weight * mult`. Delays must satisfy `1 <= delay <= max_delay`.
+    #[inline]
+    pub fn add(&mut self, neuron: u32, port: u8, delay: u16, weight: f32, mult: u16) {
+        debug_assert!(delay >= 1 && (delay as usize) < self.slots);
+        debug_assert!((neuron as usize) < self.n);
+        let slot = (self.cursor + delay as usize) % self.slots;
+        let idx = slot * self.n + neuron as usize;
+        let w = weight * mult as f32;
+        if port == 0 {
+            self.ex[idx] += w;
+        } else {
+            self.inh[idx] += w;
+        }
+    }
+
+    /// The input slices for the current step (to feed the device kernel).
+    pub fn current(&self) -> (&[f32], &[f32]) {
+        let a = self.cursor * self.n;
+        (&self.ex[a..a + self.n], &self.inh[a..a + self.n])
+    }
+
+    /// Zero the consumed slot and advance the cursor by one step.
+    pub fn advance(&mut self) {
+        let a = self.cursor * self.n;
+        self.ex[a..a + self.n].fill(0.0);
+        self.inh[a..a + self.n].fill(0.0);
+        self.cursor = (self.cursor + 1) % self.slots;
+    }
+
+    pub fn release(&mut self, tr: &mut Tracker) {
+        tr.free(MemKind::Device, self.tracked);
+        self.tracked = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delivery_lands_after_delay_steps() {
+        let mut tr = Tracker::new();
+        let mut rb = RingBuffers::new(4, 5, &mut tr);
+        rb.add(2, 0, 3, 1.5, 1);
+        for step in 0..6 {
+            let (ex, _) = rb.current();
+            if step == 3 {
+                assert_eq!(ex[2], 1.5, "arrives exactly at t+3");
+            } else {
+                assert!(ex.iter().all(|&x| x == 0.0), "step {step}: {ex:?}");
+            }
+            rb.advance();
+        }
+    }
+
+    #[test]
+    fn accumulation_and_ports() {
+        let mut tr = Tracker::new();
+        let mut rb = RingBuffers::new(2, 3, &mut tr);
+        rb.add(0, 0, 1, 2.0, 1);
+        rb.add(0, 0, 1, 3.0, 2); // multiplicity 2
+        rb.add(0, 1, 1, -4.0, 1);
+        rb.advance();
+        let (ex, inh) = rb.current();
+        assert_eq!(ex[0], 8.0); // 2 + 3*2
+        assert_eq!(inh[0], -4.0);
+        assert_eq!(ex[1], 0.0);
+    }
+
+    #[test]
+    fn slot_reuse_after_wraparound() {
+        let mut tr = Tracker::new();
+        let mut rb = RingBuffers::new(1, 2, &mut tr);
+        rb.add(0, 0, 2, 1.0, 1);
+        rb.advance(); // t=1
+        rb.advance(); // t=2, current now holds the spike
+        assert_eq!(rb.current().0[0], 1.0);
+        rb.advance(); // consumed slot zeroed
+        // wrap all the way around again: nothing ghosts
+        for _ in 0..6 {
+            assert_eq!(rb.current().0[0], 0.0);
+            rb.advance();
+        }
+    }
+
+    #[test]
+    fn max_delay_is_usable() {
+        let mut tr = Tracker::new();
+        let mut rb = RingBuffers::new(1, 4, &mut tr);
+        rb.add(0, 0, 4, 9.0, 1);
+        for _ in 0..4 {
+            rb.advance();
+        }
+        assert_eq!(rb.current().0[0], 9.0);
+    }
+
+    #[test]
+    fn memory_tracked_and_released() {
+        let mut tr = Tracker::new();
+        let mut rb = RingBuffers::new(100, 15, &mut tr);
+        assert_eq!(tr.current(MemKind::Device), 100 * 16 * 2 * 4);
+        rb.release(&mut tr);
+        assert_eq!(tr.current(MemKind::Device), 0);
+    }
+}

@@ -1,0 +1,115 @@
+//! Node space, neuron parameters, spike ring buffers and devices.
+
+pub mod buffers;
+pub mod device;
+pub mod neuron;
+
+pub use buffers::RingBuffers;
+pub use neuron::LifParams;
+
+/// What a local node index refers to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeKind {
+    /// A real neuron with dynamic state; `chunk`/`offset` locate its state
+    /// in the runtime state chunks (populations share a chunk).
+    Neuron { chunk: u16, offset: u32 },
+    /// An image (proxy) of a remote source neuron (§0.3): no state, only
+    /// outgoing connections; `src_rank` records where the real neuron is.
+    Image { src_rank: u16 },
+    /// A stimulation/recording device (Poisson generator, spike recorder).
+    Device { dev: u16 },
+}
+
+/// The per-rank node index space: real neurons, devices and image neurons
+/// share one index range `0..M` (image neurons are appended by
+/// `RemoteConnect` as in Eq. 6: `l := M; M <- M + 1`).
+#[derive(Debug, Default)]
+pub struct NodeSpace {
+    kinds: Vec<NodeKind>,
+    n_neurons: u32,
+    n_images: u32,
+    n_devices: u32,
+}
+
+impl NodeSpace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total number of local node indexes (the paper's `M_σ`).
+    pub fn m(&self) -> u32 {
+        self.kinds.len() as u32
+    }
+
+    pub fn n_neurons(&self) -> u32 {
+        self.n_neurons
+    }
+    pub fn n_images(&self) -> u32 {
+        self.n_images
+    }
+    pub fn n_devices(&self) -> u32 {
+        self.n_devices
+    }
+
+    pub fn kind(&self, idx: u32) -> NodeKind {
+        self.kinds[idx as usize]
+    }
+
+    /// Append `n` neurons belonging to state chunk `chunk`; returns the
+    /// first index.
+    pub fn create_neurons(&mut self, chunk: u16, n: u32) -> u32 {
+        let first = self.m();
+        for offset in 0..n {
+            self.kinds.push(NodeKind::Neuron { chunk, offset });
+        }
+        self.n_neurons += n;
+        first
+    }
+
+    /// Append one device; returns its node index.
+    pub fn create_device(&mut self, dev: u16) -> u32 {
+        let idx = self.m();
+        self.kinds.push(NodeKind::Device { dev });
+        self.n_devices += 1;
+        idx
+    }
+
+    /// Append one image neuron for a remote source on `src_rank`; returns
+    /// its local index (the `L` value of the new map entry).
+    pub fn create_image(&mut self, src_rank: u16) -> u32 {
+        let idx = self.m();
+        self.kinds.push(NodeKind::Image { src_rank });
+        self.n_images += 1;
+        idx
+    }
+
+    pub fn is_image(&self, idx: u32) -> bool {
+        matches!(self.kind(idx), NodeKind::Image { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_space_is_shared_and_sequential() {
+        let mut ns = NodeSpace::new();
+        let a = ns.create_neurons(0, 3);
+        let d = ns.create_device(0);
+        let i = ns.create_image(2);
+        let b = ns.create_neurons(1, 2);
+        assert_eq!(a, 0);
+        assert_eq!(d, 3);
+        assert_eq!(i, 4);
+        assert_eq!(b, 5);
+        assert_eq!(ns.m(), 7);
+        assert_eq!(ns.n_neurons(), 5);
+        assert_eq!(ns.n_images(), 1);
+        assert_eq!(ns.n_devices(), 1);
+        assert!(ns.is_image(4));
+        assert!(!ns.is_image(0));
+        assert_eq!(ns.kind(5), NodeKind::Neuron { chunk: 1, offset: 0 });
+        assert_eq!(ns.kind(4), NodeKind::Image { src_rank: 2 });
+    }
+}

@@ -1,0 +1,145 @@
+//! iaf_psc_exp neuron parameters and the exact-integration propagators.
+//!
+//! This mirrors `python/compile/kernels/ref.py` exactly: the same parameter
+//! set, the same propagator formulas, the same packed order consumed by the
+//! AOT-compiled kernel (checked against `artifacts/manifest.json` at load
+//! time by the PJRT runtime).
+
+/// Number of packed scalar parameters (must match kernels/lif.py).
+pub const NUM_PARAMS: usize = 10;
+
+/// Packed parameter order (must match `PARAM_ORDER` in kernels/lif.py).
+pub const PARAM_ORDER: [&str; NUM_PARAMS] = [
+    "p22", "p21ex", "p21in", "p20", "p11ex", "p11in", "theta", "v_reset", "t_ref", "i_e",
+];
+
+/// Biophysical iaf_psc_exp parameters (NEST defaults unless noted).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LifParams {
+    /// membrane time constant (ms)
+    pub tau_m: f64,
+    /// membrane capacitance (pF)
+    pub c_m: f64,
+    /// excitatory synaptic time constant (ms)
+    pub tau_syn_ex: f64,
+    /// inhibitory synaptic time constant (ms)
+    pub tau_syn_in: f64,
+    /// resting potential (mV); state v is V_m - E_L
+    pub e_l: f64,
+    /// spike threshold (mV, absolute)
+    pub v_th: f64,
+    /// reset potential (mV, absolute)
+    pub v_reset: f64,
+    /// refractory period (ms)
+    pub t_ref: f64,
+    /// constant input current (pA)
+    pub i_e: f64,
+}
+
+impl Default for LifParams {
+    fn default() -> Self {
+        Self {
+            tau_m: 10.0,
+            c_m: 250.0,
+            tau_syn_ex: 0.5,
+            tau_syn_in: 0.5,
+            e_l: -65.0,
+            v_th: -50.0,
+            v_reset: -65.0,
+            t_ref: 2.0,
+            i_e: 0.0,
+        }
+    }
+}
+
+impl LifParams {
+    /// Exact propagators for step `dt` (ms), packed in `PARAM_ORDER`.
+    pub fn packed(&self, dt: f64) -> [f32; NUM_PARAMS] {
+        let h = dt;
+        let p22 = (-h / self.tau_m).exp();
+        let p11ex = (-h / self.tau_syn_ex).exp();
+        let p11in = (-h / self.tau_syn_in).exp();
+        let p21 = |tau_syn: f64, p11: f64| -> f64 {
+            if (tau_syn - self.tau_m).abs() < 1e-9 {
+                h / self.c_m * p22
+            } else {
+                self.tau_m * tau_syn / (self.c_m * (self.tau_m - tau_syn)) * (p22 - p11)
+            }
+        };
+        let p21ex = p21(self.tau_syn_ex, p11ex);
+        let p21in = p21(self.tau_syn_in, p11in);
+        let p20 = self.tau_m / self.c_m * (1.0 - p22);
+        [
+            p22 as f32,
+            p21ex as f32,
+            p21in as f32,
+            p20 as f32,
+            p11ex as f32,
+            p11in as f32,
+            (self.v_th - self.e_l) as f32,
+            (self.v_reset - self.e_l) as f32,
+            (self.t_ref / h).round() as f32,
+            self.i_e as f32,
+        ]
+    }
+
+    /// Spike threshold relative to E_L.
+    pub fn theta(&self) -> f64 {
+        self.v_th - self.e_l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn propagators_positive_and_bounded() {
+        let p = LifParams::default().packed(0.1);
+        let (p22, p21ex, p21in, p20, p11ex, p11in) = (p[0], p[1], p[2], p[3], p[4], p[5]);
+        assert!(p22 > 0.0 && p22 < 1.0);
+        assert!(p11ex > 0.0 && p11ex < 1.0);
+        assert!(p11in > 0.0 && p11in < 1.0);
+        assert!(p21ex > 0.0, "excitatory propagator must be positive");
+        assert!(p21in > 0.0);
+        assert!(p20 > 0.0);
+    }
+
+    #[test]
+    fn packed_matches_python_oracle() {
+        // golden values from python: LifParams().packed() (ref.py defaults)
+        let p = LifParams::default().packed(0.1);
+        let expect: [f32; NUM_PARAMS] = [
+            0.99004984,   // p22 = exp(-0.01)
+            3.6067175e-4, // p21ex
+            3.6067175e-4, // p21in
+            3.9800664e-4, // p20
+            0.8187308,    // p11ex = exp(-0.2)
+            0.8187308,    // p11in
+            15.0,         // theta
+            0.0,          // v_reset
+            20.0,         // t_ref steps
+            0.0,          // i_e
+        ];
+        for (i, (a, b)) in p.iter().zip(expect.iter()).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-6 * (1.0 + b.abs()),
+                "param {i} ({}): {a} vs {b}",
+                PARAM_ORDER[i]
+            );
+        }
+    }
+
+    #[test]
+    fn degenerate_tau_limit_finite() {
+        let mut lp = LifParams::default();
+        lp.tau_syn_ex = lp.tau_m;
+        let p = lp.packed(0.1);
+        assert!(p[1].is_finite() && p[1] > 0.0);
+    }
+
+    #[test]
+    fn theta_relative() {
+        assert_eq!(LifParams::default().theta(), 15.0);
+    }
+}

@@ -1,0 +1,89 @@
+//! The aligned per-(σ, τ) generator array `RNG[σ,τ]` (§0.3.1).
+//!
+//! Both the source MPI process σ and the target MPI process τ seed the same
+//! generator for their pair from the master seed — **never** communicating
+//! — and consume it *exclusively* for the source-neuron indexes of remote
+//! connections. This keeps the source-side `S` sequence and the target-side
+//! `(R, L)` map aligned (Eq. 1) across any number of `RemoteConnect` calls,
+//! because each call advances the pair's stream identically on both sides.
+
+use crate::util::rng::Rng;
+
+const ALIGNED_TAG: u64 = 0x616C69676E; // "align"
+
+/// Lazily instantiated array of aligned generators for one rank.
+pub struct AlignedRngs {
+    master: u64,
+    n_ranks: usize,
+    /// flattened [σ * n + τ], lazily seeded
+    rngs: Vec<Option<Rng>>,
+}
+
+impl AlignedRngs {
+    pub fn new(master: u64, n_ranks: usize) -> Self {
+        Self {
+            master,
+            n_ranks,
+            rngs: (0..n_ranks * n_ranks).map(|_| None).collect(),
+        }
+    }
+
+    /// The generator for the (source σ, target τ) pair. The same call on
+    /// rank σ and rank τ yields generators in identical states as long as
+    /// both sides have performed the same sequence of draws for this pair.
+    pub fn pair(&mut self, sigma: usize, tau: usize) -> &mut Rng {
+        assert!(sigma < self.n_ranks && tau < self.n_ranks);
+        let idx = sigma * self.n_ranks + tau;
+        let master = self.master;
+        self.rngs[idx].get_or_insert_with(|| {
+            Rng::stream(master, &[ALIGNED_TAG, sigma as u64, tau as u64])
+        })
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.n_ranks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn both_sides_see_identical_streams() {
+        // rank 0's view of pair (0 -> 3) vs rank 3's view of pair (0 -> 3)
+        let mut on_rank0 = AlignedRngs::new(1234, 4);
+        let mut on_rank3 = AlignedRngs::new(1234, 4);
+        let a: Vec<u64> = (0..100).map(|_| on_rank0.pair(0, 3).next_u64()).collect();
+        let b: Vec<u64> = (0..100).map(|_| on_rank3.pair(0, 3).next_u64()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pairs_are_independent_streams() {
+        let mut r = AlignedRngs::new(1234, 3);
+        let a = r.pair(0, 1).next_u64();
+        let b = r.pair(1, 0).next_u64();
+        let c = r.pair(0, 2).next_u64();
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn stream_state_persists_across_calls() {
+        // successive RemoteConnect calls continue the pair stream
+        let mut r = AlignedRngs::new(9, 2);
+        let x1 = r.pair(0, 1).next_u64();
+        let x2 = r.pair(0, 1).next_u64();
+        let mut fresh = AlignedRngs::new(9, 2);
+        assert_eq!(fresh.pair(0, 1).next_u64(), x1);
+        assert_eq!(fresh.pair(0, 1).next_u64(), x2);
+    }
+
+    #[test]
+    fn master_seed_changes_everything() {
+        let mut a = AlignedRngs::new(1, 2);
+        let mut b = AlignedRngs::new(2, 2);
+        assert_ne!(a.pair(0, 1).next_u64(), b.pair(0, 1).next_u64());
+    }
+}

@@ -1,0 +1,113 @@
+//! GPU memory levels (§0.3.6): four placement/algorithm trade-offs between
+//! device-memory footprint and time-to-solution for the remote-connection
+//! structures. Level 2 is the NEST GPU default.
+
+use crate::memory::MemKind;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum GpuMemLevel {
+    /// Maps of remote source neurons, maps to local images, first index and
+    /// out-degree count of each remote neuron all in **CPU memory**; only
+    /// source neurons *actually used* by at least one connection get an
+    /// image (ξ-flagging always on).
+    L0,
+    /// Same placement as level 0, but **every** source neuron passed to
+    /// `RemoteConnect` gets an image without checking use — faster remote
+    /// connection creation, some wasted memory once the number of processes
+    /// approaches the out-degree.
+    L1,
+    /// Maps and first index in **GPU memory**; the out-degree of a remote
+    /// neuron is computed on the fly from the sorted connection array.
+    L2,
+    /// Maps, first index and out-degree count all in **GPU memory**.
+    L3,
+}
+
+pub const ALL_LEVELS: [GpuMemLevel; 4] = [
+    GpuMemLevel::L0,
+    GpuMemLevel::L1,
+    GpuMemLevel::L2,
+    GpuMemLevel::L3,
+];
+
+impl GpuMemLevel {
+    /// Where the (R, L) maps live.
+    pub fn map_residency(self) -> MemKind {
+        match self {
+            GpuMemLevel::L0 | GpuMemLevel::L1 => MemKind::Host,
+            _ => MemKind::Device,
+        }
+    }
+
+    /// Where the per-image first-connection index lives.
+    pub fn first_index_residency(self) -> MemKind {
+        self.map_residency()
+    }
+
+    /// Whether the per-image out-degree count is stored at all (level 2
+    /// computes it on the fly from the source-sorted connection array).
+    pub fn stores_out_count(self) -> bool {
+        !matches!(self, GpuMemLevel::L2)
+    }
+
+    /// Where the stored out-degree count lives (if stored).
+    pub fn count_residency(self) -> MemKind {
+        match self {
+            GpuMemLevel::L0 | GpuMemLevel::L1 => MemKind::Host,
+            _ => MemKind::Device,
+        }
+    }
+
+    /// Whether `RemoteConnect` flags actually-used source neurons before
+    /// creating images (§0.3.3's `b`/`ũ`/`s̃` compaction). From level 1 on,
+    /// all sources passed to the call get images.
+    pub fn flags_used_sources(self) -> bool {
+        matches!(self, GpuMemLevel::L0)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GpuMemLevel::L0 => "level0",
+            GpuMemLevel::L1 => "level1",
+            GpuMemLevel::L2 => "level2",
+            GpuMemLevel::L3 => "level3",
+        }
+    }
+
+    pub fn from_index(i: usize) -> Option<Self> {
+        ALL_LEVELS.get(i).copied()
+    }
+}
+
+impl Default for GpuMemLevel {
+    /// NEST GPU's default for simulations.
+    fn default() -> Self {
+        GpuMemLevel::L2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_matrix_matches_paper() {
+        use MemKind::*;
+        assert_eq!(GpuMemLevel::L0.map_residency(), Host);
+        assert_eq!(GpuMemLevel::L1.map_residency(), Host);
+        assert_eq!(GpuMemLevel::L2.map_residency(), Device);
+        assert_eq!(GpuMemLevel::L3.map_residency(), Device);
+        assert!(GpuMemLevel::L0.flags_used_sources());
+        assert!(!GpuMemLevel::L1.flags_used_sources());
+        assert!(!GpuMemLevel::L2.stores_out_count());
+        assert!(GpuMemLevel::L3.stores_out_count());
+        assert_eq!(GpuMemLevel::default(), GpuMemLevel::L2);
+    }
+
+    #[test]
+    fn ordering_by_gpu_usage() {
+        assert!(GpuMemLevel::L0 < GpuMemLevel::L1);
+        assert!(GpuMemLevel::L1 < GpuMemLevel::L2);
+        assert!(GpuMemLevel::L2 < GpuMemLevel::L3);
+    }
+}

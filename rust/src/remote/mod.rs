@@ -1,0 +1,17 @@
+//! Remote connections: the paper's core contribution (§0.3).
+//!
+//! - [`pair_map`]: the sorted (R, L) maps and source-side S sequences;
+//! - [`aligned`]: the per-(σ, τ) aligned generator array;
+//! - [`tables`]: the (N, T, P) and (N, G, Q) routing tables;
+//! - [`state`]: the `RemoteConnect` algorithm (target + source variant),
+//!   collective host arrays, and simulation preparation;
+//! - [`levels`]: the four GPU memory levels (§0.3.6).
+
+pub mod aligned;
+pub mod levels;
+pub mod pair_map;
+pub mod state;
+pub mod tables;
+
+pub use levels::GpuMemLevel;
+pub use state::{GroupState, RemoteConnectOutcome, RemoteState};

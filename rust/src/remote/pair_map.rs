@@ -1,0 +1,271 @@
+//! The (R, L) map: remote source neuron index → local image neuron index.
+//!
+//! One such map exists on every target MPI process per possible source
+//! process (§0.3.1), or per (group, member) for collective communication
+//! (§0.3.4, Eq. 10). The map is kept sorted ascending by `R` (Eq. 3) after
+//! every `RemoteConnect` call; positions in the map are the routing tokens
+//! exchanged over MPI.
+
+use crate::memory::tracker::{TrackedVec, Tracker};
+use crate::memory::MemKind;
+
+/// A sorted (R, L) pair map.
+pub struct PairMap {
+    /// remote source neuron indexes (sorted ascending)
+    r: TrackedVec<u32>,
+    /// local image neuron indexes, aligned with `r`
+    l: TrackedVec<u32>,
+}
+
+impl PairMap {
+    pub fn new(kind: MemKind) -> Self {
+        Self {
+            r: TrackedVec::new(kind),
+            l: TrackedVec::new(kind),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.r.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.r.is_empty()
+    }
+    pub fn r_slice(&self) -> &[u32] {
+        self.r.as_slice()
+    }
+    pub fn l_slice(&self) -> &[u32] {
+        self.l.as_slice()
+    }
+    pub fn residency(&self) -> MemKind {
+        self.r.kind()
+    }
+
+    /// Image index for remote source `s`, if mapped.
+    #[inline]
+    pub fn lookup(&self, s: u32) -> Option<u32> {
+        self.r
+            .as_slice()
+            .binary_search(&s)
+            .ok()
+            .map(|i| self.l.as_slice()[i])
+    }
+
+    /// Image index at map position `i` (the spike-delivery path: the wire
+    /// carries positions, Appendix F).
+    #[inline]
+    pub fn l_at(&self, pos: u32) -> u32 {
+        self.l.as_slice()[pos as usize]
+    }
+
+    /// Eq. 5/6: ensure every source in `sorted_sources` (ascending, unique)
+    /// has an image. Existing entries are reused; missing entries are
+    /// appended with image indexes handed out by `new_image` (which
+    /// increments the node count `M`), then the map is re-sorted by `R`.
+    ///
+    /// Returns the image index for each input source, in input order.
+    pub fn ensure_images(
+        &mut self,
+        sorted_sources: &[u32],
+        tr: &mut Tracker,
+        mut new_image: impl FnMut() -> u32,
+    ) -> Vec<u32> {
+        debug_assert!(sorted_sources.windows(2).all(|w| w[0] < w[1]));
+        let r_old = self.r.as_slice();
+        let l_old = self.l.as_slice();
+        let mut out = Vec::with_capacity(sorted_sources.len());
+        // merge pass: both inputs sorted -> new sorted arrays
+        let mut merged_r: Vec<u32> = Vec::with_capacity(r_old.len() + sorted_sources.len());
+        let mut merged_l: Vec<u32> = Vec::with_capacity(merged_r.capacity());
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < r_old.len() || j < sorted_sources.len() {
+            if j >= sorted_sources.len()
+                || (i < r_old.len() && r_old[i] < sorted_sources[j])
+            {
+                merged_r.push(r_old[i]);
+                merged_l.push(l_old[i]);
+                i += 1;
+            } else if i < r_old.len() && r_old[i] == sorted_sources[j] {
+                // existing image (Eq. 5)
+                merged_r.push(r_old[i]);
+                merged_l.push(l_old[i]);
+                out.push(l_old[i]);
+                i += 1;
+                j += 1;
+            } else {
+                // new image (Eq. 6)
+                let img = new_image();
+                merged_r.push(sorted_sources[j]);
+                merged_l.push(img);
+                out.push(img);
+                j += 1;
+            }
+        }
+        self.r.replace(merged_r, tr);
+        self.l.replace(merged_l, tr);
+        out
+    }
+
+    /// Verify Eq. 3 (sorted ascending, unique).
+    pub fn is_sorted(&self) -> bool {
+        self.r.as_slice().windows(2).all(|w| w[0] < w[1])
+    }
+
+    pub fn device_bytes(&self) -> u64 {
+        if self.residency() == MemKind::Device {
+            self.r.bytes() + self.l.bytes()
+        } else {
+            0
+        }
+    }
+
+    pub fn release(&mut self, tr: &mut Tracker) {
+        self.r.release(tr);
+        self.l.release(tr);
+    }
+}
+
+/// The source-side `S` sequence (one per target process, §0.3.1): the local
+/// source neuron indexes with images on that target, sorted ascending —
+/// element-wise equal to the target's `R` (Eq. 1).
+pub struct SourceSeq {
+    s: TrackedVec<u32>,
+}
+
+impl SourceSeq {
+    pub fn new(kind: MemKind) -> Self {
+        Self {
+            s: TrackedVec::new(kind),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.s.len()
+    }
+    pub fn as_slice(&self) -> &[u32] {
+        self.s.as_slice()
+    }
+
+    /// Eq. 7: set-union merge of new (sorted, unique) sources.
+    pub fn merge(&mut self, sorted_sources: &[u32], tr: &mut Tracker) {
+        let mut v = self.s.as_slice().to_vec();
+        crate::util::sort::merge_sorted_unique(&mut v, sorted_sources);
+        self.s.replace(v, tr);
+    }
+
+    pub fn is_sorted(&self) -> bool {
+        self.s.as_slice().windows(2).all(|w| w[0] < w[1])
+    }
+
+    pub fn release(&mut self, tr: &mut Tracker) {
+        self.s.release(tr);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> (PairMap, Tracker, u32) {
+        (PairMap::new(MemKind::Device), Tracker::new(), 100)
+    }
+
+    #[test]
+    fn images_created_then_reused() {
+        let (mut m, mut tr, mut next) = mk();
+        let imgs = m.ensure_images(&[3, 7, 9], &mut tr, || {
+            let v = next;
+            next += 1;
+            v
+        });
+        assert_eq!(imgs, vec![100, 101, 102]);
+        assert!(m.is_sorted());
+        // second call: 7 reused, 5 and 11 new
+        let imgs = m.ensure_images(&[5, 7, 11], &mut tr, || {
+            let v = next;
+            next += 1;
+            v
+        });
+        assert_eq!(imgs, vec![103, 101, 104]);
+        assert_eq!(m.r_slice(), &[3, 5, 7, 9, 11]);
+        assert_eq!(m.l_slice(), &[100, 103, 101, 102, 104]);
+        assert!(m.is_sorted());
+    }
+
+    #[test]
+    fn lookup_and_position_access() {
+        let (mut m, mut tr, mut next) = mk();
+        m.ensure_images(&[10, 20, 30], &mut tr, || {
+            let v = next;
+            next += 1;
+            v
+        });
+        assert_eq!(m.lookup(20), Some(101));
+        assert_eq!(m.lookup(25), None);
+        assert_eq!(m.l_at(0), 100);
+        assert_eq!(m.l_at(2), 102);
+    }
+
+    #[test]
+    fn interleaved_merge_keeps_alignment() {
+        let (mut m, mut tr, mut next) = mk();
+        m.ensure_images(&[2, 8], &mut tr, || {
+            let v = next;
+            next += 1;
+            v
+        });
+        m.ensure_images(&[1, 5, 9], &mut tr, || {
+            let v = next;
+            next += 1;
+            v
+        });
+        // R sorted; each L still the image created for its R
+        assert_eq!(m.r_slice(), &[1, 2, 5, 8, 9]);
+        assert_eq!(m.lookup(2), Some(100));
+        assert_eq!(m.lookup(8), Some(101));
+        assert_eq!(m.lookup(1), Some(102));
+        assert_eq!(m.lookup(5), Some(103));
+        assert_eq!(m.lookup(9), Some(104));
+    }
+
+    #[test]
+    fn source_seq_matches_pair_map_r() {
+        // Eq. 1: S (source side) must equal R (target side) under the same
+        // update sequence
+        let (mut m, mut tr, mut next) = mk();
+        let mut s = SourceSeq::new(MemKind::Device);
+        for batch in [&[4u32, 9][..], &[1, 9, 12][..], &[2][..]] {
+            m.ensure_images(batch, &mut tr, || {
+                let v = next;
+                next += 1;
+                v
+            });
+            s.merge(batch, &mut tr);
+        }
+        assert_eq!(s.as_slice(), m.r_slice());
+        assert!(s.is_sorted());
+    }
+
+    #[test]
+    fn host_residency_accounts_host_bytes() {
+        let mut tr = Tracker::new();
+        let mut m = PairMap::new(MemKind::Host);
+        let mut next = 0;
+        m.ensure_images(&[1, 2, 3], &mut tr, || {
+            let v = next;
+            next += 1;
+            v
+        });
+        assert_eq!(m.device_bytes(), 0);
+        assert!(tr.current(MemKind::Host) > 0);
+        assert_eq!(tr.current(MemKind::Device), 0);
+    }
+
+    #[test]
+    fn empty_input_is_noop() {
+        let (mut m, mut tr, _) = mk();
+        let imgs = m.ensure_images(&[], &mut tr, || unreachable!());
+        assert!(imgs.is_empty());
+        assert!(m.is_empty());
+    }
+}

@@ -1,0 +1,154 @@
+//! Per-source-neuron routing tables, built in *simulation preparation*.
+//!
+//! Point-to-point: the `(N, T, P)` tables (§0.3.3, Eqs. 8–9, Fig. 15a) —
+//! for each local neuron `s`, the target ranks `T[s]` holding an image of
+//! `s` and the *positions* `P[s]` of `s` in the corresponding (R, L) maps.
+//!
+//! Collective: the `(N, G, Q)` tables (§0.3.4, Eqs. 15–16, Fig. 2) — for
+//! each local neuron `s`, the groups `G[s]` where `s` has images and the
+//! positions `Q[s]` of `s` in the per-group host arrays `H`.
+//!
+//! Both are CSR layouts over the local node index space: contiguous flat
+//! arrays (the paper stores them in GPU memory as fixed-size-blocked
+//! arrays; contiguity is what makes the spike-routing kernel a pure gather).
+
+use crate::memory::{MemKind, Tracker};
+
+/// CSR routing table: for node `s`, `dest[first[s]..first[s+1]]` are the
+/// destinations (ranks or groups) and `pos[..]` the aligned map positions.
+#[derive(Debug, Default)]
+pub struct RoutingTables {
+    first: Vec<u32>,
+    dest: Vec<u16>,
+    pos: Vec<u32>,
+    tracked: u64,
+}
+
+impl RoutingTables {
+    /// Build from per-destination sorted source sequences:
+    /// `seqs[d] = (destination id, slice of local source ids, sorted)`.
+    /// The position of source `s` within its slice is the map position sent
+    /// over the wire (Eq. 9 / Eq. 16).
+    pub fn build(
+        n_nodes: usize,
+        seqs: &[(u16, &[u32])],
+        kind: MemKind,
+        tr: &mut Tracker,
+    ) -> Self {
+        let mut first = vec![0u32; n_nodes + 1];
+        for (_, seq) in seqs {
+            for &s in *seq {
+                first[s as usize + 1] += 1;
+            }
+        }
+        for i in 0..n_nodes {
+            first[i + 1] += first[i];
+        }
+        let total = first[n_nodes] as usize;
+        let mut dest = vec![0u16; total];
+        let mut pos = vec![0u32; total];
+        let mut cursor = first.clone();
+        for (d, seq) in seqs {
+            for (i, &s) in seq.iter().enumerate() {
+                let c = cursor[s as usize] as usize;
+                dest[c] = *d;
+                pos[c] = i as u32;
+                cursor[s as usize] += 1;
+            }
+        }
+        let tracked = (first.len() * 4 + total * 6) as u64;
+        tr.alloc(kind, tracked);
+        Self {
+            first,
+            dest,
+            pos,
+            tracked,
+        }
+    }
+
+    /// Destinations and positions for node `s`.
+    #[inline]
+    pub fn route(&self, s: u32) -> impl Iterator<Item = (u16, u32)> + '_ {
+        let a = self.first[s as usize] as usize;
+        let b = self.first[s as usize + 1] as usize;
+        self.dest[a..b].iter().copied().zip(self.pos[a..b].iter().copied())
+    }
+
+    /// Number of (destination, position) entries for node `s`.
+    #[inline]
+    pub fn fanout(&self, s: u32) -> usize {
+        (self.first[s as usize + 1] - self.first[s as usize]) as usize
+    }
+
+    pub fn total_entries(&self) -> usize {
+        self.dest.len()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.first.len().saturating_sub(1)
+    }
+
+    pub fn release(&mut self, kind: MemKind, tr: &mut Tracker) {
+        tr.free(kind, self.tracked);
+        self.tracked = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_matches_paper_example() {
+        // Paper Fig. 1, rank 2 (yellow): neurons 0 and 2 have images on
+        // ranks 0 and 1. S[0,2] = [0, 2], S[1,2] = [0, 2] (both sorted).
+        let s_tau0: &[u32] = &[0, 2];
+        let s_tau1: &[u32] = &[0, 2];
+        let mut tr = Tracker::new();
+        let t = RoutingTables::build(
+            3,
+            &[(0, s_tau0), (1, s_tau1)],
+            MemKind::Device,
+            &mut tr,
+        );
+        // neuron 0: images on ranks 0 and 1, both at position 0
+        assert_eq!(t.route(0).collect::<Vec<_>>(), vec![(0, 0), (1, 0)]);
+        // neuron 1: no images
+        assert_eq!(t.fanout(1), 0);
+        // neuron 2: both at position 1
+        assert_eq!(t.route(2).collect::<Vec<_>>(), vec![(0, 1), (1, 1)]);
+    }
+
+    #[test]
+    fn positions_index_into_the_sequence() {
+        // appendix-F style: S[1,0] = [57, 480, 742], S[2,0] = [742]
+        let mut tr = Tracker::new();
+        let t = RoutingTables::build(
+            800,
+            &[(1, &[57, 480, 742][..]), (2, &[742][..])],
+            MemKind::Device,
+            &mut tr,
+        );
+        assert_eq!(t.route(480).collect::<Vec<_>>(), vec![(1, 1)]);
+        assert_eq!(t.route(742).collect::<Vec<_>>(), vec![(1, 2), (2, 0)]);
+        assert_eq!(t.total_entries(), 4);
+    }
+
+    #[test]
+    fn empty_tables() {
+        let mut tr = Tracker::new();
+        let t = RoutingTables::build(5, &[], MemKind::Device, &mut tr);
+        assert_eq!(t.total_entries(), 0);
+        assert_eq!(t.fanout(4), 0);
+    }
+
+    #[test]
+    fn memory_accounted_and_released() {
+        let mut tr = Tracker::new();
+        let mut t =
+            RoutingTables::build(4, &[(0, &[1, 2][..])], MemKind::Host, &mut tr);
+        assert!(tr.current(MemKind::Host) > 0);
+        t.release(MemKind::Host, &mut tr);
+        assert_eq!(tr.current(MemKind::Host), 0);
+    }
+}

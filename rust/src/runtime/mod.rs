@@ -1,0 +1,153 @@
+//! Neuron-dynamics runtime: the device-kernel execution layer.
+//!
+//! Two interchangeable backends advance the per-rank neuron state one time
+//! step at a time:
+//!
+//! - [`pjrt::PjrtBackend`] — loads the AOT-compiled HLO text artifacts
+//!   produced by `python/compile/aot.py` (the L2 JAX model with the L1
+//!   Pallas kernel inlined) and executes them through the PJRT CPU client.
+//!   Python is never on this path; the artifacts are loaded once.
+//! - [`native::NativeBackend`] — the pure-Rust reference implementation of
+//!   the same exact-integration update; used as the correctness baseline
+//!   and for large sweeps where per-call PJRT overhead would dominate.
+//!
+//! Both operate on [`StateChunk`]s: SoA state blocks padded to the kernel
+//! block size, one chunk per neuron population (populations differ only in
+//! their packed parameter vector).
+
+pub mod native;
+pub mod pjrt;
+
+use crate::memory::{MemKind, Tracker};
+use crate::node::neuron::NUM_PARAMS;
+
+/// Minimum kernel block size; chunks are padded to a multiple of this (it
+/// must match the smallest entry of `aot.BLOCK_SIZES`).
+pub const MIN_BLOCK: usize = 256;
+
+/// SoA state for one neuron population, padded to a block multiple.
+///
+/// Pad lanes carry `v = 0`, zero input and `i_e = 0` influence only if the
+/// population's `i_e != 0`; the engine therefore never reads pad lanes —
+/// spikes are collected from `spike[0..n]` only.
+pub struct StateChunk {
+    /// number of real neurons
+    pub n: usize,
+    /// padded length (multiple of MIN_BLOCK)
+    pub pad_n: usize,
+    /// packed parameters (see node::neuron::PARAM_ORDER)
+    pub params: [f32; NUM_PARAMS],
+    pub v: Vec<f32>,
+    pub i_ex: Vec<f32>,
+    pub i_in: Vec<f32>,
+    pub r: Vec<f32>,
+    /// per-step synaptic input (filled by the engine from the ring buffers)
+    pub w_ex: Vec<f32>,
+    pub w_in: Vec<f32>,
+    /// 0/1 spike flags written by the backend
+    pub spike: Vec<f32>,
+    tracked: u64,
+}
+
+impl StateChunk {
+    pub fn new(n: usize, params: [f32; NUM_PARAMS], tr: &mut Tracker) -> Self {
+        let pad_n = n.div_ceil(MIN_BLOCK).max(1) * MIN_BLOCK;
+        let bytes = (pad_n * 7 * 4) as u64;
+        tr.alloc(MemKind::Device, bytes);
+        Self {
+            n,
+            pad_n,
+            params,
+            v: vec![0.0; pad_n],
+            i_ex: vec![0.0; pad_n],
+            i_in: vec![0.0; pad_n],
+            r: vec![0.0; pad_n],
+            w_ex: vec![0.0; pad_n],
+            w_in: vec![0.0; pad_n],
+            spike: vec![0.0; pad_n],
+            tracked: bytes,
+        }
+    }
+
+    /// Indexes (offsets within the chunk) of neurons that spiked this step.
+    pub fn spiking(&self) -> impl Iterator<Item = u32> + '_ {
+        self.spike[..self.n]
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s != 0.0)
+            .map(|(i, _)| i as u32)
+    }
+
+    /// Zero the input accumulators (after a step consumed them).
+    pub fn clear_inputs(&mut self) {
+        self.w_ex.fill(0.0);
+        self.w_in.fill(0.0);
+    }
+
+    pub fn release(&mut self, tr: &mut Tracker) {
+        tr.free(MemKind::Device, self.tracked);
+        self.tracked = 0;
+    }
+}
+
+/// A neuron-dynamics backend.
+/// Note: not `Send` — the PJRT client is thread-local; each rank thread
+/// constructs its own backend from a [`BackendKind`] (which is Send).
+pub trait Backend {
+    fn name(&self) -> &'static str;
+    /// Advance `chunk` one step in place: consumes `w_ex`/`w_in`, updates
+    /// `v`/`i_ex`/`i_in`/`r`, writes `spike`.
+    fn step(&mut self, chunk: &mut StateChunk) -> anyhow::Result<()>;
+}
+
+/// Which backend to instantiate (engine configuration).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    /// PJRT with artifacts from the given directory
+    Pjrt { artifacts: std::path::PathBuf },
+}
+
+impl BackendKind {
+    pub fn create(&self) -> anyhow::Result<Box<dyn Backend>> {
+        match self {
+            BackendKind::Native => Ok(Box::new(native::NativeBackend::new())),
+            BackendKind::Pjrt { artifacts } => {
+                Ok(Box::new(pjrt::PjrtBackend::load(artifacts)?))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_padding_and_memory() {
+        let mut tr = Tracker::new();
+        let mut c = StateChunk::new(300, [0.0; NUM_PARAMS], &mut tr);
+        assert_eq!(c.pad_n, 512);
+        assert_eq!(tr.current(MemKind::Device), 512 * 7 * 4);
+        c.release(&mut tr);
+        assert_eq!(tr.current(MemKind::Device), 0);
+    }
+
+    #[test]
+    fn spiking_ignores_pad_lanes() {
+        let mut tr = Tracker::new();
+        let mut c = StateChunk::new(2, [0.0; NUM_PARAMS], &mut tr);
+        c.spike[0] = 1.0;
+        c.spike[1] = 0.0;
+        c.spike[2] = 1.0; // pad lane: must be ignored
+        assert_eq!(c.spiking().collect::<Vec<_>>(), vec![0]);
+    }
+
+    #[test]
+    fn zero_sized_chunk_still_padded() {
+        let mut tr = Tracker::new();
+        let c = StateChunk::new(0, [0.0; NUM_PARAMS], &mut tr);
+        assert_eq!(c.pad_n, MIN_BLOCK);
+        assert_eq!(c.spiking().count(), 0);
+    }
+}

@@ -1,0 +1,153 @@
+//! PJRT backend: load the AOT artifacts (HLO text) and execute them on the
+//! PJRT CPU client from the Rust hot path.
+//!
+//! The interchange format is HLO *text* — the image's xla_extension 0.5.1
+//! rejects jax≥0.5 serialized protos (64-bit instruction ids), while the
+//! text parser reassigns ids (see /opt/xla-example/README.md). One
+//! executable is compiled per AOT block size; a chunk is processed in
+//! segments using the largest block that fits, greedily.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{Backend, StateChunk};
+use crate::node::neuron::PARAM_ORDER;
+use crate::util::json::Json;
+
+struct BlockExe {
+    block: usize,
+    exe: xla::PjRtLoadedExecutable,
+    /// persistent input literals (6 state/input arrays + params), refilled
+    /// in place via `copy_raw_from` — §Perf iteration 3: avoids seven host
+    /// literal allocations per kernel invocation
+    args: Vec<xla::Literal>,
+}
+
+/// PJRT CPU backend over the artifacts directory.
+pub struct PjrtBackend {
+    _client: xla::PjRtClient,
+    /// executables sorted by block size, descending
+    exes: Vec<BlockExe>,
+    /// per-step executions (diagnostics / perf accounting)
+    pub calls: u64,
+}
+
+impl PjrtBackend {
+    /// Load `manifest.json` + all HLO artifacts from `dir` and compile them.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Json::parse_file(&dir.join("manifest.json"))
+            .map_err(|e| anyhow!("manifest: {e}"))?;
+        // validate the parameter packing contract with the Python side
+        let order = manifest
+            .get("param_order")
+            .and_then(|o| o.as_arr())
+            .context("manifest: param_order missing")?;
+        let names: Vec<&str> = order.iter().filter_map(|x| x.as_str()).collect();
+        if names != PARAM_ORDER {
+            bail!(
+                "parameter order mismatch: artifacts {:?} vs runtime {:?} — \
+                 regenerate artifacts (make artifacts)",
+                names,
+                PARAM_ORDER
+            );
+        }
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let mut exes = Vec::new();
+        for b in manifest
+            .get("blocks")
+            .and_then(|b| b.as_arr())
+            .context("manifest: blocks missing")?
+        {
+            let block = b.get("block").and_then(|x| x.as_usize()).context("block")?;
+            let file = b.get("file").and_then(|x| x.as_str()).context("file")?;
+            let proto = xla::HloModuleProto::from_text_file(dir.join(file))
+                .with_context(|| format!("parse {file}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compile {file}"))?;
+            let zeros = vec![0f32; block];
+            let mut args: Vec<xla::Literal> =
+                (0..6).map(|_| xla::Literal::vec1(&zeros)).collect();
+            args.push(xla::Literal::vec1(
+                &[0f32; crate::node::neuron::NUM_PARAMS],
+            ));
+            exes.push(BlockExe { block, exe, args });
+        }
+        if exes.is_empty() {
+            bail!("no artifacts in {}", dir.display());
+        }
+        exes.sort_by(|a, b| b.block.cmp(&a.block));
+        Ok(Self {
+            _client: client,
+            exes,
+            calls: 0,
+        })
+    }
+
+    /// Smallest available block size (chunks must pad to a multiple of it).
+    pub fn min_block(&self) -> usize {
+        self.exes.last().map(|e| e.block).unwrap_or(0)
+    }
+
+    fn exec_segment(&mut self, c: &mut StateChunk, at: usize, len: usize) -> Result<()> {
+        let exe = self
+            .exes
+            .iter_mut()
+            .find(|e| e.block == len)
+            .ok_or_else(|| anyhow!("no executable for block {len}"))?;
+        // refill the persistent input literals in place
+        let inputs: [&[f32]; 6] = [&c.v, &c.i_ex, &c.i_in, &c.r, &c.w_ex, &c.w_in];
+        for (lit, src) in exe.args[..6].iter_mut().zip(inputs) {
+            lit.copy_raw_from::<f32>(&src[at..at + len])?;
+        }
+        exe.args[6].copy_raw_from::<f32>(&c.params[..])?;
+        let result = exe.exe.execute::<xla::Literal>(&exe.args)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        if outs.len() != 5 {
+            bail!("expected 5 outputs, got {}", outs.len());
+        }
+        let write = |dst: &mut [f32], lit: &xla::Literal| -> Result<()> {
+            lit.copy_raw_to::<f32>(&mut dst[at..at + len])?;
+            Ok(())
+        };
+        write(&mut c.v, &outs[0])?;
+        write(&mut c.i_ex, &outs[1])?;
+        write(&mut c.i_in, &outs[2])?;
+        write(&mut c.r, &outs[3])?;
+        write(&mut c.spike, &outs[4])?;
+        self.calls += 1;
+        Ok(())
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn step(&mut self, chunk: &mut StateChunk) -> Result<()> {
+        let min = self.min_block();
+        if chunk.pad_n % min != 0 {
+            bail!(
+                "chunk pad_n={} is not a multiple of the smallest block {min}",
+                chunk.pad_n
+            );
+        }
+        let mut at = 0;
+        while at < chunk.pad_n {
+            let remaining = chunk.pad_n - at;
+            // largest block that divides the remainder
+            let len = self
+                .exes
+                .iter()
+                .map(|e| e.block)
+                .find(|&b| b <= remaining)
+                .ok_or_else(|| anyhow!("no block fits remaining {remaining}"))?;
+            self.exec_segment(chunk, at, len)?;
+            at += len;
+        }
+        Ok(())
+    }
+}

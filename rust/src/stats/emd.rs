@@ -1,0 +1,101 @@
+//! Earth Mover's Distance (first Wasserstein distance) between 1-D sample
+//! sets — the metric of the validation protocol (Appendix A), equivalent to
+//! `scipy.stats.wasserstein_distance` with unit weights.
+
+/// EMD between two samples (unit weights). O(n log n).
+pub fn emd(a: &[f64], b: &[f64]) -> f64 {
+    if a.is_empty() || b.is_empty() {
+        return if a.is_empty() && b.is_empty() {
+            0.0
+        } else {
+            f64::INFINITY
+        };
+    }
+    let mut xa = a.to_vec();
+    let mut xb = b.to_vec();
+    xa.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    xb.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    // integrate |F_a(x) - F_b(x)| over the merged support
+    let mut all: Vec<f64> = xa.iter().chain(xb.iter()).copied().collect();
+    all.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let (na, nb) = (xa.len() as f64, xb.len() as f64);
+    let (mut ia, mut ib) = (0usize, 0usize);
+    let mut dist = 0.0;
+    for w in all.windows(2) {
+        let (x0, x1) = (w[0], w[1]);
+        while ia < xa.len() && xa[ia] <= x0 {
+            ia += 1;
+        }
+        while ib < xb.len() && xb[ib] <= x0 {
+            ib += 1;
+        }
+        let fa = ia as f64 / na;
+        let fb = ib as f64 / nb;
+        dist += (fa - fb).abs() * (x1 - x0);
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identical_samples_zero() {
+        let a = vec![1.0, 2.0, 3.0];
+        assert!(emd(&a, &a) < 1e-12);
+    }
+
+    #[test]
+    fn point_masses() {
+        // EMD between delta(0) and delta(d) is d
+        assert!((emd(&[0.0], &[2.5]) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn translation_equals_shift() {
+        let a = vec![0.0, 1.0, 2.0, 3.0];
+        let b: Vec<f64> = a.iter().map(|x| x + 0.7).collect();
+        assert!((emd(&a, &b) - 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn equal_size_samples_match_mean_transport() {
+        // for equal-size samples EMD = mean |sorted_a - sorted_b|
+        let mut r = Rng::new(5);
+        let a: Vec<f64> = (0..200).map(|_| r.uniform()).collect();
+        let b: Vec<f64> = (0..200).map(|_| r.uniform() + 0.1).collect();
+        let mut sa = a.clone();
+        let mut sb = b.clone();
+        sa.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        sb.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        let direct: f64 = sa
+            .iter()
+            .zip(&sb)
+            .map(|(x, y)| (x - y).abs())
+            .sum::<f64>()
+            / 200.0;
+        assert!((emd(&a, &b) - direct).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unequal_sizes_supported() {
+        let a = vec![0.0, 0.0, 0.0, 0.0];
+        let b = vec![1.0];
+        assert!((emd(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scipy_golden_value() {
+        // scipy.stats.wasserstein_distance([3.4,3.9,7.5,7.8],[4.5,1.4]) == 2.7
+        let d = emd(&[3.4, 3.9, 7.5, 7.8], &[4.5, 1.4]);
+        assert!((d - 2.7).abs() < 1e-9, "d={d}");
+    }
+
+    #[test]
+    fn empty_handling() {
+        assert_eq!(emd(&[], &[]), 0.0);
+        assert!(emd(&[1.0], &[]).is_infinite());
+    }
+}

@@ -1,0 +1,15 @@
+//! Spiking statistics and the validation protocol (§0.6, Appendix A).
+//!
+//! Three per-population distributions characterize the network dynamics:
+//! time-averaged single-neuron firing rates, coefficients of variation of
+//! inter-spike intervals (CV ISI), and pairwise Pearson correlations of
+//! binned spike trains over a neuron subset. Distribution differences are
+//! quantified with the Earth Mover's Distance (first Wasserstein distance),
+//! comparing seed-vs-seed fluctuations against code-vs-code fluctuations.
+
+pub mod emd;
+pub mod spikes;
+pub mod validate;
+
+pub use emd::emd;
+pub use spikes::SpikeData;

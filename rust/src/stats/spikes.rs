@@ -1,0 +1,206 @@
+//! Spike-train statistics: rates, CV ISI, pairwise Pearson correlation.
+
+/// Spike data for one population over a recording window.
+pub struct SpikeData {
+    /// spike times (steps) per neuron, each ascending
+    pub trains: Vec<Vec<u32>>,
+    /// recording window in steps
+    pub t_steps: u32,
+    /// integration step (ms)
+    pub dt_ms: f64,
+}
+
+impl SpikeData {
+    /// Split a flat `(step, node)` event list into per-neuron trains for
+    /// nodes `[first, first + n)`.
+    pub fn from_events(
+        events: &[(u32, u32)],
+        first: u32,
+        n: u32,
+        t_steps: u32,
+        dt_ms: f64,
+    ) -> Self {
+        let mut trains = vec![Vec::new(); n as usize];
+        for &(step, node) in events {
+            if node >= first && node < first + n {
+                trains[(node - first) as usize].push(step);
+            }
+        }
+        for t in trains.iter_mut() {
+            t.sort_unstable();
+        }
+        Self {
+            trains,
+            t_steps,
+            dt_ms,
+        }
+    }
+
+    /// Time-averaged firing rate per neuron (spikes/s).
+    pub fn rates(&self) -> Vec<f64> {
+        let t_s = self.t_steps as f64 * self.dt_ms * 1e-3;
+        self.trains
+            .iter()
+            .map(|t| t.len() as f64 / t_s.max(1e-12))
+            .collect()
+    }
+
+    /// Population mean rate (spikes/s).
+    pub fn mean_rate(&self) -> f64 {
+        let r = self.rates();
+        if r.is_empty() {
+            0.0
+        } else {
+            r.iter().sum::<f64>() / r.len() as f64
+        }
+    }
+
+    /// CV of inter-spike intervals per neuron (neurons with < 3 spikes are
+    /// skipped, as is conventional).
+    pub fn cv_isi(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        for t in &self.trains {
+            if t.len() < 3 {
+                continue;
+            }
+            let isis: Vec<f64> = t.windows(2).map(|w| (w[1] - w[0]) as f64).collect();
+            let n = isis.len() as f64;
+            let mean = isis.iter().sum::<f64>() / n;
+            if mean <= 0.0 {
+                continue;
+            }
+            let var = isis.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+            out.push(var.sqrt() / mean);
+        }
+        out
+    }
+
+    /// Pairwise Pearson correlations of binned spike trains for the first
+    /// `subset` neurons with at least one spike (the paper uses 200),
+    /// bin width `bin_ms`.
+    pub fn pearson_correlations(&self, subset: usize, bin_ms: f64) -> Vec<f64> {
+        let bin_steps = (bin_ms / self.dt_ms).round().max(1.0) as u32;
+        let n_bins = (self.t_steps / bin_steps).max(1) as usize;
+        let active: Vec<&Vec<u32>> = self
+            .trains
+            .iter()
+            .filter(|t| !t.is_empty())
+            .take(subset)
+            .collect();
+        let binned: Vec<Vec<f64>> = active
+            .iter()
+            .map(|t| {
+                let mut b = vec![0.0; n_bins];
+                for &s in t.iter() {
+                    let i = ((s / bin_steps) as usize).min(n_bins - 1);
+                    b[i] += 1.0;
+                }
+                b
+            })
+            .collect();
+        // standardize
+        let stats: Vec<(f64, f64)> = binned
+            .iter()
+            .map(|b| {
+                let mean = b.iter().sum::<f64>() / n_bins as f64;
+                let var = b.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n_bins as f64;
+                (mean, var.sqrt())
+            })
+            .collect();
+        let mut out = Vec::new();
+        for i in 0..binned.len() {
+            for j in (i + 1)..binned.len() {
+                let (mi, si) = stats[i];
+                let (mj, sj) = stats[j];
+                if si <= 0.0 || sj <= 0.0 {
+                    continue;
+                }
+                let cov = binned[i]
+                    .iter()
+                    .zip(&binned[j])
+                    .map(|(a, b)| (a - mi) * (b - mj))
+                    .sum::<f64>()
+                    / n_bins as f64;
+                out.push(cov / (si * sj));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates_from_events() {
+        // 2 neurons over 1000 steps at 0.1 ms = 100 ms
+        let events = vec![(10, 5), (20, 5), (30, 6), (40, 5)];
+        let d = SpikeData::from_events(&events, 5, 2, 1000, 0.1);
+        let r = d.rates();
+        assert!((r[0] - 30.0).abs() < 1e-9); // 3 spikes / 0.1 s
+        assert!((r[1] - 10.0).abs() < 1e-9);
+        assert!((d.mean_rate() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn events_outside_population_ignored() {
+        let events = vec![(1, 0), (2, 99)];
+        let d = SpikeData::from_events(&events, 5, 2, 100, 0.1);
+        assert_eq!(d.trains[0].len(), 0);
+        assert_eq!(d.trains[1].len(), 0);
+    }
+
+    #[test]
+    fn cv_isi_regular_vs_irregular() {
+        // perfectly regular train -> CV 0
+        let regular: Vec<(u32, u32)> = (1..50).map(|i| (i * 10, 0)).collect();
+        let d = SpikeData::from_events(&regular, 0, 1, 1000, 0.1);
+        let cv = d.cv_isi();
+        assert_eq!(cv.len(), 1);
+        assert!(cv[0] < 1e-12);
+        // two-interval alternation -> CV > 0
+        let mut t = 0;
+        let irregular: Vec<(u32, u32)> = (0..50)
+            .map(|i| {
+                t += if i % 2 == 0 { 2 } else { 18 };
+                (t, 0)
+            })
+            .collect();
+        let d = SpikeData::from_events(&irregular, 0, 1, 2000, 0.1);
+        assert!(d.cv_isi()[0] > 0.5);
+    }
+
+    #[test]
+    fn cv_isi_skips_sparse_trains() {
+        let d = SpikeData::from_events(&[(1, 0), (2, 0)], 0, 1, 100, 0.1);
+        assert!(d.cv_isi().is_empty());
+    }
+
+    #[test]
+    fn correlation_of_identical_trains_is_one() {
+        let ev: Vec<(u32, u32)> = (0..40)
+            .flat_map(|i| vec![(i * 25, 0), (i * 25, 1)])
+            .collect();
+        let d = SpikeData::from_events(&ev, 0, 2, 1000, 0.1);
+        let c = d.pearson_correlations(2, 2.0);
+        assert_eq!(c.len(), 1);
+        assert!((c[0] - 1.0).abs() < 1e-9, "c={}", c[0]);
+    }
+
+    #[test]
+    fn correlation_of_disjoint_trains_is_negative() {
+        // alternating activity in disjoint bins
+        let mut ev = Vec::new();
+        for i in 0..50u32 {
+            if i % 2 == 0 {
+                ev.push((i * 20, 0));
+            } else {
+                ev.push((i * 20, 1));
+            }
+        }
+        let d = SpikeData::from_events(&ev, 0, 2, 1000, 0.1);
+        let c = d.pearson_correlations(2, 2.0);
+        assert!(c[0] < 0.0);
+    }
+}

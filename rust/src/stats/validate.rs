@@ -1,0 +1,148 @@
+//! Validation protocol (Appendix A): compare the spiking statistics of the
+//! *onboard* and *offboard* construction methods.
+//!
+//! Because the new construction method changes the random number streams,
+//! network instances differ even under the same seed; validation is
+//! therefore statistical. For each population and each statistic (rate,
+//! CV ISI, Pearson correlation) the protocol compares:
+//!   - **seed-vs-seed**: pairwise EMD between runs of the *same* code with
+//!     different seeds (the intrinsic fluctuation scale), and
+//!   - **code-vs-code**: pairwise EMD between runs of the two code paths.
+//! The methods are compatible when the code-vs-code EMDs fall within the
+//! seed-vs-seed distribution (Fig. 8).
+
+use super::emd::emd;
+use super::spikes::SpikeData;
+
+/// The three per-population statistic distributions of §0.6.
+#[derive(Clone, Debug, Default)]
+pub struct StatDistributions {
+    pub rates: Vec<f64>,
+    pub cv_isi: Vec<f64>,
+    pub correlations: Vec<f64>,
+}
+
+impl StatDistributions {
+    pub fn from_spikes(data: &SpikeData, corr_subset: usize, bin_ms: f64) -> Self {
+        Self {
+            rates: data.rates(),
+            cv_isi: data.cv_isi(),
+            correlations: data.pearson_correlations(corr_subset, bin_ms),
+        }
+    }
+}
+
+/// Pairwise EMDs between two sets of distribution samples.
+fn pairwise_emd<'a>(
+    a: impl Iterator<Item = &'a Vec<f64>> + Clone,
+    b: impl Iterator<Item = &'a Vec<f64>>,
+) -> Vec<f64> {
+    let mut out = Vec::new();
+    for (i, y) in b.enumerate() {
+        // pair i-th of b with i-th of a (paper: pairwise fashion, one EMD
+        // per simulation pair)
+        if let Some(x) = a.clone().nth(i) {
+            out.push(emd(x, y));
+        }
+    }
+    out
+}
+
+/// EMD comparison summary for one statistic.
+#[derive(Clone, Debug, Default)]
+pub struct EmdComparison {
+    /// pairwise EMDs between the two code paths (code-vs-code)
+    pub cross_code: Vec<f64>,
+    /// pairwise EMDs between same-code different-seed runs (seed-vs-seed)
+    pub cross_seed: Vec<f64>,
+}
+
+impl EmdComparison {
+    /// The validation verdict: the code-vs-code median must not exceed the
+    /// seed-vs-seed median by more than `tolerance_factor`.
+    pub fn compatible(&self, tolerance_factor: f64) -> bool {
+        let med = |xs: &[f64]| crate::util::table::median_iqr(xs).0;
+        if self.cross_seed.is_empty() || self.cross_code.is_empty() {
+            return false;
+        }
+        let seed_med = med(&self.cross_seed);
+        let code_med = med(&self.cross_code);
+        code_med <= seed_med * tolerance_factor + f64::EPSILON
+    }
+}
+
+/// Full validation outcome over the three statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ValidationReport {
+    pub rates: EmdComparison,
+    pub cv_isi: EmdComparison,
+    pub correlations: EmdComparison,
+}
+
+impl ValidationReport {
+    /// Build the report from three sets of runs (Appendix A):
+    /// `ref_a`, `ref_b` — two sets from the reference (offboard) code with
+    /// different seeds; `new` — the set from the new (onboard) code.
+    pub fn build(
+        ref_a: &[StatDistributions],
+        ref_b: &[StatDistributions],
+        new: &[StatDistributions],
+    ) -> Self {
+        let cmp = |pick: fn(&StatDistributions) -> &Vec<f64>| EmdComparison {
+            cross_seed: pairwise_emd(ref_a.iter().map(pick), ref_b.iter().map(pick)),
+            cross_code: pairwise_emd(ref_a.iter().map(pick), new.iter().map(pick)),
+        };
+        Self {
+            rates: cmp(|d| &d.rates),
+            cv_isi: cmp(|d| &d.cv_isi),
+            correlations: cmp(|d| &d.correlations),
+        }
+    }
+
+    pub fn all_compatible(&self, tolerance_factor: f64) -> bool {
+        self.rates.compatible(tolerance_factor)
+            && self.cv_isi.compatible(tolerance_factor)
+            && self.correlations.compatible(tolerance_factor)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fake_dist(seed: u64, shift: f64) -> StatDistributions {
+        let mut r = Rng::new(seed);
+        StatDistributions {
+            rates: (0..300).map(|_| r.normal_ms(8.0 + shift, 2.0)).collect(),
+            cv_isi: (0..300).map(|_| r.normal_ms(0.9 + shift, 0.1)).collect(),
+            correlations: (0..300).map(|_| r.normal_ms(shift, 0.05)).collect(),
+        }
+    }
+
+    #[test]
+    fn same_process_is_compatible() {
+        let ref_a: Vec<_> = (0..5).map(|i| fake_dist(i, 0.0)).collect();
+        let ref_b: Vec<_> = (10..15).map(|i| fake_dist(i, 0.0)).collect();
+        let new: Vec<_> = (20..25).map(|i| fake_dist(i, 0.0)).collect();
+        let rep = ValidationReport::build(&ref_a, &ref_b, &new);
+        assert!(rep.all_compatible(2.0));
+    }
+
+    #[test]
+    fn shifted_process_is_detected() {
+        let ref_a: Vec<_> = (0..5).map(|i| fake_dist(i, 0.0)).collect();
+        let ref_b: Vec<_> = (10..15).map(|i| fake_dist(i, 0.0)).collect();
+        // the "new code" fires 3 Hz higher: must fail validation
+        let new: Vec<_> = (20..25).map(|i| fake_dist(i, 3.0)).collect();
+        let rep = ValidationReport::build(&ref_a, &ref_b, &new);
+        assert!(!rep.rates.compatible(2.0));
+        assert!(!rep.all_compatible(2.0));
+    }
+
+    #[test]
+    fn empty_runs_are_incompatible() {
+        let rep = ValidationReport::build(&[], &[], &[]);
+        assert!(!rep.all_compatible(2.0));
+    }
+}

@@ -1,0 +1,8 @@
+//! Self-contained utility substrate (the offline crate set has no rand,
+//! serde, or criterion — these modules replace them).
+
+pub mod json;
+pub mod rng;
+pub mod sort;
+pub mod table;
+pub mod timer;

@@ -1,0 +1,361 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The paper's construction algorithm depends on *aligned* RNG streams: the
+//! generator `RNG[σ,τ]` is seeded identically on the source and the target
+//! MPI process of every remote connection and consumed in lockstep, so the
+//! `S` and `(R, L)` sequences stay aligned (Eq. 1) with zero communication.
+//! That requires a generator whose stream is a pure function of its seed and
+//! draw sequence — no global state, no platform dependence. We implement
+//! SplitMix64 (seeding / stream derivation) and xoshiro256** (the working
+//! generator), plus the distributions the simulator needs (uniform ranges,
+//! normal, Poisson, exponential, binomial).
+
+/// SplitMix64: used to expand seeds and derive independent streams.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Mix an arbitrary list of stream identifiers into a single 64-bit seed.
+///
+/// Used to derive the aligned per-(σ,τ) generators: both ranks compute
+/// `stream_seed(master, &[TAG, σ, τ])` and obtain the same stream.
+pub fn stream_seed(master: u64, ids: &[u64]) -> u64 {
+    let mut sm = SplitMix64::new(master ^ 0xA076_1D64_78BD_642F);
+    let mut acc = sm.next_u64();
+    for &id in ids {
+        let mut s = SplitMix64::new(acc ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        acc = s.next_u64();
+    }
+    acc
+}
+
+/// xoshiro256**: the simulator's working generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second normal deviate from Box–Muller
+    gauss_cache: Option<f64>,
+}
+
+impl Rng {
+    /// Seed via SplitMix64 expansion (never yields the all-zero state).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+            gauss_cache: None,
+        }
+    }
+
+    /// Derive a generator for a named sub-stream (order-independent of other
+    /// streams; deterministic across ranks).
+    pub fn stream(master: u64, ids: &[u64]) -> Self {
+        Self::new(stream_seed(master, ids))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's unbiased method).
+    #[inline]
+    pub fn below(&mut self, n: u32) -> u32 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u32();
+        let mut m = (x as u64) * (n as u64);
+        let mut lo = m as u32;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u32();
+                m = (x as u64) * (n as u64);
+                lo = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// Uniform integer in `[0, n)` for 64-bit ranges.
+    #[inline]
+    pub fn below_u64(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // 128-bit Lemire
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 random bits.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Standard normal deviate (Box–Muller, cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.gauss_cache.take() {
+            return z;
+        }
+        loop {
+            let u = self.uniform();
+            if u <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let v = self.uniform();
+            let r = (-2.0 * u.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * v;
+            self.gauss_cache = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Normal deviate with the given mean and standard deviation.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.normal()
+    }
+
+    /// Exponential deviate with rate `lambda`.
+    #[inline]
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        let mut u = self.uniform();
+        if u == 0.0 {
+            u = f64::MIN_POSITIVE;
+        }
+        -u.ln() / lambda
+    }
+
+    /// Poisson deviate. Knuth multiplication for small means, normal
+    /// approximation (with continuity correction, clamped at 0) for large —
+    /// accurate to well under the statistical noise of spike-count inputs.
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.uniform();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let z = self.normal();
+            let x = lambda + lambda.sqrt() * z + 0.5;
+            if x < 0.0 {
+                0
+            } else {
+                x as u64
+            }
+        }
+    }
+
+    /// Binomial deviate via inversion for small n, normal approx otherwise.
+    pub fn binomial(&mut self, n: u64, p: f64) -> u64 {
+        if p <= 0.0 || n == 0 {
+            return 0;
+        }
+        if p >= 1.0 {
+            return n;
+        }
+        if n < 64 {
+            let mut k = 0;
+            for _ in 0..n {
+                if self.uniform() < p {
+                    k += 1;
+                }
+            }
+            k
+        } else {
+            let mean = n as f64 * p;
+            let sd = (n as f64 * p * (1.0 - p)).sqrt();
+            let x = mean + sd * self.normal() + 0.5;
+            x.clamp(0.0, n as f64) as u64
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u32) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_stream() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn stream_seed_symmetric_usage() {
+        // the aligned-RNG property: same ids -> same stream, any id change
+        // -> different stream
+        assert_eq!(stream_seed(7, &[1, 2, 3]), stream_seed(7, &[1, 2, 3]));
+        assert_ne!(stream_seed(7, &[1, 2, 3]), stream_seed(7, &[1, 3, 2]));
+        assert_ne!(stream_seed(7, &[1, 2, 3]), stream_seed(8, &[1, 2, 3]));
+    }
+
+    #[test]
+    fn below_in_range_and_covers() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.below(10);
+            assert!(x < 10);
+            seen[x as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn below_u64_large_range() {
+        let mut r = Rng::new(3);
+        let n = 1u64 << 40;
+        for _ in 0..100 {
+            assert!(r.below_u64(n) < n);
+        }
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut r = Rng::new(5);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / 10_000.0 - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            s += z;
+            s2 += z * z;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn poisson_small_and_large_mean() {
+        let mut r = Rng::new(13);
+        for &lambda in &[0.1, 3.0, 25.0, 100.0, 1000.0] {
+            let n = 20_000;
+            let total: u64 = (0..n).map(|_| r.poisson(lambda)).sum();
+            let mean = total as f64 / n as f64;
+            let tol = 4.0 * (lambda / n as f64).sqrt() + 0.51; // CLT + rounding
+            assert!(
+                (mean - lambda).abs() < tol,
+                "lambda={lambda} mean={mean}"
+            );
+        }
+        assert_eq!(r.poisson(0.0), 0);
+    }
+
+    #[test]
+    fn binomial_mean() {
+        let mut r = Rng::new(17);
+        let (n, p) = (1000u64, 0.3);
+        let total: u64 = (0..2000).map(|_| r.binomial(n, p)).sum();
+        let mean = total as f64 / 2000.0;
+        assert!((mean - 300.0).abs() < 3.0, "mean={mean}");
+        assert_eq!(r.binomial(10, 0.0), 0);
+        assert_eq!(r.binomial(10, 1.0), 10);
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(19);
+        let total: f64 = (0..20_000).map(|_| r.exponential(2.0)).sum();
+        assert!((total / 20_000.0 - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(23);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+}

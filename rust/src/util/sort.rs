@@ -1,0 +1,199 @@
+//! Sorting primitives for the construction hot path.
+//!
+//! The dominant cost of simulation preparation (paper Fig. 6b) is sorting
+//! the connection array by source-neuron index and keeping the (R, L) maps
+//! sorted (Eq. 3). On the GPU the reference implementation uses radix-based
+//! device sorts; here we provide an LSD radix sort on `u64` keys with a
+//! permutation payload, which is also the §Perf optimization target for the
+//! coordinator.
+
+/// Compute the permutation that stably sorts `keys` ascending.
+///
+/// LSD radix sort, 8 bits per digit, skipping digits that are constant over
+/// the whole key range (common: keys are small node indexes).
+pub fn argsort_u64(keys: &[u64]) -> Vec<u32> {
+    let n = keys.len();
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    if n <= 1 {
+        return perm;
+    }
+    // Which digits vary?
+    let mut or_all = 0u64;
+    let mut and_all = u64::MAX;
+    for &k in keys {
+        or_all |= k;
+        and_all &= k;
+    }
+    let varying = or_all ^ and_all;
+    let mut tmp: Vec<u32> = vec![0; n];
+    let mut counts = [0usize; 256];
+    for pass in 0..8 {
+        let shift = pass * 8;
+        if (varying >> shift) & 0xFF == 0 {
+            continue;
+        }
+        counts.fill(0);
+        for &i in perm.iter() {
+            let d = ((keys[i as usize] >> shift) & 0xFF) as usize;
+            counts[d] += 1;
+        }
+        let mut sum = 0usize;
+        for c in counts.iter_mut() {
+            let t = *c;
+            *c = sum;
+            sum += t;
+        }
+        for &i in perm.iter() {
+            let d = ((keys[i as usize] >> shift) & 0xFF) as usize;
+            tmp[counts[d]] = i;
+            counts[d] += 1;
+        }
+        std::mem::swap(&mut perm, &mut tmp);
+    }
+    perm
+}
+
+/// Apply a permutation to a slice, out of place.
+pub fn apply_perm<T: Copy>(perm: &[u32], xs: &[T]) -> Vec<T> {
+    perm.iter().map(|&i| xs[i as usize]).collect()
+}
+
+/// Sort `u32` values ascending via the radix path.
+pub fn sort_u32(xs: &mut Vec<u32>) {
+    let keys: Vec<u64> = xs.iter().map(|&x| x as u64).collect();
+    let perm = argsort_u64(&keys);
+    *xs = apply_perm(&perm, xs);
+}
+
+/// Merge a sorted list of *new* values into a sorted vector, dropping values
+/// already present (set-union merge). Returns the number inserted. This is
+/// the map-update primitive of Eqs. 6–7: `S/R/L` stay sorted after every
+/// `RemoteConnect` call.
+pub fn merge_sorted_unique(dst: &mut Vec<u32>, new_sorted: &[u32]) -> usize {
+    debug_assert!(new_sorted.windows(2).all(|w| w[0] <= w[1]));
+    if new_sorted.is_empty() {
+        return 0;
+    }
+    let mut merged = Vec::with_capacity(dst.len() + new_sorted.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut inserted = 0usize;
+    while i < dst.len() || j < new_sorted.len() {
+        if j >= new_sorted.len() {
+            merged.extend_from_slice(&dst[i..]);
+            break;
+        }
+        if i >= dst.len() {
+            let v = new_sorted[j];
+            if merged.last() != Some(&v) {
+                merged.push(v);
+                inserted += 1;
+            }
+            j += 1;
+            continue;
+        }
+        let (a, b) = (dst[i], new_sorted[j]);
+        if a < b {
+            merged.push(a);
+            i += 1;
+        } else if a == b {
+            merged.push(a);
+            i += 1;
+            j += 1;
+        } else {
+            if merged.last() != Some(&b) {
+                merged.push(b);
+                inserted += 1;
+            }
+            j += 1;
+        }
+    }
+    *dst = merged;
+    inserted
+}
+
+/// Binary search in a sorted slice; `Some(pos)` if found.
+#[inline]
+pub fn bsearch(xs: &[u32], v: u32) -> Option<usize> {
+    xs.binary_search(&v).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn argsort_sorts_random_keys() {
+        let mut r = Rng::new(1);
+        let keys: Vec<u64> = (0..5000).map(|_| r.next_u64() >> 20).collect();
+        let perm = argsort_u64(&keys);
+        let sorted = apply_perm(&perm, &keys);
+        assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+        // permutation property
+        let mut p2 = perm.clone();
+        p2.sort_unstable();
+        assert_eq!(p2, (0..5000u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn argsort_is_stable() {
+        // equal keys keep original order (required for deterministic builds)
+        let keys = vec![3u64, 1, 3, 1, 3];
+        let perm = argsort_u64(&keys);
+        assert_eq!(perm, vec![1, 3, 0, 2, 4]);
+    }
+
+    #[test]
+    fn argsort_empty_and_single() {
+        assert!(argsort_u64(&[]).is_empty());
+        assert_eq!(argsort_u64(&[7]), vec![0]);
+    }
+
+    #[test]
+    fn argsort_constant_keys() {
+        let keys = vec![5u64; 100];
+        assert_eq!(argsort_u64(&keys), (0..100u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn argsort_matches_std_sort() {
+        let mut r = Rng::new(9);
+        for n in [2usize, 17, 255, 1024] {
+            let keys: Vec<u64> = (0..n).map(|_| r.next_u64()).collect();
+            let perm = argsort_u64(&keys);
+            let mut expect = keys.clone();
+            expect.sort_unstable();
+            assert_eq!(apply_perm(&perm, &keys), expect);
+        }
+    }
+
+    #[test]
+    fn merge_union_semantics() {
+        let mut dst = vec![2, 5, 9];
+        let ins = merge_sorted_unique(&mut dst, &[1, 5, 5, 7, 9, 12]);
+        assert_eq!(dst, vec![1, 2, 5, 7, 9, 12]);
+        assert_eq!(ins, 3); // 1, 7, 12
+    }
+
+    #[test]
+    fn merge_into_empty_dedups() {
+        let mut dst = vec![];
+        let ins = merge_sorted_unique(&mut dst, &[3, 3, 4]);
+        assert_eq!(dst, vec![3, 4]);
+        assert_eq!(ins, 2);
+    }
+
+    #[test]
+    fn merge_empty_new() {
+        let mut dst = vec![1, 2];
+        assert_eq!(merge_sorted_unique(&mut dst, &[]), 0);
+        assert_eq!(dst, vec![1, 2]);
+    }
+
+    #[test]
+    fn sort_u32_works() {
+        let mut xs = vec![9u32, 1, 1, 0, 7];
+        sort_u32(&mut xs);
+        assert_eq!(xs, vec![0, 1, 1, 7, 9]);
+    }
+}

@@ -1,0 +1,214 @@
+//! Phase timers: the paper reports the time-to-solution split into the
+//! construction subtasks of §0.5 (initialization, neuron & device creation,
+//! local connection, remote connection, simulation preparation) plus state
+//! propagation. `PhaseTimes` is that exact breakdown; `PhaseTimer`
+//! accumulates into it.
+
+use std::time::{Duration, Instant};
+
+/// The simulation phases of §0.5 (Fig. 3a / Fig. 6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Initialization,
+    NodeCreation,
+    LocalConnection,
+    RemoteConnection,
+    Preparation,
+    Propagation,
+}
+
+pub const ALL_PHASES: [Phase; 6] = [
+    Phase::Initialization,
+    Phase::NodeCreation,
+    Phase::LocalConnection,
+    Phase::RemoteConnection,
+    Phase::Preparation,
+    Phase::Propagation,
+];
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Initialization => "initialization",
+            Phase::NodeCreation => "node_creation",
+            Phase::LocalConnection => "local_connection",
+            Phase::RemoteConnection => "remote_connection",
+            Phase::Preparation => "preparation",
+            Phase::Propagation => "propagation",
+        }
+    }
+}
+
+/// Accumulated wall-clock time per phase.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimes {
+    pub initialization: Duration,
+    pub node_creation: Duration,
+    pub local_connection: Duration,
+    pub remote_connection: Duration,
+    pub preparation: Duration,
+    pub propagation: Duration,
+}
+
+impl PhaseTimes {
+    pub fn get(&self, p: Phase) -> Duration {
+        match p {
+            Phase::Initialization => self.initialization,
+            Phase::NodeCreation => self.node_creation,
+            Phase::LocalConnection => self.local_connection,
+            Phase::RemoteConnection => self.remote_connection,
+            Phase::Preparation => self.preparation,
+            Phase::Propagation => self.propagation,
+        }
+    }
+
+    fn slot(&mut self, p: Phase) -> &mut Duration {
+        match p {
+            Phase::Initialization => &mut self.initialization,
+            Phase::NodeCreation => &mut self.node_creation,
+            Phase::LocalConnection => &mut self.local_connection,
+            Phase::RemoteConnection => &mut self.remote_connection,
+            Phase::Preparation => &mut self.preparation,
+            Phase::Propagation => &mut self.propagation,
+        }
+    }
+
+    /// Total network-construction time (everything except propagation).
+    pub fn construction(&self) -> Duration {
+        self.initialization
+            + self.node_creation
+            + self.local_connection
+            + self.remote_connection
+            + self.preparation
+    }
+
+    /// "Neuron and device creation and connection" aggregate of Fig. 6a.
+    pub fn creation_and_connection(&self) -> Duration {
+        self.node_creation + self.local_connection + self.remote_connection
+    }
+
+    pub fn add(&mut self, other: &PhaseTimes) {
+        for p in ALL_PHASES {
+            *self.slot(p) += other.get(p);
+        }
+    }
+
+    /// Element-wise mean over a set of per-rank phase breakdowns.
+    pub fn mean(all: &[PhaseTimes]) -> PhaseTimes {
+        let mut out = PhaseTimes::default();
+        if all.is_empty() {
+            return out;
+        }
+        for t in all {
+            out.add(t);
+        }
+        for p in ALL_PHASES {
+            *out.slot(p) = out.get(p) / all.len() as u32;
+        }
+        out
+    }
+}
+
+/// Accumulating stopwatch over `PhaseTimes`.
+#[derive(Debug, Default)]
+pub struct PhaseTimer {
+    pub times: PhaseTimes,
+    current: Option<(Phase, Instant)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start (or switch to) a phase; accumulates the previous one.
+    pub fn enter(&mut self, p: Phase) {
+        self.stop();
+        self.current = Some((p, Instant::now()));
+    }
+
+    /// Stop timing without entering a new phase.
+    pub fn stop(&mut self) {
+        if let Some((p, t0)) = self.current.take() {
+            *self.times.slot(p) += t0.elapsed();
+        }
+    }
+
+    /// Time a closure under a phase (restores the previous phase after).
+    pub fn scope<T>(&mut self, p: Phase, f: impl FnOnce() -> T) -> T {
+        let prev = self.current.map(|(ph, _)| ph);
+        self.enter(p);
+        let out = f();
+        self.stop();
+        if let Some(ph) = prev {
+            self.enter(ph);
+        }
+        out
+    }
+}
+
+/// Simple wall-clock stopwatch for benches.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_accumulate() {
+        let mut t = PhaseTimer::new();
+        t.enter(Phase::NodeCreation);
+        std::thread::sleep(Duration::from_millis(2));
+        t.enter(Phase::LocalConnection);
+        std::thread::sleep(Duration::from_millis(2));
+        t.stop();
+        assert!(t.times.node_creation >= Duration::from_millis(1));
+        assert!(t.times.local_connection >= Duration::from_millis(1));
+        assert_eq!(t.times.propagation, Duration::ZERO);
+    }
+
+    #[test]
+    fn scope_restores_previous_phase() {
+        let mut t = PhaseTimer::new();
+        t.enter(Phase::Propagation);
+        t.scope(Phase::Preparation, || {
+            std::thread::sleep(Duration::from_millis(1));
+        });
+        std::thread::sleep(Duration::from_millis(1));
+        t.stop();
+        assert!(t.times.preparation >= Duration::from_millis(1));
+        assert!(t.times.propagation >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn construction_sum() {
+        let mut pt = PhaseTimes::default();
+        pt.node_creation = Duration::from_secs(1);
+        pt.preparation = Duration::from_secs(2);
+        pt.propagation = Duration::from_secs(10);
+        assert_eq!(pt.construction(), Duration::from_secs(3));
+        assert_eq!(pt.creation_and_connection(), Duration::from_secs(1));
+    }
+
+    #[test]
+    fn mean_over_ranks() {
+        let mut a = PhaseTimes::default();
+        a.preparation = Duration::from_secs(2);
+        let mut b = PhaseTimes::default();
+        b.preparation = Duration::from_secs(4);
+        let m = PhaseTimes::mean(&[a, b]);
+        assert_eq!(m.preparation, Duration::from_secs(3));
+    }
+}

@@ -1,0 +1,229 @@
+//! Integration: the paper's central invariant (Eq. 1) at the Simulator
+//! level — the source-side S sequences equal the target-side R maps after
+//! arbitrary interleavings of RemoteConnect calls, with zero communication.
+//!
+//! Both rank views are instantiated in one thread with NullComm (valid
+//! because construction is communication-free by design).
+
+use nestgpu::comm::NullComm;
+use nestgpu::connection::{ConnRule, NodeSet, SynSpec};
+use nestgpu::engine::{SimConfig, Simulator};
+use nestgpu::node::LifParams;
+use nestgpu::remote::GpuMemLevel;
+
+fn pair(level: GpuMemLevel, seed: u64) -> (Simulator, Simulator) {
+    let cfg = SimConfig {
+        seed,
+        level,
+        ..Default::default()
+    };
+    let a = Simulator::new(Box::new(NullComm::new(0, 2)), cfg.clone());
+    let b = Simulator::new(Box::new(NullComm::new(1, 2)), cfg);
+    (a, b)
+}
+
+/// SPMD helper: issue the same call on both rank views.
+fn spmd_remote(
+    a: &mut Simulator,
+    b: &mut Simulator,
+    src: usize,
+    s: &NodeSet,
+    tgt: usize,
+    t: &NodeSet,
+    rule: &ConnRule,
+) {
+    let syn = SynSpec::new(1.0, 1);
+    a.remote_connect(src, s, tgt, t, rule, &syn, None);
+    b.remote_connect(src, s, tgt, t, rule, &syn, None);
+}
+
+#[test]
+fn s_equals_r_for_interleaved_probabilistic_calls() {
+    for level in [GpuMemLevel::L0, GpuMemLevel::L2] {
+        let (mut r0, mut r1) = pair(level, 99);
+        let p = LifParams::default();
+        r0.create_neurons(100, &p);
+        r1.create_neurons(100, &p);
+        // interleave directions and rules across many calls
+        for call in 0..6u32 {
+            let s = NodeSet::range(0, 60);
+            let t = NodeSet::range(call * 10, 10);
+            spmd_remote(&mut r0, &mut r1, 0, &s, 1, &t, &ConnRule::FixedIndegree { k: 2 });
+            spmd_remote(
+                &mut r0,
+                &mut r1,
+                1,
+                &NodeSet::range(10, 30),
+                0,
+                &t,
+                &ConnRule::FixedTotalNumber { n: 25 },
+            );
+        }
+        // Eq. 1: S on the source == R on the target, both directions
+        assert_eq!(
+            r0.remote.p2p_s[1].as_slice(),
+            r1.remote.p2p_maps[0].r_slice(),
+            "level {level:?}: S[1] on rank0 != R[1,0] on rank1"
+        );
+        assert_eq!(
+            r1.remote.p2p_s[0].as_slice(),
+            r0.remote.p2p_maps[1].r_slice(),
+            "level {level:?}: S[0] on rank1 != R[0,1] on rank0"
+        );
+        // Eq. 3: sortedness
+        assert!(r1.remote.p2p_maps[0].is_sorted());
+        assert!(r0.remote.p2p_s[1].is_sorted());
+    }
+}
+
+#[test]
+fn alignment_survives_deterministic_and_assigned_rules() {
+    let (mut r0, mut r1) = pair(GpuMemLevel::L0, 3);
+    let p = LifParams::default();
+    r0.create_neurons(50, &p);
+    r1.create_neurons(50, &p);
+    let s = NodeSet::List(vec![5, 9, 17, 30, 44]);
+    spmd_remote(
+        &mut r0,
+        &mut r1,
+        0,
+        &s,
+        1,
+        &NodeSet::range(0, 5),
+        &ConnRule::OneToOne,
+    );
+    spmd_remote(
+        &mut r0,
+        &mut r1,
+        0,
+        &NodeSet::range(20, 8),
+        1,
+        &NodeSet::range(5, 4),
+        &ConnRule::AssignedNodes(vec![(0, 0), (3, 1), (3, 2), (7, 3)]),
+    );
+    spmd_remote(
+        &mut r0,
+        &mut r1,
+        0,
+        &NodeSet::range(0, 10),
+        1,
+        &NodeSet::range(9, 10),
+        &ConnRule::FixedOutdegree { k: 3 },
+    );
+    assert_eq!(
+        r0.remote.p2p_s[1].as_slice(),
+        r1.remote.p2p_maps[0].r_slice()
+    );
+    // assigned-nodes with flagging: only used sources (positions 0, 3, 7)
+    // of the second call got images
+    assert!(r1.remote.p2p_maps[0].lookup(20).is_some());
+    assert!(r1.remote.p2p_maps[0].lookup(23).is_some());
+    assert!(r1.remote.p2p_maps[0].lookup(27).is_some());
+    assert!(r1.remote.p2p_maps[0].lookup(21).is_none());
+}
+
+#[test]
+fn tp_positions_match_target_map_positions() {
+    // Eqs. 8-9: the position P sent over the wire must index the right
+    // entry of the target's (R, L) map
+    let (mut r0, mut r1) = pair(GpuMemLevel::L2, 17);
+    let p = LifParams::default();
+    r0.create_neurons(40, &p);
+    r1.create_neurons(40, &p);
+    for k in [1u32, 3] {
+        spmd_remote(
+            &mut r0,
+            &mut r1,
+            0,
+            &NodeSet::range(0, 40),
+            1,
+            &NodeSet::range(0, 20),
+            &ConnRule::FixedIndegree { k },
+        );
+    }
+    r0.prepare().unwrap();
+    r1.prepare().unwrap();
+    let tp = r0.remote.tp.as_ref().unwrap();
+    let map = &r1.remote.p2p_maps[0];
+    for node in 0..40u32 {
+        for (tau, pos) in tp.route(node) {
+            assert_eq!(tau, 1);
+            // the map entry at the routed position must be this neuron
+            assert_eq!(
+                map.r_slice()[pos as usize],
+                node,
+                "position {pos} routes to the wrong map entry"
+            );
+            // and resolves to an image node on the target
+            let img = map.l_at(pos);
+            assert!(r1.nodes.is_image(img));
+        }
+    }
+}
+
+#[test]
+fn collective_h_mirrored_and_i_consistent() {
+    let cfg = SimConfig::default();
+    let mut sims: Vec<Simulator> = (0..3)
+        .map(|r| Simulator::new(Box::new(NullComm::new(r, 3)), cfg.clone()))
+        .collect();
+    let p = LifParams::default();
+    for sim in sims.iter_mut() {
+        sim.create_neurons(30, &p);
+        sim.register_group(vec![0, 1, 2]);
+    }
+    // SPMD: all ranks observe all calls
+    let calls = [
+        (0usize, NodeSet::range(0, 20), 1usize),
+        (0, NodeSet::range(10, 15), 2),
+        (2, NodeSet::List(vec![1, 4, 9]), 0),
+    ];
+    for (src, s, tgt) in &calls {
+        for sim in sims.iter_mut() {
+            sim.remote_connect(
+                *src,
+                s,
+                *tgt,
+                &NodeSet::range(0, 10),
+                &ConnRule::FixedIndegree { k: 2 },
+                &SynSpec::new(1.0, 1),
+                Some(0),
+            );
+        }
+    }
+    for sim in sims.iter_mut() {
+        sim.prepare().unwrap();
+    }
+    // Eq. 12-13: H mirrored identically on every member
+    for member in 0..3 {
+        let h0 = &sims[0].remote.groups[0].h[member];
+        for sim in &sims[1..] {
+            assert_eq!(h0, &sim.remote.groups[0].h[member]);
+        }
+        assert!(h0.windows(2).all(|w| w[0] < w[1]), "H must be sorted");
+    }
+    // H[0] = union of rank-0 source args = [0,20) ∪ [10,25) = [0,25)
+    assert_eq!(
+        sims[1].remote.groups[0].h[0],
+        (0u32..25).collect::<Vec<_>>()
+    );
+    // Eq. 14: I aligned with H; −1 exactly for sources without an image
+    for tgt in 0..3usize {
+        for src_member in 0..3usize {
+            if src_member == tgt {
+                continue;
+            }
+            let gs = &sims[tgt].remote.groups[0];
+            let h = &gs.h[src_member];
+            let i = &gs.i_arr[src_member];
+            assert_eq!(h.len(), i.len());
+            let map = &gs.maps[src_member];
+            for (pos, (&sid, &img)) in h.iter().zip(i.iter()).enumerate() {
+                match map.lookup(sid) {
+                    Some(l) => assert_eq!(img, l as i32, "pos {pos}"),
+                    None => assert_eq!(img, -1, "pos {pos}"),
+                }
+            }
+        }
+    }
+}

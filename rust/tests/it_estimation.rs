@@ -1,0 +1,86 @@
+//! Integration: the estimation (dry-run) methodology — k live ranks
+//! dry-running an n-rank world measure the same code path as the live run
+//! (the basis of the paper's 4,096-node projections and Fig. 13).
+
+use nestgpu::engine::{SimConfig, Simulator};
+use nestgpu::harness::{estimate_cluster, run_construction_only};
+use nestgpu::models::balanced::{build_balanced, BalancedConfig};
+use nestgpu::remote::levels::ALL_LEVELS;
+
+fn bal() -> BalancedConfig {
+    BalancedConfig {
+        scale: 0.003,
+        k_scale: 0.003,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn estimated_structures_equal_live_per_rank_all_levels() {
+    for level in ALL_LEVELS {
+        let cfg = SimConfig {
+            level,
+            ..Default::default()
+        };
+        let live =
+            run_construction_only(4, &cfg, &|s: &mut Simulator| build_balanced(s, &bal()))
+                .unwrap();
+        let est = estimate_cluster(4, 4, &cfg, &|s: &mut Simulator| build_balanced(s, &bal()))
+            .unwrap();
+        for (l, e) in live.iter().zip(est.iter()) {
+            assert_eq!(l.n_neurons, e.n_neurons, "{level:?}");
+            assert_eq!(l.n_images, e.n_images, "{level:?}");
+            assert_eq!(l.n_connections, e.n_connections, "{level:?}");
+            assert_eq!(l.map_entries, e.map_entries, "{level:?}");
+            assert_eq!(l.device_peak, e.device_peak, "{level:?} device peak");
+        }
+    }
+}
+
+#[test]
+fn partial_estimation_samples_the_virtual_world() {
+    // 2 live ranks of a virtual 8-rank world: per-rank structures must
+    // match the corresponding ranks of the full live 8-rank run
+    let cfg = SimConfig::default();
+    let live = run_construction_only(8, &cfg, &|s: &mut Simulator| build_balanced(s, &bal()))
+        .unwrap();
+    let est = estimate_cluster(2, 8, &cfg, &|s: &mut Simulator| build_balanced(s, &bal()))
+        .unwrap();
+    for (l, e) in live.iter().take(2).zip(est.iter()) {
+        assert_eq!(l.n_connections, e.n_connections);
+        assert_eq!(l.n_images, e.n_images);
+        assert_eq!(l.device_peak, e.device_peak);
+    }
+}
+
+#[test]
+fn estimation_scales_to_large_virtual_worlds() {
+    // the whole point: one thread estimates a 512-rank configuration
+    let cfg = SimConfig::default();
+    let bal = BalancedConfig {
+        scale: 0.001,
+        k_scale: 0.001,
+        ..Default::default()
+    };
+    let est = estimate_cluster(1, 512, &cfg, &move |s: &mut Simulator| {
+        build_balanced(s, &bal)
+    })
+    .unwrap();
+    let r = &est[0];
+    assert!(r.n_connections > 0);
+    // image count bounded by the used-source plateau (level 2: all-source
+    // images) — with 512 ranks the remote population dwarfs local draws
+    assert!(r.n_images > r.n_neurons);
+}
+
+#[test]
+fn estimation_phase_times_populated() {
+    let cfg = SimConfig::default();
+    let est = estimate_cluster(2, 16, &cfg, &|s: &mut Simulator| build_balanced(s, &bal()))
+        .unwrap();
+    for r in &est {
+        assert!(r.phases.preparation.as_nanos() > 0);
+        assert!(r.phases.node_creation.as_nanos() > 0);
+        assert_eq!(r.phases.propagation.as_nanos(), 0);
+    }
+}

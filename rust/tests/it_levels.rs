@@ -1,0 +1,100 @@
+//! Integration: GPU memory levels (§0.3.6) — placement, flagging and
+//! memory-ordering behaviour on a live balanced workload.
+
+use nestgpu::engine::{SimConfig, Simulator};
+use nestgpu::harness::run_construction_only;
+use nestgpu::models::balanced::{build_balanced, BalancedConfig};
+use nestgpu::remote::levels::{GpuMemLevel, ALL_LEVELS};
+
+fn bal() -> BalancedConfig {
+    BalancedConfig {
+        scale: 0.004,
+        k_scale: 0.004,
+        ..Default::default()
+    }
+}
+
+fn run_level(level: GpuMemLevel, ranks: usize) -> Vec<nestgpu::engine::SimResult> {
+    let cfg = SimConfig {
+        level,
+        ..Default::default()
+    };
+    run_construction_only(ranks, &cfg, &|sim: &mut Simulator| build_balanced(sim, &bal()))
+        .unwrap()
+}
+
+#[test]
+fn device_memory_ordered_by_level() {
+    let peaks: Vec<u64> = ALL_LEVELS
+        .iter()
+        .map(|&lvl| run_level(lvl, 4)[0].device_peak)
+        .collect();
+    // §0.3.6: "ordered by increasing GPU memory usage"
+    for w in peaks.windows(2) {
+        assert!(
+            w[0] <= w[1],
+            "device peaks not monotonically increasing: {peaks:?}"
+        );
+    }
+    assert!(
+        peaks[3] > peaks[0],
+        "level 3 must use strictly more device memory than level 0: {peaks:?}"
+    );
+}
+
+#[test]
+fn level0_creates_fewer_images_when_sparse() {
+    // the ξ heuristic flags only when the expected connections per source
+    // fall below 1 (paper: K_in/P < ξ); so use K_in = 2 over 8 ranks —
+    // most remote sources unused: level 0 flags them away, level 1+
+    // images every source passed to RemoteConnect
+    let mut bal = bal();
+    bal.k_scale = 1e-6; // K_in,E = K_in,I = 1 (clamped minimum)
+    const RANKS: usize = 8;
+    let mk = |level| {
+        let cfg = SimConfig {
+            level,
+            ..Default::default()
+        };
+        let b = bal.clone();
+        run_construction_only(RANKS, &cfg, &move |sim: &mut Simulator| {
+            build_balanced(sim, &b)
+        })
+        .unwrap()[0]
+            .n_images
+    };
+    let l0 = mk(GpuMemLevel::L0);
+    let l1 = mk(GpuMemLevel::L1);
+    assert!(
+        l0 < l1,
+        "flagging must reduce image count (l0={l0}, l1={l1})"
+    );
+    // level 1 images the full remote populations: (ranks-1) * neurons
+    assert_eq!(l1, (RANKS as u64 - 1) * bal.neurons_per_rank() as u64);
+}
+
+#[test]
+fn host_memory_higher_on_low_levels() {
+    let l0 = run_level(GpuMemLevel::L0, 4)[0].host_peak;
+    let l3 = run_level(GpuMemLevel::L3, 4)[0].host_peak;
+    assert!(
+        l0 > l3,
+        "levels 0/1 park map structures in host memory (l0={l0}, l3={l3})"
+    );
+}
+
+#[test]
+fn structure_counts_identical_across_levels_at_same_flagging() {
+    // levels 1-3 differ only in placement: identical images, conns, maps
+    let runs: Vec<_> = [GpuMemLevel::L1, GpuMemLevel::L2, GpuMemLevel::L3]
+        .iter()
+        .map(|&lvl| run_level(lvl, 4))
+        .collect();
+    for pair in runs.windows(2) {
+        for (a, b) in pair[0].iter().zip(pair[1].iter()) {
+            assert_eq!(a.n_images, b.n_images);
+            assert_eq!(a.n_connections, b.n_connections);
+            assert_eq!(a.map_entries, b.map_entries);
+        }
+    }
+}

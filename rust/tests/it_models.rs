@@ -1,0 +1,122 @@
+//! Integration: model-level structural invariants (balanced network and
+//! MAM) on live multi-rank builds.
+
+use nestgpu::engine::{SimConfig, Simulator};
+use nestgpu::harness::{run_cluster, run_construction_only};
+use nestgpu::models::balanced::{build_balanced, BalancedConfig};
+use nestgpu::models::mam::{MamConfig, MamModel, N_AREAS, TH};
+
+fn bal(scale: f64) -> BalancedConfig {
+    BalancedConfig {
+        scale,
+        k_scale: scale,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn balanced_connection_count_independent_of_rank_count() {
+    // weak scaling: per-rank synapses must be constant across world sizes
+    let cfg = SimConfig::default();
+    let mut per_rank = Vec::new();
+    for ranks in [1usize, 2, 4] {
+        let r = run_construction_only(ranks, &cfg, &|sim: &mut Simulator| {
+            build_balanced(sim, &bal(0.004))
+        })
+        .unwrap();
+        per_rank.push(r[0].n_connections);
+        // all ranks identical
+        assert!(r.iter().all(|x| x.n_connections == r[0].n_connections));
+    }
+    assert_eq!(per_rank[0], per_rank[1]);
+    assert_eq!(per_rank[1], per_rank[2]);
+}
+
+#[test]
+fn balanced_sources_distributed_over_all_ranks() {
+    // with enough draws every remote rank must contribute images
+    let cfg = SimConfig::default();
+    let r = run_construction_only(4, &cfg, &|sim: &mut Simulator| {
+        build_balanced(sim, &bal(0.004))
+    })
+    .unwrap();
+    for res in &r {
+        // images exist from all 3 remote ranks: total entries == images
+        assert!(res.n_images > 0);
+        assert_eq!(res.map_entries, res.n_images);
+    }
+}
+
+#[test]
+fn mam_packing_covers_all_areas_and_layout_is_consistent() {
+    let m = MamModel::new(MamConfig::default());
+    for ranks in [2usize, 4, 8] {
+        let packing = m.pack(ranks);
+        let layout = m.layout(&packing);
+        let mut seen = vec![false; N_AREAS];
+        for a in 0..N_AREAS {
+            assert!(layout.rank_of_area[a] < ranks);
+            seen[a] = true;
+            // populations laid out contiguously and ascending within a rank
+            let sizes = m.area_sizes(a);
+            for p in 0..7 {
+                assert_eq!(
+                    layout.pop_base[a][p] + sizes[p],
+                    layout.pop_base[a][p + 1],
+                    "area {a} pop {p} layout gap"
+                );
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}
+
+#[test]
+fn mam_live_build_matches_layout_node_counts() {
+    let cfg = SimConfig::default();
+    let results = run_cluster(
+        4,
+        &cfg,
+        &|sim: &mut Simulator| {
+            let m = MamModel::new(MamConfig {
+                n_scale: 0.001,
+                k_scale: 0.02,
+                chi: 1.9,
+                kcc_base: 1500.0,
+            });
+            let p = m.pack(sim.n_ranks());
+            m.build(sim, &p);
+        },
+        0.0,
+    )
+    .unwrap();
+    let m = MamModel::new(MamConfig {
+        n_scale: 0.001,
+        k_scale: 0.02,
+        chi: 1.9,
+        kcc_base: 1500.0,
+    });
+    let packing = m.pack(4);
+    for (rank, r) in results.iter().enumerate() {
+        let expect: u64 = packing.areas_of(rank).iter().map(|&a| m.area_neurons(a)).sum();
+        assert_eq!(r.n_neurons, expect, "rank {rank} neuron count");
+    }
+    // TH exists somewhere and contributes no L4
+    let th_rank = packing.gpu_of_area[TH];
+    assert!(results[th_rank].n_neurons > 0);
+}
+
+#[test]
+fn mam_metastable_has_higher_cc_weight_than_ground() {
+    let ground = MamModel::new(MamConfig {
+        chi: 1.0,
+        ..MamConfig::default()
+    });
+    let meta = MamModel::new(MamConfig {
+        chi: 1.9,
+        ..MamConfig::default()
+    });
+    // χ scales cc weights only; structure identical
+    assert_eq!(ground.kcc(3, 5), meta.kcc(3, 5));
+    assert_eq!(ground.area_sizes(0), meta.area_sizes(0));
+}

@@ -1,0 +1,111 @@
+//! Integration: the PJRT runtime executes the AOT artifact (HLO text of the
+//! L2 JAX model with the L1 Pallas kernel inlined) and matches both the
+//! Python oracle's golden vectors (artifacts/testvec.json) and the native
+//! Rust backend. Skips gracefully when artifacts have not been built
+//! (`make artifacts`).
+
+use std::path::PathBuf;
+
+use nestgpu::memory::Tracker;
+use nestgpu::node::neuron::{LifParams, NUM_PARAMS};
+use nestgpu::runtime::{native::NativeBackend, pjrt::PjrtBackend, Backend, StateChunk};
+use nestgpu::util::json::Json;
+use nestgpu::util::rng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+fn approx(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + y.abs()),
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_matches_python_golden_vectors() {
+    let Some(dir) = artifacts_dir() else { return };
+    let vec = Json::parse_file(&dir.join("testvec.json")).expect("testvec.json");
+    let n = vec.get("block").unwrap().as_usize().unwrap();
+    let inputs = vec.get("inputs").unwrap();
+    let outputs = vec.get("outputs").unwrap();
+    let get = |o: &Json, k: &str| o.get(k).unwrap().as_f32_vec().unwrap();
+
+    let mut tr = Tracker::new();
+    let params_v = get(inputs, "params");
+    let mut params = [0f32; NUM_PARAMS];
+    params.copy_from_slice(&params_v);
+    let mut chunk = StateChunk::new(n, params, &mut tr);
+    chunk.v[..n].copy_from_slice(&get(inputs, "v"));
+    chunk.i_ex[..n].copy_from_slice(&get(inputs, "i_ex"));
+    chunk.i_in[..n].copy_from_slice(&get(inputs, "i_in"));
+    chunk.r[..n].copy_from_slice(&get(inputs, "r"));
+    chunk.w_ex[..n].copy_from_slice(&get(inputs, "w_ex"));
+    chunk.w_in[..n].copy_from_slice(&get(inputs, "w_in"));
+
+    let mut be = PjrtBackend::load(&dir).expect("load artifacts");
+    be.step(&mut chunk).expect("pjrt step");
+
+    approx(&chunk.v[..n], &get(outputs, "v"), 1e-5, "v");
+    approx(&chunk.i_ex[..n], &get(outputs, "i_ex"), 1e-5, "i_ex");
+    approx(&chunk.i_in[..n], &get(outputs, "i_in"), 1e-5, "i_in");
+    approx(&chunk.r[..n], &get(outputs, "r"), 0.0, "r");
+    approx(&chunk.spike[..n], &get(outputs, "spike"), 0.0, "spike");
+}
+
+#[test]
+fn pjrt_and_native_agree_over_trajectory() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut tr = Tracker::new();
+    let params = LifParams::default().packed(0.1);
+    let n = 700; // pads to 768 -> exercises mixed block segments
+    let mut a = StateChunk::new(n, params, &mut tr);
+    let mut b = StateChunk::new(n, params, &mut tr);
+    let mut rng = Rng::new(11);
+    for i in 0..n {
+        let v = rng.uniform_range(-5.0, 14.0) as f32;
+        a.v[i] = v;
+        b.v[i] = v;
+    }
+    let mut pjrt = PjrtBackend::load(&dir).unwrap();
+    let mut nat = NativeBackend::new();
+    for step in 0..20 {
+        for i in 0..n {
+            let w = rng.uniform_range(0.0, 60.0) as f32;
+            a.w_ex[i] = w;
+            b.w_ex[i] = w;
+        }
+        pjrt.step(&mut a).unwrap();
+        nat.step(&mut b).unwrap();
+        assert_eq!(
+            a.spiking().collect::<Vec<_>>(),
+            b.spiking().collect::<Vec<_>>(),
+            "spike sets diverged at step {step}"
+        );
+        approx(&a.v[..n], &b.v[..n], 2e-4, "v");
+        approx(&a.i_ex[..n], &b.i_ex[..n], 2e-4, "i_ex");
+    }
+    assert!(pjrt.calls > 0);
+}
+
+#[test]
+fn pjrt_uses_largest_blocks_greedily() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut tr = Tracker::new();
+    let params = LifParams::default().packed(0.1);
+    // 8192 + 1024 + 256 = 9472 neurons -> exactly 3 calls
+    let mut c = StateChunk::new(9472, params, &mut tr);
+    let mut be = PjrtBackend::load(&dir).unwrap();
+    be.step(&mut c).unwrap();
+    assert_eq!(be.calls, 3, "greedy segmentation should use 3 executions");
+}

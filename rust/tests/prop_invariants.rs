@@ -1,0 +1,246 @@
+//! Hand-rolled property tests (proptest is not in the offline crate set):
+//! seeded randomized sweeps over the coordinator's core invariants —
+//! alignment, map sortedness, routing consistency, ring-buffer mass
+//! conservation, EMD metric properties.
+
+use nestgpu::comm::NullComm;
+use nestgpu::connection::{ConnRule, NodeSet, SynSpec};
+use nestgpu::engine::{SimConfig, Simulator};
+use nestgpu::memory::Tracker;
+use nestgpu::node::{LifParams, RingBuffers};
+use nestgpu::remote::levels::ALL_LEVELS;
+use nestgpu::stats::emd;
+use nestgpu::util::rng::Rng;
+
+fn random_rule(rng: &mut Rng, ns: usize, nt: usize) -> ConnRule {
+    match rng.below(6) {
+        0 => ConnRule::AllToAll,
+        1 => ConnRule::FixedIndegree {
+            k: 1 + rng.below(6),
+        },
+        2 => ConnRule::FixedOutdegree {
+            k: 1 + rng.below(6),
+        },
+        3 => ConnRule::FixedTotalNumber {
+            n: 1 + rng.below(40) as u64,
+        },
+        4 => {
+            let n = 1 + rng.below(30);
+            ConnRule::AssignedNodes(
+                (0..n)
+                    .map(|_| (rng.below(ns as u32), rng.below(nt as u32)))
+                    .collect(),
+            )
+        }
+        _ => ConnRule::FixedIndegree { k: 1 },
+    }
+}
+
+fn random_node_set(rng: &mut Rng, universe: u32) -> NodeSet {
+    if rng.below(2) == 0 {
+        let n = 2 + rng.below(universe - 2);
+        let start = rng.below(universe - n);
+        NodeSet::range(start, n)
+    } else {
+        // random sorted unique list
+        let n = (2 + rng.below(universe / 2)) as usize;
+        let mut ids: Vec<u32> = (0..universe).collect();
+        rng.shuffle(&mut ids);
+        let mut v: Vec<u32> = ids[..n].to_vec();
+        v.sort_unstable();
+        NodeSet::List(v)
+    }
+}
+
+/// Property: Eq. 1 (S == R) holds for arbitrary random call sequences at
+/// every GPU memory level.
+#[test]
+fn prop_alignment_random_call_sequences() {
+    for case in 0..25u64 {
+        let level = ALL_LEVELS[(case % 4) as usize];
+        let cfg = SimConfig {
+            seed: 5000 + case,
+            level,
+            ..Default::default()
+        };
+        let mut r0 = Simulator::new(Box::new(NullComm::new(0, 2)), cfg.clone());
+        let mut r1 = Simulator::new(Box::new(NullComm::new(1, 2)), cfg);
+        let p = LifParams::default();
+        r0.create_neurons(64, &p);
+        r1.create_neurons(64, &p);
+        let mut rng = Rng::new(777 + case);
+        for _ in 0..5 {
+            let s = random_node_set(&mut rng, 64);
+            let t = random_node_set(&mut rng, 64);
+            let rule = random_rule(&mut rng, s.len(), t.len());
+            let syn = SynSpec::new(1.0, 1);
+            let (src, tgt) = if rng.below(2) == 0 { (0, 1) } else { (1, 0) };
+            r0.remote_connect(src, &s, tgt, &t, &rule, &syn, None);
+            r1.remote_connect(src, &s, tgt, &t, &rule, &syn, None);
+        }
+        assert_eq!(
+            r0.remote.p2p_s[1].as_slice(),
+            r1.remote.p2p_maps[0].r_slice(),
+            "case {case} ({level:?}): 0->1 diverged"
+        );
+        assert_eq!(
+            r1.remote.p2p_s[0].as_slice(),
+            r0.remote.p2p_maps[1].r_slice(),
+            "case {case} ({level:?}): 1->0 diverged"
+        );
+        assert!(r0.remote.p2p_maps[1].is_sorted());
+        assert!(r1.remote.p2p_maps[0].is_sorted());
+    }
+}
+
+/// Property: every connection created by a remote call has an image source
+/// whose map entry resolves back to a source in the `s` argument.
+#[test]
+fn prop_every_remote_conn_sources_an_image() {
+    for case in 0..15u64 {
+        let cfg = SimConfig {
+            seed: 9000 + case,
+            ..Default::default()
+        };
+        let mut sim = Simulator::new(Box::new(NullComm::new(1, 2)), cfg);
+        sim.create_neurons(32, &LifParams::default());
+        let mut rng = Rng::new(31 + case);
+        let s = random_node_set(&mut rng, 200);
+        let t = random_node_set(&mut rng, 32);
+        let rule = random_rule(&mut rng, s.len(), t.len());
+        sim.remote_connect(0, &s, 1, &t, &rule, &SynSpec::new(1.0, 1), None);
+        let s_ids: Vec<u32> = s.iter().collect();
+        let map = &sim.remote.p2p_maps[0];
+        for k in 0..sim.conns.len() {
+            let src = sim.conns.source.as_slice()[k];
+            assert!(sim.nodes.is_image(src), "case {case}: conn {k} source not an image");
+            // the image's R entry is one of the call's source arguments
+            let pos = map
+                .l_slice()
+                .iter()
+                .position(|&l| l == src)
+                .expect("image in map");
+            assert!(
+                s_ids.contains(&map.r_slice()[pos]),
+                "case {case}: image resolves outside the source set"
+            );
+        }
+    }
+}
+
+/// Property: ring buffers conserve mass — everything added with delay d is
+/// read exactly once, d steps later, and nothing else appears.
+#[test]
+fn prop_ring_buffer_mass_conservation() {
+    for case in 0..20u64 {
+        let mut rng = Rng::new(100 + case);
+        let n = 1 + rng.below(50) as usize;
+        let max_delay = 1 + rng.below(20) as u16;
+        let mut tr = Tracker::new();
+        let mut rb = RingBuffers::new(n, max_delay, &mut tr);
+        let steps = 60;
+        let mut expected = vec![0.0f64; steps + max_delay as usize + 2];
+        let mut added = 0.0;
+        let mut consumed = 0.0;
+        for step in 0..steps {
+            // random additions
+            for _ in 0..rng.below(8) {
+                let neuron = rng.below(n as u32);
+                let delay = 1 + rng.below(max_delay as u32) as u16;
+                let w = rng.uniform_range(0.1, 2.0) as f32;
+                let mult = 1 + rng.below(3) as u16;
+                rb.add(neuron, 0, delay, w, mult);
+                expected[step + delay as usize] += (w * mult as f32) as f64;
+                added += (w * mult as f32) as f64;
+            }
+            let (ex, _) = rb.current();
+            let got: f64 = ex.iter().map(|&x| x as f64).sum();
+            assert!(
+                (got - expected[step]).abs() < 1e-4,
+                "case {case} step {step}: got {got}, want {}",
+                expected[step]
+            );
+            consumed += got;
+            rb.advance();
+        }
+        // drain the tail
+        for step in steps..steps + max_delay as usize + 1 {
+            let (ex, _) = rb.current();
+            consumed += ex.iter().map(|&x| x as f64).sum::<f64>();
+            let want = expected[step];
+            let got: f64 = ex.iter().map(|&x| x as f64).sum();
+            assert!((got - want).abs() < 1e-4);
+            rb.advance();
+        }
+        assert!(
+            (added - consumed).abs() < 1e-3,
+            "case {case}: mass not conserved ({added} vs {consumed})"
+        );
+    }
+}
+
+/// Property: EMD is a metric on point clouds (symmetry, identity,
+/// triangle inequality on random samples).
+#[test]
+fn prop_emd_metric_properties() {
+    let mut rng = Rng::new(5);
+    for _ in 0..30 {
+        let n = 5 + rng.below(50) as usize;
+        let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.normal() + 0.5).collect();
+        let c: Vec<f64> = (0..n).map(|_| rng.normal() - 0.3).collect();
+        let ab = emd(&a, &b);
+        let ba = emd(&b, &a);
+        assert!((ab - ba).abs() < 1e-9, "symmetry");
+        assert!(emd(&a, &a) < 1e-12, "identity");
+        assert!(ab >= 0.0);
+        let (ac, cb) = (emd(&a, &c), emd(&c, &b));
+        assert!(ab <= ac + cb + 1e-9, "triangle: {ab} > {ac} + {cb}");
+    }
+}
+
+/// Property: the flagging compaction never changes *which* connections are
+/// created — only which images exist (levels 0 vs 1 build identical
+/// connection multisets modulo image renumbering).
+#[test]
+fn prop_flagging_preserves_connectivity() {
+    for case in 0..10u64 {
+        let mut conn_sets = Vec::new();
+        for level in [ALL_LEVELS[0], ALL_LEVELS[1]] {
+            let cfg = SimConfig {
+                seed: 4242 + case,
+                level,
+                ..Default::default()
+            };
+            let mut sim = Simulator::new(Box::new(NullComm::new(1, 2)), cfg);
+            sim.create_neurons(32, &LifParams::default());
+            let mut rng = Rng::new(88 + case);
+            let s = random_node_set(&mut rng, 300);
+            let t = random_node_set(&mut rng, 32);
+            sim.remote_connect(
+                0,
+                &s,
+                1,
+                &t,
+                &ConnRule::FixedIndegree { k: 2 },
+                &SynSpec::new(1.0, 1),
+                None,
+            );
+            // resolve image sources back to remote ids for comparison
+            let map = &sim.remote.p2p_maps[0];
+            let mut resolved: Vec<(u32, u32)> = (0..sim.conns.len())
+                .map(|k| {
+                    let img = sim.conns.source.as_slice()[k];
+                    let pos = map.l_slice().iter().position(|&l| l == img).unwrap();
+                    (map.r_slice()[pos], sim.conns.target.as_slice()[k])
+                })
+                .collect();
+            resolved.sort_unstable();
+            conn_sets.push(resolved);
+        }
+        assert_eq!(
+            conn_sets[0], conn_sets[1],
+            "case {case}: levels 0/1 built different connectivity"
+        );
+    }
+}

@@ -1,0 +1,118 @@
+//! Snapshot bench: construction cache vs full reconstruction.
+//!
+//! The paper's headline metric is network-construction time; the snapshot
+//! subsystem converts it into a one-time cost. This bench measures, for a
+//! mid-size balanced network, (1) full construction (Create/Connect/
+//! RemoteConnect + preparation) and (2) restoring the same prepared state
+//! from per-rank snapshot files — the target is a >= 10x reload speedup.
+//!
+//!     cargo bench --bench snapshot_reload
+
+use std::time::Instant;
+
+use nestgpu::engine::{SimConfig, Simulator};
+use nestgpu::harness::experiments::write_result;
+use nestgpu::harness::{
+    run_cluster_from_snapshot, run_cluster_with_snapshot, run_construction_only,
+};
+use nestgpu::models::balanced::{build_balanced, BalancedConfig};
+use nestgpu::util::json::Json;
+use nestgpu::util::table::{fmt_secs, Table};
+
+fn main() {
+    let ranks = 2usize;
+    let reps = 3usize;
+    let bal = BalancedConfig {
+        scale: 0.08,   // 900 neurons/rank
+        k_scale: 0.08, // K_in = 900 -> ~810k connections/rank
+        ..Default::default()
+    };
+    let cfg = SimConfig {
+        record_spikes: false,
+        ..Default::default()
+    };
+    let n_conns = bal.synapses_per_rank();
+    println!(
+        "snapshot_reload: {ranks} ranks x {} neurons, ~{n_conns} synapses/rank, best of {reps}",
+        bal.neurons_per_rank()
+    );
+    let builder = {
+        let bal = bal.clone();
+        move |sim: &mut Simulator| build_balanced(sim, &bal)
+    };
+
+    // (1) full construction + preparation, from scratch
+    let mut t_build = f64::MAX;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        run_construction_only(ranks, &cfg, &builder).expect("construction run");
+        t_build = t_build.min(t0.elapsed().as_secs_f64());
+    }
+
+    // (2) snapshot once, then restore repeatedly. The checkpointing run
+    // pays construction *plus* the save, so the save cost is reported as
+    // the overhead over the best plain-construction time.
+    let dir = std::env::temp_dir().join(format!("nestgpu_snapshot_bench_{}", std::process::id()));
+    let t0 = Instant::now();
+    run_cluster_with_snapshot(ranks, &cfg, &builder, 0.0, &dir).expect("snapshot save");
+    let t_construct_save = t0.elapsed().as_secs_f64();
+    let t_save = (t_construct_save - t_build).max(0.0);
+    let snap_bytes: u64 = (0..ranks)
+        .map(|r| {
+            std::fs::metadata(dir.join(nestgpu::snapshot::rank_file_name(r)))
+                .map(|m| m.len())
+                .unwrap_or(0)
+        })
+        .sum();
+    let mut t_load = f64::MAX;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        run_cluster_from_snapshot(&dir, 0.0).expect("snapshot restore");
+        t_load = t_load.min(t0.elapsed().as_secs_f64());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let speedup = t_build / t_load;
+    let mut t = Table::new(
+        "snapshot reload vs reconstruction",
+        &["path", "time", "notes"],
+    );
+    t.row(vec![
+        "construct (build+prepare)".into(),
+        fmt_secs(t_build),
+        format!("{ranks} ranks, ~{n_conns} conns/rank"),
+    ]);
+    t.row(vec![
+        "construct + save".into(),
+        fmt_secs(t_construct_save),
+        format!(
+            "save overhead ~{} for {:.1} MiB",
+            fmt_secs(t_save),
+            snap_bytes as f64 / (1024.0 * 1024.0)
+        ),
+    ]);
+    t.row(vec![
+        "snapshot restore".into(),
+        fmt_secs(t_load),
+        format!("{speedup:.1}x faster than reconstruction"),
+    ]);
+    t.print();
+    println!(
+        "snapshot reload speedup: {speedup:.1}x (target >= 10x: {})",
+        if speedup >= 10.0 { "PASS" } else { "MISS" }
+    );
+
+    write_result(
+        "snapshot_reload",
+        &Json::obj(vec![
+            ("ranks", Json::num(ranks as f64)),
+            ("conns_per_rank", Json::num(n_conns as f64)),
+            ("construct_s", Json::num(t_build)),
+            ("construct_save_s", Json::num(t_construct_save)),
+            ("save_overhead_s", Json::num(t_save)),
+            ("restore_s", Json::num(t_load)),
+            ("speedup", Json::num(speedup)),
+            ("snapshot_bytes", Json::num(snap_bytes as f64)),
+        ]),
+    );
+}

@@ -162,6 +162,40 @@ impl Connections {
         &self.first_out
     }
 
+    /// Serialize the full store (SoA arrays, CSR offsets, sort flag).
+    pub fn snapshot_encode(&self, enc: &mut crate::snapshot::Encoder) {
+        enc.bool(self.sorted);
+        enc.slice_u32(self.source.as_slice());
+        enc.slice_u32(self.target.as_slice());
+        enc.slice_f32(self.weight.as_slice());
+        enc.slice_u16(self.delay.as_slice());
+        enc.slice_u8(self.port.as_slice());
+        enc.slice_u32(&self.first_out);
+    }
+
+    /// Rebuild a store from [`Connections::snapshot_encode`] output; the
+    /// SoA arrays are re-registered with `tr` as device allocations.
+    pub fn snapshot_decode(
+        dec: &mut crate::snapshot::Decoder,
+        tr: &mut Tracker,
+    ) -> anyhow::Result<Self> {
+        let sorted = dec.bool()?;
+        let mut c = Connections::new();
+        c.sorted = sorted;
+        c.source.extend_from_slice(&dec.vec_u32()?, tr);
+        c.target.extend_from_slice(&dec.vec_u32()?, tr);
+        c.weight.extend_from_slice(&dec.vec_f32()?, tr);
+        c.delay.extend_from_slice(&dec.vec_u16()?, tr);
+        c.port.extend_from_slice(&dec.vec_u8()?, tr);
+        c.first_out = dec.vec_u32()?;
+        let n = c.source.len();
+        if c.target.len() != n || c.weight.len() != n || c.delay.len() != n || c.port.len() != n
+        {
+            anyhow::bail!("connection snapshot has mismatched SoA array lengths");
+        }
+        Ok(c)
+    }
+
     /// Total device bytes of the SoA arrays.
     pub fn device_bytes(&self) -> u64 {
         self.source.bytes()
@@ -234,6 +268,28 @@ mod tests {
         assert!(tr.peak(MemKind::Device) > before_peak);
         // steady state unchanged by the transient
         assert_eq!(tr.current(MemKind::Device), c.device_bytes());
+    }
+
+    #[test]
+    fn snapshot_roundtrip_preserves_everything() {
+        let (mut c, mut tr) = store_with(&[(2, 0), (0, 1), (2, 2), (1, 3), (0, 4)]);
+        c.sort_by_source(3, &mut tr);
+        let mut enc = crate::snapshot::Encoder::new();
+        c.snapshot_encode(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut tr2 = Tracker::new();
+        let mut dec = crate::snapshot::Decoder::new(&bytes);
+        let d = Connections::snapshot_decode(&mut dec, &mut tr2).unwrap();
+        dec.finish().unwrap();
+        assert_eq!(d.source.as_slice(), c.source.as_slice());
+        assert_eq!(d.target.as_slice(), c.target.as_slice());
+        assert_eq!(d.weight.as_slice(), c.weight.as_slice());
+        assert_eq!(d.delay.as_slice(), c.delay.as_slice());
+        assert_eq!(d.port.as_slice(), c.port.as_slice());
+        assert_eq!(d.first_out(), c.first_out());
+        assert!(d.is_sorted());
+        assert_eq!(d.outgoing(2), c.outgoing(2));
+        assert_eq!(tr2.current(MemKind::Device), d.device_bytes());
     }
 
     #[test]

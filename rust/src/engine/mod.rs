@@ -3,6 +3,8 @@
 //! propagation loop with point-to-point and collective spike exchange.
 
 pub mod simulator;
+pub mod snapshot;
 mod step;
 
 pub use simulator::{SimConfig, SimResult, Simulator};
+pub use snapshot::peek_world;

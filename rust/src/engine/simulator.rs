@@ -72,20 +72,20 @@ pub struct SimResult {
 }
 
 /// One population of neurons created by a `create_neurons` call.
-struct Population {
+pub(super) struct Population {
     /// first node index
-    node_base: u32,
+    pub(super) node_base: u32,
     /// first state index (ring buffer space)
-    state_base: u32,
-    n: u32,
+    pub(super) state_base: u32,
+    pub(super) n: u32,
     /// packed kernel parameters (chunk-grouping key)
-    packed: [f32; crate::node::neuron::NUM_PARAMS],
+    pub(super) packed: [f32; crate::node::neuron::NUM_PARAMS],
 }
 
 /// The per-rank simulator.
 pub struct Simulator {
     pub cfg: SimConfig,
-    comm: Box<dyn Communicator>,
+    pub(super) comm: Box<dyn Communicator>,
     pub nodes: NodeSpace,
     pub conns: Connections,
     pub remote: RemoteState,
@@ -97,21 +97,21 @@ pub struct Simulator {
     pub(super) chunks: Vec<StateChunk>,
     /// per chunk: (first node index, first state index, total neurons)
     pub(super) chunk_meta: Vec<(u32, u32, u32)>,
-    pops: Vec<Population>,
+    pub(super) pops: Vec<Population>,
     pub(super) buffers: Option<RingBuffers>,
     pub(super) poissons: Vec<PoissonGenerator>,
     pub recorder: SpikeRecorder,
-    local_rng: Rng,
+    pub(super) local_rng: Rng,
     pub(super) backend: Option<Box<dyn Backend>>,
-    offboard_local: Option<OffboardBuilder>,
+    pub(super) offboard_local: Option<OffboardBuilder>,
     /// host mirrors of (first, count) for GML 0/1 (image spike delivery
     /// goes through the host on those levels)
     pub(super) host_first_count: Option<(Vec<u32>, Vec<u32>)>,
     /// node index -> state index (u32::MAX for non-neurons); built at prepare
     pub(super) state_lut: Vec<u32>,
     pub(super) step_now: u32,
-    prepared: bool,
-    n_state: u32,
+    pub(super) prepared: bool,
+    pub(super) n_state: u32,
 }
 
 impl Simulator {
@@ -340,7 +340,26 @@ impl Simulator {
         self.conns.sort_by_source(m, &mut self.tracker);
         self.remote.prepare(m, &mut self.tracker);
 
-        // level-dependent residency of the per-node first/count structures
+        self.alloc_level_structures();
+        self.build_chunks();
+        self.rebuild_state_lut();
+
+        self.buffers = Some(RingBuffers::new(
+            self.n_state as usize,
+            self.cfg.max_delay_steps,
+            &mut self.tracker,
+        ));
+        self.backend = Some(self.cfg.backend.create()?);
+        self.prepared = true;
+        self.timer.stop();
+        Ok(())
+    }
+
+    /// Level-dependent residency of the per-node first/count structures
+    /// (§0.3.6). Requires the connection store to be source-sorted; called
+    /// from `prepare()` and again when restoring from a snapshot.
+    pub(super) fn alloc_level_structures(&mut self) {
+        let m = self.nodes.m() as usize;
         match self.cfg.level {
             GpuMemLevel::L0 | GpuMemLevel::L1 => {
                 // host mirrors used for image spike delivery
@@ -362,23 +381,15 @@ impl Simulator {
                     .alloc(MemKind::Device, ((m + 1) * 4 + m * 4) as u64);
             }
         }
+    }
 
-        self.build_chunks();
-
-        // node -> state translation table for the delivery hot loop
+    /// Node -> state translation table for the delivery hot loop; derived
+    /// from the population table, so a snapshot restore recomputes it
+    /// instead of persisting it.
+    pub(super) fn rebuild_state_lut(&mut self) {
         self.state_lut = (0..self.nodes.m())
             .map(|node| self.state_of(node).unwrap_or(u32::MAX))
             .collect();
-
-        self.buffers = Some(RingBuffers::new(
-            self.n_state as usize,
-            self.cfg.max_delay_steps,
-            &mut self.tracker,
-        ));
-        self.backend = Some(self.cfg.backend.create()?);
-        self.prepared = true;
-        self.timer.stop();
-        Ok(())
     }
 
     /// State index of a neuron node (ring-buffer addressing).

@@ -1,0 +1,480 @@
+//! Simulator checkpoint/restore: assembles the per-rank snapshot container
+//! from every state-owning subsystem and rebuilds a ready-to-step
+//! [`Simulator`] from one.
+//!
+//! Saving is legal at any step boundary once `prepare()` has run; the same
+//! file serves as a *construction cache* (saved right after `prepare()`)
+//! or a *mid-run checkpoint* (saved after propagation steps). See
+//! `rust/DESIGN.md` §10 for the on-disk format and
+//! [`crate::snapshot`] for the container/codec layers.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::Communicator;
+use crate::connection::Connections;
+use crate::memory::Tracker;
+use crate::node::device::{PoissonGenerator, SpikeRecorder};
+use crate::node::{NodeKind, NodeSpace, RingBuffers};
+use crate::remote::levels::ALL_LEVELS;
+use crate::remote::{GpuMemLevel, RemoteState};
+use crate::runtime::{BackendKind, StateChunk};
+use crate::snapshot::format::tags;
+use crate::snapshot::{Decoder, Encoder, SnapshotReader, SnapshotWriter};
+use crate::util::timer::{Phase, PhaseTimer};
+
+use super::simulator::{Population, SimConfig, Simulator};
+
+fn encode_config(cfg: &SimConfig, enc: &mut Encoder) {
+    enc.f64(cfg.dt_ms);
+    enc.u8(ALL_LEVELS.iter().position(|&l| l == cfg.level).unwrap() as u8);
+    enc.f64(cfg.xi);
+    enc.u64(cfg.seed);
+    match &cfg.backend {
+        BackendKind::Native => enc.u8(0),
+        BackendKind::Pjrt { artifacts } => {
+            enc.u8(1);
+            enc.string(&artifacts.to_string_lossy());
+        }
+    }
+    enc.bool(cfg.record_spikes);
+    enc.u16(cfg.max_delay_steps);
+    enc.bool(cfg.offboard);
+}
+
+fn decode_config(dec: &mut Decoder) -> Result<SimConfig> {
+    let dt_ms = dec.f64()?;
+    let level = GpuMemLevel::from_index(dec.u8()? as usize)
+        .ok_or_else(|| anyhow::anyhow!("invalid GPU memory level in snapshot config"))?;
+    let xi = dec.f64()?;
+    let seed = dec.u64()?;
+    let backend = match dec.u8()? {
+        0 => BackendKind::Native,
+        1 => BackendKind::Pjrt {
+            artifacts: std::path::PathBuf::from(dec.string()?),
+        },
+        tag => bail!("unknown backend tag {tag} in snapshot config"),
+    };
+    let record_spikes = dec.bool()?;
+    let max_delay_steps = dec.u16()?;
+    let offboard = dec.bool()?;
+    Ok(SimConfig {
+        dt_ms,
+        level,
+        xi,
+        seed,
+        backend,
+        record_spikes,
+        max_delay_steps,
+        offboard,
+    })
+}
+
+/// Read only the world header of a snapshot file:
+/// `(rank, n_ranks, step_now)`. Used by the harness to size the restored
+/// cluster without deserializing any state — only the small CONF section
+/// is read and checksummed, not the (potentially huge) state sections.
+pub fn peek_world(path: &Path) -> Result<(usize, usize, u32)> {
+    let conf = crate::snapshot::format::read_section_from_file(path, tags::CONF)?;
+    let mut dec = Decoder::new(&conf);
+    let rank = dec.u64()? as usize;
+    let n_ranks = dec.u64()? as usize;
+    let step_now = dec.u32()?;
+    Ok((rank, n_ranks, step_now))
+}
+
+impl Simulator {
+    /// Serialize this rank's full post-`prepare()` state into the
+    /// versioned snapshot container (§DESIGN.md §10).
+    pub fn snapshot_to_bytes(&self) -> Result<Vec<u8>> {
+        if !self.prepared {
+            bail!("save_snapshot requires prepare() to have run (snapshots capture the prepared network)");
+        }
+        let mut w = SnapshotWriter::new();
+
+        // CONF — world identity + engine configuration
+        let mut e = Encoder::new();
+        e.u64(self.rank() as u64);
+        e.u64(self.n_ranks() as u64);
+        e.u32(self.step_now);
+        e.u32(self.n_state);
+        encode_config(&self.cfg, &mut e);
+        w.section(tags::CONF, e.into_bytes());
+
+        // NODE — node index space
+        let mut e = Encoder::new();
+        self.nodes.snapshot_encode(&mut e);
+        w.section(tags::NODE, e.into_bytes());
+
+        // POPS — population table (chunk-grouping keys + state bases)
+        let mut e = Encoder::new();
+        e.seq_len(self.pops.len());
+        for p in &self.pops {
+            e.u32(p.node_base);
+            e.u32(p.state_base);
+            e.u32(p.n);
+            for x in p.packed {
+                e.f32(x);
+            }
+        }
+        w.section(tags::POPS, e.into_bytes());
+
+        // CONN — connection store
+        let mut e = Encoder::new();
+        self.conns.snapshot_encode(&mut e);
+        w.section(tags::CONN, e.into_bytes());
+
+        // REMT — remote routing state
+        let mut e = Encoder::new();
+        self.remote.snapshot_encode(&mut e);
+        w.section(tags::REMT, e.into_bytes());
+
+        // CHNK — dynamic neuron state, one record per state chunk
+        let mut e = Encoder::new();
+        e.seq_len(self.chunks.len());
+        for (chunk, &(node_base, state_base, n)) in
+            self.chunks.iter().zip(self.chunk_meta.iter())
+        {
+            e.u32(node_base);
+            e.u32(state_base);
+            e.u32(n);
+            chunk.snapshot_encode(&mut e);
+        }
+        w.section(tags::CHNK, e.into_bytes());
+
+        // BUFS — spike ring buffers (in-flight spikes included)
+        let mut e = Encoder::new();
+        self.buffers
+            .as_ref()
+            .expect("prepared simulator has ring buffers")
+            .snapshot_encode(&mut e);
+        w.section(tags::BUFS, e.into_bytes());
+
+        // DEVS — Poisson generators (with consumed RNG streams) + recorder
+        let mut e = Encoder::new();
+        e.seq_len(self.poissons.len());
+        for g in &self.poissons {
+            g.snapshot_encode(&mut e);
+        }
+        self.recorder.snapshot_encode(&mut e);
+        w.section(tags::DEVS, e.into_bytes());
+
+        // RNGS — rank-private construction stream
+        let mut e = Encoder::new();
+        e.rng(&self.local_rng);
+        w.section(tags::RNGS, e.into_bytes());
+
+        Ok(w.finish())
+    }
+
+    /// Write this rank's snapshot to `path` (atomic: temp file + rename,
+    /// so a crash mid-write never leaves a half-snapshot under the final
+    /// name — the checksums catch the rest).
+    pub fn save_snapshot(&self, path: &Path) -> Result<()> {
+        let bytes = self.snapshot_to_bytes()?;
+        let tmp = path.with_extension("snap.tmp");
+        std::fs::write(&tmp, &bytes)
+            .with_context(|| format!("cannot write snapshot {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("cannot move snapshot into place at {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Restore a rank from a snapshot file. The communicator supplies the
+    /// live world; its rank/size must match the snapshot's. Construction
+    /// and preparation are skipped entirely — the returned simulator is
+    /// ready to `simulate()`/`step_once()` and continues bit-identically.
+    pub fn load_snapshot(comm: Box<dyn Communicator>, path: &Path) -> Result<Simulator> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("cannot read snapshot {}", path.display()))?;
+        Self::load_snapshot_bytes(comm, &bytes)
+            .with_context(|| format!("while restoring snapshot {}", path.display()))
+    }
+
+    /// [`Simulator::load_snapshot`] over an in-memory buffer.
+    pub fn load_snapshot_bytes(
+        mut comm: Box<dyn Communicator>,
+        bytes: &[u8],
+    ) -> Result<Simulator> {
+        let mut timer = PhaseTimer::new();
+        timer.enter(Phase::Initialization);
+        let reader = SnapshotReader::open(bytes)?;
+
+        let mut dec = Decoder::new(reader.section(tags::CONF)?);
+        let rank = dec.u64()? as usize;
+        let n_ranks = dec.u64()? as usize;
+        let step_now = dec.u32()?;
+        let n_state = dec.u32()?;
+        let cfg = decode_config(&mut dec)?;
+        dec.finish()?;
+        if comm.rank() != rank || comm.size() != n_ranks {
+            bail!(
+                "snapshot was taken by rank {rank} of {n_ranks}, but the live communicator \
+                 is rank {} of {}",
+                comm.rank(),
+                comm.size()
+            );
+        }
+
+        let mut tracker = Tracker::new();
+
+        let mut dec = Decoder::new(reader.section(tags::NODE)?);
+        let nodes = NodeSpace::snapshot_decode(&mut dec)?;
+        dec.finish()?;
+
+        let mut dec = Decoder::new(reader.section(tags::POPS)?);
+        let n_pops = dec.seq_len(12 + 4 * crate::node::neuron::NUM_PARAMS)?;
+        let mut pops = Vec::with_capacity(n_pops);
+        for _ in 0..n_pops {
+            let node_base = dec.u32()?;
+            let state_base = dec.u32()?;
+            let n = dec.u32()?;
+            let mut packed = [0.0f32; crate::node::neuron::NUM_PARAMS];
+            for x in packed.iter_mut() {
+                *x = dec.f32()?;
+            }
+            pops.push(Population {
+                node_base,
+                state_base,
+                n,
+                packed,
+            });
+        }
+        dec.finish()?;
+
+        let mut dec = Decoder::new(reader.section(tags::CONN)?);
+        let conns = Connections::snapshot_decode(&mut dec, &mut tracker)?;
+        dec.finish()?;
+
+        let mut dec = Decoder::new(reader.section(tags::REMT)?);
+        let remote = RemoteState::snapshot_decode(&mut dec, &mut tracker, &mut |members| {
+            comm.register_group(members)
+        })?;
+        dec.finish()?;
+        if remote.me() != rank || remote.n_ranks() != n_ranks {
+            bail!("remote-state world identity disagrees with the snapshot header");
+        }
+
+        let mut dec = Decoder::new(reader.section(tags::CHNK)?);
+        let n_chunks = dec.seq_len(12)?;
+        let mut chunks = Vec::with_capacity(n_chunks);
+        let mut chunk_meta = Vec::with_capacity(n_chunks);
+        for _ in 0..n_chunks {
+            let node_base = dec.u32()?;
+            let state_base = dec.u32()?;
+            let n = dec.u32()?;
+            chunk_meta.push((node_base, state_base, n));
+            chunks.push(StateChunk::snapshot_decode(&mut dec, &mut tracker)?);
+        }
+        dec.finish()?;
+
+        let mut dec = Decoder::new(reader.section(tags::BUFS)?);
+        let buffers = RingBuffers::snapshot_decode(&mut dec, &mut tracker)?;
+        dec.finish()?;
+        if buffers.n() != n_state as usize {
+            bail!(
+                "ring buffers cover {} state slots, snapshot header says {n_state}",
+                buffers.n()
+            );
+        }
+
+        let mut dec = Decoder::new(reader.section(tags::DEVS)?);
+        let n_poissons = dec.seq_len(8 + 4)?;
+        let mut poissons = Vec::with_capacity(n_poissons);
+        for _ in 0..n_poissons {
+            poissons.push(PoissonGenerator::snapshot_decode(&mut dec)?);
+        }
+        let recorder = SpikeRecorder::snapshot_decode(&mut dec)?;
+        dec.finish()?;
+
+        let mut dec = Decoder::new(reader.section(tags::RNGS)?);
+        let local_rng = dec.rng()?;
+        dec.finish()?;
+
+        // Cross-section consistency: the checksums only catch accidental
+        // corruption, not a buggy or mismatched writer. Every structure
+        // this rank indexes unchecked in the step hot loop — CSR offsets,
+        // population/chunk state ranges, (R, L) image indexes, device
+        // bindings — is range-checked here so an inconsistent snapshot
+        // fails the load instead of panicking mid-simulation. (Map
+        // *positions* arriving over the wire are a cross-rank property and
+        // cannot be validated from one rank's file.)
+        let m = nodes.m();
+        if conns.is_sorted() {
+            let fo = conns.first_out();
+            if fo.len() != m as usize + 1 {
+                bail!(
+                    "connection CSR covers {} nodes, node space has {m}",
+                    fo.len().saturating_sub(1)
+                );
+            }
+            if fo.windows(2).any(|w| w[0] > w[1]) || fo[m as usize] as usize != conns.len() {
+                bail!("connection CSR offsets are not a valid prefix table");
+            }
+        }
+        if let Some(&bad) = conns
+            .source
+            .as_slice()
+            .iter()
+            .chain(conns.target.as_slice())
+            .find(|&&x| x >= m)
+        {
+            bail!("connection endpoint {bad} outside node space of {m}");
+        }
+        for (i, p) in pops.iter().enumerate() {
+            let node_end = p.node_base.checked_add(p.n);
+            let state_end = p.state_base.checked_add(p.n);
+            if node_end.is_none()
+                || node_end.unwrap() > m
+                || state_end.is_none()
+                || state_end.unwrap() > n_state
+            {
+                bail!("population {i} exceeds the node or state space");
+            }
+        }
+        for (i, (chunk, &(node_base, state_base, n))) in
+            chunks.iter().zip(chunk_meta.iter()).enumerate()
+        {
+            let node_end = node_base.checked_add(n);
+            let state_end = state_base.checked_add(n);
+            if chunk.n != n as usize
+                || node_end.is_none()
+                || node_end.unwrap() > m
+                || state_end.is_none()
+                || state_end.unwrap() > n_state
+            {
+                bail!("state chunk {i} metadata inconsistent with the node/state space");
+            }
+        }
+        for node in 0..m {
+            if let NodeKind::Neuron { chunk, offset } = nodes.kind(node) {
+                if chunk as usize >= pops.len() || offset >= pops[chunk as usize].n {
+                    bail!("node {node} references population {chunk}/{offset} out of range");
+                }
+            }
+        }
+        for map in remote
+            .p2p_maps
+            .iter()
+            .chain(remote.groups.iter().flat_map(|g| g.maps.iter()))
+        {
+            if let Some(&bad) = map.l_slice().iter().find(|&&l| l >= m) {
+                bail!("(R, L) map image index {bad} outside node space of {m}");
+            }
+        }
+        for gs in &remote.groups {
+            for i_arr in &gs.i_arr {
+                if i_arr.iter().any(|&i| i >= 0 && i as u32 >= m) {
+                    bail!("collective image array entry outside node space of {m}");
+                }
+            }
+        }
+        for g in &poissons {
+            if g.node >= m {
+                bail!("Poisson device bound to node {} outside node space of {m}", g.node);
+            }
+        }
+
+        let backend = cfg.backend.create()?;
+        let mut sim = Simulator {
+            cfg,
+            comm,
+            nodes,
+            conns,
+            remote,
+            tracker,
+            timer,
+            chunks,
+            chunk_meta,
+            pops,
+            buffers: Some(buffers),
+            poissons,
+            recorder,
+            local_rng,
+            backend: Some(backend),
+            offboard_local: None,
+            host_first_count: None,
+            state_lut: Vec::new(),
+            step_now,
+            prepared: true,
+            n_state,
+        };
+        // derived structures are recomputed, not persisted
+        sim.rebuild_state_lut();
+        sim.alloc_level_structures();
+        sim.timer.stop();
+        Ok(sim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::CommWorld;
+    use crate::connection::{ConnRule, SynSpec};
+    use crate::node::LifParams;
+
+    fn build_single() -> Simulator {
+        let world = CommWorld::new(1);
+        let comm = world.communicators().pop().unwrap();
+        let mut sim = Simulator::new(Box::new(comm), SimConfig::default());
+        let n = sim.create_neurons(20, &LifParams::default());
+        let g = sim.create_poisson(25_000.0);
+        sim.connect(&g, &n, &ConnRule::AllToAll, &SynSpec::new(300.0, 1));
+        sim.connect(&n, &n, &ConnRule::FixedIndegree { k: 3 }, &SynSpec::new(15.0, 2));
+        sim.prepare().unwrap();
+        sim
+    }
+
+    #[test]
+    fn save_requires_prepare() {
+        let world = CommWorld::new(1);
+        let comm = world.communicators().pop().unwrap();
+        let sim = Simulator::new(Box::new(comm), SimConfig::default());
+        let err = sim.snapshot_to_bytes().unwrap_err();
+        assert!(err.to_string().contains("prepare"), "{err}");
+    }
+
+    #[test]
+    fn midstream_snapshot_continues_bit_identically() {
+        let mut sim = build_single();
+        for _ in 0..50 {
+            sim.step_once().unwrap();
+        }
+        let bytes = sim.snapshot_to_bytes().unwrap();
+
+        let world = CommWorld::new(1);
+        let comm = world.communicators().pop().unwrap();
+        let mut restored = Simulator::load_snapshot_bytes(Box::new(comm), &bytes).unwrap();
+
+        assert_eq!(restored.step_now, sim.step_now);
+        assert_eq!(restored.n_state, sim.n_state);
+        assert_eq!(restored.recorder.events, sim.recorder.events);
+        assert_eq!(restored.nodes.m(), sim.nodes.m());
+        assert_eq!(restored.conns.len(), sim.conns.len());
+        assert_eq!(restored.state_lut, sim.state_lut);
+
+        // both continue, step by step, with identical spike output
+        for _ in 0..100 {
+            sim.step_once().unwrap();
+            restored.step_once().unwrap();
+            assert_eq!(restored.recorder.events, sim.recorder.events);
+        }
+        assert!(
+            sim.recorder.events.len() > 5,
+            "test network should actually spike ({} events)",
+            sim.recorder.events.len()
+        );
+    }
+
+    #[test]
+    fn load_rejects_wrong_world_shape() {
+        let sim = build_single();
+        let bytes = sim.snapshot_to_bytes().unwrap();
+        let world = CommWorld::new(2);
+        let comm = world.communicators().pop().unwrap(); // rank 1 of 2
+        let err = Simulator::load_snapshot_bytes(Box::new(comm), &bytes).unwrap_err();
+        assert!(err.to_string().contains("rank"), "{err}");
+    }
+}

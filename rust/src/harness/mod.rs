@@ -11,10 +11,43 @@
 
 pub mod experiments;
 
+use std::path::Path;
 use std::thread;
 
-use crate::comm::{CommWorld, NullComm};
+use anyhow::Context;
+
+use crate::comm::{CommWorld, Communicator, NullComm};
 use crate::engine::{SimConfig, SimResult, Simulator};
+
+/// Render a rank thread's panic payload for error reporting.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Join rank threads, converting a panic into an `anyhow::Error` that
+/// carries the rank index — a failing rank must not abort the whole
+/// cluster process without context.
+fn join_ranks(
+    handles: Vec<thread::ScopedJoinHandle<'_, anyhow::Result<SimResult>>>,
+) -> Vec<anyhow::Result<SimResult>> {
+    handles
+        .into_iter()
+        .enumerate()
+        .map(|(rank, h)| match h.join() {
+            Ok(res) => res.with_context(|| format!("rank {rank} failed")),
+            Err(payload) => Err(anyhow::anyhow!(
+                "rank {rank} panicked: {}",
+                panic_message(payload.as_ref())
+            )),
+        })
+        .collect()
+}
 
 /// An SPMD model script: runs identically on every rank, building that
 /// rank's share of the network (`Create`/`Connect`/`RemoteConnect` calls
@@ -52,10 +85,7 @@ pub fn run_cluster<M: ModelBuilder>(
                 })
             })
             .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("rank thread panicked"))
-            .collect()
+        join_ranks(handles)
     });
     results.into_iter().collect()
 }
@@ -87,10 +117,7 @@ pub fn estimate_cluster<M: ModelBuilder>(
                 })
             })
             .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("estimation thread panicked"))
-            .collect()
+        join_ranks(handles)
     });
     results.into_iter().collect()
 }
@@ -117,10 +144,75 @@ pub fn run_construction_only<M: ModelBuilder>(
                 })
             })
             .collect();
-        handles
+        join_ranks(handles)
+    });
+    results.into_iter().collect()
+}
+
+/// Run a live cluster and checkpoint it: build, prepare, propagate `t_ms`
+/// (0 = construction cache: save immediately after preparation), then
+/// write one snapshot file per rank into `dir` (`rank_<r>.snap`).
+pub fn run_cluster_with_snapshot<M: ModelBuilder>(
+    n_ranks: usize,
+    cfg: &SimConfig,
+    model: &M,
+    t_ms: f64,
+    dir: &Path,
+) -> anyhow::Result<Vec<SimResult>> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("cannot create snapshot directory {}", dir.display()))?;
+    let world = CommWorld::new(n_ranks);
+    let comms = world.communicators();
+    let results: Vec<anyhow::Result<SimResult>> = thread::scope(|s| {
+        let handles: Vec<_> = comms
             .into_iter()
-            .map(|h| h.join().expect("rank thread panicked"))
-            .collect()
+            .map(|comm| {
+                let cfg = cfg.clone();
+                s.spawn(move || -> anyhow::Result<SimResult> {
+                    let mut sim = Simulator::new(Box::new(comm), cfg);
+                    model.build(&mut sim);
+                    sim.prepare()?;
+                    let res = if t_ms > 0.0 {
+                        sim.simulate(t_ms)?
+                    } else {
+                        sim.result(0.0, 0.0)
+                    };
+                    let path = dir.join(crate::snapshot::rank_file_name(sim.rank()));
+                    sim.save_snapshot(&path)?;
+                    Ok(res)
+                })
+            })
+            .collect();
+        join_ranks(handles)
+    });
+    results.into_iter().collect()
+}
+
+/// Restore a whole cluster from per-rank snapshot files in `dir` and
+/// propagate `t_ms` of model time (0 = restore only, e.g. to measure
+/// reload cost). The world size is read from rank 0's snapshot header;
+/// construction and preparation are skipped on every rank.
+pub fn run_cluster_from_snapshot(dir: &Path, t_ms: f64) -> anyhow::Result<Vec<SimResult>> {
+    let rank0 = dir.join(crate::snapshot::rank_file_name(0));
+    let (_, n_ranks, _) = crate::engine::peek_world(&rank0)?;
+    let world = CommWorld::new(n_ranks);
+    let comms = world.communicators();
+    let results: Vec<anyhow::Result<SimResult>> = thread::scope(|s| {
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                s.spawn(move || -> anyhow::Result<SimResult> {
+                    let path = dir.join(crate::snapshot::rank_file_name(comm.rank()));
+                    let mut sim = Simulator::load_snapshot(Box::new(comm), &path)?;
+                    if t_ms > 0.0 {
+                        sim.simulate(t_ms)
+                    } else {
+                        Ok(sim.result(0.0, 0.0))
+                    }
+                })
+            })
+            .collect();
+        join_ranks(handles)
     });
     results.into_iter().collect()
 }
@@ -199,6 +291,22 @@ mod tests {
             assert_eq!(l.n_connections, e.n_connections);
             assert_eq!(l.map_entries, e.map_entries);
         }
+    }
+
+    #[test]
+    fn panicking_rank_reported_with_index() {
+        // rank 1 panics during (communication-free) construction; the
+        // cluster must surface an error naming the rank, not abort
+        let cfg = SimConfig::default();
+        let res = run_construction_only(2, &cfg, &|sim: &mut Simulator| {
+            let _ = sim.create_neurons(1, &LifParams::default());
+            if sim.rank() == 1 {
+                panic!("intentional test panic");
+            }
+        });
+        let err = res.unwrap_err().to_string();
+        assert!(err.contains("rank 1"), "{err}");
+        assert!(err.contains("intentional test panic"), "{err}");
     }
 
     #[test]

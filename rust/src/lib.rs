@@ -16,5 +16,6 @@ pub mod models;
 pub mod node;
 pub mod remote;
 pub mod runtime;
+pub mod snapshot;
 pub mod stats;
 pub mod util;

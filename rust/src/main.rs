@@ -10,12 +10,17 @@
 //!                     [--t-ms T] [--seed X] [--pjrt] [--offboard]
 //!   nestgpu estimate  [--live K] [--ranks N] [--scale S] [--level 0..3]
 //!   nestgpu validate  [--seeds N] [--t-ms T]
+//!   nestgpu snapshot save    --dir D [--ranks N] [--scale S] [--k-scale K]
+//!                            [--t-ms T] [--level 0..3] [--seed X] [--p2p]
+//!   nestgpu snapshot resume  --dir D [--t-ms T]
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 
 use nestgpu::engine::{SimConfig, SimResult, Simulator};
-use nestgpu::harness::{estimate_cluster, run_cluster};
+use nestgpu::harness::{
+    estimate_cluster, run_cluster, run_cluster_from_snapshot, run_cluster_with_snapshot,
+};
 use nestgpu::models::balanced::{build_balanced, BalancedConfig};
 use nestgpu::models::mam::{MamConfig, MamModel};
 use nestgpu::remote::GpuMemLevel;
@@ -192,6 +197,65 @@ fn cmd_estimate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_snapshot(argv: &[String]) -> anyhow::Result<()> {
+    let sub = argv.first().map(|s| s.as_str()).unwrap_or("");
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+    let dir = PathBuf::from(
+        args.flags
+            .get("dir")
+            .cloned()
+            .unwrap_or_else(|| "snapshots".to_string()),
+    );
+    match sub {
+        "save" => {
+            let ranks = args.get("ranks", 2usize);
+            let bal = BalancedConfig {
+                scale: args.get("scale", 0.01f64),
+                k_scale: args.get("k-scale", 0.01f64),
+                collective: !args.has("p2p"),
+                ..Default::default()
+            };
+            // model time to propagate before checkpointing; 0 = pure
+            // construction cache (save right after prepare())
+            let t_ms = args.get("t-ms", 0.0f64);
+            let cfg = sim_config(&args);
+            println!(
+                "snapshot save: {ranks} ranks x {} neurons, {t_ms} ms pre-roll -> {}/rank_<r>.snap",
+                bal.neurons_per_rank(),
+                dir.display()
+            );
+            let results = run_cluster_with_snapshot(
+                ranks,
+                &cfg,
+                &move |sim: &mut Simulator| build_balanced(sim, &bal),
+                t_ms,
+                &dir,
+            )?;
+            print_results(&results, t_ms);
+            Ok(())
+        }
+        "resume" => {
+            let t_ms = args.get("t-ms", 100.0f64);
+            let (_, n_ranks, step) = nestgpu::engine::peek_world(
+                &dir.join(nestgpu::snapshot::rank_file_name(0)),
+            )?;
+            println!(
+                "snapshot resume: {n_ranks} ranks from {} (checkpoint at step {step}), {t_ms} ms",
+                dir.display()
+            );
+            let results = run_cluster_from_snapshot(&dir, t_ms)?;
+            print_results(&results, t_ms);
+            Ok(())
+        }
+        other => {
+            eprintln!(
+                "unknown snapshot subcommand '{other}'; try: snapshot save | snapshot resume"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
 fn cmd_info() {
     println!("nestgpu-rs — Scalable Construction of Spiking Neural Networks (CS.DC 2025)");
     println!("three-layer reproduction: Rust coordinator / JAX model / Pallas kernel (AOT via PJRT)");
@@ -217,12 +281,15 @@ fn main() -> anyhow::Result<()> {
         "balanced" => cmd_balanced(&args),
         "mam" => cmd_mam(&args),
         "estimate" => cmd_estimate(&args),
+        "snapshot" => cmd_snapshot(&argv[1.min(argv.len())..]),
         "info" | "--help" | "-h" => {
             cmd_info();
             Ok(())
         }
         other => {
-            eprintln!("unknown subcommand '{other}'; try: info | balanced | mam | estimate");
+            eprintln!(
+                "unknown subcommand '{other}'; try: info | balanced | mam | estimate | snapshot"
+            );
             std::process::exit(2);
         }
     }

@@ -33,6 +33,21 @@ impl PoissonGenerator {
         let lambda = self.rate_hz * dt_ms * 1e-3;
         self.rng.poisson(lambda).min(u16::MAX as u64) as u16
     }
+
+    /// Serialize rate, node binding and the *consumed* RNG stream — the
+    /// stream position is what makes a resumed run bit-identical.
+    pub fn snapshot_encode(&self, enc: &mut crate::snapshot::Encoder) {
+        enc.f64(self.rate_hz);
+        enc.u32(self.node);
+        enc.rng(&self.rng);
+    }
+
+    pub fn snapshot_decode(dec: &mut crate::snapshot::Decoder) -> anyhow::Result<Self> {
+        let rate_hz = dec.f64()?;
+        let node = dec.u32()?;
+        let rng = dec.rng()?;
+        Ok(Self { rate_hz, node, rng })
+    }
 }
 
 /// Spike recorder: collects (step, node) pairs.
@@ -63,6 +78,29 @@ impl SpikeRecorder {
     pub fn is_empty(&self) -> bool {
         self.events.is_empty()
     }
+
+    /// Serialize the recorder, events included, so a resumed run reports
+    /// the *full* spike history (pre- plus post-checkpoint).
+    pub fn snapshot_encode(&self, enc: &mut crate::snapshot::Encoder) {
+        enc.bool(self.enabled);
+        enc.seq_len(self.events.len());
+        for &(step, node) in &self.events {
+            enc.u32(step);
+            enc.u32(node);
+        }
+    }
+
+    pub fn snapshot_decode(dec: &mut crate::snapshot::Decoder) -> anyhow::Result<Self> {
+        let enabled = dec.bool()?;
+        let n = dec.seq_len(8)?;
+        let mut events = Vec::with_capacity(n);
+        for _ in 0..n {
+            let step = dec.u32()?;
+            let node = dec.u32()?;
+            events.push((step, node));
+        }
+        Ok(Self { events, enabled })
+    }
 }
 
 #[cfg(test)]
@@ -83,6 +121,40 @@ mod tests {
     fn zero_rate_never_fires() {
         let mut g = PoissonGenerator::new(0, 0.0, Rng::new(5));
         assert!((0..1000).all(|_| g.draw_mult(0.1) == 0));
+    }
+
+    #[test]
+    fn snapshot_resumes_poisson_stream_exactly() {
+        let mut g = PoissonGenerator::new(3, 12_000.0, Rng::new(77));
+        for _ in 0..500 {
+            g.draw_mult(0.1);
+        }
+        let mut enc = crate::snapshot::Encoder::new();
+        g.snapshot_encode(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut dec = crate::snapshot::Decoder::new(&bytes);
+        let mut restored = PoissonGenerator::snapshot_decode(&mut dec).unwrap();
+        dec.finish().unwrap();
+        assert_eq!(restored.node, 3);
+        assert_eq!(restored.rate_hz, 12_000.0);
+        for _ in 0..500 {
+            assert_eq!(restored.draw_mult(0.1), g.draw_mult(0.1));
+        }
+    }
+
+    #[test]
+    fn recorder_snapshot_roundtrip() {
+        let mut r = SpikeRecorder::new(true);
+        r.record(1, 2);
+        r.record(9, 0);
+        let mut enc = crate::snapshot::Encoder::new();
+        r.snapshot_encode(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut dec = crate::snapshot::Decoder::new(&bytes);
+        let d = SpikeRecorder::snapshot_decode(&mut dec).unwrap();
+        dec.finish().unwrap();
+        assert!(d.enabled);
+        assert_eq!(d.events, r.events);
     }
 
     #[test]

@@ -86,6 +86,58 @@ impl NodeSpace {
     pub fn is_image(&self, idx: u32) -> bool {
         matches!(self.kind(idx), NodeKind::Image { .. })
     }
+
+    /// Serialize the node index space (one tagged entry per node).
+    pub fn snapshot_encode(&self, enc: &mut crate::snapshot::Encoder) {
+        enc.seq_len(self.kinds.len());
+        for k in &self.kinds {
+            match *k {
+                NodeKind::Neuron { chunk, offset } => {
+                    enc.u8(0);
+                    enc.u16(chunk);
+                    enc.u32(offset);
+                }
+                NodeKind::Image { src_rank } => {
+                    enc.u8(1);
+                    enc.u16(src_rank);
+                }
+                NodeKind::Device { dev } => {
+                    enc.u8(2);
+                    enc.u16(dev);
+                }
+            }
+        }
+    }
+
+    /// Rebuild from [`NodeSpace::snapshot_encode`] output (counts are
+    /// recomputed from the entries).
+    pub fn snapshot_decode(dec: &mut crate::snapshot::Decoder) -> anyhow::Result<Self> {
+        let n = dec.seq_len(3)?;
+        let mut ns = NodeSpace::new();
+        ns.kinds.reserve(n);
+        for _ in 0..n {
+            match dec.u8()? {
+                0 => {
+                    let chunk = dec.u16()?;
+                    let offset = dec.u32()?;
+                    ns.kinds.push(NodeKind::Neuron { chunk, offset });
+                    ns.n_neurons += 1;
+                }
+                1 => {
+                    let src_rank = dec.u16()?;
+                    ns.kinds.push(NodeKind::Image { src_rank });
+                    ns.n_images += 1;
+                }
+                2 => {
+                    let dev = dec.u16()?;
+                    ns.kinds.push(NodeKind::Device { dev });
+                    ns.n_devices += 1;
+                }
+                tag => anyhow::bail!("unknown node-kind tag {tag} in snapshot"),
+            }
+        }
+        Ok(ns)
+    }
 }
 
 #[cfg(test)]
@@ -111,5 +163,27 @@ mod tests {
         assert!(!ns.is_image(0));
         assert_eq!(ns.kind(5), NodeKind::Neuron { chunk: 1, offset: 0 });
         assert_eq!(ns.kind(4), NodeKind::Image { src_rank: 2 });
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let mut ns = NodeSpace::new();
+        ns.create_neurons(0, 3);
+        ns.create_device(1);
+        ns.create_image(7);
+        ns.create_neurons(2, 2);
+        let mut enc = crate::snapshot::Encoder::new();
+        ns.snapshot_encode(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut dec = crate::snapshot::Decoder::new(&bytes);
+        let d = NodeSpace::snapshot_decode(&mut dec).unwrap();
+        dec.finish().unwrap();
+        assert_eq!(d.m(), ns.m());
+        assert_eq!(d.n_neurons(), ns.n_neurons());
+        assert_eq!(d.n_images(), ns.n_images());
+        assert_eq!(d.n_devices(), ns.n_devices());
+        for i in 0..ns.m() {
+            assert_eq!(d.kind(i), ns.kind(i));
+        }
     }
 }

@@ -123,6 +123,27 @@ impl PairMap {
         self.r.release(tr);
         self.l.release(tr);
     }
+
+    /// Serialize residency + both aligned arrays.
+    pub fn snapshot_encode(&self, enc: &mut crate::snapshot::Encoder) {
+        enc.mem_kind(self.residency());
+        enc.slice_u32(self.r.as_slice());
+        enc.slice_u32(self.l.as_slice());
+    }
+
+    pub fn snapshot_decode(
+        dec: &mut crate::snapshot::Decoder,
+        tr: &mut Tracker,
+    ) -> anyhow::Result<Self> {
+        let kind = dec.mem_kind()?;
+        let mut m = PairMap::new(kind);
+        m.r.extend_from_slice(&dec.vec_u32()?, tr);
+        m.l.extend_from_slice(&dec.vec_u32()?, tr);
+        if m.r.len() != m.l.len() {
+            anyhow::bail!("(R, L) map snapshot has mismatched array lengths");
+        }
+        Ok(m)
+    }
 }
 
 /// The source-side `S` sequence (one per target process, §0.3.1): the local
@@ -159,6 +180,21 @@ impl SourceSeq {
 
     pub fn release(&mut self, tr: &mut Tracker) {
         self.s.release(tr);
+    }
+
+    pub fn snapshot_encode(&self, enc: &mut crate::snapshot::Encoder) {
+        enc.mem_kind(self.s.kind());
+        enc.slice_u32(self.s.as_slice());
+    }
+
+    pub fn snapshot_decode(
+        dec: &mut crate::snapshot::Decoder,
+        tr: &mut Tracker,
+    ) -> anyhow::Result<Self> {
+        let kind = dec.mem_kind()?;
+        let mut seq = SourceSeq::new(kind);
+        seq.s.extend_from_slice(&dec.vec_u32()?, tr);
+        Ok(seq)
     }
 }
 
@@ -259,6 +295,42 @@ mod tests {
         assert_eq!(m.device_bytes(), 0);
         assert!(tr.current(MemKind::Host) > 0);
         assert_eq!(tr.current(MemKind::Device), 0);
+    }
+
+    #[test]
+    fn pair_map_snapshot_roundtrip() {
+        let (mut m, mut tr, mut next) = mk();
+        m.ensure_images(&[3, 8, 21], &mut tr, || {
+            let v = next;
+            next += 1;
+            v
+        });
+        let mut enc = crate::snapshot::Encoder::new();
+        m.snapshot_encode(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut tr2 = Tracker::new();
+        let mut dec = crate::snapshot::Decoder::new(&bytes);
+        let d = PairMap::snapshot_decode(&mut dec, &mut tr2).unwrap();
+        dec.finish().unwrap();
+        assert_eq!(d.r_slice(), m.r_slice());
+        assert_eq!(d.l_slice(), m.l_slice());
+        assert_eq!(d.residency(), m.residency());
+        assert_eq!(d.lookup(8), Some(101));
+    }
+
+    #[test]
+    fn source_seq_snapshot_roundtrip() {
+        let mut tr = Tracker::new();
+        let mut s = SourceSeq::new(MemKind::Device);
+        s.merge(&[2, 5, 11], &mut tr);
+        let mut enc = crate::snapshot::Encoder::new();
+        s.snapshot_encode(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut tr2 = Tracker::new();
+        let mut dec = crate::snapshot::Decoder::new(&bytes);
+        let d = SourceSeq::snapshot_decode(&mut dec, &mut tr2).unwrap();
+        dec.finish().unwrap();
+        assert_eq!(d.as_slice(), s.as_slice());
     }
 
     #[test]

@@ -343,6 +343,167 @@ impl RemoteState {
         self.prepared = true;
     }
 
+    /// Serialize all remote-connection structures of this rank: maps,
+    /// source sequences, group state, prepared routing tables and the
+    /// aligned generator array.
+    pub fn snapshot_encode(&self, enc: &mut crate::snapshot::Encoder) {
+        enc.u8(crate::remote::levels::ALL_LEVELS
+            .iter()
+            .position(|&l| l == self.level)
+            .unwrap() as u8);
+        enc.f64(self.xi);
+        enc.u64(self.me as u64);
+        enc.u64(self.n_ranks as u64);
+        enc.bool(self.prepared);
+        enc.seq_len(self.p2p_maps.len());
+        for m in &self.p2p_maps {
+            m.snapshot_encode(enc);
+        }
+        enc.seq_len(self.p2p_s.len());
+        for s in &self.p2p_s {
+            s.snapshot_encode(enc);
+        }
+        enc.seq_len(self.groups.len());
+        for g in &self.groups {
+            let members: Vec<u64> = g.members.iter().map(|&m| m as u64).collect();
+            enc.slice_u64(&members);
+            for m in &g.maps {
+                m.snapshot_encode(enc);
+            }
+            for h in &g.h {
+                enc.slice_u32(h);
+            }
+            for i_arr in &g.i_arr {
+                enc.seq_len(i_arr.len());
+                for &x in i_arr {
+                    enc.u32(x as u32);
+                }
+            }
+        }
+        for table in [&self.tp, &self.gq] {
+            match table {
+                None => enc.bool(false),
+                Some(t) => {
+                    enc.bool(true);
+                    t.snapshot_encode(enc);
+                }
+            }
+        }
+        self.aligned.snapshot_encode(enc);
+    }
+
+    /// Rebuild from [`RemoteState::snapshot_encode`] output. `register`
+    /// re-binds each group to the *new* communicator (called once per
+    /// group in the original registration order, so SPMD worlds restored
+    /// from per-rank snapshots agree on group ids).
+    pub fn snapshot_decode(
+        dec: &mut crate::snapshot::Decoder,
+        tr: &mut Tracker,
+        register: &mut dyn FnMut(Vec<usize>) -> GroupId,
+    ) -> anyhow::Result<Self> {
+        let level = GpuMemLevel::from_index(dec.u8()? as usize)
+            .ok_or_else(|| anyhow::anyhow!("invalid GPU memory level in snapshot"))?;
+        let xi = dec.f64()?;
+        let me = dec.u64()? as usize;
+        let n_ranks = dec.u64()? as usize;
+        let prepared = dec.bool()?;
+        let n_maps = dec.seq_len(1)?;
+        if n_maps != n_ranks {
+            anyhow::bail!("snapshot has {n_maps} p2p maps for a {n_ranks}-rank world");
+        }
+        let mut p2p_maps = Vec::with_capacity(n_maps);
+        for _ in 0..n_maps {
+            p2p_maps.push(PairMap::snapshot_decode(dec, tr)?);
+        }
+        let n_seqs = dec.seq_len(1)?;
+        if n_seqs != n_ranks {
+            anyhow::bail!("snapshot has {n_seqs} S sequences for a {n_ranks}-rank world");
+        }
+        let mut p2p_s = Vec::with_capacity(n_seqs);
+        for _ in 0..n_seqs {
+            p2p_s.push(SourceSeq::snapshot_decode(dec, tr)?);
+        }
+        let residency = level.map_residency();
+        let n_groups = dec.seq_len(1)?;
+        let mut groups = Vec::with_capacity(n_groups);
+        for _ in 0..n_groups {
+            let members: Vec<usize> =
+                dec.vec_u64()?.into_iter().map(|m| m as usize).collect();
+            let n = members.len();
+            let mut maps = Vec::with_capacity(n);
+            for _ in 0..n {
+                maps.push(PairMap::snapshot_decode(dec, tr)?);
+            }
+            let mut h = Vec::with_capacity(n);
+            for _ in 0..n {
+                h.push(dec.vec_u32()?);
+            }
+            let mut i_arr = Vec::with_capacity(n);
+            for _ in 0..n {
+                let len = dec.seq_len(4)?;
+                let mut v = Vec::with_capacity(len);
+                for _ in 0..len {
+                    v.push(dec.u32()? as i32);
+                }
+                i_arr.push(v);
+            }
+            let h_bytes = (h.iter().map(|v| v.len()).sum::<usize>() * 4) as u64;
+            let i_bytes = (i_arr.iter().map(|v| v.len()).sum::<usize>() * 4) as u64;
+            tr.alloc(residency, h_bytes + i_bytes);
+            let comm_group = register(members.clone());
+            groups.push(GroupState {
+                comm_group,
+                members,
+                maps,
+                h,
+                i_arr,
+                h_bytes,
+                i_bytes,
+            });
+        }
+        let tp = if dec.bool()? {
+            Some(RoutingTables::snapshot_decode(dec, MemKind::Device, tr)?)
+        } else {
+            None
+        };
+        let gq = if dec.bool()? {
+            Some(RoutingTables::snapshot_decode(dec, MemKind::Device, tr)?)
+        } else {
+            None
+        };
+        // routing destinations are indexed unchecked in the step hot loop
+        if let Some(d) = tp.as_ref().and_then(|t| t.max_dest()) {
+            if d as usize >= n_ranks {
+                anyhow::bail!("(N, T, P) table routes to rank {d}, world has {n_ranks} ranks");
+            }
+        }
+        if let Some(d) = gq.as_ref().and_then(|t| t.max_dest()) {
+            if d as usize >= groups.len() {
+                anyhow::bail!(
+                    "(N, G, Q) table routes to group {d}, snapshot has {} groups",
+                    groups.len()
+                );
+            }
+        }
+        let aligned = AlignedRngs::snapshot_decode(dec)?;
+        if aligned.n_ranks() != n_ranks {
+            anyhow::bail!("aligned-RNG world size disagrees with the snapshot header");
+        }
+        Ok(Self {
+            level,
+            xi,
+            me,
+            n_ranks,
+            p2p_maps,
+            p2p_s,
+            groups,
+            aligned,
+            tp,
+            gq,
+            prepared,
+        })
+    }
+
     /// Total device bytes of the (R, L) maps (diagnostics for Fig. 5).
     pub fn map_device_bytes(&self) -> u64 {
         self.p2p_maps.iter().map(|m| m.device_bytes()).sum::<u64>()
@@ -558,6 +719,68 @@ mod tests {
         let gq = st.gq.as_ref().unwrap();
         assert_eq!(gq.route(1).collect::<Vec<_>>(), vec![(0, 0)]);
         assert_eq!(gq.route(4).collect::<Vec<_>>(), vec![(0, 1)]);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_preserves_maps_tables_and_groups() {
+        // build: one collective group + one p2p connect, then prepare
+        let mut st = RemoteState::new(42, 1, 3, GpuMemLevel::L2, 1.0);
+        let g = st.register_group(0, vec![0, 1]);
+        let mut nodes = NodeSpace::new();
+        nodes.create_neurons(0, 8);
+        let mut conns = Connections::new();
+        let mut tr = Tracker::new();
+        let mut rng = Rng::new(3);
+        let syn = SynSpec::new(1.0, 1);
+        let s = NodeSet::List(vec![2, 3, 9]);
+        st.note_group_call(g, 0, &s, &mut tr);
+        st.connect_target(
+            0, &s, &NodeSet::range(0, 3), &ConnRule::OneToOne, &syn, Some(g),
+            &mut nodes, &mut conns, &mut rng, &mut tr,
+        );
+        st.connect_target(
+            2, &NodeSet::range(40, 4), &NodeSet::range(0, 4), &ConnRule::OneToOne,
+            &syn, None, &mut nodes, &mut conns, &mut rng, &mut tr,
+        );
+        st.connect_source(0, &NodeSet::List(vec![1, 5]), 2, &ConnRule::AllToAll, None, &mut tr);
+        st.prepare(nodes.m() as usize, &mut tr);
+
+        let mut enc = crate::snapshot::Encoder::new();
+        st.snapshot_encode(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut tr2 = Tracker::new();
+        let mut registered: Vec<Vec<usize>> = Vec::new();
+        let mut dec = crate::snapshot::Decoder::new(&bytes);
+        let d = RemoteState::snapshot_decode(&mut dec, &mut tr2, &mut |members| {
+            registered.push(members);
+            registered.len() - 1
+        })
+        .unwrap();
+        dec.finish().unwrap();
+
+        assert_eq!(registered, vec![vec![0, 1]], "groups re-registered in order");
+        assert_eq!(d.me(), st.me());
+        assert_eq!(d.n_ranks(), st.n_ranks());
+        assert!(d.is_prepared());
+        assert_eq!(d.level, st.level);
+        for sigma in 0..3 {
+            assert_eq!(d.p2p_maps[sigma].r_slice(), st.p2p_maps[sigma].r_slice());
+            assert_eq!(d.p2p_maps[sigma].l_slice(), st.p2p_maps[sigma].l_slice());
+            assert_eq!(d.p2p_s[sigma].as_slice(), st.p2p_s[sigma].as_slice());
+        }
+        assert_eq!(d.groups[g].members, st.groups[g].members);
+        assert_eq!(d.groups[g].h, st.groups[g].h);
+        assert_eq!(d.groups[g].i_arr, st.groups[g].i_arr);
+        assert_eq!(d.groups[g].maps[0].r_slice(), st.groups[g].maps[0].r_slice());
+        let (dtp, stp) = (d.tp.as_ref().unwrap(), st.tp.as_ref().unwrap());
+        assert_eq!(dtp.total_entries(), stp.total_entries());
+        for node in 0..nodes.m() {
+            assert_eq!(
+                dtp.route(node).collect::<Vec<_>>(),
+                stp.route(node).collect::<Vec<_>>()
+            );
+        }
+        assert_eq!(d.total_map_entries(), st.total_map_entries());
     }
 
     #[test]

@@ -84,6 +84,12 @@ impl RoutingTables {
         self.dest.len()
     }
 
+    /// Largest destination id referenced by any entry (None if empty);
+    /// used to validate restored tables against the world shape.
+    pub fn max_dest(&self) -> Option<u16> {
+        self.dest.iter().copied().max()
+    }
+
     pub fn n_nodes(&self) -> usize {
         self.first.len().saturating_sub(1)
     }
@@ -91,6 +97,44 @@ impl RoutingTables {
     pub fn release(&mut self, kind: MemKind, tr: &mut Tracker) {
         tr.free(kind, self.tracked);
         self.tracked = 0;
+    }
+
+    /// Serialize the CSR arrays.
+    pub fn snapshot_encode(&self, enc: &mut crate::snapshot::Encoder) {
+        enc.slice_u32(&self.first);
+        enc.slice_u16(&self.dest);
+        enc.slice_u32(&self.pos);
+    }
+
+    /// Rebuild from [`RoutingTables::snapshot_encode`] output; `kind` is
+    /// where the table is accounted (tables are device-resident for every
+    /// GPU memory level, but the parameter keeps the call sites honest).
+    pub fn snapshot_decode(
+        dec: &mut crate::snapshot::Decoder,
+        kind: MemKind,
+        tr: &mut Tracker,
+    ) -> anyhow::Result<Self> {
+        let first = dec.vec_u32()?;
+        let dest = dec.vec_u16()?;
+        let pos = dec.vec_u32()?;
+        if first.is_empty() || dest.len() != pos.len() {
+            anyhow::bail!("routing-table snapshot has inconsistent CSR arrays");
+        }
+        if *first.last().unwrap() as usize != dest.len() {
+            anyhow::bail!(
+                "routing-table snapshot CSR end {} does not match {} entries",
+                first.last().unwrap(),
+                dest.len()
+            );
+        }
+        let tracked = (first.len() * 4 + dest.len() * 6) as u64;
+        tr.alloc(kind, tracked);
+        Ok(Self {
+            first,
+            dest,
+            pos,
+            tracked,
+        })
     }
 }
 
@@ -140,6 +184,30 @@ mod tests {
         let t = RoutingTables::build(5, &[], MemKind::Device, &mut tr);
         assert_eq!(t.total_entries(), 0);
         assert_eq!(t.fanout(4), 0);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_preserves_routes() {
+        let mut tr = Tracker::new();
+        let t = RoutingTables::build(
+            800,
+            &[(1, &[57, 480, 742][..]), (2, &[742][..])],
+            MemKind::Device,
+            &mut tr,
+        );
+        let mut enc = crate::snapshot::Encoder::new();
+        t.snapshot_encode(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut tr2 = Tracker::new();
+        let mut dec = crate::snapshot::Decoder::new(&bytes);
+        let d = RoutingTables::snapshot_decode(&mut dec, MemKind::Device, &mut tr2).unwrap();
+        dec.finish().unwrap();
+        assert_eq!(d.n_nodes(), t.n_nodes());
+        assert_eq!(d.total_entries(), t.total_entries());
+        for s in [57u32, 480, 742, 0, 799] {
+            assert_eq!(d.route(s).collect::<Vec<_>>(), t.route(s).collect::<Vec<_>>());
+        }
+        assert_eq!(tr2.current(MemKind::Device), tr.current(MemKind::Device));
     }
 
     #[test]

@@ -88,6 +88,65 @@ impl StateChunk {
         tr.free(MemKind::Device, self.tracked);
         self.tracked = 0;
     }
+
+    /// Serialize the full dynamic state (all seven SoA arrays at padded
+    /// length) plus the packed parameter vector.
+    pub fn snapshot_encode(&self, enc: &mut crate::snapshot::Encoder) {
+        enc.u64(self.n as u64);
+        enc.u64(self.pad_n as u64);
+        for p in self.params {
+            enc.f32(p);
+        }
+        enc.slice_f32(&self.v);
+        enc.slice_f32(&self.i_ex);
+        enc.slice_f32(&self.i_in);
+        enc.slice_f32(&self.r);
+        enc.slice_f32(&self.w_ex);
+        enc.slice_f32(&self.w_in);
+        enc.slice_f32(&self.spike);
+    }
+
+    /// Rebuild from [`StateChunk::snapshot_encode`] output.
+    pub fn snapshot_decode(
+        dec: &mut crate::snapshot::Decoder,
+        tr: &mut Tracker,
+    ) -> anyhow::Result<Self> {
+        let n = dec.u64()? as usize;
+        let pad_n = dec.u64()? as usize;
+        let mut params = [0.0f32; NUM_PARAMS];
+        for p in params.iter_mut() {
+            *p = dec.f32()?;
+        }
+        let v = dec.vec_f32()?;
+        let i_ex = dec.vec_f32()?;
+        let i_in = dec.vec_f32()?;
+        let r = dec.vec_f32()?;
+        let w_ex = dec.vec_f32()?;
+        let w_in = dec.vec_f32()?;
+        let spike = dec.vec_f32()?;
+        if n > pad_n
+            || [&v, &i_ex, &i_in, &r, &w_ex, &w_in, &spike]
+                .iter()
+                .any(|a| a.len() != pad_n)
+        {
+            anyhow::bail!("state-chunk snapshot inconsistent: n={n} pad_n={pad_n}");
+        }
+        let bytes = (pad_n * 7 * 4) as u64;
+        tr.alloc(MemKind::Device, bytes);
+        Ok(Self {
+            n,
+            pad_n,
+            params,
+            v,
+            i_ex,
+            i_in,
+            r,
+            w_ex,
+            w_in,
+            spike,
+            tracked: bytes,
+        })
+    }
 }
 
 /// A neuron-dynamics backend.
@@ -141,6 +200,31 @@ mod tests {
         c.spike[1] = 0.0;
         c.spike[2] = 1.0; // pad lane: must be ignored
         assert_eq!(c.spiking().collect::<Vec<_>>(), vec![0]);
+    }
+
+    #[test]
+    fn chunk_snapshot_roundtrip_bitwise() {
+        let mut tr = Tracker::new();
+        let mut c = StateChunk::new(3, [0.25; NUM_PARAMS], &mut tr);
+        c.v[0] = 1.5;
+        c.i_ex[1] = -2.0;
+        c.r[2] = 7.0;
+        c.spike[0] = 1.0;
+        let mut enc = crate::snapshot::Encoder::new();
+        c.snapshot_encode(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut tr2 = Tracker::new();
+        let mut dec = crate::snapshot::Decoder::new(&bytes);
+        let d = StateChunk::snapshot_decode(&mut dec, &mut tr2).unwrap();
+        dec.finish().unwrap();
+        assert_eq!(d.n, c.n);
+        assert_eq!(d.pad_n, c.pad_n);
+        assert_eq!(d.params, c.params);
+        assert_eq!(d.v, c.v);
+        assert_eq!(d.i_ex, c.i_ex);
+        assert_eq!(d.r, c.r);
+        assert_eq!(d.spike, c.spike);
+        assert_eq!(tr2.current(MemKind::Device), tr.current(MemKind::Device));
     }
 
     #[test]

@@ -1,0 +1,397 @@
+//! Minimal binary codec for the snapshot format.
+//!
+//! Hand-rolled little-endian encoder/decoder (the offline crate set has no
+//! serde/bincode). Every multi-byte value is little-endian; every sequence
+//! is length-prefixed with a `u64`. The decoder is bounds-checked and
+//! returns `anyhow::Error` with byte offsets on truncation, so a corrupt
+//! snapshot fails loudly instead of misinterpreting bytes.
+
+use anyhow::{bail, Result};
+
+/// Append-only byte sink.
+#[derive(Default)]
+pub struct Encoder {
+    buf: Vec<u8>,
+}
+
+impl Encoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    #[inline]
+    pub fn u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+
+    #[inline]
+    pub fn bool(&mut self, x: bool) {
+        self.buf.push(x as u8);
+    }
+
+    #[inline]
+    pub fn u16(&mut self, x: u16) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn f32(&mut self, x: f32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn f64(&mut self, x: f64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    /// Sequence length prefix (usize as u64).
+    #[inline]
+    pub fn seq_len(&mut self, n: usize) {
+        self.u64(n as u64);
+    }
+
+    pub fn slice_u8(&mut self, xs: &[u8]) {
+        self.seq_len(xs.len());
+        self.buf.extend_from_slice(xs);
+    }
+
+    pub fn slice_u16(&mut self, xs: &[u16]) {
+        self.seq_len(xs.len());
+        self.buf.reserve(xs.len() * 2);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn slice_u32(&mut self, xs: &[u32]) {
+        self.seq_len(xs.len());
+        self.buf.reserve(xs.len() * 4);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn slice_u64(&mut self, xs: &[u64]) {
+        self.seq_len(xs.len());
+        self.buf.reserve(xs.len() * 8);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn slice_f32(&mut self, xs: &[f32]) {
+        self.seq_len(xs.len());
+        self.buf.reserve(xs.len() * 4);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn string(&mut self, s: &str) {
+        self.slice_u8(s.as_bytes());
+    }
+
+    /// Memory residency tag (device/host) for level-dependent structures.
+    pub fn mem_kind(&mut self, k: crate::memory::MemKind) {
+        self.u8(match k {
+            crate::memory::MemKind::Device => 0,
+            crate::memory::MemKind::Host => 1,
+        });
+    }
+
+    /// Serialized RNG state: xoshiro256** words + the Box–Muller cache.
+    pub fn rng(&mut self, rng: &crate::util::rng::Rng) {
+        let (s, cache) = rng.raw_state();
+        for w in s {
+            self.u64(w);
+        }
+        match cache {
+            None => self.bool(false),
+            Some(z) => {
+                self.bool(true);
+                self.f64(z);
+            }
+        }
+    }
+}
+
+/// Bounds-checked cursor over a byte slice.
+pub struct Decoder<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Decoder<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_exhausted(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "snapshot truncated: need {n} bytes at offset {}, only {} left",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    #[inline]
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    #[inline]
+    pub fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => bail!("invalid bool byte {other} at offset {}", self.pos - 1),
+        }
+    }
+
+    #[inline]
+    pub fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    #[inline]
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    #[inline]
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    #[inline]
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    #[inline]
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Sequence length prefix; rejects lengths that cannot fit in the
+    /// remaining bytes (`min_elem_bytes` per element) so corrupt prefixes
+    /// cannot trigger huge allocations.
+    pub fn seq_len(&mut self, min_elem_bytes: usize) -> Result<usize> {
+        let n = self.u64()?;
+        let n: usize = usize::try_from(n)
+            .map_err(|_| anyhow::anyhow!("sequence length {n} overflows usize"))?;
+        if min_elem_bytes > 0 && n > self.remaining() / min_elem_bytes {
+            bail!(
+                "snapshot truncated: sequence of {n} elements (>= {min_elem_bytes} B each) \
+                 exceeds the {} remaining bytes",
+                self.remaining()
+            );
+        }
+        Ok(n)
+    }
+
+    pub fn vec_u8(&mut self) -> Result<Vec<u8>> {
+        let n = self.seq_len(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn vec_u16(&mut self) -> Result<Vec<u16>> {
+        let n = self.seq_len(2)?;
+        let b = self.take(n * 2)?;
+        Ok(b.chunks_exact(2)
+            .map(|c| u16::from_le_bytes([c[0], c[1]]))
+            .collect())
+    }
+
+    pub fn vec_u32(&mut self) -> Result<Vec<u32>> {
+        let n = self.seq_len(4)?;
+        let b = self.take(n * 4)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn vec_u64(&mut self) -> Result<Vec<u64>> {
+        let n = self.seq_len(8)?;
+        let b = self.take(n * 8)?;
+        Ok(b.chunks_exact(8)
+            .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+            .collect())
+    }
+
+    pub fn vec_f32(&mut self) -> Result<Vec<f32>> {
+        let n = self.seq_len(4)?;
+        let b = self.take(n * 4)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+            .collect())
+    }
+
+    pub fn string(&mut self) -> Result<String> {
+        let bytes = self.vec_u8()?;
+        String::from_utf8(bytes).map_err(|e| anyhow::anyhow!("invalid utf-8 string: {e}"))
+    }
+
+    pub fn mem_kind(&mut self) -> Result<crate::memory::MemKind> {
+        match self.u8()? {
+            0 => Ok(crate::memory::MemKind::Device),
+            1 => Ok(crate::memory::MemKind::Host),
+            tag => bail!("unknown memory-kind tag {tag} in snapshot"),
+        }
+    }
+
+    pub fn rng(&mut self) -> Result<crate::util::rng::Rng> {
+        let s = [self.u64()?, self.u64()?, self.u64()?, self.u64()?];
+        let cache = if self.bool()? {
+            Some(self.f64()?)
+        } else {
+            None
+        };
+        Ok(crate::util::rng::Rng::from_raw_state(s, cache))
+    }
+
+    /// Assert the cursor consumed the whole buffer (section hygiene).
+    pub fn finish(&self) -> Result<()> {
+        if !self.is_exhausted() {
+            bail!(
+                "snapshot section has {} trailing bytes after decode",
+                self.remaining()
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut e = Encoder::new();
+        e.u8(7);
+        e.bool(true);
+        e.u16(65_000);
+        e.u32(4_000_000_000);
+        e.u64(u64::MAX - 1);
+        e.f32(-1.5);
+        e.f64(std::f64::consts::PI);
+        e.string("snap");
+        let bytes = e.into_bytes();
+        let mut d = Decoder::new(&bytes);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert!(d.bool().unwrap());
+        assert_eq!(d.u16().unwrap(), 65_000);
+        assert_eq!(d.u32().unwrap(), 4_000_000_000);
+        assert_eq!(d.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(d.f32().unwrap(), -1.5);
+        assert_eq!(d.f64().unwrap(), std::f64::consts::PI);
+        assert_eq!(d.string().unwrap(), "snap");
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn slice_roundtrip() {
+        let mut e = Encoder::new();
+        e.slice_u8(&[1, 2, 3]);
+        e.slice_u16(&[9, 10]);
+        e.slice_u32(&[7; 5]);
+        e.slice_u64(&[u64::MAX]);
+        e.slice_f32(&[0.5, -0.25, f32::MIN_POSITIVE]);
+        let bytes = e.into_bytes();
+        let mut d = Decoder::new(&bytes);
+        assert_eq!(d.vec_u8().unwrap(), vec![1, 2, 3]);
+        assert_eq!(d.vec_u16().unwrap(), vec![9, 10]);
+        assert_eq!(d.vec_u32().unwrap(), vec![7; 5]);
+        assert_eq!(d.vec_u64().unwrap(), vec![u64::MAX]);
+        assert_eq!(d.vec_f32().unwrap(), vec![0.5, -0.25, f32::MIN_POSITIVE]);
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn rng_state_roundtrip_continues_stream() {
+        let mut rng = Rng::new(99);
+        for _ in 0..17 {
+            rng.next_u64();
+        }
+        let _ = rng.normal(); // populate the Box–Muller cache
+        let mut e = Encoder::new();
+        e.rng(&rng);
+        let bytes = e.into_bytes();
+        let mut restored = Decoder::new(&bytes).rng().unwrap();
+        for _ in 0..100 {
+            assert_eq!(restored.normal().to_bits(), rng.normal().to_bits());
+            assert_eq!(restored.next_u64(), rng.next_u64());
+        }
+    }
+
+    #[test]
+    fn truncation_is_an_error() {
+        let mut e = Encoder::new();
+        e.u64(42);
+        let bytes = e.into_bytes();
+        let mut d = Decoder::new(&bytes[..4]);
+        assert!(d.u64().is_err());
+    }
+
+    #[test]
+    fn absurd_length_prefix_rejected() {
+        let mut e = Encoder::new();
+        e.u64(u64::MAX / 2); // claims ~2^62 elements
+        let bytes = e.into_bytes();
+        let mut d = Decoder::new(&bytes);
+        assert!(d.vec_u32().is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_detected() {
+        let mut e = Encoder::new();
+        e.u32(1);
+        e.u32(2);
+        let bytes = e.into_bytes();
+        let mut d = Decoder::new(&bytes);
+        d.u32().unwrap();
+        assert!(d.finish().is_err());
+    }
+}

@@ -1,0 +1,361 @@
+//! The versioned snapshot container (see `rust/DESIGN.md` §10).
+//!
+//! Layout (all little-endian):
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic  = "NGSNAPv1"
+//! 8       4     format version (u32)
+//! 12      4     section count (u32)
+//! 16      28*n  section table: tag [u8;4] | offset u64 | len u64 | fnv64 u64
+//! ...           section payloads (concatenated, in table order)
+//! ```
+//!
+//! Offsets are absolute file offsets. Every section payload carries an
+//! FNV-1a 64 checksum verified on open, so bit rot or a partial write is
+//! detected before any state is deserialized. Unknown trailing sections are
+//! tolerated (forward compatibility: a newer writer may append sections an
+//! older reader ignores); a missing *requested* section is an error.
+
+use anyhow::{bail, Context, Result};
+
+pub const MAGIC: [u8; 8] = *b"NGSNAPv1";
+pub const FORMAT_VERSION: u32 = 1;
+
+const TABLE_ENTRY_BYTES: usize = 4 + 8 + 8 + 8;
+
+/// Well-known section tags (one per state-owning subsystem).
+pub mod tags {
+    /// world + engine configuration (decoded first; contains rank/size)
+    pub const CONF: [u8; 4] = *b"CONF";
+    /// node index space
+    pub const NODE: [u8; 4] = *b"NODE";
+    /// population table (state-chunk grouping keys)
+    pub const POPS: [u8; 4] = *b"POPS";
+    /// connection store (SoA arrays + CSR offsets)
+    pub const CONN: [u8; 4] = *b"CONN";
+    /// remote routing state ((R,L) maps, S sequences, groups, TP/GQ tables)
+    pub const REMT: [u8; 4] = *b"REMT";
+    /// neuron state chunks (membrane dynamics SoA)
+    pub const CHNK: [u8; 4] = *b"CHNK";
+    /// spike ring buffers
+    pub const BUFS: [u8; 4] = *b"BUFS";
+    /// devices: Poisson generators + spike recorder
+    pub const DEVS: [u8; 4] = *b"DEVS";
+    /// construction RNG streams (local + aligned are in REMT)
+    pub const RNGS: [u8; 4] = *b"RNGS";
+}
+
+/// One parsed section-table entry (shared by the in-memory and the
+/// file-based reader so the two cannot drift on the entry layout).
+#[derive(Clone, Copy)]
+struct TableEntry {
+    tag: [u8; 4],
+    off: u64,
+    len: u64,
+    sum: u64,
+}
+
+impl TableEntry {
+    fn parse(e: &[u8]) -> Self {
+        debug_assert_eq!(e.len(), TABLE_ENTRY_BYTES);
+        Self {
+            tag: [e[0], e[1], e[2], e[3]],
+            off: u64::from_le_bytes(e[4..12].try_into().unwrap()),
+            len: u64::from_le_bytes(e[12..20].try_into().unwrap()),
+            sum: u64::from_le_bytes(e[20..28].try_into().unwrap()),
+        }
+    }
+
+    /// Validate the payload range against the container bounds: it must
+    /// lie entirely after the header/table and inside the file.
+    fn checked_range(&self, header_len: usize, total_len: u64) -> Result<(u64, u64)> {
+        let end = self
+            .off
+            .checked_add(self.len)
+            .context("section range overflows")?;
+        if self.off < header_len as u64 || end > total_len {
+            bail!(
+                "section {} range {}..{end} outside snapshot of {total_len} bytes",
+                tag_name(self.tag),
+                self.off
+            );
+        }
+        Ok((self.off, end))
+    }
+}
+
+/// Parse and bounds-check the fixed header; returns the section count.
+fn parse_header(fixed: &[u8; 16]) -> Result<usize> {
+    if fixed[..8] != MAGIC {
+        bail!(
+            "bad snapshot magic {:02x?} (expected {:?})",
+            &fixed[..8],
+            std::str::from_utf8(&MAGIC).unwrap()
+        );
+    }
+    let version = u32::from_le_bytes(fixed[8..12].try_into().unwrap());
+    if version != FORMAT_VERSION {
+        bail!("unsupported snapshot format version {version} (this build reads {FORMAT_VERSION})");
+    }
+    Ok(u32::from_le_bytes(fixed[12..16].try_into().unwrap()) as usize)
+}
+
+/// FNV-1a 64-bit.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Assembles sections and serializes the container.
+#[derive(Default)]
+pub struct SnapshotWriter {
+    sections: Vec<([u8; 4], Vec<u8>)>,
+}
+
+impl SnapshotWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a section (tags must be unique within one snapshot).
+    pub fn section(&mut self, tag: [u8; 4], payload: Vec<u8>) {
+        debug_assert!(
+            self.sections.iter().all(|(t, _)| *t != tag),
+            "duplicate snapshot section {:?}",
+            tag
+        );
+        self.sections.push((tag, payload));
+    }
+
+    /// Serialize header + table + payloads into one buffer.
+    pub fn finish(self) -> Vec<u8> {
+        let header_len = 16 + self.sections.len() * TABLE_ENTRY_BYTES;
+        let total: usize = header_len + self.sections.iter().map(|(_, p)| p.len()).sum::<usize>();
+        let mut out = Vec::with_capacity(total);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
+        let mut offset = header_len as u64;
+        for (tag, payload) in &self.sections {
+            out.extend_from_slice(tag);
+            out.extend_from_slice(&offset.to_le_bytes());
+            out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            out.extend_from_slice(&fnv1a64(payload).to_le_bytes());
+            offset += payload.len() as u64;
+        }
+        for (_, payload) in &self.sections {
+            out.extend_from_slice(payload);
+        }
+        out
+    }
+}
+
+/// Validated view over a serialized snapshot.
+pub struct SnapshotReader<'a> {
+    buf: &'a [u8],
+    table: Vec<([u8; 4], usize, usize)>,
+}
+
+impl<'a> SnapshotReader<'a> {
+    /// Parse and validate the container: magic, version, table bounds and
+    /// every section checksum.
+    pub fn open(buf: &'a [u8]) -> Result<Self> {
+        if buf.len() < 16 {
+            bail!("snapshot too short ({} bytes) for the header", buf.len());
+        }
+        let count = parse_header(buf[..16].try_into().unwrap())?;
+        let header_len = 16 + count * TABLE_ENTRY_BYTES;
+        if buf.len() < header_len {
+            bail!("snapshot truncated inside the section table");
+        }
+        let mut table = Vec::with_capacity(count);
+        for i in 0..count {
+            let entry = TableEntry::parse(
+                &buf[16 + i * TABLE_ENTRY_BYTES..16 + (i + 1) * TABLE_ENTRY_BYTES],
+            );
+            let (off, end) = entry.checked_range(header_len, buf.len() as u64)?;
+            let (off, end) = (off as usize, end as usize);
+            let actual = fnv1a64(&buf[off..end]);
+            if actual != entry.sum {
+                bail!(
+                    "section {} checksum mismatch: stored {:#018x}, computed {actual:#018x} \
+                     — snapshot is corrupt",
+                    tag_name(entry.tag),
+                    entry.sum
+                );
+            }
+            table.push((entry.tag, off, end - off));
+        }
+        Ok(Self { buf, table })
+    }
+
+    /// Payload bytes of a section; error if absent.
+    pub fn section(&self, tag: [u8; 4]) -> Result<&'a [u8]> {
+        self.table
+            .iter()
+            .find(|(t, _, _)| *t == tag)
+            .map(|&(_, off, len)| &self.buf[off..off + len])
+            .with_context(|| format!("snapshot has no {} section", tag_name(tag)))
+    }
+
+    pub fn section_tags(&self) -> impl Iterator<Item = [u8; 4]> + '_ {
+        self.table.iter().map(|&(t, _, _)| t)
+    }
+}
+
+/// Read one section payload (checksum-verified) from a snapshot file
+/// without reading or hashing anything else: header + table + the one
+/// payload. This keeps header-only inspection (`peek_world`) O(section)
+/// instead of O(file) — at production scale the CONN/CHNK sections
+/// dominate the file and must not be touched just to learn the world
+/// shape.
+pub fn read_section_from_file(path: &std::path::Path, tag: [u8; 4]) -> Result<Vec<u8>> {
+    use std::io::{Read, Seek, SeekFrom};
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("cannot open snapshot {}", path.display()))?;
+    let file_len = f
+        .metadata()
+        .with_context(|| format!("cannot stat snapshot {}", path.display()))?
+        .len();
+    let mut fixed = [0u8; 16];
+    f.read_exact(&mut fixed)
+        .context("snapshot too short for the header")?;
+    let count = parse_header(&fixed)?;
+    let header_len = 16 + count * TABLE_ENTRY_BYTES;
+    if header_len as u64 > file_len {
+        bail!("snapshot truncated inside the section table");
+    }
+    let mut table = vec![0u8; count * TABLE_ENTRY_BYTES];
+    f.read_exact(&mut table)
+        .context("snapshot truncated inside the section table")?;
+    for e in table.chunks_exact(TABLE_ENTRY_BYTES) {
+        let entry = TableEntry::parse(e);
+        if entry.tag != tag {
+            continue;
+        }
+        let (off, end) = entry.checked_range(header_len, file_len)?;
+        f.seek(SeekFrom::Start(off))
+            .context("cannot seek to section payload")?;
+        let mut payload = vec![0u8; (end - off) as usize];
+        f.read_exact(&mut payload)
+            .with_context(|| format!("section {} truncated", tag_name(tag)))?;
+        let actual = fnv1a64(&payload);
+        if actual != entry.sum {
+            bail!(
+                "section {} checksum mismatch: stored {:#018x}, computed {actual:#018x} \
+                 — snapshot is corrupt",
+                tag_name(tag),
+                entry.sum
+            );
+        }
+        return Ok(payload);
+    }
+    bail!("snapshot {} has no {} section", path.display(), tag_name(tag))
+}
+
+fn tag_name(tag: [u8; 4]) -> String {
+    std::str::from_utf8(&tag)
+        .map(|s| s.to_string())
+        .unwrap_or_else(|_| format!("{tag:02x?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writer_reader_roundtrip() {
+        let mut w = SnapshotWriter::new();
+        w.section(tags::CONF, vec![1, 2, 3]);
+        w.section(tags::CONN, vec![9; 100]);
+        let bytes = w.finish();
+        let r = SnapshotReader::open(&bytes).unwrap();
+        assert_eq!(r.section(tags::CONF).unwrap(), &[1, 2, 3]);
+        assert_eq!(r.section(tags::CONN).unwrap(), &[9; 100]);
+        assert_eq!(r.section_tags().count(), 2);
+        assert!(r.section(tags::BUFS).is_err());
+    }
+
+    #[test]
+    fn empty_snapshot_is_valid() {
+        let bytes = SnapshotWriter::new().finish();
+        let r = SnapshotReader::open(&bytes).unwrap();
+        assert_eq!(r.section_tags().count(), 0);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut w = SnapshotWriter::new();
+        w.section(tags::CONF, vec![1]);
+        let mut bytes = w.finish();
+        bytes[0] ^= 0xFF;
+        assert!(SnapshotReader::open(&bytes).is_err());
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let mut bytes = SnapshotWriter::new().finish();
+        bytes[8] = 0xFE;
+        let err = SnapshotReader::open(&bytes).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn flipped_payload_bit_detected() {
+        let mut w = SnapshotWriter::new();
+        w.section(tags::BUFS, vec![0u8; 64]);
+        let mut bytes = w.finish();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0x01;
+        let err = SnapshotReader::open(&bytes).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn truncated_payload_detected() {
+        let mut w = SnapshotWriter::new();
+        w.section(tags::BUFS, vec![7u8; 64]);
+        let bytes = w.finish();
+        assert!(SnapshotReader::open(&bytes[..bytes.len() - 8]).is_err());
+    }
+
+    #[test]
+    fn single_section_file_read_is_selective() {
+        let mut w = SnapshotWriter::new();
+        w.section(tags::CONF, vec![1, 2, 3]);
+        w.section(tags::CONN, vec![9; 50]);
+        let bytes = w.finish();
+        let path = std::env::temp_dir()
+            .join(format!("ngsnap_fmt_test_{}.snap", std::process::id()));
+        std::fs::write(&path, &bytes).unwrap();
+        assert_eq!(
+            read_section_from_file(&path, tags::CONF).unwrap(),
+            vec![1, 2, 3]
+        );
+        assert!(read_section_from_file(&path, tags::BUFS).is_err());
+        // corrupt the CONN payload: CONF must still read, CONN must fail
+        let mut corrupted = bytes.clone();
+        let n = corrupted.len();
+        corrupted[n - 1] ^= 1;
+        std::fs::write(&path, &corrupted).unwrap();
+        assert_eq!(
+            read_section_from_file(&path, tags::CONF).unwrap(),
+            vec![1, 2, 3]
+        );
+        assert!(read_section_from_file(&path, tags::CONN).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fnv_known_vector() {
+        // FNV-1a 64 of empty input is the offset basis
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        // and of "a" (standard test vector)
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

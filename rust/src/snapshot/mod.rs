@@ -1,0 +1,38 @@
+//! Snapshot subsystem: checkpoint/restore of constructed networks and
+//! mid-run simulator state.
+//!
+//! The paper makes network *construction* scalable; this subsystem makes it
+//! a **one-time** cost. A snapshot is a versioned, per-rank binary file
+//! (magic + format version + checksummed section table, [`format`]) holding
+//! everything a rank owns after `prepare()`: the connection store, the
+//! remote routing tables and (R, L) maps, neuron parameters and dynamic
+//! state, ring buffers, device and construction RNG streams.
+//!
+//! Two modes fall out of one mechanism (saving is legal at any step
+//! boundary after `prepare()`):
+//!
+//! - **construction cache** — save immediately after `prepare()`; later
+//!   runs call `Simulator::load_snapshot` and skip Create/Connect/
+//!   RemoteConnect/preparation entirely;
+//! - **mid-run checkpoint** — save after `n` steps of propagation; the
+//!   resumed run continues with bit-identical spike trains, because every
+//!   consumed RNG stream and every ring-buffer slot is restored exactly.
+//!
+//! The per-layer encode/decode impls live next to their types (e.g.
+//! `Connections::snapshot_encode` in `connection/store.rs`), built on the
+//! small [`codec`] layer; [`crate::engine::Simulator::save_snapshot`] and
+//! [`crate::engine::Simulator::load_snapshot`] assemble the container;
+//! `harness::run_cluster_from_snapshot` drives a whole thread-rank world
+//! from one snapshot file per rank. The on-disk layout is specified in
+//! `rust/DESIGN.md` §10.
+
+pub mod codec;
+pub mod format;
+
+pub use codec::{Decoder, Encoder};
+pub use format::{SnapshotReader, SnapshotWriter, FORMAT_VERSION, MAGIC};
+
+/// Conventional per-rank snapshot file name within a snapshot directory.
+pub fn rank_file_name(rank: usize) -> String {
+    format!("rank_{rank}.snap")
+}

@@ -69,6 +69,18 @@ impl Rng {
         Self::new(stream_seed(master, ids))
     }
 
+    /// The full generator state (xoshiro words + Box–Muller cache) for
+    /// checkpointing: `from_raw_state(raw_state())` continues the stream
+    /// bit-identically.
+    pub fn raw_state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.gauss_cache)
+    }
+
+    /// Rebuild a generator from [`Rng::raw_state`] output.
+    pub fn from_raw_state(s: [u64; 4], gauss_cache: Option<f64>) -> Self {
+        Self { s, gauss_cache }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]

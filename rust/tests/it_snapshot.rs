@@ -1,0 +1,312 @@
+//! Integration: the snapshot subsystem end to end — randomized
+//! encode→decode identity for every state-owning structure, construction
+//! caching (restored runs skip construction and reproduce spike trains
+//! bit-identically) and mid-run checkpoint determinism.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use nestgpu::connection::Connections;
+use nestgpu::engine::{SimConfig, Simulator};
+use nestgpu::harness::{run_cluster, run_cluster_from_snapshot, run_cluster_with_snapshot};
+use nestgpu::memory::{MemKind, Tracker};
+use nestgpu::models::balanced::{build_balanced, BalancedConfig};
+use nestgpu::node::RingBuffers;
+use nestgpu::remote::pair_map::PairMap;
+use nestgpu::remote::tables::RoutingTables;
+use nestgpu::snapshot::{Decoder, Encoder};
+use nestgpu::util::rng::Rng;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("nestgpu_it_snapshot_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn small_bal() -> BalancedConfig {
+    BalancedConfig {
+        scale: 0.004,  // 45 neurons per rank
+        k_scale: 0.004,
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------- codec
+// property tests: encode→decode = identity over randomized instances
+
+#[test]
+fn prop_connection_store_roundtrip() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for case in 0..30 {
+        let n_nodes = 1 + rng.below(60) as usize;
+        let n_conns = rng.below(500) as usize;
+        let mut tr = Tracker::new();
+        let mut c = Connections::new();
+        for _ in 0..n_conns {
+            c.push(
+                rng.below(n_nodes as u32),
+                rng.below(n_nodes as u32),
+                rng.uniform_range(-5.0, 5.0) as f32,
+                1 + rng.below(30) as u16,
+                rng.below(2) as u8,
+                &mut tr,
+            );
+        }
+        if rng.below(2) == 1 {
+            c.sort_by_source(n_nodes, &mut tr);
+        }
+        let mut enc = Encoder::new();
+        c.snapshot_encode(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut tr2 = Tracker::new();
+        let mut dec = Decoder::new(&bytes);
+        let d = Connections::snapshot_decode(&mut dec, &mut tr2).unwrap();
+        dec.finish().unwrap();
+        assert_eq!(d.source.as_slice(), c.source.as_slice(), "case {case}");
+        assert_eq!(d.target.as_slice(), c.target.as_slice(), "case {case}");
+        assert_eq!(d.weight.as_slice(), c.weight.as_slice(), "case {case}");
+        assert_eq!(d.delay.as_slice(), c.delay.as_slice(), "case {case}");
+        assert_eq!(d.port.as_slice(), c.port.as_slice(), "case {case}");
+        assert_eq!(d.is_sorted(), c.is_sorted(), "case {case}");
+        if c.is_sorted() {
+            for node in 0..n_nodes as u32 {
+                assert_eq!(d.outgoing(node), c.outgoing(node), "case {case} node {node}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_pair_map_and_routing_tables_roundtrip() {
+    let mut rng = Rng::new(0xDECAF);
+    for case in 0..30 {
+        let mut tr = Tracker::new();
+
+        // (R, L) map grown over several merge rounds
+        let mut m = PairMap::new(MemKind::Device);
+        let mut next_img = 1_000u32;
+        for _ in 0..1 + rng.below(4) {
+            let mut srcs: Vec<u32> = (0..rng.below(50)).map(|_| rng.below(800)).collect();
+            srcs.sort_unstable();
+            srcs.dedup();
+            m.ensure_images(&srcs, &mut tr, || {
+                let v = next_img;
+                next_img += 1;
+                v
+            });
+        }
+        let mut enc = Encoder::new();
+        m.snapshot_encode(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut tr2 = Tracker::new();
+        let mut dec = Decoder::new(&bytes);
+        let dm = PairMap::snapshot_decode(&mut dec, &mut tr2).unwrap();
+        dec.finish().unwrap();
+        assert_eq!(dm.r_slice(), m.r_slice(), "case {case}");
+        assert_eq!(dm.l_slice(), m.l_slice(), "case {case}");
+        assert!(dm.is_sorted());
+
+        // routing tables over random sorted per-destination sequences
+        let n_nodes = 80usize;
+        let owned: Vec<(u16, Vec<u32>)> = (0..rng.below(4))
+            .map(|d| {
+                let mut v: Vec<u32> =
+                    (0..rng.below(40)).map(|_| rng.below(n_nodes as u32)).collect();
+                v.sort_unstable();
+                v.dedup();
+                (d as u16, v)
+            })
+            .collect();
+        let refs: Vec<(u16, &[u32])> = owned.iter().map(|(d, v)| (*d, v.as_slice())).collect();
+        let t = RoutingTables::build(n_nodes, &refs, MemKind::Device, &mut tr);
+        let mut enc = Encoder::new();
+        t.snapshot_encode(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut dec = Decoder::new(&bytes);
+        let dt = RoutingTables::snapshot_decode(&mut dec, MemKind::Device, &mut tr2).unwrap();
+        dec.finish().unwrap();
+        assert_eq!(dt.total_entries(), t.total_entries(), "case {case}");
+        for node in 0..n_nodes as u32 {
+            assert_eq!(
+                dt.route(node).collect::<Vec<_>>(),
+                t.route(node).collect::<Vec<_>>(),
+                "case {case} node {node}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_ring_buffer_roundtrip() {
+    let mut rng = Rng::new(0xB0BA);
+    for case in 0..30 {
+        let n = 1 + rng.below(40) as usize;
+        let max_delay = (1 + rng.below(20)) as u16;
+        let mut tr = Tracker::new();
+        let mut rb = RingBuffers::new(n, max_delay, &mut tr);
+        // random interleaving of deliveries and step advances
+        for _ in 0..rng.below(200) {
+            if rng.below(4) == 0 {
+                rb.advance();
+            } else {
+                rb.add(
+                    rng.below(n as u32),
+                    rng.below(2) as u8,
+                    1 + rng.below(max_delay as u32) as u16,
+                    rng.uniform_range(-10.0, 10.0) as f32,
+                    1 + rng.below(3) as u16,
+                );
+            }
+        }
+        let mut enc = Encoder::new();
+        rb.snapshot_encode(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut tr2 = Tracker::new();
+        let mut dec = Decoder::new(&bytes);
+        let mut restored = RingBuffers::snapshot_decode(&mut dec, &mut tr2).unwrap();
+        dec.finish().unwrap();
+        // identical playout over a full wrap-around
+        for step in 0..2 * rb.n_slots() {
+            assert_eq!(restored.current(), rb.current(), "case {case} step {step}");
+            restored.advance();
+            rb.advance();
+        }
+    }
+}
+
+// ------------------------------------------------ cluster-level behavior
+
+#[test]
+fn construction_cache_restores_bit_identical_runs() {
+    let cfg = SimConfig::default();
+    let dir = tmp_dir("cache");
+
+    // from-scratch baseline with the same seed
+    let baseline = run_cluster(
+        2,
+        &cfg,
+        &|sim: &mut Simulator| build_balanced(sim, &small_bal()),
+        100.0,
+    )
+    .unwrap();
+
+    // build + prepare, save immediately (construction cache), restore, run
+    run_cluster_with_snapshot(
+        2,
+        &cfg,
+        &|sim: &mut Simulator| build_balanced(sim, &small_bal()),
+        0.0,
+        &dir,
+    )
+    .unwrap();
+    let restored = run_cluster_from_snapshot(&dir, 100.0).unwrap();
+
+    assert_eq!(baseline.len(), restored.len());
+    for (b, r) in baseline.iter().zip(restored.iter()) {
+        assert!(b.n_spikes > 0, "baseline must spike to make the test meaningful");
+        assert_eq!(b.spikes, r.spikes, "rank {}: spike trains diverged", b.rank);
+        assert_eq!(b.n_connections, r.n_connections);
+        assert_eq!(b.n_neurons, r.n_neurons);
+        assert_eq!(b.n_images, r.n_images);
+        assert_eq!(b.map_entries, r.map_entries);
+    }
+    // the restored run must not have paid any construction phase
+    for r in &restored {
+        assert_eq!(r.phases.node_creation, Duration::ZERO);
+        assert_eq!(r.phases.local_connection, Duration::ZERO);
+        assert_eq!(r.phases.remote_connection, Duration::ZERO);
+        assert_eq!(r.phases.preparation, Duration::ZERO);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn midrun_checkpoint_resumes_bit_identically() {
+    let cfg = SimConfig::default();
+    let dir = tmp_dir("midrun");
+
+    // uninterrupted 100 ms
+    let full = run_cluster(
+        2,
+        &cfg,
+        &|sim: &mut Simulator| build_balanced(sim, &small_bal()),
+        100.0,
+    )
+    .unwrap();
+
+    // 50 ms, checkpoint, resume for the remaining 50 ms
+    let first_half = run_cluster_with_snapshot(
+        2,
+        &cfg,
+        &|sim: &mut Simulator| build_balanced(sim, &small_bal()),
+        50.0,
+        &dir,
+    )
+    .unwrap();
+    let resumed = run_cluster_from_snapshot(&dir, 50.0).unwrap();
+
+    for ((f, h), r) in full.iter().zip(first_half.iter()).zip(resumed.iter()) {
+        // the recorder travels inside the snapshot, so the resumed result
+        // carries the full pre+post checkpoint history
+        assert_eq!(f.spikes, r.spikes, "rank {}: resumed train diverged", f.rank);
+        assert!(
+            r.spikes.len() >= h.spikes.len(),
+            "resume lost pre-checkpoint events"
+        );
+        assert!(f.n_spikes > 0);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn p2p_exchange_survives_checkpoint() {
+    // same determinism check with point-to-point instead of collective
+    // exchange (exercises the TP tables + (R, L) maps through the codec)
+    let cfg = SimConfig::default();
+    let dir = tmp_dir("p2p");
+    let bal = BalancedConfig {
+        collective: false,
+        ..small_bal()
+    };
+    let mk = {
+        let bal = bal.clone();
+        move |sim: &mut Simulator| build_balanced(sim, &bal)
+    };
+    let full = run_cluster(2, &cfg, &mk, 80.0).unwrap();
+    run_cluster_with_snapshot(2, &cfg, &mk, 40.0, &dir).unwrap();
+    let resumed = run_cluster_from_snapshot(&dir, 40.0).unwrap();
+    for (f, r) in full.iter().zip(resumed.iter()) {
+        assert_eq!(f.spikes, r.spikes, "rank {}", f.rank);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_snapshot_is_rejected() {
+    let cfg = SimConfig::default();
+    let dir = tmp_dir("corrupt");
+    run_cluster_with_snapshot(
+        1,
+        &cfg,
+        &|sim: &mut Simulator| {
+            use nestgpu::connection::{ConnRule, SynSpec};
+            use nestgpu::node::LifParams;
+            let n = sim.create_neurons(5, &LifParams::default());
+            sim.connect(&n, &n, &ConnRule::OneToOne, &SynSpec::new(1.0, 1));
+        },
+        0.0,
+        &dir,
+    )
+    .unwrap();
+    let path = dir.join(nestgpu::snapshot::rank_file_name(0));
+    let mut bytes = std::fs::read(&path).unwrap();
+    let n = bytes.len();
+    bytes[n - 3] ^= 0x40; // flip one payload bit
+    std::fs::write(&path, &bytes).unwrap();
+    // the flipped bit lands in a section payload, so the container-level
+    // checksum rejects the file before any state is deserialized
+    let err = run_cluster_from_snapshot(&dir, 10.0).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("checksum"), "{msg}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

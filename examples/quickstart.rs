@@ -25,6 +25,11 @@ fn main() -> anyhow::Result<()> {
     let cfg = SimConfig {
         backend,
         seed: 42,
+        // remote spike exchange is batched to once per minimum remote
+        // synaptic delay by default (bit-identical to per-step exchange,
+        // DESIGN.md §11); set Some(1) to force per-step exchange or pass
+        // --exchange-interval on the nestgpu CLI
+        exchange_interval: None,
         ..Default::default()
     };
     let bal = BalancedConfig {
@@ -45,6 +50,10 @@ fn main() -> anyhow::Result<()> {
         100.0,
     )?;
 
+    println!(
+        "effective exchange interval: {} step(s)\n",
+        results[0].exchange_interval
+    );
     for r in &results {
         let rate = r.n_spikes as f64 / r.n_neurons as f64 / 0.1;
         println!(

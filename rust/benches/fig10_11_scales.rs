@@ -1,16 +1,21 @@
 //! Figs. 10–11 (Appendix C): the Fig. 6 construction breakdown repeated at
 //! different network scales (paper: scale 10 and 30 vs the main text's 20;
-//! here proportionally smaller workloads with the same 1:2:3 ratios).
+//! here proportionally smaller workloads with the same 1:2:3 ratios), plus
+//! the per-scale communication volume of a short live propagation window
+//! (batched min-delay exchange).
 
-use nestgpu::engine::SimConfig;
-use nestgpu::harness::experiments::{balanced_weak_scaling, write_result};
-use nestgpu::models::balanced::BalancedConfig;
+use nestgpu::engine::{SimConfig, Simulator};
+use nestgpu::harness::experiments::{aggregate, balanced_weak_scaling, write_result};
+use nestgpu::harness::run_cluster;
+use nestgpu::models::balanced::{build_balanced, BalancedConfig};
 use nestgpu::remote::levels::{GpuMemLevel, ALL_LEVELS};
 use nestgpu::util::json::Json;
-use nestgpu::util::table::{fmt_secs, Table};
+use nestgpu::util::table::{fmt_bytes, fmt_secs, Table};
 
 const RANKS: [usize; 4] = [2, 4, 8, 16];
 const MAX_LIVE: usize = 8;
+/// live window for the communication-volume measurement
+const COMM_T_MS: f64 = 25.0;
 
 fn main() {
     let mut all = Vec::new();
@@ -52,6 +57,38 @@ fn main() {
             ]));
         }
         t.print();
+
+        // communication volume: one short live window per world size
+        let mut tv = Table::new(
+            &format!("{fig} — communication volume ({COMM_T_MS} ms live, mean/rank)"),
+            &["ranks", "xchg interval", "p2p msgs", "p2p bytes", "coll calls", "coll bytes"],
+        );
+        for &vr in RANKS.iter().filter(|&&v| v <= MAX_LIVE) {
+            let b = bal.clone();
+            let runs = run_cluster(
+                vr,
+                &cfg,
+                &move |sim: &mut Simulator| build_balanced(sim, &b),
+                COMM_T_MS,
+            )
+            .expect("live comm-volume run");
+            let agg = aggregate(&[runs]);
+            tv.row(vec![
+                vr.to_string(),
+                format!("{:.0}", agg.exchange_interval),
+                format!("{:.0}", agg.p2p_messages),
+                fmt_bytes(agg.p2p_bytes as u64),
+                format!("{:.0}", agg.coll_calls),
+                fmt_bytes(agg.coll_bytes as u64),
+            ]);
+            all.push(Json::obj(vec![
+                ("figure", Json::str(fig)),
+                ("ranks", Json::num(vr as f64)),
+                ("comm_t_ms", Json::num(COMM_T_MS)),
+                ("comm", agg.to_json()),
+            ]));
+        }
+        tv.print();
         println!();
         let _ = GpuMemLevel::L0;
     }

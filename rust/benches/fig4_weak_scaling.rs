@@ -14,7 +14,7 @@ use nestgpu::harness::run_cluster;
 use nestgpu::models::balanced::{build_balanced, BalancedConfig};
 use nestgpu::remote::levels::{GpuMemLevel, ALL_LEVELS};
 use nestgpu::util::json::Json;
-use nestgpu::util::table::{fmt_secs, Table};
+use nestgpu::util::table::{fmt_bytes, fmt_secs, Table};
 
 const RANKS: [usize; 5] = [2, 4, 8, 16, 32];
 const MAX_LIVE: usize = 8;
@@ -102,6 +102,29 @@ fn main() {
         ]);
     }
     tb.print();
+
+    // communication volume of the live runs (batched exchange: one
+    // all-to-all / allgather round per min-delay interval, §DESIGN 11)
+    let mut tc = Table::new(
+        "Fig. 4 — communication volume (live runs, mean per rank, level 2)",
+        &["ranks", "xchg interval", "p2p msgs", "p2p bytes", "coll calls", "coll bytes"],
+    );
+    for &vr in RANKS.iter().filter(|&&v| v <= MAX_LIVE) {
+        if let Some(p) = pts
+            .iter()
+            .find(|p| p.virtual_ranks == vr && p.level == GpuMemLevel::L2)
+        {
+            tc.row(vec![
+                vr.to_string(),
+                format!("{:.0}", p.agg.exchange_interval),
+                format!("{:.0}", p.agg.p2p_messages),
+                fmt_bytes(p.agg.p2p_bytes as u64),
+                format!("{:.0}", p.agg.coll_calls),
+                fmt_bytes(p.agg.coll_bytes as u64),
+            ]);
+        }
+    }
+    tc.print();
     println!("\npaper shape check: higher levels faster; no-recording ~20% faster RTF");
 
     let rows: Vec<Json> = pts

@@ -126,7 +126,11 @@ fn bench_exchange(packet_len: usize) -> f64 {
         }
     });
     let pkt: Vec<SpikeRecord> = (0..packet_len as u32)
-        .map(|i| SpikeRecord { pos: i, mult: 1 })
+        .map(|i| SpikeRecord {
+            pos: i,
+            mult: 1,
+            lag: 0,
+        })
         .collect();
     let per_round = time(200, || {
         let out = vec![vec![], pkt.clone()];

@@ -1,0 +1,153 @@
+//! Spike-exchange batching: the balanced network (point-to-point mode)
+//! at exchange interval 1 vs the auto interval (= minimum remote synaptic
+//! delay, 15 steps for this model).
+//!
+//! Reports steps/s, p2p message counts and bytes per step, and writes
+//! `BENCH_spike_exchange.json` at the repository root so the perf
+//! trajectory of the exchange path has machine-readable data points.
+//! Expected shape: p2p messages drop by ~interval×, payload bytes stay
+//! within ~1× (same records, fewer envelopes), step rate does not regress.
+//!
+//! Set `SMOKE=1` for the CI-sized run.
+
+use std::path::PathBuf;
+
+use nestgpu::engine::{SimConfig, SimResult, Simulator};
+use nestgpu::harness::run_cluster;
+use nestgpu::models::balanced::{build_balanced, BalancedConfig};
+use nestgpu::util::json::Json;
+use nestgpu::util::table::{fmt_bytes, Table};
+
+struct Point {
+    label: &'static str,
+    interval: u16,
+    steps_per_s: f64,
+    p2p_messages: u64,
+    p2p_bytes: u64,
+    bytes_per_step: f64,
+    coll_calls: u64,
+}
+
+fn measure(
+    label: &'static str,
+    interval: Option<u16>,
+    ranks: usize,
+    bal: &BalancedConfig,
+    t_ms: f64,
+) -> Point {
+    let cfg = SimConfig {
+        record_spikes: false, // benchmarking runs, as in the paper
+        exchange_interval: interval,
+        ..Default::default()
+    };
+    let b = bal.clone();
+    let results: Vec<SimResult> = run_cluster(
+        ranks,
+        &cfg,
+        &move |sim: &mut Simulator| build_balanced(sim, &b),
+        t_ms,
+    )
+    .expect("bench run");
+    let steps = (t_ms / cfg.dt_ms).round();
+    let prop_s = results
+        .iter()
+        .map(|r| r.phases.propagation.as_secs_f64())
+        .fold(0.0, f64::max)
+        .max(1e-9);
+    let p2p_messages: u64 = results.iter().map(|r| r.p2p_messages).sum();
+    let p2p_bytes: u64 = results.iter().map(|r| r.p2p_bytes).sum();
+    let coll_calls: u64 = results.iter().map(|r| r.coll_calls).sum();
+    Point {
+        label,
+        interval: results[0].exchange_interval,
+        steps_per_s: steps / prop_s,
+        p2p_messages,
+        p2p_bytes,
+        bytes_per_step: p2p_bytes as f64 / steps,
+        coll_calls,
+    }
+}
+
+impl Point {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("interval", Json::num(self.interval as f64)),
+            ("steps_per_s", Json::num(self.steps_per_s)),
+            ("p2p_messages", Json::num(self.p2p_messages as f64)),
+            ("p2p_bytes", Json::num(self.p2p_bytes as f64)),
+            ("bytes_per_step", Json::num(self.bytes_per_step)),
+            ("coll_calls", Json::num(self.coll_calls as f64)),
+        ])
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("SMOKE").is_ok();
+    let ranks = if smoke { 2 } else { 4 };
+    let t_ms = if smoke { 50.0 } else { 200.0 };
+    // dense enough that most steps carry spikes on every rank pair — the
+    // regime where batching approaches the full interval-x reduction
+    // (empty packets are never counted as messages)
+    let bal = BalancedConfig {
+        scale: if smoke { 0.01 } else { 0.1 },
+        k_scale: 0.01,
+        collective: false, // point-to-point exchange
+        ..Default::default()
+    };
+    println!(
+        "balanced (p2p), {ranks} ranks x {} neurons, {t_ms} ms, delay {} steps{}",
+        bal.neurons_per_rank(),
+        bal.delay_steps,
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let per_step = measure("interval 1", Some(1), ranks, &bal, t_ms);
+    let batched = measure("interval min_delay", None, ranks, &bal, t_ms);
+
+    let mut t = Table::new(
+        "spike exchange: per-step vs min-delay batching",
+        &["config", "interval", "steps/s", "p2p msgs", "p2p bytes", "bytes/step"],
+    );
+    for p in [&per_step, &batched] {
+        t.row(vec![
+            p.label.to_string(),
+            p.interval.to_string(),
+            format!("{:.0}", p.steps_per_s),
+            p.p2p_messages.to_string(),
+            fmt_bytes(p.p2p_bytes),
+            format!("{:.1}", p.bytes_per_step),
+        ]);
+    }
+    t.print();
+
+    let reduction = per_step.p2p_messages as f64 / batched.p2p_messages.max(1) as f64;
+    println!(
+        "\np2p message reduction: {reduction:.1}x (interval {}); paper shape check: \
+         ~interval x fewer messages, no step-rate regression at interval 1",
+        batched.interval
+    );
+    assert!(
+        batched.p2p_messages < per_step.p2p_messages,
+        "batching must reduce the p2p message count"
+    );
+
+    let json = Json::obj(vec![
+        ("model", Json::str("balanced-p2p")),
+        ("ranks", Json::num(ranks as f64)),
+        ("t_ms", Json::num(t_ms)),
+        ("smoke", Json::Bool(smoke)),
+        ("min_delay", Json::num(batched.interval as f64)),
+        ("interval_1", per_step.to_json()),
+        ("interval_min_delay", batched.to_json()),
+        ("p2p_message_reduction", Json::num(reduction)),
+    ]);
+    // at the repository root (one directory above the rust package)
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .join("BENCH_spike_exchange.json");
+    match std::fs::write(&path, json.to_string()) {
+        Ok(()) => println!("[written {}]", path.display()),
+        Err(e) => eprintln!("cannot write {}: {e}", path.display()),
+    }
+}

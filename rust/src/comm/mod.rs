@@ -25,19 +25,43 @@ pub type GroupId = usize;
 
 /// One remote spike in a point-to-point packet: the *position* of the
 /// source neuron in the (R, L) map of the target process (not the neuron
-/// id! — Appendix F), plus the spike multiplicity.
+/// id! — Appendix F), plus the spike multiplicity and the emission lag.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SpikeRecord {
     /// position `i` in the target's `(R[τ,σ,i], L[τ,σ,i])` map
     pub pos: u32,
-    /// spike multiplicity (≥1; >1 for aggregated device spikes)
+    /// spike multiplicity (≥1; >1 for aggregated spikes)
     pub mult: u16,
+    /// emission step within the current exchange interval (0-based).
+    /// With per-step exchange (interval 1) this is always 0; with
+    /// min-delay batching the receiver shifts the ring-buffer slot by
+    /// `lag + 1 − interval_len` so batched delivery stays bit-identical
+    /// (see `rust/DESIGN.md` §11).
+    pub lag: u16,
 }
 
-/// Wire size of one spike record (u32 position + u16 multiplicity).
-pub const SPIKE_RECORD_BYTES: u64 = 6;
+/// Wire size of one spike record (u32 position + u16 multiplicity +
+/// u16 lag). Every traffic-accounting site must derive from this constant.
+pub const SPIKE_RECORD_BYTES: u64 = 8;
 /// Per-message envelope cost we account for non-empty packets.
 pub const MSG_HEADER_BYTES: u64 = 8;
+/// Collective spikes travel as pairs of u32 words in the allgather
+/// payload: `[pos, (lag << 16) | mult]`.
+pub const COLL_WORDS_PER_SPIKE: usize = 2;
+/// Wire size of one u32 word of a collective payload.
+pub const COLL_WORD_BYTES: u64 = 4;
+
+/// Pack the second word of a collective spike record.
+#[inline]
+pub fn coll_pack(lag: u16, mult: u16) -> u32 {
+    ((lag as u32) << 16) | mult as u32
+}
+
+/// Unpack the second word of a collective spike record into (lag, mult).
+#[inline]
+pub fn coll_unpack(word: u32) -> (u16, u16) {
+    ((word >> 16) as u16, (word & 0xFFFF) as u16)
+}
 
 /// Accumulated communication volume for one rank.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -74,9 +98,26 @@ pub trait Communicator: Send {
     fn register_group(&mut self, members: Vec<Rank>) -> GroupId;
 
     /// `MPI_Allgatherv` within a group: contribute `data`, receive every
-    /// member's contribution indexed by member position. Must be called by
-    /// every member of the group; panics if this rank is not a member.
-    fn allgather(&mut self, group: GroupId, data: &[u32]) -> Vec<Vec<u32>>;
+    /// member's contribution in `out`, indexed by member position. Must be
+    /// called by every member of the group; panics if this rank is not a
+    /// member. `out` is resized to the member count if shorter; its inner
+    /// buffers are reused (cleared, then filled), so a caller that keeps
+    /// `out` alive across calls performs no steady-state allocation.
+    fn allgather_into(&mut self, group: GroupId, data: &[u32], out: &mut Vec<Vec<u32>>);
+
+    /// Allocating convenience wrapper around [`Communicator::allgather_into`].
+    fn allgather(&mut self, group: GroupId, data: &[u32]) -> Vec<Vec<u32>> {
+        let mut out = Vec::new();
+        self.allgather_into(group, data, &mut out);
+        out
+    }
+
+    /// `MPI_Allreduce(MIN)` over the whole world: every rank contributes a
+    /// value and receives the global minimum. (The engine derives the
+    /// exchange-batching interval from the SPMD remote-delay bound instead
+    /// of this call, keeping preparation communication-free; the primitive
+    /// is provided for model scripts and diagnostics.)
+    fn allreduce_min(&mut self, value: u32) -> u32;
 
     /// Barrier over the whole world.
     fn barrier(&mut self);
@@ -121,8 +162,13 @@ impl Communicator for NullComm {
         self.groups.push(members);
         self.groups.len() - 1
     }
-    fn allgather(&mut self, _group: GroupId, _data: &[u32]) -> Vec<Vec<u32>> {
+    fn allgather_into(&mut self, _group: GroupId, _data: &[u32], _out: &mut Vec<Vec<u32>>) {
         panic!("NullComm cannot allgather: estimation mode covers construction and preparation only")
+    }
+    fn allreduce_min(&mut self, value: u32) -> u32 {
+        // estimation mode is communication-free: the local value stands in
+        // for the world minimum (preparation stays a valid dry run)
+        value
     }
     fn barrier(&mut self) {}
     fn traffic(&self) -> TrafficStats {
@@ -148,5 +194,18 @@ mod tests {
     #[should_panic(expected = "estimation mode")]
     fn null_comm_refuses_exchange() {
         NullComm::new(0, 4).exchange(vec![vec![]; 4]);
+    }
+
+    #[test]
+    fn null_comm_allreduce_min_is_identity() {
+        assert_eq!(NullComm::new(0, 4).allreduce_min(17), 17);
+        assert_eq!(NullComm::new(1, 2).allreduce_min(u32::MAX), u32::MAX);
+    }
+
+    #[test]
+    fn collective_word_packing_roundtrips() {
+        for (lag, mult) in [(0u16, 1u16), (14, 1), (3, 40_000), (u16::MAX, u16::MAX)] {
+            assert_eq!(coll_unpack(coll_pack(lag, mult)), (lag, mult));
+        }
     }
 }

@@ -1,9 +1,15 @@
 //! In-process MPI world: one thread per rank, shared-memory transport.
+//!
+//! The transport is written so the per-step spike path performs no
+//! steady-state heap allocation: `exchange` moves packet buffers through
+//! the mailbox (capacity circulates between ranks and is recycled by the
+//! caller), and `allgather_into` copies into persistent per-member slots
+//! and caller-provided output buffers.
 
 use std::sync::{Arc, Barrier, Condvar, Mutex};
 
 use super::{
-    Communicator, GroupId, Rank, SpikeRecord, TrafficStats, MSG_HEADER_BYTES,
+    Communicator, GroupId, Rank, SpikeRecord, TrafficStats, COLL_WORD_BYTES, MSG_HEADER_BYTES,
     SPIKE_RECORD_BYTES,
 };
 
@@ -12,6 +18,8 @@ struct Shared {
     n: usize,
     /// exchange mailbox: `slots[from][to]`
     slots: Mutex<Vec<Vec<Option<Vec<SpikeRecord>>>>>,
+    /// per-rank contribution slots for `allreduce_min`
+    reduce: Mutex<Vec<u32>>,
     barrier: Barrier,
     groups: Mutex<Vec<Arc<GroupShared>>>,
     group_gate: Condvar,
@@ -19,7 +27,9 @@ struct Shared {
 
 struct GroupShared {
     members: Vec<Rank>,
-    slots: Mutex<Vec<Option<Vec<u32>>>>,
+    /// persistent per-member payload slots (cleared and refilled each
+    /// allgather round; capacity is retained across calls)
+    slots: Mutex<Vec<Vec<u32>>>,
     barrier: Barrier,
 }
 
@@ -34,6 +44,7 @@ impl CommWorld {
         let shared = Arc::new(Shared {
             n,
             slots: Mutex::new(vec![vec![None; n]; n]),
+            reduce: Mutex::new(vec![u32::MAX; n]),
             barrier: Barrier::new(n),
             groups: Mutex::new(Vec::new()),
             group_gate: Condvar::new(),
@@ -71,10 +82,12 @@ impl Communicator for ThreadComm {
         self.shared.n
     }
 
-    fn exchange(&mut self, outgoing: Vec<Vec<SpikeRecord>>) -> Vec<Vec<SpikeRecord>> {
+    fn exchange(&mut self, mut outgoing: Vec<Vec<SpikeRecord>>) -> Vec<Vec<SpikeRecord>> {
         assert_eq!(outgoing.len(), self.shared.n, "one packet slot per rank");
         // account sends (empty packets are suppressed: the paper's
-        // point-to-point scheme only messages processes with spikes)
+        // point-to-point scheme only messages processes with spikes).
+        // A batched interval still costs one message per destination: the
+        // records of every emission step in the interval share one envelope.
         for (to, pkt) in outgoing.iter().enumerate() {
             if to != self.rank && !pkt.is_empty() {
                 self.traffic.p2p_messages += 1;
@@ -82,24 +95,25 @@ impl Communicator for ThreadComm {
                     MSG_HEADER_BYTES + pkt.len() as u64 * SPIKE_RECORD_BYTES;
             }
         }
-        // post sends
+        // post sends: move the packet buffers into the mailbox (the outer
+        // vec is kept and refilled with the receives below)
         {
             let mut slots = self.shared.slots.lock().unwrap();
-            for (to, pkt) in outgoing.into_iter().enumerate() {
-                slots[self.rank][to] = Some(pkt);
+            for (to, pkt) in outgoing.iter_mut().enumerate() {
+                slots[self.rank][to] = Some(std::mem::take(pkt));
             }
         }
         self.shared.barrier.wait();
-        // drain receives
-        let incoming = {
+        // drain receives into the (now empty) outgoing vec
+        {
             let mut slots = self.shared.slots.lock().unwrap();
-            (0..self.shared.n)
-                .map(|from| slots[from][self.rank].take().unwrap_or_default())
-                .collect::<Vec<_>>()
-        };
+            for (from, dst) in outgoing.iter_mut().enumerate() {
+                *dst = slots[from][self.rank].take().unwrap_or_default();
+            }
+        }
         // second barrier: nobody may start the next round before all reads
         self.shared.barrier.wait();
-        incoming
+        outgoing
     }
 
     fn register_group(&mut self, members: Vec<Rank>) -> GroupId {
@@ -114,7 +128,7 @@ impl Communicator for ThreadComm {
             // first rank to arrive creates the group
             groups.push(Arc::new(GroupShared {
                 barrier: Barrier::new(members.len()),
-                slots: Mutex::new(vec![None; members.len()]),
+                slots: Mutex::new(vec![Vec::new(); members.len()]),
                 members,
             }));
             self.shared.group_gate.notify_all();
@@ -127,7 +141,7 @@ impl Communicator for ThreadComm {
         idx
     }
 
-    fn allgather(&mut self, group: GroupId, data: &[u32]) -> Vec<Vec<u32>> {
+    fn allgather_into(&mut self, group: GroupId, data: &[u32], out: &mut Vec<Vec<u32>>) {
         // wait until the group exists (another rank may still be registering)
         let g = {
             let mut groups = self.shared.groups.lock().unwrap();
@@ -145,27 +159,42 @@ impl Communicator for ThreadComm {
         // MPI_Allgather cost model: each member's payload traverses the
         // wire to every other member.
         self.traffic.coll_bytes += MSG_HEADER_BYTES
-            + data.len() as u64 * 4 * (g.members.len() as u64 - 1).max(0);
+            + data.len() as u64 * COLL_WORD_BYTES * (g.members.len() as u64).saturating_sub(1);
         {
             let mut slots = g.slots.lock().unwrap();
-            slots[me] = Some(data.to_vec());
+            let slot = &mut slots[me];
+            slot.clear();
+            slot.extend_from_slice(data);
         }
         g.barrier.wait();
-        let all = {
+        {
             let slots = g.slots.lock().unwrap();
-            slots
-                .iter()
-                .map(|s| s.clone().unwrap_or_default())
-                .collect::<Vec<_>>()
-        };
-        g.barrier.wait();
-        // last pass clears own slot for the next call
-        {
-            let mut slots = g.slots.lock().unwrap();
-            slots[me] = None;
+            if out.len() < slots.len() {
+                out.resize_with(slots.len(), Vec::new);
+            }
+            for (dst, src) in out.iter_mut().zip(slots.iter()) {
+                dst.clear();
+                dst.extend_from_slice(src);
+            }
         }
+        // second barrier: all members must have copied their receives
+        // before anyone overwrites its slot in the next round
         g.barrier.wait();
-        all
+    }
+
+    fn allreduce_min(&mut self, value: u32) -> u32 {
+        {
+            let mut r = self.shared.reduce.lock().unwrap();
+            r[self.rank] = value;
+        }
+        self.shared.barrier.wait();
+        let min = {
+            let r = self.shared.reduce.lock().unwrap();
+            r.iter().copied().min().unwrap()
+        };
+        // all ranks must read before any slot is reused by the next reduce
+        self.shared.barrier.wait();
+        min
     }
 
     fn barrier(&mut self) {
@@ -181,6 +210,7 @@ impl Communicator for ThreadComm {
 mod tests {
     use super::*;
     use std::thread;
+    use std::time::Duration;
 
     fn run_world<F, T>(n: usize, f: F) -> Vec<T>
     where
@@ -198,6 +228,14 @@ mod tests {
         })
     }
 
+    fn rec(pos: u32) -> SpikeRecord {
+        SpikeRecord {
+            pos,
+            mult: 1,
+            lag: 0,
+        }
+    }
+
     #[test]
     fn exchange_routes_point_to_point() {
         let out = run_world(3, |mut c| {
@@ -208,10 +246,7 @@ mod tests {
                     if to == me {
                         vec![]
                     } else {
-                        vec![SpikeRecord {
-                            pos: (100 * me + to) as u32,
-                            mult: 1,
-                        }]
+                        vec![rec((100 * me + to) as u32)]
                     }
                 })
                 .collect();
@@ -235,14 +270,8 @@ mod tests {
             let me = c.rank() as u32;
             let mut got = Vec::new();
             for round in 0..5u32 {
-                let outgoing: Vec<Vec<SpikeRecord>> = (0..4)
-                    .map(|_| {
-                        vec![SpikeRecord {
-                            pos: me * 1000 + round,
-                            mult: 1,
-                        }]
-                    })
-                    .collect();
+                let outgoing: Vec<Vec<SpikeRecord>> =
+                    (0..4).map(|_| vec![rec(me * 1000 + round)]).collect();
                 let incoming = c.exchange(outgoing);
                 got.push(incoming);
             }
@@ -255,6 +284,28 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn exchange_recycles_buffer_capacity() {
+        // the returned outer vec can be cleared and reused as the next
+        // outgoing set — the engine's steady-state allocation-free loop
+        let out = run_world(2, |mut c| {
+            let mut packets: Vec<Vec<SpikeRecord>> = vec![Vec::new(); 2];
+            let mut seen = Vec::new();
+            for round in 0..4u32 {
+                packets[1 - c.rank()].push(rec(round * 10 + c.rank() as u32));
+                let mut incoming = c.exchange(packets);
+                seen.push(incoming[1 - c.rank()][0].pos);
+                for p in incoming.iter_mut() {
+                    p.clear();
+                }
+                packets = incoming;
+            }
+            seen
+        });
+        assert_eq!(out[0], vec![1, 11, 21, 31]);
+        assert_eq!(out[1], vec![0, 10, 20, 30]);
     }
 
     #[test]
@@ -283,9 +334,13 @@ mod tests {
         let out = run_world(2, |mut c| {
             let g = c.register_group(vec![0, 1]);
             let mut acc = Vec::new();
+            // reuse one output buffer across rounds (steady-state path)
+            let mut gathered: Vec<Vec<u32>> = Vec::new();
             for round in 0..3u32 {
-                let all = c.allgather(g, &[c.rank() as u32 + 10 * round]);
-                acc.extend(all.into_iter().flatten());
+                c.allgather_into(g, &[c.rank() as u32 + 10 * round], &mut gathered);
+                for v in &gathered {
+                    acc.extend_from_slice(v);
+                }
             }
             acc
         });
@@ -294,9 +349,103 @@ mod tests {
     }
 
     #[test]
+    fn allgather_while_other_ranks_still_registering() {
+        // Exercises the `group_gate` condvar path: ranks 0–2 call
+        // `allgather` on a group id that no rank has registered yet and
+        // must block until rank 3 (the late registrar) creates it.
+        let out = run_world(4, |mut c| {
+            if c.rank() == 3 {
+                thread::sleep(Duration::from_millis(30));
+                let g = c.register_group(vec![0, 1, 2, 3]);
+                c.allgather(g, &[c.rank() as u32])
+            } else {
+                // group 0 does not exist yet: waits on the condvar
+                c.allgather(0, &[c.rank() as u32])
+            }
+        });
+        for all in &out {
+            let flat: Vec<u32> = all.iter().flatten().copied().collect();
+            assert_eq!(flat, vec![0, 1, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn interleaved_allgathers_across_two_groups() {
+        // Two disjoint groups allgather concurrently in loops, with the
+        // pairs deliberately desynchronized — rounds must never mix.
+        let out = run_world(4, |mut c| {
+            let ga = c.register_group(vec![0, 1]);
+            let gb = c.register_group(vec![2, 3]);
+            let (g, base) = if c.rank() < 2 { (ga, 100) } else { (gb, 200) };
+            let mut acc = Vec::new();
+            for round in 0..20u32 {
+                if c.rank() % 2 == 0 && round % 3 == 0 {
+                    thread::sleep(Duration::from_millis(1));
+                }
+                let all = c.allgather(g, &[base + 10 * round + c.rank() as u32]);
+                acc.push(all.into_iter().flatten().collect::<Vec<u32>>());
+            }
+            acc
+        });
+        for (me, rounds) in out.iter().enumerate() {
+            let peers: [u32; 2] = if me < 2 { [100, 101] } else { [202, 203] };
+            for (round, got) in rounds.iter().enumerate() {
+                let expect: Vec<u32> = peers.iter().map(|p| p + 10 * round as u32).collect();
+                assert_eq!(got, &expect, "rank {me} round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn interleaved_membership_one_rank_in_both_groups() {
+        // rank 0 belongs to both groups and alternates between them while
+        // the other members run their own loops
+        let out = run_world(3, |mut c| {
+            let ga = c.register_group(vec![0, 1]);
+            let gb = c.register_group(vec![0, 2]);
+            let mut acc = Vec::new();
+            for round in 0..10u32 {
+                let tag = c.rank() as u32 * 1000 + round;
+                match c.rank() {
+                    0 => {
+                        // interleave: ga, gb, ga, gb, … within each round
+                        acc.extend(c.allgather(ga, &[tag]).into_iter().flatten());
+                        acc.extend(c.allgather(gb, &[tag]).into_iter().flatten());
+                    }
+                    1 => acc.extend(c.allgather(ga, &[tag]).into_iter().flatten()),
+                    _ => acc.extend(c.allgather(gb, &[tag]).into_iter().flatten()),
+                }
+            }
+            acc
+        });
+        for round in 0..10u32 {
+            let r0 = &out[0][(round as usize) * 4..(round as usize) * 4 + 4];
+            assert_eq!(r0, &[round, 1000 + round, round, 2000 + round]);
+            let r1 = &out[1][(round as usize) * 2..(round as usize) * 2 + 2];
+            assert_eq!(r1, &[round, 1000 + round]);
+            let r2 = &out[2][(round as usize) * 2..(round as usize) * 2 + 2];
+            assert_eq!(r2, &[round, 2000 + round]);
+        }
+    }
+
+    #[test]
+    fn allreduce_min_agrees_everywhere() {
+        let out = run_world(4, |mut c| {
+            let a = c.allreduce_min([17u32, 4, 9, u32::MAX][c.rank()]);
+            // back-to-back reduces must not interfere
+            let b = c.allreduce_min([40u32, 33, 50, 60][c.rank()]);
+            (a, b)
+        });
+        for &(a, b) in &out {
+            assert_eq!(a, 4);
+            assert_eq!(b, 33);
+        }
+    }
+
+    #[test]
     fn traffic_accounting() {
         let out = run_world(2, |mut c| {
-            let pkt = vec![SpikeRecord { pos: 1, mult: 1 }; 10];
+            let pkt = vec![rec(1); 10];
             let mut outgoing = vec![vec![]; 2];
             outgoing[1 - c.rank()] = pkt;
             c.exchange(outgoing);

@@ -116,6 +116,26 @@ impl SynSpec {
         let d = self.delay.draw(rng).round().max(1.0) as u16;
         (w, d)
     }
+
+    /// Conservative lower bound on any delay `draw` can return (draws are
+    /// clamped to ≥ 1 step, so the bound is ≥ 1). Because model scripts
+    /// are SPMD, folding this bound over every `RemoteConnect` call yields
+    /// the same minimum remote delay on every rank without communication —
+    /// the exchange-batching interval bound of DESIGN.md §11.
+    pub fn min_delay_steps(&self) -> u16 {
+        let lo = match self.delay {
+            Dist::Const(x) => x,
+            Dist::Uniform { lo, .. } => lo,
+            // unbounded below; the clamp in draw() makes 1 the true bound
+            Dist::Normal { .. } => 1.0,
+        };
+        let lo = lo.round().max(1.0);
+        if lo >= f64::from(u16::MAX) {
+            u16::MAX
+        } else {
+            lo as u16
+        }
+    }
 }
 
 #[cfg(test)]
@@ -150,6 +170,32 @@ mod tests {
         // no randomness consumed
         let mut rng2 = Rng::new(1);
         assert_eq!(rng.next_u64(), rng2.next_u64());
+    }
+
+    #[test]
+    fn synspec_min_delay_bound_holds_for_draws() {
+        let mut rng = Rng::new(9);
+        for syn in [
+            SynSpec::new(1.0, 15),
+            SynSpec {
+                weight: Dist::Const(1.0),
+                delay: Dist::Uniform { lo: 3.2, hi: 9.0 },
+                port: 0,
+            },
+            SynSpec {
+                weight: Dist::Const(1.0),
+                delay: Dist::Normal { mean: 4.0, sd: 2.0 },
+                port: 0,
+            },
+        ] {
+            let bound = syn.min_delay_steps();
+            assert!(bound >= 1);
+            for _ in 0..500 {
+                let (_, d) = syn.draw(&mut rng);
+                assert!(d >= bound, "draw {d} below bound {bound}");
+            }
+        }
+        assert_eq!(SynSpec::new(1.0, 15).min_delay_steps(), 15);
     }
 
     #[test]

@@ -1,0 +1,100 @@
+//! Persistent per-step scratch state of the propagation pipeline.
+//!
+//! Every buffer the hot loop writes — the spiking-node list, the per-rank
+//! p2p packets, the per-group collective payloads, the staged-translation
+//! buffer, the allgather receive buffers and the canonical-replay cursors
+//! — lives here and is reused across steps, so `step_once` performs no
+//! steady-state heap allocation (buffers grow to the high-water mark of
+//! the run and stay there).
+
+use crate::comm::SpikeRecord;
+
+/// Reusable buffers of the step pipeline, owned by the `Simulator` and
+/// sized once at `prepare()` (or snapshot restore).
+#[derive(Debug, Default)]
+pub struct StepScratch {
+    /// node ids that spiked in the current step (collect phase)
+    pub spiking: Vec<u32>,
+    /// outgoing p2p packet per destination rank; accumulates lag-tagged
+    /// records across the exchange interval, recycled through the
+    /// communicator's mailbox after every exchange
+    pub packets: Vec<Vec<SpikeRecord>>,
+    /// outgoing collective payload per group (`[pos, (lag<<16)|mult]`
+    /// word pairs), accumulated across the exchange interval
+    pub group_bufs: Vec<Vec<u32>>,
+    /// allgather receive buffers: per group, per member, reused forever
+    pub gathered: Vec<Vec<Vec<u32>>>,
+    /// canonical-replay cursor per source rank (records)
+    pub pkt_cursor: Vec<usize>,
+    /// canonical-replay cursor per group per member (payload words)
+    pub coll_cursor: Vec<Vec<usize>>,
+    /// staged host translation of incoming records:
+    /// (image node, multiplicity, lag)
+    pub staged: Vec<(u32, u16, u16)>,
+    /// per-chunk first state index (fixed after `prepare()`; avoids
+    /// re-deriving it from the chunk metadata every step)
+    pub state_bases: Vec<usize>,
+    /// steps accumulated since the last exchange (< exchange interval,
+    /// except transiently inside `step_once`)
+    pub interval_pos: u32,
+}
+
+impl StepScratch {
+    /// Size the scratch for a prepared world (`group_sizes[g]` = member
+    /// count of group `g`).
+    pub fn for_world(n_ranks: usize, group_sizes: &[usize], state_bases: Vec<usize>) -> Self {
+        Self {
+            spiking: Vec::new(),
+            packets: vec![Vec::new(); n_ranks],
+            group_bufs: vec![Vec::new(); group_sizes.len()],
+            gathered: group_sizes.iter().map(|&m| vec![Vec::new(); m]).collect(),
+            pkt_cursor: vec![0; n_ranks],
+            coll_cursor: group_sizes.iter().map(|&m| vec![0; m]).collect(),
+            staged: Vec::new(),
+            state_bases,
+            interval_pos: 0,
+        }
+    }
+
+    /// Whether any routed spike records are waiting for the next exchange.
+    /// (A nonzero `interval_pos` with no pending records is harmless: the
+    /// exchange cadence restarts, which cannot change delivery slots.)
+    pub fn has_pending_records(&self) -> bool {
+        self.packets.iter().any(|p| !p.is_empty())
+            || self.group_bufs.iter().any(|b| !b.is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sized_for_world() {
+        let s = StepScratch::for_world(4, &[3, 2], vec![0, 10]);
+        assert_eq!(s.packets.len(), 4);
+        assert_eq!(s.pkt_cursor.len(), 4);
+        assert_eq!(s.group_bufs.len(), 2);
+        assert_eq!(s.gathered[0].len(), 3);
+        assert_eq!(s.gathered[1].len(), 2);
+        assert_eq!(s.coll_cursor[1].len(), 2);
+        assert_eq!(s.state_bases, vec![0, 10]);
+        assert_eq!(s.interval_pos, 0);
+        assert!(!s.has_pending_records());
+    }
+
+    #[test]
+    fn pending_tracks_both_paths() {
+        let mut s = StepScratch::for_world(2, &[2], vec![0]);
+        assert!(!s.has_pending_records());
+        s.packets[1].push(SpikeRecord {
+            pos: 0,
+            mult: 1,
+            lag: 0,
+        });
+        assert!(s.has_pending_records());
+        s.packets[1].clear();
+        s.group_bufs[0].push(7);
+        assert!(s.has_pending_records());
+    }
+}

@@ -13,7 +13,9 @@ use crate::node::{LifParams, NodeKind, NodeSpace, RingBuffers};
 use crate::remote::{GpuMemLevel, RemoteState};
 use crate::runtime::{Backend, BackendKind, StateChunk};
 use crate::util::rng::Rng;
-use crate::util::timer::{Phase, PhaseTimer, PhaseTimes};
+use crate::util::timer::{Phase, PhaseTimer, PhaseTimes, StepTimes};
+
+use super::scratch::StepScratch;
 
 /// Engine configuration.
 #[derive(Clone, Debug)]
@@ -33,6 +35,12 @@ pub struct SimConfig {
     pub max_delay_steps: u16,
     /// use the offboard (CPU-built) construction baseline of Fig. 3
     pub offboard: bool,
+    /// spike-exchange batching interval in steps: remote exchange runs
+    /// once every `exchange_interval` steps instead of every `dt`.
+    /// `None` (the default) resolves to the minimum remote synaptic delay
+    /// at `prepare()`; an explicit value is clamped to `[1, min_delay]`
+    /// so batching can never reorder deliveries (DESIGN.md §11).
+    pub exchange_interval: Option<u16>,
 }
 
 impl Default for SimConfig {
@@ -46,6 +54,7 @@ impl Default for SimConfig {
             record_spikes: true,
             max_delay_steps: 32,
             offboard: false,
+            exchange_interval: None,
         }
     }
 }
@@ -55,6 +64,9 @@ impl Default for SimConfig {
 pub struct SimResult {
     pub rank: usize,
     pub phases: PhaseTimes,
+    /// per-stage breakdown of the propagation pipeline (input → dynamics
+    /// → collect → route → exchange → deliver), summed over all steps
+    pub step_phases: StepTimes,
     /// wall-clock propagation time / model time (Eq. 21)
     pub rtf: f64,
     pub model_time_ms: f64,
@@ -67,8 +79,12 @@ pub struct SimResult {
     pub host_peak: u64,
     pub spikes: Vec<(u32, u32)>,
     pub n_spikes: u64,
+    pub p2p_messages: u64,
     pub p2p_bytes: u64,
+    pub coll_calls: u64,
     pub coll_bytes: u64,
+    /// effective exchange-batching interval resolved at `prepare()`
+    pub exchange_interval: u16,
 }
 
 /// One population of neurons created by a `create_neurons` call.
@@ -98,7 +114,15 @@ pub struct Simulator {
     /// per chunk: (first node index, first state index, total neurons)
     pub(super) chunk_meta: Vec<(u32, u32, u32)>,
     pub(super) pops: Vec<Population>,
+    /// input accumulation for per-step (Poisson + local) deliveries
     pub(super) buffers: Option<RingBuffers>,
+    /// separate accumulation plane for batched remote deliveries, merged
+    /// with `buffers` at consumption — keeping the two delivery classes in
+    /// distinct accumulators is what makes min-delay exchange batching
+    /// bit-identical to per-step exchange despite f32 non-associativity
+    /// (DESIGN.md §11). `None` on ranks without image neurons, which can
+    /// never receive remote spikes.
+    pub(super) remote_buffers: Option<RingBuffers>,
     pub(super) poissons: Vec<PoissonGenerator>,
     pub recorder: SpikeRecorder,
     pub(super) local_rng: Rng,
@@ -109,6 +133,12 @@ pub struct Simulator {
     pub(super) host_first_count: Option<(Vec<u32>, Vec<u32>)>,
     /// node index -> state index (u32::MAX for non-neurons); built at prepare
     pub(super) state_lut: Vec<u32>,
+    /// persistent hot-loop buffers (see [`StepScratch`]); sized at prepare
+    pub(super) scratch: StepScratch,
+    /// per-stage pipeline times, accumulated by `step_once`
+    pub(super) step_times: StepTimes,
+    /// effective exchange-batching interval (resolved at prepare; 1 until then)
+    pub(super) exchange_every: u16,
     pub(super) step_now: u32,
     pub(super) prepared: bool,
     pub(super) n_state: u32,
@@ -137,6 +167,7 @@ impl Simulator {
             chunk_meta: Vec::new(),
             pops: Vec::new(),
             buffers: None,
+            remote_buffers: None,
             poissons: Vec::new(),
             recorder: SpikeRecorder::new(record),
             local_rng,
@@ -144,6 +175,9 @@ impl Simulator {
             offboard_local,
             host_first_count: None,
             state_lut: Vec::new(),
+            scratch: StepScratch::default(),
+            step_times: StepTimes::default(),
+            exchange_every: 1,
             step_now: 0,
             prepared: false,
             n_state: 0,
@@ -238,6 +272,17 @@ impl Simulator {
         self.timer.stop();
     }
 
+    /// Fold a synapse spec's minimum possible delay into the
+    /// exchange-batching bound *without* performing a remote connection.
+    /// Models that legitimately skip `RemoteConnect` replays they are not
+    /// part of (e.g. the balanced model's point-to-point mode) must call
+    /// this for the skipped calls so the bound — and hence the collective
+    /// exchange cadence — stays identical on every rank.
+    pub fn note_remote_delay(&mut self, syn: &SynSpec) {
+        assert!(!self.prepared);
+        self.remote.note_remote_delay_bound(syn.min_delay_steps());
+    }
+
     /// Register an MPI group for collective communication (collective call:
     /// all ranks, same order, same members).
     pub fn register_group(&mut self, members: Vec<usize>) -> usize {
@@ -269,6 +314,10 @@ impl Simulator {
             return;
         }
         self.timer.enter(Phase::RemoteConnection);
+        // every rank executes every RemoteConnect call (SPMD), so folding
+        // the call's minimum possible delay here yields a world-consistent
+        // exchange-batching bound without any communication
+        self.remote.note_remote_delay_bound(syn.min_delay_steps());
         let me = self.rank();
         if let Some(g) = group {
             // Eq. 12: every member mirrors H
@@ -343,16 +392,88 @@ impl Simulator {
         self.alloc_level_structures();
         self.build_chunks();
         self.rebuild_state_lut();
+        self.resolve_exchange_interval();
+        self.init_scratch();
 
         self.buffers = Some(RingBuffers::new(
             self.n_state as usize,
             self.cfg.max_delay_steps,
             &mut self.tracker,
         ));
+        // the remote plane covers max_delay + interval slots. Strictly,
+        // the lag shift keeps every effective delay <= max_delay (the
+        // shift is always <= 0), so the last interval - 1 slots are
+        // defensive headroom: they turn an interval/delay accounting bug
+        // anywhere in the batching path into a debug assert (ring too
+        // small would silently alias the current slot instead). Remote
+        // spikes are delivered through image neurons' outgoing
+        // connections, so a rank without images never receives any and
+        // skips the plane (and its per-step merge) entirely.
+        let n_state = self.n_state as usize;
+        let remote_slots = self.cfg.max_delay_steps.saturating_add(self.exchange_every - 1);
+        self.remote_buffers = (self.nodes.n_images() > 0)
+            .then(|| RingBuffers::new(n_state, remote_slots, &mut self.tracker));
         self.backend = Some(self.cfg.backend.create()?);
         self.prepared = true;
         self.timer.stop();
         Ok(())
+    }
+
+    /// Minimum synaptic delay of any connection outgoing from an *image*
+    /// neuron on this rank — the receiver-side delay of every remote spike
+    /// this rank delivers. `None` if this rank delivers no remote spikes.
+    /// Used to sanity-check the SPMD delay bound against the delays that
+    /// were actually drawn.
+    pub(super) fn min_remote_delay_local(&self) -> Option<u16> {
+        let src = self.conns.source.as_slice();
+        let del = self.conns.delay.as_slice();
+        src.iter()
+            .zip(del.iter())
+            .filter(|&(&s, _)| self.nodes.is_image(s))
+            .map(|(_, &d)| d)
+            .min()
+    }
+
+    /// Resolve the effective exchange-batching interval from the minimum
+    /// remote synaptic delay, optionally capped by the user's
+    /// `cfg.exchange_interval`. The minimum is the SPMD bound folded over
+    /// every `RemoteConnect` call — identical on every rank by
+    /// construction — so preparation stays communication-free (the paper's
+    /// invariant, and what keeps estimation mode exact).
+    pub(super) fn resolve_exchange_interval(&mut self) {
+        // no remote delivery anywhere: any cadence is safe, batch maximally
+        let auto = match self.remote.remote_delay_bound() {
+            None => self.cfg.max_delay_steps as u32,
+            Some(d) => d as u32,
+        };
+        let auto = auto.clamp(1, self.cfg.max_delay_steps as u32) as u16;
+        self.exchange_every = match self.cfg.exchange_interval {
+            None => auto,
+            Some(k) => k.clamp(1, auto),
+        };
+        debug_assert!(
+            match self.min_remote_delay_local() {
+                None => true,
+                Some(d) => d >= self.exchange_every,
+            },
+            "drawn remote delay below the SPMD delay bound"
+        );
+    }
+
+    /// (Re)build the persistent hot-loop scratch for the current world
+    /// shape; called from `prepare()` and from a snapshot restore.
+    pub(super) fn init_scratch(&mut self) {
+        let state_bases: Vec<usize> =
+            self.chunk_meta.iter().map(|&(_, sb, _)| sb as usize).collect();
+        let group_sizes: Vec<usize> =
+            self.remote.groups.iter().map(|g| g.members.len()).collect();
+        self.scratch = StepScratch::for_world(self.n_ranks(), &group_sizes, state_bases);
+    }
+
+    /// Effective exchange-batching interval in steps (valid after
+    /// `prepare()`): remote spike exchange runs once per this many steps.
+    pub fn exchange_interval(&self) -> u16 {
+        self.exchange_every
     }
 
     /// Level-dependent residency of the per-node first/count structures
@@ -455,6 +576,7 @@ impl Simulator {
         SimResult {
             rank: self.rank(),
             phases: self.timer.times,
+            step_phases: self.step_times,
             rtf,
             model_time_ms,
             n_neurons: self.nodes.n_neurons() as u64,
@@ -466,8 +588,11 @@ impl Simulator {
             host_peak: tr.peak(MemKind::Host),
             spikes: self.recorder.events.clone(),
             n_spikes: self.recorder.events.len() as u64,
+            p2p_messages: self.comm.traffic().p2p_messages,
             p2p_bytes: self.comm.traffic().p2p_bytes,
+            coll_calls: self.comm.traffic().coll_calls,
             coll_bytes: self.comm.traffic().coll_bytes,
+            exchange_interval: self.exchange_every,
         }
     }
 }

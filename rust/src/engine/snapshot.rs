@@ -41,6 +41,13 @@ fn encode_config(cfg: &SimConfig, enc: &mut Encoder) {
     enc.bool(cfg.record_spikes);
     enc.u16(cfg.max_delay_steps);
     enc.bool(cfg.offboard);
+    match cfg.exchange_interval {
+        None => enc.bool(false),
+        Some(k) => {
+            enc.bool(true);
+            enc.u16(k);
+        }
+    }
 }
 
 fn decode_config(dec: &mut Decoder) -> Result<SimConfig> {
@@ -59,6 +66,7 @@ fn decode_config(dec: &mut Decoder) -> Result<SimConfig> {
     let record_spikes = dec.bool()?;
     let max_delay_steps = dec.u16()?;
     let offboard = dec.bool()?;
+    let exchange_interval = if dec.bool()? { Some(dec.u16()?) } else { None };
     Ok(SimConfig {
         dt_ms,
         level,
@@ -68,6 +76,7 @@ fn decode_config(dec: &mut Decoder) -> Result<SimConfig> {
         record_spikes,
         max_delay_steps,
         offboard,
+        exchange_interval,
     })
 }
 
@@ -91,15 +100,24 @@ impl Simulator {
         if !self.prepared {
             bail!("save_snapshot requires prepare() to have run (snapshots capture the prepared network)");
         }
+        if self.scratch.has_pending_records() {
+            bail!(
+                "snapshot requested mid-exchange-interval with routed spike records \
+                 still in flight; call flush_exchange() on every rank first (or use \
+                 save_snapshot, which does)"
+            );
+        }
         let mut w = SnapshotWriter::new();
 
-        // CONF — world identity + engine configuration
+        // CONF — world identity + engine configuration + effective
+        // exchange-batching interval (world-consistent, resolved at prepare)
         let mut e = Encoder::new();
         e.u64(self.rank() as u64);
         e.u64(self.n_ranks() as u64);
         e.u32(self.step_now);
         e.u32(self.n_state);
         encode_config(&self.cfg, &mut e);
+        e.u16(self.exchange_every);
         w.section(tags::CONF, e.into_bytes());
 
         // NODE — node index space
@@ -143,12 +161,21 @@ impl Simulator {
         }
         w.section(tags::CHNK, e.into_bytes());
 
-        // BUFS — spike ring buffers (in-flight spikes included)
+        // BUFS — spike ring buffers: local plane, then the optional remote
+        // plane (absent on ranks without image neurons); in-flight spikes
+        // of both planes included
         let mut e = Encoder::new();
         self.buffers
             .as_ref()
             .expect("prepared simulator has ring buffers")
             .snapshot_encode(&mut e);
+        match self.remote_buffers.as_ref() {
+            None => e.bool(false),
+            Some(rb) => {
+                e.bool(true);
+                rb.snapshot_encode(&mut e);
+            }
+        }
         w.section(tags::BUFS, e.into_bytes());
 
         // DEVS — Poisson generators (with consumed RNG streams) + recorder
@@ -171,7 +198,13 @@ impl Simulator {
     /// Write this rank's snapshot to `path` (atomic: temp file + rename,
     /// so a crash mid-write never leaves a half-snapshot under the final
     /// name — the checksums catch the rest).
-    pub fn save_snapshot(&self, path: &Path) -> Result<()> {
+    ///
+    /// If the exchange interval is mid-flight, pending spike records are
+    /// flushed first (an early exchange is bit-identical — records target
+    /// absolute ring slots), so in a multi-rank world every rank must call
+    /// this at the same step, as the harness save paths do.
+    pub fn save_snapshot(&mut self, path: &Path) -> Result<()> {
+        self.flush_exchange()?;
         let bytes = self.snapshot_to_bytes()?;
         let tmp = path.with_extension("snap.tmp");
         std::fs::write(&tmp, &bytes)
@@ -207,7 +240,11 @@ impl Simulator {
         let step_now = dec.u32()?;
         let n_state = dec.u32()?;
         let cfg = decode_config(&mut dec)?;
+        let exchange_every = dec.u16()?;
         dec.finish()?;
+        if exchange_every == 0 {
+            bail!("snapshot carries an exchange interval of 0 (must be >= 1)");
+        }
         if comm.rank() != rank || comm.size() != n_ranks {
             bail!(
                 "snapshot was taken by rank {rank} of {n_ranks}, but the live communicator \
@@ -271,12 +308,25 @@ impl Simulator {
 
         let mut dec = Decoder::new(reader.section(tags::BUFS)?);
         let buffers = RingBuffers::snapshot_decode(&mut dec, &mut tracker)?;
+        let remote_buffers = if dec.bool()? {
+            Some(RingBuffers::snapshot_decode(&mut dec, &mut tracker)?)
+        } else {
+            None
+        };
         dec.finish()?;
         if buffers.n() != n_state as usize {
             bail!(
                 "ring buffers cover {} state slots, snapshot header says {n_state}",
                 buffers.n()
             );
+        }
+        if let Some(rb) = remote_buffers.as_ref() {
+            if rb.n() != n_state as usize {
+                bail!(
+                    "remote ring plane covers {} state slots, snapshot header says {n_state}",
+                    rb.n()
+                );
+            }
         }
 
         let mut dec = Decoder::new(reader.section(tags::DEVS)?);
@@ -375,6 +425,13 @@ impl Simulator {
                 bail!("Poisson device bound to node {} outside node space of {m}", g.node);
             }
         }
+        if remote_buffers.is_some() != (nodes.n_images() > 0) {
+            bail!(
+                "snapshot {} a remote ring plane but the node space has {} image neurons",
+                if remote_buffers.is_some() { "carries" } else { "lacks" },
+                nodes.n_images()
+            );
+        }
 
         let backend = cfg.backend.create()?;
         let mut sim = Simulator {
@@ -389,6 +446,7 @@ impl Simulator {
             chunk_meta,
             pops,
             buffers: Some(buffers),
+            remote_buffers,
             poissons,
             recorder,
             local_rng,
@@ -396,13 +454,18 @@ impl Simulator {
             offboard_local: None,
             host_first_count: None,
             state_lut: Vec::new(),
+            scratch: Default::default(),
+            step_times: Default::default(),
+            exchange_every,
             step_now,
             prepared: true,
             n_state,
         };
-        // derived structures are recomputed, not persisted
+        // derived structures are recomputed, not persisted (the hot-loop
+        // scratch is always empty at save time: save_snapshot flushes)
         sim.rebuild_state_lut();
         sim.alloc_level_structures();
+        sim.init_scratch();
         sim.timer.stop();
         Ok(sim)
     }

@@ -1,30 +1,54 @@
-//! State propagation: the per-step pipeline with spike routing and
-//! delivery (Appendix F; Figs. 1–2).
+//! State propagation: the phase-structured per-step pipeline with
+//! min-delay exchange batching (Appendix F; Figs. 1–2; DESIGN.md §11).
 //!
-//! Per time step:
-//! 1. service Poisson generators into the ring buffers;
-//! 2. hand the current ring-buffer slots to the dynamics backend (the
-//!    AOT-compiled Pallas kernel via PJRT, or the native reference);
-//! 3. collect spikes; deliver locally through the source-sorted connection
-//!    array; route remotely by map *positions* via the (T, P) tables
-//!    (point-to-point) and the (G, Q) tables (collective);
-//! 4. exchange: all-to-all-v of p2p packets + one Allgather per group;
-//! 5. deliver incoming remote spikes through the image neurons' outgoing
-//!    connections (host-staged on GPU memory levels 0/1).
+//! Per time step, in named stages the timer attributes individually:
+//!
+//! 1. **input** — service Poisson generators into the local ring buffers;
+//! 2. **dynamics** — merge the local and remote accumulation planes and
+//!    hand the result to the dynamics backend (the AOT-compiled Pallas
+//!    kernel via PJRT, or the native reference);
+//! 3. **collect** — gather spike flags into the spiking-node list, record;
+//! 4. **route** — route remotely by map *positions* via the (T, P) tables
+//!    (point-to-point) and (G, Q) tables (collective), tagging every
+//!    record with its emission `lag` within the current exchange interval;
+//! 5. **exchange** — once per `exchange_interval` steps: all-to-all-v of
+//!    p2p packets + one Allgather per group (the interval bound
+//!    `exchange_interval ≤ min remote delay` keeps results bit-identical
+//!    to per-step exchange);
+//! 6. **deliver** — local spikes each step into the local plane; incoming
+//!    remote records at exchange time into the *remote* plane, replayed in
+//!    canonical (lag, σ, group) order, each into ring slot
+//!    `delay + lag + 1 − interval_len` (host-staged on GPU memory levels
+//!    0/1).
+//!
+//! Keeping remote deliveries in their own accumulation plane — merged with
+//! the local plane only at consumption — pins down the f32 summation
+//! order, so batched exchange is bit-identical to per-step exchange even
+//! though it moves remote additions to a later wall-clock point.
+//!
+//! All per-step buffers live in the persistent [`StepScratch`], so the
+//! loop performs no steady-state heap allocation.
 
 use std::time::Instant;
 
-use crate::comm::SpikeRecord;
+use crate::comm::{
+    coll_pack, coll_unpack, SpikeRecord, COLL_WORDS_PER_SPIKE, COLL_WORD_BYTES,
+    SPIKE_RECORD_BYTES,
+};
 use crate::memory::MemKind;
 use crate::node::RingBuffers;
 use crate::remote::GpuMemLevel;
 
+use super::scratch::StepScratch;
 use super::simulator::{SimResult, Simulator};
 use crate::connection::Connections;
-use crate::util::timer::Phase;
+use crate::util::timer::{Phase, StepPhase};
 
-/// Deliver through `node`'s outgoing connections into the ring buffers.
-/// Free function over the split-out pieces so the borrows stay field-local.
+/// Deliver through `node`'s outgoing connections into the given ring
+/// buffers, shifting every delay by `shift` slots (0 for same-step local
+/// delivery; `lag + 1 − interval_len ≤ 0` for batched remote delivery,
+/// which re-anchors the record at its emission step). Free function over
+/// the split-out pieces so the borrows stay field-local.
 #[inline]
 fn deliver_outgoing(
     conns: &Connections,
@@ -32,16 +56,24 @@ fn deliver_outgoing(
     rb: &mut RingBuffers,
     node: u32,
     mult: u16,
+    shift: i32,
 ) {
     let rng = conns.outgoing(node);
     let targets = &conns.target.as_slice()[rng.clone()];
     let ports = &conns.port.as_slice()[rng.clone()];
     let delays = &conns.delay.as_slice()[rng.clone()];
     let weights = &conns.weight.as_slice()[rng];
-    for i in 0..targets.len() {
-        let state = state_lut[targets[i] as usize];
+    for (((&target, &port), &delay), &weight) in
+        targets.iter().zip(ports).zip(delays).zip(weights)
+    {
+        let state = state_lut[target as usize];
         debug_assert!(state != u32::MAX, "connection targets a non-neuron");
-        rb.add(state, ports[i], delays[i], weights[i], mult);
+        let d = delay as i32 + shift;
+        debug_assert!(
+            d >= 1 && rb.supports(d as u16),
+            "shifted delay {d} outside the ring (interval exceeds a remote delay?)"
+        );
+        rb.add(state, port, d as u16, weight, mult);
     }
 }
 
@@ -62,13 +94,15 @@ impl Simulator {
         Ok(self.result(rtf, t_ms))
     }
 
-    /// One integration step.
+    /// One integration step of the pipeline described in the module docs.
     pub fn step_once(&mut self) -> anyhow::Result<()> {
         assert!(self.is_prepared(), "call prepare() before stepping");
         let dt = self.cfg.dt_ms;
-        let n_ranks = self.n_ranks();
+        // emission step within the current exchange interval
+        let lag = self.scratch.interval_pos as u16;
 
-        // ---- 1) devices: Poisson input through their outgoing connections
+        // ---- input: Poisson devices through their outgoing connections
+        let t0 = Instant::now();
         {
             let rb = self.buffers.as_mut().unwrap();
             let conns = &self.conns;
@@ -89,158 +123,357 @@ impl Simulator {
                 }
             }
         }
+        self.step_times.accumulate(StepPhase::Input, t0.elapsed());
 
-        // ---- 2) dynamics: ring-buffer slots -> backend -> spike flags
+        // ---- dynamics: local + remote planes -> backend -> spike flags
+        let t0 = Instant::now();
         {
-            let state_bases: Vec<usize> = (0..self.n_chunks())
-                .map(|i| self.chunk_info(i).1 as usize)
-                .collect();
             let rb = self.buffers.as_mut().unwrap();
             let (ex, inh) = rb.current();
+            // ranks without image neurons never receive remote spikes and
+            // carry no remote plane
+            let remote_cur = self.remote_buffers.as_ref().map(|r| r.current());
             let backend = self.backend.as_mut().unwrap();
+            let state_bases = &self.scratch.state_bases;
             for (i, chunk) in self.chunks.iter_mut().enumerate() {
                 let n = chunk.n;
                 let a = state_bases[i];
                 chunk.w_ex[..n].copy_from_slice(&ex[a..a + n]);
                 chunk.w_in[..n].copy_from_slice(&inh[a..a + n]);
+                // canonical merge: local plane first, then remote plane
+                if let Some((ex_r, inh_r)) = remote_cur {
+                    for (w, &r) in chunk.w_ex[..n].iter_mut().zip(&ex_r[a..a + n]) {
+                        *w += r;
+                    }
+                    for (w, &r) in chunk.w_in[..n].iter_mut().zip(&inh_r[a..a + n]) {
+                        *w += r;
+                    }
+                }
                 backend.step(chunk)?;
             }
             rb.advance();
+            if let Some(rrb) = self.remote_buffers.as_mut() {
+                rrb.advance();
+            }
         }
+        self.step_times.accumulate(StepPhase::Dynamics, t0.elapsed());
 
-        // ---- 3) collect spikes, record, deliver locally, route remotely
-        let mut spiking_nodes: Vec<u32> = Vec::new();
-        for i in 0..self.n_chunks() {
-            let (node_base, _, _) = self.chunk_info(i);
+        // ---- collect: spike flags -> spiking-node list, record
+        let t0 = Instant::now();
+        self.scratch.spiking.clear();
+        for i in 0..self.chunks.len() {
+            let node_base = self.chunk_meta[i].0;
             for off in self.chunks[i].spiking() {
-                spiking_nodes.push(node_base + off);
+                self.scratch.spiking.push(node_base + off);
             }
         }
         let step_now = self.step_now;
-        for &node in &spiking_nodes {
+        for &node in &self.scratch.spiking {
             self.recorder.record(step_now, node);
         }
+        self.step_times.accumulate(StepPhase::Collect, t0.elapsed());
 
+        // ---- route: map positions into lag-tagged packets (Fig. 15b) and
+        // collective word pairs (Fig. 2); records to the same target
+        // position in the same step aggregate via `mult` before send
+        let t0 = Instant::now();
+        {
+            let StepScratch {
+                spiking,
+                packets,
+                group_bufs,
+                ..
+            } = &mut self.scratch;
+            if let Some(tp) = self.remote.tp.as_ref() {
+                for &node in spiking.iter() {
+                    tp.route_into(node, |tau, pos| {
+                        let pkt = &mut packets[tau as usize];
+                        match pkt.last_mut() {
+                            Some(last) if last.pos == pos && last.lag == lag => last.mult += 1,
+                            _ => pkt.push(SpikeRecord { pos, mult: 1, lag }),
+                        }
+                    });
+                }
+            }
+            if let Some(gq) = self.remote.gq.as_ref() {
+                for &node in spiking.iter() {
+                    gq.route_into(node, |g, pos| {
+                        let buf = &mut group_bufs[g as usize];
+                        let n = buf.len();
+                        if n >= COLL_WORDS_PER_SPIKE
+                            && buf[n - 2] == pos
+                            && buf[n - 1] >> 16 == lag as u32
+                        {
+                            buf[n - 1] += 1; // aggregate mult (low half-word)
+                        } else {
+                            buf.push(pos);
+                            buf.push(coll_pack(lag, 1));
+                        }
+                    });
+                }
+            }
+        }
+        self.step_times.accumulate(StepPhase::Route, t0.elapsed());
+
+        // ---- deliver (local): own spikes through the connection array
+        let t0 = Instant::now();
         {
             let rb = self.buffers.as_mut().unwrap();
-            for &node in &spiking_nodes {
-                deliver_outgoing(&self.conns, &self.state_lut, rb, node, 1);
+            for &node in &self.scratch.spiking {
+                deliver_outgoing(&self.conns, &self.state_lut, rb, node, 1, 0);
             }
         }
+        self.step_times.accumulate(StepPhase::Deliver, t0.elapsed());
 
-        // p2p routing: map positions into per-target packets (Fig. 15b)
-        let mut packets: Vec<Vec<SpikeRecord>> = vec![Vec::new(); n_ranks];
-        if let Some(tp) = self.remote.tp.as_ref() {
-            for &node in &spiking_nodes {
-                for (tau, pos) in tp.route(node) {
-                    packets[tau as usize].push(SpikeRecord { pos, mult: 1 });
-                }
-            }
-        }
-
-        // collective routing: positions in H per group (Fig. 2)
-        let n_groups = self.remote.groups.len();
-        let mut group_bufs: Vec<Vec<u32>> = vec![Vec::new(); n_groups];
-        if let Some(gq) = self.remote.gq.as_ref() {
-            for &node in &spiking_nodes {
-                for (g, pos) in gq.route(node) {
-                    group_bufs[g as usize].push(pos);
-                }
-            }
-        }
-
-        // ---- 4) exchange + 5) remote delivery
-        if n_ranks > 1 {
-            let incoming = self.comm_mut().exchange(packets);
-            for (sigma, pkt) in incoming.into_iter().enumerate() {
-                if pkt.is_empty() {
-                    continue;
-                }
-                self.deliver_p2p_packet(sigma, &pkt);
-            }
-        }
-        for g in 0..n_groups {
-            if self.remote.groups[g].member_index(self.rank()).is_none() {
-                continue;
-            }
-            let comm_group = self.remote.groups[g].comm_group;
-            let data = std::mem::take(&mut group_bufs[g]);
-            let all = self.comm_mut().allgather(comm_group, &data);
-            for (mi, positions) in all.into_iter().enumerate() {
-                if self.remote.groups[g].members[mi] == self.rank() {
-                    continue; // own spikes were delivered locally
-                }
-                self.deliver_collective(g, mi, &positions);
-            }
+        // ---- exchange + deliver (remote), once per interval
+        self.scratch.interval_pos += 1;
+        if self.scratch.interval_pos >= self.exchange_every as u32 {
+            self.do_exchange()?;
         }
 
         self.step_now += 1;
         Ok(())
     }
 
+    /// Exchange whatever the current interval has accumulated and deliver
+    /// it, then restart the interval. Safe at any point inside an interval
+    /// because records target absolute ring slots (via their lag), so an
+    /// early exchange cannot change any delivery slot or summation order.
+    ///
+    /// Collective: in a multi-rank world every rank must call this at the
+    /// same step (as [`Simulator::save_snapshot`] does before writing).
+    pub fn flush_exchange(&mut self) -> anyhow::Result<()> {
+        if self.scratch.interval_pos == 0 {
+            return Ok(());
+        }
+        self.do_exchange()
+    }
 
-    /// Deliver an incoming p2p packet from rank σ: positions -> L (image
-    /// index) -> outgoing connections. On GPU memory levels 0/1 the map and
-    /// the first/count structures live in host memory, so the translation
-    /// is staged through the host before the device delivery pass (the
-    /// measured cost of the lower levels).
-    fn deliver_p2p_packet(&mut self, sigma: usize, pkt: &[SpikeRecord]) {
+    /// The exchange + remote-delivery phases over the records accumulated
+    /// since the last exchange (`interval_pos` steps).
+    ///
+    /// Delivery replays the received records in canonical
+    /// (lag, σ, group-member) order — exactly the order per-step exchange
+    /// produces — into the remote accumulation plane, so the f32 sums are
+    /// bit-identical for every `1 ≤ interval ≤ min remote delay`.
+    fn do_exchange(&mut self) -> anyhow::Result<()> {
+        let interval_len = self.scratch.interval_pos;
+        debug_assert!(interval_len >= 1);
+        let n_ranks = self.n_ranks();
+        let me = self.rank();
+        let n_groups = self.remote.groups.len();
+
+        // ---- communication: one all-to-all-v + one allgather per group
+        let t0 = Instant::now();
+        let incoming = if n_ranks > 1 {
+            let outgoing = std::mem::take(&mut self.scratch.packets);
+            Some(self.comm_mut().exchange(outgoing))
+        } else {
+            None
+        };
+        let mut gathered = std::mem::take(&mut self.scratch.gathered);
+        for g in 0..n_groups {
+            if self.remote.groups[g].member_index(me).is_none() {
+                continue;
+            }
+            let comm_group = self.remote.groups[g].comm_group;
+            let data = std::mem::take(&mut self.scratch.group_bufs[g]);
+            self.comm_mut().allgather_into(comm_group, &data, &mut gathered[g]);
+            let mut data = data;
+            data.clear();
+            self.scratch.group_bufs[g] = data;
+        }
+        self.step_times.accumulate(StepPhase::Exchange, t0.elapsed());
+
+        // ---- delivery in canonical (lag, σ, group-member) order
+        let t0 = Instant::now();
+        let mut pkt_cursor = std::mem::take(&mut self.scratch.pkt_cursor);
+        let mut coll_cursor = std::mem::take(&mut self.scratch.coll_cursor);
+        pkt_cursor.clear();
+        pkt_cursor.resize(n_ranks, 0);
+        for c in coll_cursor.iter_mut() {
+            for x in c.iter_mut() {
+                *x = 0;
+            }
+        }
+        for l in 0..interval_len {
+            if let Some(incoming) = incoming.as_ref() {
+                for (sigma, pkt) in incoming.iter().enumerate() {
+                    let start = pkt_cursor[sigma];
+                    let mut end = start;
+                    while end < pkt.len() && pkt[end].lag as u32 == l {
+                        end += 1;
+                    }
+                    pkt_cursor[sigma] = end;
+                    if end > start {
+                        self.deliver_p2p_records(sigma, &pkt[start..end], interval_len);
+                    }
+                }
+            }
+            for g in 0..n_groups {
+                if self.remote.groups[g].member_index(me).is_none() {
+                    continue;
+                }
+                let n_members = self.remote.groups[g].members.len();
+                for mi in 0..n_members {
+                    if self.remote.groups[g].members[mi] == me {
+                        continue; // own spikes were delivered locally
+                    }
+                    let payload = &gathered[g][mi];
+                    let start = coll_cursor[g][mi];
+                    let mut end = start;
+                    while end + 1 < payload.len() && coll_unpack(payload[end + 1]).0 as u32 == l {
+                        end += COLL_WORDS_PER_SPIKE;
+                    }
+                    coll_cursor[g][mi] = end;
+                    if end > start {
+                        // split the borrow: the payload slice lives in the
+                        // locally-owned `gathered`, not in `self`
+                        let records = &gathered[g][mi][start..end];
+                        self.deliver_collective_records(g, mi, records, interval_len);
+                    }
+                }
+            }
+        }
+        if let Some(incoming) = incoming.as_ref() {
+            for (sigma, pkt) in incoming.iter().enumerate() {
+                debug_assert_eq!(
+                    pkt_cursor[sigma],
+                    pkt.len(),
+                    "p2p record with lag >= interval_len from rank {sigma}"
+                );
+            }
+        }
+        #[cfg(debug_assertions)]
+        for g in 0..n_groups {
+            if self.remote.groups[g].member_index(me).is_none() {
+                continue;
+            }
+            for (mi, &member) in self.remote.groups[g].members.iter().enumerate() {
+                if member == me {
+                    continue; // own slot is never consumed by delivery
+                }
+                debug_assert_eq!(
+                    coll_cursor[g][mi],
+                    gathered[g][mi].len(),
+                    "collective record with lag >= interval_len in group {g} member {mi}"
+                );
+            }
+        }
+        self.step_times.accumulate(StepPhase::Deliver, t0.elapsed());
+
+        // recycle all buffers: incoming packets become the next interval's
+        // outgoing packets (steady-state allocation-free)
+        if let Some(mut incoming) = incoming {
+            for p in incoming.iter_mut() {
+                p.clear();
+            }
+            self.scratch.packets = incoming;
+        }
+        self.scratch.gathered = gathered;
+        self.scratch.pkt_cursor = pkt_cursor;
+        self.scratch.coll_cursor = coll_cursor;
+        self.scratch.interval_pos = 0;
+        Ok(())
+    }
+
+    /// Deliver incoming p2p records (one source rank σ, one lag):
+    /// positions -> L (image index) -> outgoing connections into the
+    /// remote plane, shifting delays by `lag + 1 − interval_len`. On GPU
+    /// memory levels 0/1 the map and the first/count structures live in
+    /// host memory, so the translation is staged through the host before
+    /// the device delivery pass (the measured cost of the lower levels).
+    fn deliver_p2p_records(&mut self, sigma: usize, pkt: &[SpikeRecord], interval_len: u32) {
         let host_staged = matches!(self.cfg.level, GpuMemLevel::L0 | GpuMemLevel::L1);
         if host_staged {
-            let bytes = (pkt.len() * 8) as u64;
+            let bytes = pkt.len() as u64 * SPIKE_RECORD_BYTES;
             self.tracker.alloc(MemKind::Host, bytes);
             self.tracker.transient_events += 1;
             self.tracker.free(MemKind::Host, bytes);
         }
+        let mut staged = std::mem::take(&mut self.scratch.staged);
+        staged.clear();
         let map = &self.remote.p2p_maps[sigma];
-        let staged: Vec<(u32, u16)> = pkt.iter().map(|r| (map.l_at(r.pos), r.mult)).collect();
-        let rb = self.buffers.as_mut().unwrap();
+        staged.extend(pkt.iter().map(|r| (map.l_at(r.pos), r.mult, r.lag)));
+        let rb = self
+            .remote_buffers
+            .as_mut()
+            .expect("p2p spike record arrived on a rank without image neurons");
         if host_staged {
             // the host mirror of (first, count) drives the lookup
             let (first, count) = self.host_first_count.as_ref().unwrap();
-            for (image, mult) in staged {
+            for &(image, mult, lag) in &staged {
                 debug_assert!(self.nodes.is_image(image));
+                let shift = lag as i32 + 1 - interval_len as i32;
                 let a = first[image as usize] as usize;
                 let b = a + count[image as usize] as usize;
                 for k in a..b {
                     let state = self.state_lut[self.conns.target.as_slice()[k] as usize];
+                    let d = self.conns.delay.as_slice()[k] as i32 + shift;
+                    debug_assert!(
+                        d >= 1 && rb.supports(d as u16),
+                        "shifted delay {d} outside the ring (interval exceeds a remote delay?)"
+                    );
                     rb.add(
                         state,
                         self.conns.port.as_slice()[k],
-                        self.conns.delay.as_slice()[k],
+                        d as u16,
                         self.conns.weight.as_slice()[k],
                         mult,
                     );
                 }
             }
         } else {
-            for (image, mult) in staged {
+            for &(image, mult, lag) in &staged {
                 debug_assert!(self.nodes.is_image(image));
-                deliver_outgoing(&self.conns, &self.state_lut, rb, image, mult);
+                let shift = lag as i32 + 1 - interval_len as i32;
+                deliver_outgoing(&self.conns, &self.state_lut, rb, image, mult, shift);
             }
         }
+        self.scratch.staged = staged;
     }
 
-    /// Deliver collective spikes from group member `mi`: positions in H ->
-    /// I image array (−1 = no image here) -> outgoing connections (Fig. 2).
-    fn deliver_collective(&mut self, g: usize, mi: usize, positions: &[u32]) {
-        let gs = &self.remote.groups[g];
-        let images: Vec<u32> = positions
-            .iter()
-            .filter_map(|&pos| {
+    /// Deliver incoming collective records (one group member, one lag):
+    /// word pairs `[pos, (lag<<16)|mult]` -> position in H -> I image
+    /// array (−1 = no image here) -> outgoing connections (Fig. 2), with
+    /// the same lag shift into the remote plane as the p2p path.
+    fn deliver_collective_records(
+        &mut self,
+        g: usize,
+        mi: usize,
+        payload: &[u32],
+        interval_len: u32,
+    ) {
+        let mut staged = std::mem::take(&mut self.scratch.staged);
+        staged.clear();
+        {
+            let gs = &self.remote.groups[g];
+            for rec in payload.chunks_exact(COLL_WORDS_PER_SPIKE) {
+                let pos = rec[0];
+                let (lag, mult) = coll_unpack(rec[1]);
                 let img = gs.i_arr[mi][pos as usize];
-                (img >= 0).then_some(img as u32)
-            })
-            .collect();
+                if img >= 0 {
+                    staged.push((img as u32, mult, lag));
+                }
+            }
+        }
         if matches!(self.cfg.level, GpuMemLevel::L0 | GpuMemLevel::L1) {
-            let bytes = (images.len() * 4) as u64;
+            let bytes = staged.len() as u64 * COLL_WORD_BYTES;
             self.tracker.alloc(MemKind::Host, bytes);
             self.tracker.transient_events += 1;
             self.tracker.free(MemKind::Host, bytes);
         }
-        let rb = self.buffers.as_mut().unwrap();
-        for image in images {
-            deliver_outgoing(&self.conns, &self.state_lut, rb, image, 1);
+        // every position may resolve to -1 here (no image on this rank)
+        if !staged.is_empty() {
+            let rb = self
+                .remote_buffers
+                .as_mut()
+                .expect("collective spike resolved to an image on a rank without image neurons");
+            for &(image, mult, lag) in &staged {
+                let shift = lag as i32 + 1 - interval_len as i32;
+                deliver_outgoing(&self.conns, &self.state_lut, rb, image, mult, shift);
+            }
         }
+        self.scratch.staged = staged;
     }
 }

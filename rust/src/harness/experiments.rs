@@ -28,6 +28,14 @@ pub struct Agg {
     pub n_neurons: f64,
     pub n_connections: f64,
     pub n_images: f64,
+    /// communication volume, mean per rank over the whole run
+    pub p2p_messages: f64,
+    pub p2p_bytes: f64,
+    pub coll_calls: f64,
+    pub coll_bytes: f64,
+    /// effective exchange-batching interval (steps; mean over ranks —
+    /// identical on every rank of a world)
+    pub exchange_interval: f64,
 }
 
 /// Aggregate over all ranks of all repeats.
@@ -49,6 +57,11 @@ pub fn aggregate(runs: &[Vec<SimResult>]) -> Agg {
     let (n_neurons, _) = f(&|r| r.n_neurons as f64);
     let (n_connections, _) = f(&|r| r.n_connections as f64);
     let (n_images, _) = f(&|r| r.n_images as f64);
+    let (p2p_messages, _) = f(&|r| r.p2p_messages as f64);
+    let (p2p_bytes, _) = f(&|r| r.p2p_bytes as f64);
+    let (coll_calls, _) = f(&|r| r.coll_calls as f64);
+    let (coll_bytes, _) = f(&|r| r.coll_bytes as f64);
+    let (exchange_interval, _) = f(&|r| r.exchange_interval as f64);
     Agg {
         node_creation_s,
         local_conn_s,
@@ -63,6 +76,11 @@ pub fn aggregate(runs: &[Vec<SimResult>]) -> Agg {
         n_neurons,
         n_connections,
         n_images,
+        p2p_messages,
+        p2p_bytes,
+        coll_calls,
+        coll_bytes,
+        exchange_interval,
     }
 }
 
@@ -85,6 +103,11 @@ impl Agg {
             ("n_neurons", Json::num(self.n_neurons)),
             ("n_connections", Json::num(self.n_connections)),
             ("n_images", Json::num(self.n_images)),
+            ("p2p_messages", Json::num(self.p2p_messages)),
+            ("p2p_bytes", Json::num(self.p2p_bytes)),
+            ("coll_calls", Json::num(self.coll_calls)),
+            ("coll_bytes", Json::num(self.coll_bytes)),
+            ("exchange_interval", Json::num(self.exchange_interval)),
         ])
     }
 }

@@ -152,6 +152,10 @@ pub fn run_construction_only<M: ModelBuilder>(
 /// Run a live cluster and checkpoint it: build, prepare, propagate `t_ms`
 /// (0 = construction cache: save immediately after preparation), then
 /// write one snapshot file per rank into `dir` (`rank_<r>.snap`).
+///
+/// Every rank reaches `save_snapshot` at the same step, which satisfies
+/// its collective flush of any spike records still batched inside the
+/// current exchange interval (see `Simulator::flush_exchange`).
 pub fn run_cluster_with_snapshot<M: ModelBuilder>(
     n_ranks: usize,
     cfg: &SimConfig,
@@ -276,6 +280,28 @@ mod tests {
         );
         assert!(r0.p2p_bytes > 0, "rank 0 must have sent spike packets");
         assert_eq!(r1.n_images, 4);
+    }
+
+    #[test]
+    fn batched_exchange_is_bit_identical_and_cheaper() {
+        // TinyModel's remote synapses have delay 2, so the auto interval
+        // resolves to 2: half the p2p messages, identical spike output
+        let per_step = SimConfig {
+            exchange_interval: Some(1),
+            ..Default::default()
+        };
+        let batched_cfg = SimConfig::default(); // None = auto (min delay)
+        let r1 = run_cluster(2, &per_step, &TinyModel, 50.0).unwrap();
+        let rb = run_cluster(2, &batched_cfg, &TinyModel, 50.0).unwrap();
+        assert_eq!(r1[0].exchange_interval, 1);
+        assert_eq!(rb[0].exchange_interval, 2);
+        for (a, b) in r1.iter().zip(rb.iter()) {
+            assert_eq!(a.spikes, b.spikes, "batching must not change spikes");
+        }
+        // message count never grows (the >=3x reduction on a dense workload
+        // is asserted in tests/it_exchange.rs)
+        assert!(rb[0].p2p_messages <= r1[0].p2p_messages);
+        assert!(rb[0].p2p_bytes <= r1[0].p2p_bytes);
     }
 
     #[test]

@@ -6,6 +6,13 @@
 //! point-to-point and collective spike-routing maps — implemented as a
 //! three-layer Rust + JAX + Pallas stack. See `DESIGN.md` for the full
 //! system inventory and the hardware substitutions.
+//!
+//! State propagation runs as a phase-structured, allocation-free pipeline
+//! with *min-delay exchange batching*: remote spike exchange happens once
+//! per minimum remote synaptic delay instead of every step, with
+//! bit-identical results (`DESIGN.md` §11). Control it with
+//! [`engine::SimConfig::exchange_interval`] or the CLI's
+//! `--exchange-interval` flag (default: auto = the min delay).
 
 pub mod comm;
 pub mod connection;

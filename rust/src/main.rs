@@ -6,13 +6,19 @@
 //!   nestgpu info
 //!   nestgpu balanced  [--ranks N] [--scale S] [--k-scale K] [--level 0..3]
 //!                     [--t-ms T] [--seed X] [--p2p] [--pjrt] [--offboard]
+//!                     [--exchange-interval I]
 //!   nestgpu mam       [--ranks N] [--n-scale S] [--k-scale K] [--chi C]
 //!                     [--t-ms T] [--seed X] [--pjrt] [--offboard]
+//!                     [--exchange-interval I]
 //!   nestgpu estimate  [--live K] [--ranks N] [--scale S] [--level 0..3]
 //!   nestgpu validate  [--seeds N] [--t-ms T]
 //!   nestgpu snapshot save    --dir D [--ranks N] [--scale S] [--k-scale K]
 //!                            [--t-ms T] [--level 0..3] [--seed X] [--p2p]
 //!   nestgpu snapshot resume  --dir D [--t-ms T]
+//!
+//! `--exchange-interval I` batches remote spike exchange to once every I
+//! steps (I is clamped to the minimum remote synaptic delay; 0 or absent =
+//! auto, i.e. the min delay itself — bit-identical to per-step exchange).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -82,11 +88,28 @@ fn sim_config(args: &Args) -> SimConfig {
         backend: backend(args),
         offboard: args.has("offboard"),
         record_spikes: !args.has("no-record"),
+        exchange_interval: match args.get("exchange-interval", 0u16) {
+            0 => None, // auto: once per minimum remote synaptic delay
+            k => Some(k),
+        },
         ..Default::default()
     }
 }
 
 fn print_results(results: &[SimResult], t_ms: f64) {
+    if t_ms > 0.0 {
+        if let Some(r0) = results.first() {
+            println!(
+                "spike exchange: every {} step(s); rank 0 comm volume: {} p2p msgs / {}, \
+                 {} allgathers / {}",
+                r0.exchange_interval,
+                r0.p2p_messages,
+                fmt_bytes(r0.p2p_bytes),
+                r0.coll_calls,
+                fmt_bytes(r0.coll_bytes),
+            );
+        }
+    }
     let mut t = Table::new(
         "results",
         &["rank", "neurons", "conns", "images", "spikes", "rate/s", "RTF", "constr", "dev peak"],

@@ -162,6 +162,12 @@ fn distributed_fixed_indegree(
         if exc_sources { cfg.w_e() } else { cfg.w_i() },
         cfg.delay_steps,
     );
+    if n_ranks > 1 {
+        // fold the pass's delay bound on every rank, even for the (σ, τ)
+        // replays this rank skips below — the exchange-batching interval
+        // derived from the bound must agree across the world
+        sim.note_remote_delay(&syn);
+    }
     let pass_tag = if exc_sources { 0u64 } else { 1u64 };
 
     for tau in 0..n_ranks {

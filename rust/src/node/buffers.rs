@@ -24,6 +24,14 @@ pub struct RingBuffers {
 impl RingBuffers {
     /// `max_delay` in steps (the buffer needs max_delay + 1 slots so that a
     /// delay of `max_delay` lands on a slot not yet consumed).
+    ///
+    /// With min-delay exchange batching the simulator passes
+    /// `cfg.max_delay_steps + exchange_interval − 1` for the *remote*
+    /// delivery plane, so that ring covers `max_delay + interval` slots.
+    /// The lag shift keeps every effective delay ≤ `max_delay`; the extra
+    /// `interval − 1` slots are defensive headroom so a batching
+    /// accounting bug fails the [`RingBuffers::supports`] debug assert
+    /// instead of silently aliasing the slot being consumed.
     pub fn new(n: usize, max_delay: u16, tr: &mut Tracker) -> Self {
         let slots = max_delay as usize + 1;
         let bytes = (n * slots * 2 * 4) as u64;
@@ -43,6 +51,13 @@ impl RingBuffers {
     }
     pub fn n_slots(&self) -> usize {
         self.slots
+    }
+
+    /// Whether a delivery `delay` (after any batching lag shift) lands on
+    /// a slot this ring can hold without aliasing the current step.
+    #[inline]
+    pub fn supports(&self, delay: u16) -> bool {
+        delay >= 1 && (delay as usize) < self.slots
     }
 
     /// Accumulate a spike: `delay` steps from now, on `port`, adding
@@ -170,6 +185,24 @@ mod tests {
             assert_eq!(rb.current().0[0], 0.0);
             rb.advance();
         }
+    }
+
+    #[test]
+    fn interval_headroom_slots_are_usable() {
+        // a ring sized max_delay + interval − 1 (as the simulator does for
+        // exchange batching) accepts deliveries across the whole range
+        let mut tr = Tracker::new();
+        let (max_delay, interval) = (6u16, 4u16);
+        let mut rb = RingBuffers::new(2, max_delay + interval - 1, &mut tr);
+        assert_eq!(rb.n_slots(), (max_delay + interval) as usize);
+        assert!(rb.supports(1) && rb.supports(max_delay + interval - 1));
+        assert!(!rb.supports(0) && !rb.supports(max_delay + interval));
+        rb.add(1, 0, max_delay + interval - 1, 2.5, 1);
+        for _ in 0..(max_delay + interval - 1) {
+            assert_eq!(rb.current().0[1], 0.0);
+            rb.advance();
+        }
+        assert_eq!(rb.current().0[1], 2.5);
     }
 
     #[test]

@@ -163,6 +163,9 @@ impl SourceSeq {
     pub fn len(&self) -> usize {
         self.s.len()
     }
+    pub fn is_empty(&self) -> bool {
+        self.s.is_empty()
+    }
     pub fn as_slice(&self) -> &[u32] {
         self.s.as_slice()
     }

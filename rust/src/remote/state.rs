@@ -64,6 +64,13 @@ pub struct RemoteState {
     pub tp: Option<RoutingTables>,
     /// (N, G, Q) tables, built at preparation (collective routing)
     pub gq: Option<RoutingTables>,
+    /// SPMD-consistent lower bound on every remote synaptic delay: folded
+    /// over the `SynSpec` of every `RemoteConnect` call, which every rank
+    /// executes with identical arguments — so the bound (and hence the
+    /// exchange-batching interval derived from it at preparation) agrees
+    /// across the world without any communication. `None` = no remote
+    /// connectivity. Not persisted: snapshots carry the resolved interval.
+    delay_bound: Option<u16>,
     prepared: bool,
 }
 
@@ -81,6 +88,7 @@ impl RemoteState {
             aligned: AlignedRngs::new(master_seed, n_ranks),
             tp: None,
             gq: None,
+            delay_bound: None,
             prepared: false,
         }
     }
@@ -93,6 +101,21 @@ impl RemoteState {
     }
     pub fn is_prepared(&self) -> bool {
         self.prepared
+    }
+
+    /// Fold one `RemoteConnect` call's minimum possible delay into the
+    /// world-consistent bound (called on *every* rank for every call).
+    pub fn note_remote_delay_bound(&mut self, min_delay: u16) {
+        self.delay_bound = Some(match self.delay_bound {
+            None => min_delay,
+            Some(d) => d.min(min_delay),
+        });
+    }
+
+    /// The folded minimum remote delay bound (`None` = no remote
+    /// connectivity anywhere in the world).
+    pub fn remote_delay_bound(&self) -> Option<u16> {
+        self.delay_bound
     }
 
     /// Register an MPI group for collective spike communication. Must be
@@ -301,7 +324,7 @@ impl RemoteState {
         assert!(!self.prepared, "prepare() called twice");
         // ---- point-to-point: (N, T, P) from S
         let seqs: Vec<(u16, &[u32])> = (0..self.n_ranks)
-            .filter(|&tau| tau != self.me && self.p2p_s[tau].len() > 0)
+            .filter(|&tau| tau != self.me && !self.p2p_s[tau].is_empty())
             .map(|tau| (tau as u16, self.p2p_s[tau].as_slice()))
             .collect();
         self.tp = Some(RoutingTables::build(n_nodes, &seqs, MemKind::Device, tr));
@@ -500,6 +523,9 @@ impl RemoteState {
             aligned,
             tp,
             gq,
+            // not persisted: the simulator's CONF section carries the
+            // resolved exchange interval, which is what a restore needs
+            delay_bound: None,
             prepared,
         })
     }
@@ -781,6 +807,17 @@ mod tests {
             );
         }
         assert_eq!(d.total_map_entries(), st.total_map_entries());
+    }
+
+    #[test]
+    fn delay_bound_folds_minimum() {
+        let (mut st, ..) = setup(GpuMemLevel::L2);
+        assert_eq!(st.remote_delay_bound(), None);
+        st.note_remote_delay_bound(15);
+        st.note_remote_delay_bound(20);
+        assert_eq!(st.remote_delay_bound(), Some(15));
+        st.note_remote_delay_bound(2);
+        assert_eq!(st.remote_delay_bound(), Some(2));
     }
 
     #[test]

@@ -74,6 +74,19 @@ impl RoutingTables {
         self.dest[a..b].iter().copied().zip(self.pos[a..b].iter().copied())
     }
 
+    /// Emit node `s`'s (destination, position) entries into a
+    /// caller-provided sink — the spike-routing hot path, which scatters
+    /// straight into the caller's persistent packet buffers without any
+    /// intermediate allocation.
+    #[inline]
+    pub fn route_into(&self, s: u32, mut emit: impl FnMut(u16, u32)) {
+        let a = self.first[s as usize] as usize;
+        let b = self.first[s as usize + 1] as usize;
+        for (&d, &p) in self.dest[a..b].iter().zip(self.pos[a..b].iter()) {
+            emit(d, p);
+        }
+    }
+
     /// Number of (destination, position) entries for node `s`.
     #[inline]
     pub fn fanout(&self, s: u32) -> usize {
@@ -176,6 +189,22 @@ mod tests {
         assert_eq!(t.route(480).collect::<Vec<_>>(), vec![(1, 1)]);
         assert_eq!(t.route(742).collect::<Vec<_>>(), vec![(1, 2), (2, 0)]);
         assert_eq!(t.total_entries(), 4);
+    }
+
+    #[test]
+    fn route_into_matches_route() {
+        let mut tr = Tracker::new();
+        let t = RoutingTables::build(
+            800,
+            &[(1, &[57, 480, 742][..]), (2, &[742][..])],
+            MemKind::Device,
+            &mut tr,
+        );
+        for s in [0u32, 57, 480, 742, 799] {
+            let mut sunk = Vec::new();
+            t.route_into(s, |d, p| sunk.push((d, p)));
+            assert_eq!(sunk, t.route(s).collect::<Vec<_>>());
+        }
     }
 
     #[test]

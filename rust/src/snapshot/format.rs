@@ -20,7 +20,10 @@
 use anyhow::{bail, Context, Result};
 
 pub const MAGIC: [u8; 8] = *b"NGSNAPv1";
-pub const FORMAT_VERSION: u32 = 1;
+/// Bumped to 2 when the CONF section grew the exchange-batching fields
+/// (`cfg.exchange_interval` + the resolved effective interval); version-1
+/// files predate min-delay exchange batching and are rejected.
+pub const FORMAT_VERSION: u32 = 2;
 
 const TABLE_ENTRY_BYTES: usize = 4 + 8 + 8 + 8;
 

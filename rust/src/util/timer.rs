@@ -147,6 +147,114 @@ impl PhaseTimer {
     }
 }
 
+/// The named stages of the state-propagation pipeline (one `step_once`):
+/// input → dynamics → collect → route → exchange → deliver. Unlike
+/// [`Phase`], these nest *inside* `Phase::Propagation`, so they are
+/// accumulated separately and never contribute to `construction()`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StepPhase {
+    /// device input (Poisson generators) into the ring buffers
+    Input,
+    /// ring-buffer hand-off to the dynamics backend + spike flags
+    Dynamics,
+    /// spike collection and recording
+    Collect,
+    /// remote routing: map positions into p2p packets / group buffers
+    Route,
+    /// communication: all-to-all-v + per-group allgathers
+    Exchange,
+    /// ring-buffer delivery (local spikes + incoming remote spikes)
+    Deliver,
+}
+
+pub const ALL_STEP_PHASES: [StepPhase; 6] = [
+    StepPhase::Input,
+    StepPhase::Dynamics,
+    StepPhase::Collect,
+    StepPhase::Route,
+    StepPhase::Exchange,
+    StepPhase::Deliver,
+];
+
+impl StepPhase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StepPhase::Input => "input",
+            StepPhase::Dynamics => "dynamics",
+            StepPhase::Collect => "collect",
+            StepPhase::Route => "route",
+            StepPhase::Exchange => "exchange",
+            StepPhase::Deliver => "deliver",
+        }
+    }
+}
+
+/// Accumulated wall-clock time per pipeline stage, over all steps.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTimes {
+    pub input: Duration,
+    pub dynamics: Duration,
+    pub collect: Duration,
+    pub route: Duration,
+    pub exchange: Duration,
+    pub deliver: Duration,
+}
+
+impl StepTimes {
+    pub fn get(&self, p: StepPhase) -> Duration {
+        match p {
+            StepPhase::Input => self.input,
+            StepPhase::Dynamics => self.dynamics,
+            StepPhase::Collect => self.collect,
+            StepPhase::Route => self.route,
+            StepPhase::Exchange => self.exchange,
+            StepPhase::Deliver => self.deliver,
+        }
+    }
+
+    fn slot(&mut self, p: StepPhase) -> &mut Duration {
+        match p {
+            StepPhase::Input => &mut self.input,
+            StepPhase::Dynamics => &mut self.dynamics,
+            StepPhase::Collect => &mut self.collect,
+            StepPhase::Route => &mut self.route,
+            StepPhase::Exchange => &mut self.exchange,
+            StepPhase::Deliver => &mut self.deliver,
+        }
+    }
+
+    /// Accumulate `elapsed` into stage `p`.
+    pub fn accumulate(&mut self, p: StepPhase, elapsed: Duration) {
+        *self.slot(p) += elapsed;
+    }
+
+    /// Sum over all pipeline stages.
+    pub fn total(&self) -> Duration {
+        ALL_STEP_PHASES.iter().map(|&p| self.get(p)).sum()
+    }
+
+    pub fn add(&mut self, other: &StepTimes) {
+        for p in ALL_STEP_PHASES {
+            *self.slot(p) += other.get(p);
+        }
+    }
+
+    /// Element-wise mean over a set of per-rank stage breakdowns.
+    pub fn mean(all: &[StepTimes]) -> StepTimes {
+        let mut out = StepTimes::default();
+        if all.is_empty() {
+            return out;
+        }
+        for t in all {
+            out.add(t);
+        }
+        for p in ALL_STEP_PHASES {
+            *out.slot(p) = out.get(p) / all.len() as u32;
+        }
+        out
+    }
+}
+
 /// Simple wall-clock stopwatch for benches.
 pub struct Stopwatch(Instant);
 
@@ -200,6 +308,19 @@ mod tests {
         pt.propagation = Duration::from_secs(10);
         assert_eq!(pt.construction(), Duration::from_secs(3));
         assert_eq!(pt.creation_and_connection(), Duration::from_secs(1));
+    }
+
+    #[test]
+    fn step_times_accumulate_and_total() {
+        let mut st = StepTimes::default();
+        st.accumulate(StepPhase::Route, Duration::from_millis(2));
+        st.accumulate(StepPhase::Exchange, Duration::from_millis(3));
+        st.accumulate(StepPhase::Exchange, Duration::from_millis(1));
+        assert_eq!(st.route, Duration::from_millis(2));
+        assert_eq!(st.exchange, Duration::from_millis(4));
+        assert_eq!(st.total(), Duration::from_millis(6));
+        let m = StepTimes::mean(&[st, StepTimes::default()]);
+        assert_eq!(m.exchange, Duration::from_millis(2));
     }
 
     #[test]

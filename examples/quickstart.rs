@@ -35,6 +35,10 @@ fn main() -> anyhow::Result<()> {
     let bal = BalancedConfig {
         scale: 0.01,   // 112 neurons per rank
         k_scale: 0.01, // K_in = 113
+        // make the recurrent excitatory synapses plastic with
+        // `stdp: Some(StdpScenario::default())` (trace-based STDP,
+        // DESIGN.md §12; CLI: `nestgpu balanced --stdp` + --stdp-* knobs);
+        // the per-rank weight distribution lands in `SimResult::plastic`
         ..Default::default()
     };
     println!(

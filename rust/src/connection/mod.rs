@@ -9,6 +9,7 @@ pub mod store;
 pub use rules::ConnRule;
 pub use store::Connections;
 
+use crate::plasticity::StdpRule;
 use crate::util::rng::Rng;
 
 /// A set of node indexes used as sources or targets of a connect call.
@@ -93,6 +94,13 @@ impl Dist {
 /// process — the aligned per-(σ,τ) generator is used exclusively for source
 /// neuron indexes (§0.3.1), so synaptic parameter draws never perturb map
 /// alignment.
+///
+/// An optional [`StdpRule`] makes every synapse of the call plastic: the
+/// rule is registered once in the connection store and referenced per
+/// connection, and the [`crate::plasticity`] subsystem evolves the weights
+/// during propagation (DESIGN.md §12). Attaching a rule consumes no
+/// randomness, so a plastic build constructs the exact same network as its
+/// static twin.
 #[derive(Clone, Copy, Debug)]
 pub struct SynSpec {
     pub weight: Dist,
@@ -100,6 +108,9 @@ pub struct SynSpec {
     pub delay: Dist,
     /// receptor port: 0 = excitatory, 1 = inhibitory
     pub port: u8,
+    /// trace-based STDP rule shared by every synapse of this call
+    /// (`None` = static)
+    pub stdp: Option<StdpRule>,
 }
 
 impl SynSpec {
@@ -108,7 +119,14 @@ impl SynSpec {
             weight: Dist::Const(weight),
             delay: Dist::Const(delay_steps as f64),
             port: if weight < 0.0 { 1 } else { 0 },
+            stdp: None,
         }
+    }
+
+    /// Attach a plasticity rule (builder style).
+    pub fn with_stdp(mut self, rule: StdpRule) -> Self {
+        self.stdp = Some(rule);
+        self
     }
 
     pub fn draw(&self, rng: &mut Rng) -> (f32, u16) {
@@ -181,11 +199,13 @@ mod tests {
                 weight: Dist::Const(1.0),
                 delay: Dist::Uniform { lo: 3.2, hi: 9.0 },
                 port: 0,
+                stdp: None,
             },
             SynSpec {
                 weight: Dist::Const(1.0),
                 delay: Dist::Normal { mean: 4.0, sd: 2.0 },
                 port: 0,
+                stdp: None,
             },
         ] {
             let bound = syn.min_delay_steps();
@@ -215,6 +235,7 @@ mod tests {
             weight: Dist::Const(1.0),
             delay: Dist::Const(0.0),
             port: 0,
+            stdp: None,
         };
         let (_, d) = s.draw(&mut rng);
         assert_eq!(d, 1);

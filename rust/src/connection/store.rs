@@ -10,6 +10,7 @@
 
 use crate::memory::tracker::{Tracker, TrackedVec};
 use crate::memory::MemKind;
+use crate::plasticity::{StdpRule, NO_RULE};
 
 /// SoA connection store (one per rank).
 pub struct Connections {
@@ -23,6 +24,12 @@ pub struct Connections {
     /// connections. Length = n_nodes + 1.
     first_out: Vec<u32>,
     sorted: bool,
+    /// per-connection STDP rule id ([`NO_RULE`] = static), materialized
+    /// lazily by the first [`Connections::attach_rule`] so purely static
+    /// networks pay no per-connection overhead
+    rule: Option<TrackedVec<u16>>,
+    /// registered plasticity rules, referenced by `rule` ids
+    rules: Vec<StdpRule>,
 }
 
 impl Connections {
@@ -35,6 +42,8 @@ impl Connections {
             port: TrackedVec::new(MemKind::Device),
             first_out: Vec::new(),
             sorted: false,
+            rule: None,
+            rules: Vec::new(),
         }
     }
 
@@ -67,7 +76,81 @@ impl Connections {
         self.weight.push(weight, tr);
         self.delay.push(delay, tr);
         self.port.push(port, tr);
+        if let Some(r) = self.rule.as_mut() {
+            r.push(NO_RULE, tr);
+        }
         self.sorted = false;
+    }
+
+    /// Register a plasticity rule; returns its id (deduplicated by value).
+    /// The rule parameters are validated here so a bad spec fails at the
+    /// connect call, not mid-propagation.
+    pub fn register_rule(&mut self, rule: StdpRule) -> u16 {
+        rule.validate().expect("invalid STDP rule");
+        if let Some(i) = self.rules.iter().position(|r| *r == rule) {
+            return i as u16;
+        }
+        assert!(
+            self.rules.len() < NO_RULE as usize,
+            "too many distinct STDP rules"
+        );
+        self.rules.push(rule);
+        (self.rules.len() - 1) as u16
+    }
+
+    /// Attach rule `rule_id` to the connections appended since index
+    /// `start` (i.e. `[start, len)` — one connect call's worth). The
+    /// per-connection id array is materialized on first use and kept
+    /// aligned by [`Connections::push`] afterwards.
+    pub fn attach_rule(&mut self, start: usize, rule_id: u16, tr: &mut Tracker) {
+        debug_assert!(rule_id != NO_RULE && (rule_id as usize) < self.rules.len());
+        let n = self.len();
+        debug_assert!(start <= n);
+        let arr = self.rule.get_or_insert_with(|| TrackedVec::new(MemKind::Device));
+        while arr.len() < start {
+            arr.push(NO_RULE, tr);
+        }
+        if arr.len() < n {
+            while arr.len() < n {
+                arr.push(rule_id, tr);
+            }
+        } else {
+            for x in &mut arr.as_mut_slice()[start..n] {
+                *x = rule_id;
+            }
+        }
+    }
+
+    /// Registered plasticity rules (empty = fully static network).
+    pub fn rules(&self) -> &[StdpRule] {
+        &self.rules
+    }
+
+    /// Per-connection rule ids, if any rule was ever attached.
+    pub fn rule_slice(&self) -> Option<&[u16]> {
+        self.rule.as_ref().map(|r| r.as_slice())
+    }
+
+    /// Whether any connection of this store is plastic.
+    pub fn has_plasticity(&self) -> bool {
+        !self.rules.is_empty() && self.rule.is_some()
+    }
+
+    /// Mutable view of the weights array (the plasticity engine's write
+    /// path; everything else in the store stays read-only after
+    /// `prepare()`).
+    pub fn weights_mut(&mut self) -> &mut [f32] {
+        self.weight.as_mut_slice()
+    }
+
+    /// Split borrow for the plastic update hot loops: mutable weights plus
+    /// the (read-only) targets and ports they are keyed by.
+    pub fn weights_with_targets_mut(&mut self) -> (&mut [f32], &[u32], &[u8]) {
+        (
+            self.weight.as_mut_slice(),
+            self.target.as_slice(),
+            self.port.as_slice(),
+        )
     }
 
     /// Rewrite the source ids of connections `[start, len)` through `map`
@@ -131,6 +214,10 @@ impl Connections {
         self.weight.replace(w, tr);
         self.delay.replace(d, tr);
         self.port.replace(p, tr);
+        if let Some(r) = self.rule.as_mut() {
+            let rs = scatter(&perm, r.as_slice());
+            r.replace(rs, tr);
+        }
         tr.free(MemKind::Device, scratch);
         self.sorted = true;
     }
@@ -162,7 +249,10 @@ impl Connections {
         &self.first_out
     }
 
-    /// Serialize the full store (SoA arrays, CSR offsets, sort flag).
+    /// Serialize the full store (SoA arrays, CSR offsets, sort flag; since
+    /// format v3 also the rule registry and per-connection rule ids — the
+    /// v3 fields are strictly appended, so a v2 payload is a prefix of the
+    /// v3 payload of the same static store).
     pub fn snapshot_encode(&self, enc: &mut crate::snapshot::Encoder) {
         enc.bool(self.sorted);
         enc.slice_u32(self.source.as_slice());
@@ -171,13 +261,27 @@ impl Connections {
         enc.slice_u16(self.delay.as_slice());
         enc.slice_u8(self.port.as_slice());
         enc.slice_u32(&self.first_out);
+        enc.seq_len(self.rules.len());
+        for r in &self.rules {
+            r.encode(enc);
+        }
+        match self.rule.as_ref() {
+            None => enc.bool(false),
+            Some(r) => {
+                enc.bool(true);
+                enc.slice_u16(r.as_slice());
+            }
+        }
     }
 
     /// Rebuild a store from [`Connections::snapshot_encode`] output; the
     /// SoA arrays are re-registered with `tr` as device allocations.
+    /// `with_rules` says whether the payload carries the v3 plasticity
+    /// block (format-v2 files predate it and load as all-static).
     pub fn snapshot_decode(
         dec: &mut crate::snapshot::Decoder,
         tr: &mut Tracker,
+        with_rules: bool,
     ) -> anyhow::Result<Self> {
         let sorted = dec.bool()?;
         let mut c = Connections::new();
@@ -193,6 +297,29 @@ impl Connections {
         {
             anyhow::bail!("connection snapshot has mismatched SoA array lengths");
         }
+        if with_rules {
+            let n_rules = dec.seq_len(crate::plasticity::RULE_ENCODED_BYTES)?;
+            for _ in 0..n_rules {
+                c.rules.push(StdpRule::decode(dec)?);
+            }
+            if dec.bool()? {
+                let ids = dec.vec_u16()?;
+                if ids.len() != n {
+                    anyhow::bail!(
+                        "per-connection rule ids cover {} of {n} connections",
+                        ids.len()
+                    );
+                }
+                if let Some(&bad) =
+                    ids.iter().find(|&&id| id != NO_RULE && id as usize >= n_rules)
+                {
+                    anyhow::bail!("connection references unknown STDP rule {bad}");
+                }
+                let mut arr = TrackedVec::new(MemKind::Device);
+                arr.extend_from_slice(&ids, tr);
+                c.rule = Some(arr);
+            }
+        }
         Ok(c)
     }
 
@@ -203,6 +330,7 @@ impl Connections {
             + self.weight.bytes()
             + self.delay.bytes()
             + self.port.bytes()
+            + self.rule.as_ref().map_or(0, |r| r.bytes())
     }
 }
 
@@ -279,7 +407,7 @@ mod tests {
         let bytes = enc.into_bytes();
         let mut tr2 = Tracker::new();
         let mut dec = crate::snapshot::Decoder::new(&bytes);
-        let d = Connections::snapshot_decode(&mut dec, &mut tr2).unwrap();
+        let d = Connections::snapshot_decode(&mut dec, &mut tr2, true).unwrap();
         dec.finish().unwrap();
         assert_eq!(d.source.as_slice(), c.source.as_slice());
         assert_eq!(d.target.as_slice(), c.target.as_slice());
@@ -298,5 +426,82 @@ mod tests {
         c.sort_by_source(4, &mut tr);
         assert_eq!(c.outgoing(3), 0..0);
         assert!(c.is_sorted());
+    }
+
+    fn test_rule(a_plus: f32) -> crate::plasticity::StdpRule {
+        crate::plasticity::StdpRule {
+            tau_plus_ms: 20.0,
+            tau_minus_ms: 20.0,
+            a_plus,
+            a_minus: 0.5,
+            w_min: 0.0,
+            w_max: 10.0,
+            bound: crate::plasticity::WeightBound::Additive,
+        }
+    }
+
+    #[test]
+    fn rules_attach_dedup_and_ride_through_sort() {
+        let (mut c, mut tr) = store_with(&[(2, 0), (0, 1)]);
+        assert!(!c.has_plasticity());
+        let r0 = c.register_rule(test_rule(1.0));
+        // the first two connections stay static; the next two are plastic
+        let start = c.len();
+        c.push(1, 3, 1.0, 1, 0, &mut tr);
+        c.push(0, 4, 1.0, 1, 0, &mut tr);
+        c.attach_rule(start, r0, &mut tr);
+        assert!(c.has_plasticity());
+        // identical rule deduplicates, a different one gets a new id
+        assert_eq!(c.register_rule(test_rule(1.0)), r0);
+        assert_ne!(c.register_rule(test_rule(2.0)), r0);
+        // later pushes stay aligned as static
+        c.push(2, 5, 1.0, 1, 0, &mut tr);
+        assert_eq!(c.rule_slice().unwrap(), &[NO_RULE, NO_RULE, r0, r0, NO_RULE]);
+        // sorting scatters the rule ids with their connections
+        c.sort_by_source(3, &mut tr);
+        let expect: Vec<u16> = c
+            .target
+            .as_slice()
+            .iter()
+            .map(|&t| if t == 3 || t == 4 { r0 } else { NO_RULE })
+            .collect();
+        assert_eq!(c.rule_slice().unwrap(), expect.as_slice());
+        assert_eq!(tr.current(MemKind::Device), c.device_bytes());
+    }
+
+    #[test]
+    fn rules_snapshot_roundtrip_and_v2_prefix() {
+        let (mut c, mut tr) = store_with(&[(0, 1), (1, 0)]);
+        let r = c.register_rule(test_rule(1.5));
+        c.attach_rule(1, r, &mut tr);
+        c.sort_by_source(2, &mut tr);
+        let mut enc = crate::snapshot::Encoder::new();
+        c.snapshot_encode(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut tr2 = Tracker::new();
+        let mut dec = crate::snapshot::Decoder::new(&bytes);
+        let d = Connections::snapshot_decode(&mut dec, &mut tr2, true).unwrap();
+        dec.finish().unwrap();
+        assert_eq!(d.rules(), c.rules());
+        assert_eq!(d.rule_slice(), c.rule_slice());
+        assert_eq!(tr2.current(MemKind::Device), d.device_bytes());
+
+        // a static store's v3 payload is its v2 payload + the empty rules
+        // block, so a v2 reader (with_rules = false) must accept the prefix
+        let (mut s, mut tr3) = store_with(&[(0, 1)]);
+        s.sort_by_source(2, &mut tr3);
+        let mut enc = crate::snapshot::Encoder::new();
+        s.snapshot_encode(&mut enc);
+        let v3 = enc.into_bytes();
+        let mut empty_rules = crate::snapshot::Encoder::new();
+        empty_rules.seq_len(0);
+        empty_rules.bool(false);
+        let v2 = &v3[..v3.len() - empty_rules.len()];
+        let mut tr4 = Tracker::new();
+        let mut dec = crate::snapshot::Decoder::new(v2);
+        let back = Connections::snapshot_decode(&mut dec, &mut tr4, false).unwrap();
+        dec.finish().unwrap();
+        assert!(!back.has_plasticity());
+        assert_eq!(back.target.as_slice(), s.target.as_slice());
     }
 }

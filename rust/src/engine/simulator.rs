@@ -10,8 +10,10 @@ use crate::connection::{ConnRule, Connections, NodeSet, SynSpec};
 use crate::memory::{MemKind, Tracker};
 use crate::node::device::{PoissonGenerator, SpikeRecorder};
 use crate::node::{LifParams, NodeKind, NodeSpace, RingBuffers};
+use crate::plasticity::PlasticityEngine;
 use crate::remote::{GpuMemLevel, RemoteState};
 use crate::runtime::{Backend, BackendKind, StateChunk};
+use crate::stats::weights::WeightSummary;
 use crate::util::rng::Rng;
 use crate::util::timer::{Phase, PhaseTimer, PhaseTimes, StepTimes};
 
@@ -64,8 +66,10 @@ impl Default for SimConfig {
 pub struct SimResult {
     pub rank: usize,
     pub phases: PhaseTimes,
-    /// per-stage breakdown of the propagation pipeline (input → dynamics
-    /// → collect → route → exchange → deliver), summed over all steps
+    /// per-stage breakdown of the propagation pipeline (input →
+    /// pre_update → dynamics → collect → post_update → route → exchange
+    /// → deliver), summed over all steps; dump as JSON with
+    /// `nestgpu phases`
     pub step_phases: StepTimes,
     /// wall-clock propagation time / model time (Eq. 21)
     pub rtf: f64,
@@ -85,6 +89,12 @@ pub struct SimResult {
     pub coll_bytes: u64,
     /// effective exchange-batching interval resolved at `prepare()`
     pub exchange_interval: u16,
+    /// plastic synapses on this rank (0 = fully static run)
+    pub n_plastic: u64,
+    /// distribution summary of the plastic weights after the run
+    /// (`None` on static runs); the hash is the bit-identity witness of
+    /// the STDP determinism tests
+    pub plastic: Option<WeightSummary>,
 }
 
 /// One population of neurons created by a `create_neurons` call.
@@ -133,6 +143,10 @@ pub struct Simulator {
     pub(super) host_first_count: Option<(Vec<u32>, Vec<u32>)>,
     /// node index -> state index (u32::MAX for non-neurons); built at prepare
     pub(super) state_lut: Vec<u32>,
+    /// the STDP subsystem (`Some` iff any connect call attached a rule);
+    /// owns the plastic-synapse index, traces, arrival events and the
+    /// per-step deposit plane (DESIGN.md §12)
+    pub(super) plasticity: Option<PlasticityEngine>,
     /// persistent hot-loop buffers (see [`StepScratch`]); sized at prepare
     pub(super) scratch: StepScratch,
     /// per-stage pipeline times, accumulated by `step_once`
@@ -175,6 +189,7 @@ impl Simulator {
             offboard_local,
             host_first_count: None,
             state_lut: Vec::new(),
+            plasticity: None,
             scratch: StepScratch::default(),
             step_times: StepTimes::default(),
             exchange_every: 1,
@@ -237,7 +252,12 @@ impl Simulator {
     /// Local connection phase (both endpoints on this rank).
     pub fn connect(&mut self, s: &NodeSet, t: &NodeSet, rule: &ConnRule, syn: &SynSpec) {
         assert!(!self.prepared);
+        assert!(
+            syn.stdp.is_none() || self.offboard_local.is_none(),
+            "the offboard construction baseline does not support plastic synapses"
+        );
         self.timer.enter(Phase::LocalConnection);
+        let conn_start = self.conns.len();
         // local draws use the rank-private generator; the rule API takes
         // separate source/target generators (needed for the aligned remote
         // path), so fork an independent source stream off the local one
@@ -268,6 +288,10 @@ impl Simulator {
                 self.conns
                     .push(s.get(sp), t.get(tp), w, d, syn.port, &mut self.tracker);
             }
+        }
+        if let Some(stdp) = syn.stdp {
+            let rid = self.conns.register_rule(stdp);
+            self.conns.attach_rule(conn_start, rid, &mut self.tracker);
         }
         self.timer.stop();
     }
@@ -370,6 +394,14 @@ impl Simulator {
                 }
                 self.tracker.free(MemKind::Host, bytes);
             }
+            if let Some(stdp) = syn.stdp {
+                assert!(
+                    !self.cfg.offboard,
+                    "the offboard construction baseline does not support plastic synapses"
+                );
+                let rid = self.conns.register_rule(stdp);
+                self.conns.attach_rule(conn_start, rid, &mut self.tracker);
+            }
         } else if me == src_rank {
             self.remote
                 .connect_source(tgt_rank, s, t.len(), rule, group, &mut self.tracker);
@@ -394,6 +426,18 @@ impl Simulator {
         self.rebuild_state_lut();
         self.resolve_exchange_interval();
         self.init_scratch();
+        if self.conns.has_plasticity() {
+            self.plasticity = Some(PlasticityEngine::build(
+                &self.conns,
+                &self.nodes,
+                &self.state_lut,
+                self.n_state as usize,
+                self.cfg.max_delay_steps,
+                self.exchange_every,
+                self.cfg.dt_ms,
+                &mut self.tracker,
+            )?);
+        }
 
         self.buffers = Some(RingBuffers::new(
             self.n_state as usize,
@@ -593,6 +637,17 @@ impl Simulator {
             coll_calls: self.comm.traffic().coll_calls,
             coll_bytes: self.comm.traffic().coll_bytes,
             exchange_interval: self.exchange_every,
+            n_plastic: self.plasticity.as_ref().map_or(0, |p| p.n_plastic() as u64),
+            plastic: self
+                .plasticity
+                .as_ref()
+                .map(|p| p.weight_summary(&self.conns)),
         }
+    }
+
+    /// The plasticity engine, when any connect call attached an STDP rule
+    /// (valid after `prepare()`).
+    pub fn plasticity_engine(&self) -> Option<&PlasticityEngine> {
+        self.plasticity.as_ref()
     }
 }

@@ -17,6 +17,7 @@ use crate::connection::Connections;
 use crate::memory::Tracker;
 use crate::node::device::{PoissonGenerator, SpikeRecorder};
 use crate::node::{NodeKind, NodeSpace, RingBuffers};
+use crate::plasticity::PlasticityEngine;
 use crate::remote::levels::ALL_LEVELS;
 use crate::remote::{GpuMemLevel, RemoteState};
 use crate::runtime::{BackendKind, StateChunk};
@@ -192,6 +193,15 @@ impl Simulator {
         e.rng(&self.local_rng);
         w.section(tags::RNGS, e.into_bytes());
 
+        // PLAS — plasticity traces + pending arrival events (only when
+        // the network has plastic synapses; the rules and evolved weights
+        // themselves live in CONN)
+        if let Some(pl) = self.plasticity.as_ref() {
+            let mut e = Encoder::new();
+            pl.snapshot_encode(&mut e);
+            w.section(tags::PLAS, e.into_bytes());
+        }
+
         Ok(w.finish())
     }
 
@@ -281,7 +291,9 @@ impl Simulator {
         dec.finish()?;
 
         let mut dec = Decoder::new(reader.section(tags::CONN)?);
-        let conns = Connections::snapshot_decode(&mut dec, &mut tracker)?;
+        // the v3 plasticity block (rule registry + per-connection rule
+        // ids) is appended to CONN; v2 files predate it and are all-static
+        let conns = Connections::snapshot_decode(&mut dec, &mut tracker, reader.version() >= 3)?;
         dec.finish()?;
 
         let mut dec = Decoder::new(reader.section(tags::REMT)?);
@@ -454,6 +466,7 @@ impl Simulator {
             offboard_local: None,
             host_first_count: None,
             state_lut: Vec::new(),
+            plasticity: None,
             scratch: Default::default(),
             step_times: Default::default(),
             exchange_every,
@@ -466,6 +479,33 @@ impl Simulator {
         sim.rebuild_state_lut();
         sim.alloc_level_structures();
         sim.init_scratch();
+        // plasticity: rebuild the index structures from CONN, then restore
+        // the mutable state (traces + pending arrival events) from PLAS
+        match (sim.conns.has_plasticity(), reader.try_section(tags::PLAS)) {
+            (false, None) => {}
+            (true, Some(payload)) => {
+                let mut pl = PlasticityEngine::build(
+                    &sim.conns,
+                    &sim.nodes,
+                    &sim.state_lut,
+                    sim.n_state as usize,
+                    sim.cfg.max_delay_steps,
+                    sim.exchange_every,
+                    sim.cfg.dt_ms,
+                    &mut sim.tracker,
+                )?;
+                let mut dec = Decoder::new(payload);
+                pl.snapshot_restore(&mut dec, &mut sim.tracker)?;
+                dec.finish()?;
+                sim.plasticity = Some(pl);
+            }
+            (true, None) => {
+                bail!("connection store carries STDP rules but the snapshot has no PLAS section");
+            }
+            (false, Some(_)) => {
+                bail!("snapshot has a PLAS section but no plastic connections");
+            }
+        }
         sim.timer.stop();
         Ok(sim)
     }

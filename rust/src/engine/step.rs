@@ -4,27 +4,40 @@
 //! Per time step, in named stages the timer attributes individually:
 //!
 //! 1. **input** — service Poisson generators into the local ring buffers;
-//! 2. **dynamics** — merge the local and remote accumulation planes and
-//!    hand the result to the dynamics backend (the AOT-compiled Pallas
-//!    kernel via PJRT, or the native reference);
-//! 3. **collect** — gather spike flags into the spiking-node list, record;
-//! 4. **route** — route remotely by map *positions* via the (T, P) tables
+//! 2. **pre_update** — plasticity (when STDP rules are attached): drain
+//!    this step's plastic arrival events in canonical order, depress each
+//!    weight against its target's post trace, bump the synapse's pre
+//!    trace, deposit the PSP with the post-depression weight into the
+//!    plastic plane (DESIGN.md §12);
+//! 3. **dynamics** — merge the local, remote and plastic accumulation
+//!    planes and hand the result to the dynamics backend (the
+//!    AOT-compiled Pallas kernel via PJRT, or the native reference);
+//! 4. **collect** — gather spike flags into the spiking-node list, record;
+//! 5. **post_update** — plasticity: potentiate the spiking neurons'
+//!    incoming plastic synapses against their pre traces, then bump the
+//!    post traces;
+//! 6. **route** — route remotely by map *positions* via the (T, P) tables
 //!    (point-to-point) and (G, Q) tables (collective), tagging every
 //!    record with its emission `lag` within the current exchange interval;
-//! 5. **exchange** — once per `exchange_interval` steps: all-to-all-v of
+//! 7. **exchange** — once per `exchange_interval` steps: all-to-all-v of
 //!    p2p packets + one Allgather per group (the interval bound
 //!    `exchange_interval ≤ min remote delay` keeps results bit-identical
 //!    to per-step exchange);
-//! 6. **deliver** — local spikes each step into the local plane; incoming
+//! 8. **deliver** — local spikes each step into the local plane; incoming
 //!    remote records at exchange time into the *remote* plane, replayed in
 //!    canonical (lag, σ, group) order, each into ring slot
 //!    `delay + lag + 1 − interval_len` (host-staged on GPU memory levels
-//!    0/1).
+//!    0/1). Plastic synapses enqueue arrival events instead of depositing
+//!    (their PSP uses the weight at arrival).
 //!
 //! Keeping remote deliveries in their own accumulation plane — merged with
 //! the local plane only at consumption — pins down the f32 summation
 //! order, so batched exchange is bit-identical to per-step exchange even
-//! though it moves remote additions to a later wall-clock point.
+//! though it moves remote additions to a later wall-clock point. The same
+//! argument extends to plastic runs: arrival events carry their absolute
+//! emission step and replay in the canonical (emission, local-before-
+//! remote, push-order) order, so weight updates and deposits are
+//! step-for-step identical for every admissible exchange interval.
 //!
 //! All per-step buffers live in the persistent [`StepScratch`], so the
 //! loop performs no steady-state heap allocation.
@@ -42,6 +55,7 @@ use crate::remote::GpuMemLevel;
 use super::scratch::StepScratch;
 use super::simulator::{SimResult, Simulator};
 use crate::connection::Connections;
+use crate::plasticity::PlasticityEngine;
 use crate::util::timer::{Phase, StepPhase};
 
 /// Deliver through `node`'s outgoing connections into the given ring
@@ -49,30 +63,48 @@ use crate::util::timer::{Phase, StepPhase};
 /// delivery; `lag + 1 − interval_len ≤ 0` for batched remote delivery,
 /// which re-anchors the record at its emission step). Free function over
 /// the split-out pieces so the borrows stay field-local.
+///
+/// Plastic connections do not deposit here: their PSP must use the weight
+/// at *arrival* (after that step's depression), which is what keeps
+/// batched exchange bit-identical once weights mutate mid-run. They
+/// enqueue an arrival event instead — `emit` is the absolute emission step
+/// (the canonical-order key) and `remote` marks exchanged records, which
+/// replay after local events of the same emission step (DESIGN.md §12).
+#[allow(clippy::too_many_arguments)]
 #[inline]
 fn deliver_outgoing(
     conns: &Connections,
     state_lut: &[u32],
     rb: &mut RingBuffers,
+    mut plast: Option<&mut PlasticityEngine>,
     node: u32,
     mult: u16,
     shift: i32,
+    emit: u32,
+    remote: bool,
 ) {
     let rng = conns.outgoing(node);
+    let first = rng.start;
     let targets = &conns.target.as_slice()[rng.clone()];
     let ports = &conns.port.as_slice()[rng.clone()];
     let delays = &conns.delay.as_slice()[rng.clone()];
     let weights = &conns.weight.as_slice()[rng];
-    for (((&target, &port), &delay), &weight) in
-        targets.iter().zip(ports).zip(delays).zip(weights)
+    for (i, (((&target, &port), &delay), &weight)) in
+        targets.iter().zip(ports).zip(delays).zip(weights).enumerate()
     {
-        let state = state_lut[target as usize];
-        debug_assert!(state != u32::MAX, "connection targets a non-neuron");
         let d = delay as i32 + shift;
         debug_assert!(
             d >= 1 && rb.supports(d as u16),
             "shifted delay {d} outside the ring (interval exceeds a remote delay?)"
         );
+        if let Some(pl) = plast.as_deref_mut() {
+            if let Some(slot) = pl.plastic_slot(first + i) {
+                pl.enqueue(d as usize, slot, emit, mult, remote);
+                continue;
+            }
+        }
+        let state = state_lut[target as usize];
+        debug_assert!(state != u32::MAX, "connection targets a non-neuron");
         rb.add(state, port, d as u16, weight, mult);
     }
 }
@@ -125,7 +157,16 @@ impl Simulator {
         }
         self.step_times.accumulate(StepPhase::Input, t0.elapsed());
 
-        // ---- dynamics: local + remote planes -> backend -> spike flags
+        // ---- pre_update: plastic presynaptic arrivals due this step, in
+        // canonical order — depression + deposits into the plastic plane
+        if let Some(pl) = self.plasticity.as_mut() {
+            let t0 = Instant::now();
+            pl.pre_update(self.step_now as i64, &mut self.conns, &self.state_lut);
+            self.step_times.accumulate(StepPhase::PreUpdate, t0.elapsed());
+        }
+
+        // ---- dynamics: local + remote + plastic planes -> backend ->
+        // spike flags
         let t0 = Instant::now();
         {
             let rb = self.buffers.as_mut().unwrap();
@@ -133,6 +174,13 @@ impl Simulator {
             // ranks without image neurons never receive remote spikes and
             // carry no remote plane
             let remote_cur = self.remote_buffers.as_ref().map(|r| r.current());
+            // third accumulation plane: this step's plastic deposits (made
+            // by pre_update with post-depression weights)
+            let plastic_cur = self
+                .plasticity
+                .as_ref()
+                .filter(|p| p.plane_used())
+                .map(|p| p.plane());
             let backend = self.backend.as_mut().unwrap();
             let state_bases = &self.scratch.state_bases;
             for (i, chunk) in self.chunks.iter_mut().enumerate() {
@@ -140,7 +188,7 @@ impl Simulator {
                 let a = state_bases[i];
                 chunk.w_ex[..n].copy_from_slice(&ex[a..a + n]);
                 chunk.w_in[..n].copy_from_slice(&inh[a..a + n]);
-                // canonical merge: local plane first, then remote plane
+                // canonical merge: local plane, remote plane, plastic plane
                 if let Some((ex_r, inh_r)) = remote_cur {
                     for (w, &r) in chunk.w_ex[..n].iter_mut().zip(&ex_r[a..a + n]) {
                         *w += r;
@@ -149,11 +197,23 @@ impl Simulator {
                         *w += r;
                     }
                 }
+                if let Some((ex_p, inh_p)) = plastic_cur {
+                    for (w, &r) in chunk.w_ex[..n].iter_mut().zip(&ex_p[a..a + n]) {
+                        *w += r;
+                    }
+                    for (w, &r) in chunk.w_in[..n].iter_mut().zip(&inh_p[a..a + n]) {
+                        *w += r;
+                    }
+                }
                 backend.step(chunk)?;
             }
             rb.advance();
             if let Some(rrb) = self.remote_buffers.as_mut() {
                 rrb.advance();
+            }
+            if let Some(pl) = self.plasticity.as_mut() {
+                // zero the consumed plane, advance the arrival event ring
+                pl.end_step();
             }
         }
         self.step_times.accumulate(StepPhase::Dynamics, t0.elapsed());
@@ -172,6 +232,19 @@ impl Simulator {
             self.recorder.record(step_now, node);
         }
         self.step_times.accumulate(StepPhase::Collect, t0.elapsed());
+
+        // ---- post_update: potentiate the spiking neurons' incoming
+        // plastic synapses, then bump their postsynaptic traces
+        if let Some(pl) = self.plasticity.as_mut() {
+            let t0 = Instant::now();
+            pl.post_update(
+                step_now as i64,
+                &self.scratch.spiking,
+                &mut self.conns,
+                &self.state_lut,
+            );
+            self.step_times.accumulate(StepPhase::PostUpdate, t0.elapsed());
+        }
 
         // ---- route: map positions into lag-tagged packets (Fig. 15b) and
         // collective word pairs (Fig. 2); records to the same target
@@ -219,8 +292,20 @@ impl Simulator {
         let t0 = Instant::now();
         {
             let rb = self.buffers.as_mut().unwrap();
+            let mut pl = self.plasticity.as_mut();
+            let emit = self.step_now;
             for &node in &self.scratch.spiking {
-                deliver_outgoing(&self.conns, &self.state_lut, rb, node, 1, 0);
+                deliver_outgoing(
+                    &self.conns,
+                    &self.state_lut,
+                    rb,
+                    pl.as_deref_mut(),
+                    node,
+                    1,
+                    0,
+                    emit,
+                    false,
+                );
             }
         }
         self.step_times.accumulate(StepPhase::Deliver, t0.elapsed());
@@ -228,7 +313,7 @@ impl Simulator {
         // ---- exchange + deliver (remote), once per interval
         self.scratch.interval_pos += 1;
         if self.scratch.interval_pos >= self.exchange_every as u32 {
-            self.do_exchange()?;
+            self.do_exchange(self.step_now)?;
         }
 
         self.step_now += 1;
@@ -246,17 +331,24 @@ impl Simulator {
         if self.scratch.interval_pos == 0 {
             return Ok(());
         }
-        self.do_exchange()
+        // a flush runs *between* steps, so the last step of the pending
+        // interval is the one `step_once` already completed
+        let last_step = self.step_now - 1;
+        self.do_exchange(last_step)
     }
 
     /// The exchange + remote-delivery phases over the records accumulated
-    /// since the last exchange (`interval_pos` steps).
+    /// since the last exchange (`interval_pos` steps); `last_step` is the
+    /// final step of that interval (`step_now` when called inside
+    /// `step_once`, `step_now − 1` from a flush), from which each record's
+    /// absolute emission step `last_step + lag + 1 − interval_len` is
+    /// reconstructed for the plastic arrival events.
     ///
     /// Delivery replays the received records in canonical
     /// (lag, σ, group-member) order — exactly the order per-step exchange
     /// produces — into the remote accumulation plane, so the f32 sums are
     /// bit-identical for every `1 ≤ interval ≤ min remote delay`.
-    fn do_exchange(&mut self) -> anyhow::Result<()> {
+    fn do_exchange(&mut self, last_step: u32) -> anyhow::Result<()> {
         let interval_len = self.scratch.interval_pos;
         debug_assert!(interval_len >= 1);
         let n_ranks = self.n_ranks();
@@ -306,7 +398,7 @@ impl Simulator {
                     }
                     pkt_cursor[sigma] = end;
                     if end > start {
-                        self.deliver_p2p_records(sigma, &pkt[start..end], interval_len);
+                        self.deliver_p2p_records(sigma, &pkt[start..end], interval_len, last_step);
                     }
                 }
             }
@@ -330,7 +422,7 @@ impl Simulator {
                         // split the borrow: the payload slice lives in the
                         // locally-owned `gathered`, not in `self`
                         let records = &gathered[g][mi][start..end];
-                        self.deliver_collective_records(g, mi, records, interval_len);
+                        self.deliver_collective_records(g, mi, records, interval_len, last_step);
                     }
                 }
             }
@@ -383,7 +475,13 @@ impl Simulator {
     /// memory levels 0/1 the map and the first/count structures live in
     /// host memory, so the translation is staged through the host before
     /// the device delivery pass (the measured cost of the lower levels).
-    fn deliver_p2p_records(&mut self, sigma: usize, pkt: &[SpikeRecord], interval_len: u32) {
+    fn deliver_p2p_records(
+        &mut self,
+        sigma: usize,
+        pkt: &[SpikeRecord],
+        interval_len: u32,
+        last_step: u32,
+    ) {
         let host_staged = matches!(self.cfg.level, GpuMemLevel::L0 | GpuMemLevel::L1);
         if host_staged {
             let bytes = pkt.len() as u64 * SPIKE_RECORD_BYTES;
@@ -399,21 +497,29 @@ impl Simulator {
             .remote_buffers
             .as_mut()
             .expect("p2p spike record arrived on a rank without image neurons");
+        let mut pl = self.plasticity.as_mut();
         if host_staged {
             // the host mirror of (first, count) drives the lookup
             let (first, count) = self.host_first_count.as_ref().unwrap();
             for &(image, mult, lag) in &staged {
                 debug_assert!(self.nodes.is_image(image));
                 let shift = lag as i32 + 1 - interval_len as i32;
+                let emit = (last_step as i32 + shift) as u32;
                 let a = first[image as usize] as usize;
                 let b = a + count[image as usize] as usize;
                 for k in a..b {
-                    let state = self.state_lut[self.conns.target.as_slice()[k] as usize];
                     let d = self.conns.delay.as_slice()[k] as i32 + shift;
                     debug_assert!(
                         d >= 1 && rb.supports(d as u16),
                         "shifted delay {d} outside the ring (interval exceeds a remote delay?)"
                     );
+                    if let Some(p) = pl.as_deref_mut() {
+                        if let Some(slot) = p.plastic_slot(k) {
+                            p.enqueue(d as usize, slot, emit, mult, true);
+                            continue;
+                        }
+                    }
+                    let state = self.state_lut[self.conns.target.as_slice()[k] as usize];
                     rb.add(
                         state,
                         self.conns.port.as_slice()[k],
@@ -427,7 +533,18 @@ impl Simulator {
             for &(image, mult, lag) in &staged {
                 debug_assert!(self.nodes.is_image(image));
                 let shift = lag as i32 + 1 - interval_len as i32;
-                deliver_outgoing(&self.conns, &self.state_lut, rb, image, mult, shift);
+                let emit = (last_step as i32 + shift) as u32;
+                deliver_outgoing(
+                    &self.conns,
+                    &self.state_lut,
+                    rb,
+                    pl.as_deref_mut(),
+                    image,
+                    mult,
+                    shift,
+                    emit,
+                    true,
+                );
             }
         }
         self.scratch.staged = staged;
@@ -443,6 +560,7 @@ impl Simulator {
         mi: usize,
         payload: &[u32],
         interval_len: u32,
+        last_step: u32,
     ) {
         let mut staged = std::mem::take(&mut self.scratch.staged);
         staged.clear();
@@ -469,9 +587,21 @@ impl Simulator {
                 .remote_buffers
                 .as_mut()
                 .expect("collective spike resolved to an image on a rank without image neurons");
+            let mut pl = self.plasticity.as_mut();
             for &(image, mult, lag) in &staged {
                 let shift = lag as i32 + 1 - interval_len as i32;
-                deliver_outgoing(&self.conns, &self.state_lut, rb, image, mult, shift);
+                let emit = (last_step as i32 + shift) as u32;
+                deliver_outgoing(
+                    &self.conns,
+                    &self.state_lut,
+                    rb,
+                    pl.as_deref_mut(),
+                    image,
+                    mult,
+                    shift,
+                    emit,
+                    true,
+                );
             }
         }
         self.scratch.staged = staged;

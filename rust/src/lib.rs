@@ -13,6 +13,14 @@
 //! bit-identical results (`DESIGN.md` §11). Control it with
 //! [`engine::SimConfig::exchange_interval`] or the CLI's
 //! `--exchange-interval` flag (default: auto = the min delay).
+//!
+//! Synapses can be plastic: attach a trace-based STDP rule to a connect
+//! call through [`connection::SynSpec::stdp`] (CLI: the `--stdp` knobs of
+//! the balanced model) and the [`plasticity`] subsystem evolves the
+//! weights during propagation — delay-aware for remote synapses, so
+//! batched exchange stays bit-identical (`DESIGN.md` §12). Snapshots
+//! carry the plastic state (format v3; v2 files still load as
+//! all-static).
 
 pub mod comm;
 pub mod connection;
@@ -21,6 +29,7 @@ pub mod harness;
 pub mod memory;
 pub mod models;
 pub mod node;
+pub mod plasticity;
 pub mod remote;
 pub mod runtime;
 pub mod snapshot;

@@ -6,19 +6,30 @@
 //!   nestgpu info
 //!   nestgpu balanced  [--ranks N] [--scale S] [--k-scale K] [--level 0..3]
 //!                     [--t-ms T] [--seed X] [--p2p] [--pjrt] [--offboard]
-//!                     [--exchange-interval I]
+//!                     [--exchange-interval I] [--stdp ...]
 //!   nestgpu mam       [--ranks N] [--n-scale S] [--k-scale K] [--chi C]
 //!                     [--t-ms T] [--seed X] [--pjrt] [--offboard]
 //!                     [--exchange-interval I]
 //!   nestgpu estimate  [--live K] [--ranks N] [--scale S] [--level 0..3]
 //!   nestgpu validate  [--seeds N] [--t-ms T]
+//!   nestgpu phases    [same knobs as balanced] — run the balanced model
+//!                     and dump `SimResult::step_phases` as JSON (per-rank
+//!                     per-phase ns) for bench trajectories
 //!   nestgpu snapshot save    --dir D [--ranks N] [--scale S] [--k-scale K]
 //!                            [--t-ms T] [--level 0..3] [--seed X] [--p2p]
+//!                            [--stdp ...]
 //!   nestgpu snapshot resume  --dir D [--t-ms T]
 //!
 //! `--exchange-interval I` batches remote spike exchange to once every I
 //! steps (I is clamped to the minimum remote synaptic delay; 0 or absent =
 //! auto, i.e. the min delay itself — bit-identical to per-step exchange).
+//!
+//! `--stdp` enables trace-based STDP on the recurrent excitatory synapses
+//! of the balanced model (DESIGN.md §12). Knobs: `--stdp-lambda L`
+//! (learning rate), `--stdp-alpha A` (depression asymmetry),
+//! `--stdp-tau-plus MS` / `--stdp-tau-minus MS` (trace time constants),
+//! `--stdp-wmax-factor F` (w_max = F · w_E), `--stdp-mult`
+//! (multiplicative soft bounds instead of additive + clamp).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -27,11 +38,13 @@ use nestgpu::engine::{SimConfig, SimResult, Simulator};
 use nestgpu::harness::{
     estimate_cluster, run_cluster, run_cluster_from_snapshot, run_cluster_with_snapshot,
 };
-use nestgpu::models::balanced::{build_balanced, BalancedConfig};
+use nestgpu::models::balanced::{build_balanced, BalancedConfig, StdpScenario};
 use nestgpu::models::mam::{MamConfig, MamModel};
 use nestgpu::remote::GpuMemLevel;
 use nestgpu::runtime::BackendKind;
+use nestgpu::util::json::Json;
 use nestgpu::util::table::{fmt_bytes, fmt_secs, Table};
+use nestgpu::util::timer::ALL_STEP_PHASES;
 
 struct Args {
     flags: HashMap<String, String>,
@@ -78,6 +91,65 @@ fn backend(args: &Args) -> BackendKind {
         BackendKind::Pjrt { artifacts }
     } else {
         BackendKind::Native
+    }
+}
+
+/// The `--stdp*` knobs of the balanced model (`None` without `--stdp`).
+fn stdp_scenario(args: &Args) -> Option<StdpScenario> {
+    if !args.has("stdp") {
+        return None;
+    }
+    let d = StdpScenario::default();
+    Some(StdpScenario {
+        lambda: args.get("stdp-lambda", d.lambda),
+        alpha: args.get("stdp-alpha", d.alpha),
+        tau_plus_ms: args.get("stdp-tau-plus", d.tau_plus_ms),
+        tau_minus_ms: args.get("stdp-tau-minus", d.tau_minus_ms),
+        w_max_factor: args.get("stdp-wmax-factor", d.w_max_factor),
+        multiplicative: args.has("stdp-mult"),
+    })
+}
+
+/// Fail fast on invalid `--stdp*` knobs and knob conflicts, before any
+/// rank thread launches (the construction-time checks inside the ranks
+/// would surface as a worker panic instead of a clean CLI error).
+fn check_stdp(args: &Args, bal: &BalancedConfig) -> anyhow::Result<()> {
+    if bal.stdp.is_some() && args.has("offboard") {
+        return Err(anyhow::anyhow!(
+            "--stdp cannot be combined with --offboard (the offboard construction \
+             baseline does not support plastic synapses)"
+        ));
+    }
+    if let Some(rule) = bal.stdp_rule() {
+        rule.validate()
+            .map_err(|e| e.context("invalid --stdp configuration"))?;
+        let w0 = bal.w_e() as f32;
+        if w0 < rule.w_min || w0 > rule.w_max {
+            return Err(anyhow::anyhow!(
+                "--stdp-wmax-factor puts the initial E weight {w0} pA outside \
+                 the STDP bounds [{}, {}] pA",
+                rule.w_min,
+                rule.w_max
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// The balanced-model knobs shared by `balanced`, `phases` and
+/// `snapshot save`.
+fn balanced_config(args: &Args) -> BalancedConfig {
+    BalancedConfig {
+        scale: args.get("scale", 0.01f64),
+        k_scale: args.get("k-scale", 0.01f64),
+        in_degree_scale: args.get("in-degree-scale", 1.0f64),
+        j_pa: args.get("j", BalancedConfig::default().j_pa),
+        g: args.get("g", BalancedConfig::default().g),
+        rate_ext_hz: args.get("rate-ext", BalancedConfig::default().rate_ext_hz),
+        j_ext_pa: args.get("j-ext", BalancedConfig::default().j_ext_pa),
+        collective: !args.has("p2p"),
+        stdp: stdp_scenario(args),
+        ..Default::default()
     }
 }
 
@@ -133,28 +205,40 @@ fn print_results(results: &[SimResult], t_ms: f64) {
         ]);
     }
     t.print();
+    if results.iter().any(|r| r.n_plastic > 0) {
+        let mut t = Table::new(
+            "plastic weights (STDP)",
+            &["rank", "synapses", "mean", "sd", "min", "max", "hash"],
+        );
+        for r in results {
+            if let Some(p) = &r.plastic {
+                t.row(vec![
+                    r.rank.to_string(),
+                    p.n.to_string(),
+                    format!("{:.3}", p.mean),
+                    format!("{:.3}", p.sd),
+                    format!("{:.3}", p.min),
+                    format!("{:.3}", p.max),
+                    format!("{:016x}", p.hash),
+                ]);
+            }
+        }
+        t.print();
+    }
 }
 
 fn cmd_balanced(args: &Args) -> anyhow::Result<()> {
     let ranks = args.get("ranks", 2usize);
-    let bal = BalancedConfig {
-        scale: args.get("scale", 0.01f64),
-        k_scale: args.get("k-scale", 0.01f64),
-        in_degree_scale: args.get("in-degree-scale", 1.0f64),
-        j_pa: args.get("j", BalancedConfig::default().j_pa),
-        g: args.get("g", BalancedConfig::default().g),
-        rate_ext_hz: args.get("rate-ext", BalancedConfig::default().rate_ext_hz),
-        j_ext_pa: args.get("j-ext", BalancedConfig::default().j_ext_pa),
-        collective: !args.has("p2p"),
-        ..Default::default()
-    };
+    let bal = balanced_config(args);
+    check_stdp(args, &bal)?;
     let t_ms = args.get("t-ms", 100.0f64);
     println!(
-        "balanced: {ranks} ranks x {} neurons, K_in {}, {} exchange, level {}",
+        "balanced: {ranks} ranks x {} neurons, K_in {}, {} exchange, level {}{}",
         bal.neurons_per_rank(),
         bal.kin_e() + bal.kin_i(),
         if bal.collective { "collective" } else { "p2p" },
         sim_config(args).level.name(),
+        if bal.stdp.is_some() { ", STDP on E synapses" } else { "" },
     );
     let cfg = sim_config(args);
     let results = run_cluster(
@@ -220,6 +304,57 @@ fn cmd_estimate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `nestgpu phases`: run the balanced model and dump the per-rank
+/// step-phase breakdown as JSON, so bench trajectories can track where
+/// propagation time goes as pipeline phases are added.
+fn cmd_phases(args: &Args) -> anyhow::Result<()> {
+    let ranks = args.get("ranks", 2usize);
+    let bal = balanced_config(args);
+    check_stdp(args, &bal)?;
+    let t_ms = args.get("t-ms", 100.0f64);
+    let cfg = sim_config(args);
+    let stdp_on = bal.stdp.is_some();
+    let results = run_cluster(
+        ranks,
+        &cfg,
+        &move |sim: &mut Simulator| build_balanced(sim, &bal),
+        t_ms,
+    )?;
+    let per_rank: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            let phases: Vec<(&str, Json)> = ALL_STEP_PHASES
+                .iter()
+                .map(|&p| (p.name(), Json::num(r.step_phases.get(p).as_nanos() as f64)))
+                .collect();
+            Json::obj(vec![
+                ("rank", Json::num(r.rank as f64)),
+                ("step_phases_ns", Json::obj(phases)),
+                (
+                    "propagation_ns",
+                    Json::num(r.phases.propagation.as_nanos() as f64),
+                ),
+                ("rtf", Json::num(r.rtf)),
+                ("n_plastic", Json::num(r.n_plastic as f64)),
+            ])
+        })
+        .collect();
+    let out = Json::obj(vec![
+        ("model", Json::str("balanced")),
+        ("ranks", Json::num(ranks as f64)),
+        ("t_ms", Json::num(t_ms)),
+        (
+            "exchange_interval",
+            Json::num(results.first().map_or(0.0, |r| r.exchange_interval as f64)),
+        ),
+        ("stdp", Json::Bool(stdp_on)),
+        ("per_rank", Json::Arr(per_rank)),
+    ]);
+    let text = out.to_string();
+    println!("{text}");
+    Ok(())
+}
+
 fn cmd_snapshot(argv: &[String]) -> anyhow::Result<()> {
     let sub = argv.first().map(|s| s.as_str()).unwrap_or("");
     let args = Args::parse(&argv[1.min(argv.len())..]);
@@ -232,12 +367,8 @@ fn cmd_snapshot(argv: &[String]) -> anyhow::Result<()> {
     match sub {
         "save" => {
             let ranks = args.get("ranks", 2usize);
-            let bal = BalancedConfig {
-                scale: args.get("scale", 0.01f64),
-                k_scale: args.get("k-scale", 0.01f64),
-                collective: !args.has("p2p"),
-                ..Default::default()
-            };
+            let bal = balanced_config(&args);
+            check_stdp(&args, &bal)?;
             // model time to propagate before checkpointing; 0 = pure
             // construction cache (save right after prepare())
             let t_ms = args.get("t-ms", 0.0f64);
@@ -304,6 +435,7 @@ fn main() -> anyhow::Result<()> {
         "balanced" => cmd_balanced(&args),
         "mam" => cmd_mam(&args),
         "estimate" => cmd_estimate(&args),
+        "phases" => cmd_phases(&args),
         "snapshot" => cmd_snapshot(&argv[1.min(argv.len())..]),
         "info" | "--help" | "-h" => {
             cmd_info();
@@ -311,7 +443,8 @@ fn main() -> anyhow::Result<()> {
         }
         other => {
             eprintln!(
-                "unknown subcommand '{other}'; try: info | balanced | mam | estimate | snapshot"
+                "unknown subcommand '{other}'; try: info | balanced | mam | estimate | \
+                 phases | snapshot"
             );
             std::process::exit(2);
         }

@@ -22,6 +22,7 @@
 use crate::connection::{ConnRule, NodeSet, SynSpec};
 use crate::engine::Simulator;
 use crate::node::LifParams;
+use crate::plasticity::{StdpRule, WeightBound};
 use crate::util::rng::Rng;
 
 const BAL_TAG: u64 = 0x62616C61; // "bala"
@@ -29,6 +30,42 @@ const BAL_TAG: u64 = 0x62616C61; // "bala"
 /// Baseline per-scale neuron counts (HPC benchmark).
 pub const NE_PER_SCALE: u32 = 9_000;
 pub const NI_PER_SCALE: u32 = 2_250;
+
+/// STDP configuration of the plastic balanced network: trace-based STDP
+/// on *all* recurrent excitatory (E-sourced) synapses — E→E and E→I.
+/// (NEST's plastic HPC-benchmark variant restricts STDP to E→E; making
+/// every E-sourced synapse of a pass plastic keeps the construction —
+/// and hence the drawn network — identical to the static twin, which is
+/// what the bit-identity tests and the overhead bench rely on.)
+/// Amplitudes are expressed NEST-style relative to `w_max`:
+/// `a₊ = λ·w_max`, `a₋ = α·λ·w_max` (additive), or `a₊ = λ`,
+/// `a₋ = α·λ` (multiplicative soft bounds).
+#[derive(Clone, Copy, Debug)]
+pub struct StdpScenario {
+    /// learning rate λ
+    pub lambda: f64,
+    /// depression/potentiation asymmetry α
+    pub alpha: f64,
+    pub tau_plus_ms: f64,
+    pub tau_minus_ms: f64,
+    /// `w_max = w_max_factor · w_E` (initial weight); `w_min = 0`
+    pub w_max_factor: f64,
+    /// multiplicative (soft) bounds instead of additive + clamp
+    pub multiplicative: bool,
+}
+
+impl Default for StdpScenario {
+    fn default() -> Self {
+        Self {
+            lambda: 0.02,
+            alpha: 1.0,
+            tau_plus_ms: 20.0,
+            tau_minus_ms: 20.0,
+            w_max_factor: 2.0,
+            multiplicative: false,
+        }
+    }
+}
 
 /// Configuration of the scalable balanced network.
 #[derive(Clone, Debug)]
@@ -53,6 +90,11 @@ pub struct BalancedConfig {
     /// exchange spikes with collective MPI (the paper's choice for this
     /// model); false = point-to-point
     pub collective: bool,
+    /// STDP on the recurrent excitatory (E-sourced) synapses, E→E and
+    /// E→I alike (`None` = static run); attaching it changes no
+    /// construction draw, so the plastic network is the static network
+    /// with evolving E-weights
+    pub stdp: Option<StdpScenario>,
 }
 
 impl Default for BalancedConfig {
@@ -69,6 +111,7 @@ impl Default for BalancedConfig {
             j_ext_pa: 40.0,
             delay_steps: 15,
             collective: true,
+            stdp: None,
         }
     }
 }
@@ -99,6 +142,36 @@ impl BalancedConfig {
     /// synapses per rank (recurrent only)
     pub fn synapses_per_rank(&self) -> u64 {
         (self.kin_e() as u64 + self.kin_i() as u64) * self.neurons_per_rank() as u64
+    }
+
+    /// The [`StdpRule`] of the recurrent excitatory synapses, when the
+    /// scenario is plastic.
+    pub fn stdp_rule(&self) -> Option<StdpRule> {
+        self.stdp.map(|s| {
+            let w_max = (self.w_e() * s.w_max_factor) as f32;
+            let (a_plus, a_minus, bound) = if s.multiplicative {
+                (
+                    s.lambda as f32,
+                    (s.alpha * s.lambda) as f32,
+                    WeightBound::Multiplicative,
+                )
+            } else {
+                (
+                    (s.lambda * w_max as f64) as f32,
+                    (s.alpha * s.lambda * w_max as f64) as f32,
+                    WeightBound::Additive,
+                )
+            };
+            StdpRule {
+                tau_plus_ms: s.tau_plus_ms as f32,
+                tau_minus_ms: s.tau_minus_ms as f32,
+                a_plus,
+                a_minus,
+                w_min: 0.0,
+                w_max,
+                bound,
+            }
+        })
     }
 }
 
@@ -158,10 +231,15 @@ fn distributed_fixed_indegree(
     } else {
         (cfg.kin_i(), ne, ni)
     };
-    let syn = SynSpec::new(
+    let mut syn = SynSpec::new(
         if exc_sources { cfg.w_e() } else { cfg.w_i() },
         cfg.delay_steps,
     );
+    if exc_sources {
+        // plastic scenario: STDP on the recurrent excitatory synapses
+        // (both the local and the remote/image-sourced ones)
+        syn.stdp = cfg.stdp_rule();
+    }
     if n_ranks > 1 {
         // fold the pass's delay bound on every rank, even for the (σ, τ)
         // replays this rank skips below — the exchange-batching interval

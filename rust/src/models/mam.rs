@@ -262,6 +262,7 @@ impl MamModel {
                             self.mc.delay_steps(s, dt) as f64
                         ),
                         port: if s % 2 == 1 { 1 } else { 0 },
+                        stdp: None,
                     };
                     sim.connect(&s_set, &t_set, &ConnRule::FixedIndegree { k }, &syn);
                 }
@@ -310,6 +311,7 @@ impl MamModel {
                         weight: crate::connection::Dist::Const(w),
                         delay: crate::connection::Dist::Const(delay),
                         port: 0,
+                        stdp: None,
                     };
                     let rule = ConnRule::FixedIndegree { k };
                     if sigma == tau {

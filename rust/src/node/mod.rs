@@ -1,11 +1,14 @@
-//! Node space, neuron parameters, spike ring buffers and devices.
+//! Node space, neuron parameters, spike ring buffers, plasticity trace
+//! buffers and devices.
 
 pub mod buffers;
 pub mod device;
 pub mod neuron;
+pub mod traces;
 
 pub use buffers::RingBuffers;
 pub use neuron::LifParams;
+pub use traces::TraceBuffers;
 
 /// What a local node index refers to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -1,0 +1,191 @@
+//! Per-neuron plasticity trace buffers (DESIGN.md §12).
+//!
+//! A trace is an exponentially decaying scalar bumped by +1 at every spike
+//! of its neuron: `y(t) = Σ_{t_sp ≤ t} exp(−(t − t_sp)·dt/τ)`. Instead of
+//! decaying every trace every step (an O(N) pass the GPU would fuse into
+//! the dynamics kernel, but which would dominate this host build), the
+//! buffers store the value *at the step of the last bump* and apply the
+//! exact decay `f^Δt` (f = exp(−dt/τ)) lazily at read time. This is exact
+//! — not an approximation — as long as bumps arrive in non-decreasing step
+//! order, which the engine's phase order guarantees (post spikes are
+//! bumped in `post_update`, once per step, in step order).
+//!
+//! The buffers live alongside the spike ring buffers in [`crate::node`]:
+//! both are per-neuron, per-step accumulation state of the propagation
+//! loop, sized at `prepare()`.
+
+use crate::memory::{MemKind, Tracker};
+
+/// Sentinel for "never bumped" (`last` field); the trace reads as 0.
+pub const NEVER: i64 = i64::MIN;
+
+/// Exact lazy decay: the value stored at step `last`, read at step `now`.
+#[inline]
+pub fn decayed(value: f32, last: i64, now: i64, decay_per_step: f64) -> f32 {
+    if last == NEVER {
+        return 0.0;
+    }
+    debug_assert!(now >= last, "trace read before its last bump");
+    // saturate the exponent: gaps beyond i32::MAX steps have decayed to
+    // exactly 0 anyway (decay < 1), and an `as i32` wrap would turn the
+    // huge positive gap into a negative exponent (an inf trace)
+    let gap = (now - last).min(i32::MAX as i64) as i32;
+    (value as f64 * decay_per_step.powi(gap)) as f32
+}
+
+/// One exponential trace per state slot (neuron), with lazy exact decay.
+#[derive(Debug)]
+pub struct TraceBuffers {
+    value: Vec<f32>,
+    /// step of the last bump per slot ([`NEVER`] = no bump yet)
+    last: Vec<i64>,
+    tracked: u64,
+}
+
+impl TraceBuffers {
+    pub fn new(n: usize, tr: &mut Tracker) -> Self {
+        let bytes = (n * (4 + 8)) as u64;
+        tr.alloc(MemKind::Device, bytes);
+        Self {
+            value: vec![0.0; n],
+            last: vec![NEVER; n],
+            tracked: bytes,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.value.len()
+    }
+
+    /// Trace value of slot `i` at step `now`.
+    #[inline]
+    pub fn eval(&self, i: usize, now: i64, decay_per_step: f64) -> f32 {
+        decayed(self.value[i], self.last[i], now, decay_per_step)
+    }
+
+    /// Register a spike of slot `i` at step `now`: decay to `now`, add 1.
+    #[inline]
+    pub fn bump(&mut self, i: usize, now: i64, decay_per_step: f64) {
+        self.value[i] = decayed(self.value[i], self.last[i], now, decay_per_step) + 1.0;
+        self.last[i] = now;
+    }
+
+    pub fn release(&mut self, tr: &mut Tracker) {
+        tr.free(MemKind::Device, self.tracked);
+        self.tracked = 0;
+    }
+
+    /// Serialize values and last-bump steps (mid-run checkpoint state).
+    pub fn snapshot_encode(&self, enc: &mut crate::snapshot::Encoder) {
+        enc.slice_f32(&self.value);
+        enc.seq_len(self.last.len());
+        for &l in &self.last {
+            enc.u64(l as u64);
+        }
+    }
+
+    /// Rebuild from [`TraceBuffers::snapshot_encode`] output.
+    pub fn snapshot_decode(
+        dec: &mut crate::snapshot::Decoder,
+        tr: &mut Tracker,
+    ) -> anyhow::Result<Self> {
+        let value = dec.vec_f32()?;
+        let n = dec.seq_len(8)?;
+        if n != value.len() {
+            anyhow::bail!(
+                "trace buffers inconsistent: {} values but {n} last-bump steps",
+                value.len()
+            );
+        }
+        let mut last = Vec::with_capacity(n);
+        for _ in 0..n {
+            last.push(dec.u64()? as i64);
+        }
+        let bytes = (n * (4 + 8)) as u64;
+        tr.alloc(MemKind::Device, bytes);
+        Ok(Self {
+            value,
+            last,
+            tracked: bytes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DECAY: f64 = 0.9; // per-step factor
+
+    #[test]
+    fn unbumped_trace_reads_zero() {
+        let mut tr = Tracker::new();
+        let t = TraceBuffers::new(3, &mut tr);
+        assert_eq!(t.eval(0, 1_000, DECAY), 0.0);
+    }
+
+    #[test]
+    fn lazy_decay_is_exact() {
+        let mut tr = Tracker::new();
+        let mut t = TraceBuffers::new(1, &mut tr);
+        t.bump(0, 10, DECAY);
+        // value 1 at step 10, read at step 15: 0.9^5
+        let expect = (0.9f64).powi(5) as f32;
+        assert_eq!(t.eval(0, 15, DECAY), expect);
+        // second bump at 15: decayed + 1
+        t.bump(0, 15, DECAY);
+        assert_eq!(t.eval(0, 15, DECAY), expect + 1.0);
+    }
+
+    #[test]
+    fn lazy_equals_stepwise_decay() {
+        let mut tr = Tracker::new();
+        let mut t = TraceBuffers::new(1, &mut tr);
+        let mut reference = 0.0f64;
+        let bumps = [3i64, 7, 8, 20];
+        let mut b = 0;
+        for step in 0..40i64 {
+            if b < bumps.len() && bumps[b] == step {
+                t.bump(0, step, DECAY);
+                reference += 1.0;
+                b += 1;
+            }
+            let lazy = t.eval(0, step, DECAY) as f64;
+            assert!(
+                (lazy - reference).abs() < 1e-5,
+                "step {step}: lazy {lazy} vs stepwise {reference}"
+            );
+            reference *= DECAY;
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrip_continues_identically() {
+        let mut tr = Tracker::new();
+        let mut t = TraceBuffers::new(4, &mut tr);
+        t.bump(1, 5, DECAY);
+        t.bump(3, 9, DECAY);
+        t.bump(1, 9, DECAY);
+        let mut enc = crate::snapshot::Encoder::new();
+        t.snapshot_encode(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut tr2 = Tracker::new();
+        let mut dec = crate::snapshot::Decoder::new(&bytes);
+        let r = TraceBuffers::snapshot_decode(&mut dec, &mut tr2).unwrap();
+        dec.finish().unwrap();
+        assert_eq!(r.n(), t.n());
+        for i in 0..4 {
+            assert_eq!(r.eval(i, 30, DECAY).to_bits(), t.eval(i, 30, DECAY).to_bits());
+        }
+        assert_eq!(tr2.current(MemKind::Device), tr.current(MemKind::Device));
+    }
+
+    #[test]
+    fn memory_tracked_and_released() {
+        let mut tr = Tracker::new();
+        let mut t = TraceBuffers::new(100, &mut tr);
+        assert_eq!(tr.current(MemKind::Device), 100 * 12);
+        t.release(&mut tr);
+        assert_eq!(tr.current(MemKind::Device), 0);
+    }
+}

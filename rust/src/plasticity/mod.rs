@@ -1,0 +1,824 @@
+//! Trace-based STDP plasticity (DESIGN.md §12).
+//!
+//! The first subsystem that mutates construction-time state during
+//! propagation: per-synapse-group [`StdpRule`]s (attached through
+//! [`crate::connection::SynSpec::stdp`]) evolve the connection store's
+//! weights while spikes flow. Two new pipeline phases do the work:
+//!
+//! - **pre_update** — a presynaptic spike *arrives* at a plastic synapse:
+//!   the weight is depressed against the postsynaptic neuron's trace, the
+//!   synapse's presynaptic trace is bumped, and the PSP is deposited with
+//!   the *post-depression* weight;
+//! - **post_update** — a neuron spikes: every incoming plastic synapse is
+//!   potentiated against its presynaptic trace, then the neuron's
+//!   postsynaptic trace is bumped.
+//!
+//! Traces are exponential: the postsynaptic trace lives per neuron in
+//! [`TraceBuffers`]; the presynaptic trace lives per *synapse* (bumped at
+//! arrival, i.e. the per-neuron emission trace seen through that synapse's
+//! own delay — the delay-aware formulation, exactly NEST's
+//! `stdp_synapse` bookkeeping).
+//!
+//! **Delay-aware remote updates.** Plastic deliveries are not applied when
+//! a spike is routed or exchanged but when it *arrives*: every delivery
+//! enqueues a [`PlasticEvent`] into an arrival-step ring ([`EventRing`]),
+//! and `pre_update` drains the current step's slot. Remote records carry
+//! their emission `lag`, so a batched exchange (any
+//! `exchange_interval ≤ min remote delay`) enqueues into exactly the same
+//! arrival slots as per-step exchange — and because events are replayed in
+//! the canonical `(emission step, local-before-remote, push order)` order,
+//! every weight update and every f32 deposit happens at the same step, in
+//! the same order, with the same operands. Plastic runs are therefore
+//! bit-identical across exchange intervals, extending PR 2's
+//! canonical-replay argument to mutable weights.
+
+use anyhow::{bail, Result};
+
+use crate::connection::Connections;
+use crate::memory::{MemKind, Tracker};
+use crate::node::traces::{decayed, TraceBuffers, NEVER};
+use crate::node::{NodeKind, NodeSpace};
+use crate::snapshot::{Decoder, Encoder};
+use crate::stats::weights::WeightSummary;
+
+/// Per-connection rule id meaning "static synapse".
+pub const NO_RULE: u16 = u16::MAX;
+
+/// Weight-update bound handling of an STDP rule.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WeightBound {
+    /// `Δw⁺ = a_plus·K`, `Δw⁻ = −a_minus·y`, clamped to `[w_min, w_max]`
+    Additive,
+    /// soft bounds: `Δw⁺ = a_plus·(w_max − w)·K`,
+    /// `Δw⁻ = −a_minus·(w − w_min)·y`
+    Multiplicative,
+}
+
+/// One trace-based STDP rule, shared by every synapse of a connect call
+/// (registered in the connection store, referenced per connection by id).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StdpRule {
+    /// presynaptic (potentiation) trace time constant (ms)
+    pub tau_plus_ms: f32,
+    /// postsynaptic (depression) trace time constant (ms); must be the
+    /// same for every rule of a rank — the post trace is per *neuron*
+    pub tau_minus_ms: f32,
+    /// potentiation amplitude (pA for [`WeightBound::Additive`];
+    /// dimensionless for [`WeightBound::Multiplicative`])
+    pub a_plus: f32,
+    /// depression amplitude (same units as `a_plus`)
+    pub a_minus: f32,
+    pub w_min: f32,
+    pub w_max: f32,
+    pub bound: WeightBound,
+}
+
+impl StdpRule {
+    /// Potentiation at a postsynaptic spike, given the synapse's
+    /// presynaptic trace value `k_pre`.
+    #[inline]
+    pub fn potentiate(&self, w: f32, k_pre: f32) -> f32 {
+        let dw = match self.bound {
+            WeightBound::Additive => self.a_plus * k_pre,
+            WeightBound::Multiplicative => self.a_plus * (self.w_max - w) * k_pre,
+        };
+        (w + dw).clamp(self.w_min, self.w_max)
+    }
+
+    /// Depression at a presynaptic spike arrival, given the target
+    /// neuron's postsynaptic trace value `y_post`.
+    #[inline]
+    pub fn depress(&self, w: f32, y_post: f32) -> f32 {
+        let dw = match self.bound {
+            WeightBound::Additive => self.a_minus * y_post,
+            WeightBound::Multiplicative => self.a_minus * (w - self.w_min) * y_post,
+        };
+        (w - dw).clamp(self.w_min, self.w_max)
+    }
+
+    /// Parameter sanity (checked when a rule is registered and when one is
+    /// decoded from a snapshot).
+    pub fn validate(&self) -> Result<()> {
+        for x in [
+            self.tau_plus_ms,
+            self.tau_minus_ms,
+            self.a_plus,
+            self.a_minus,
+            self.w_min,
+            self.w_max,
+        ] {
+            if !x.is_finite() {
+                bail!("STDP rule has a non-finite parameter: {self:?}");
+            }
+        }
+        if self.tau_plus_ms <= 0.0 || self.tau_minus_ms <= 0.0 {
+            bail!("STDP time constants must be positive: {self:?}");
+        }
+        if self.w_min > self.w_max {
+            bail!("STDP bounds inverted: w_min {} > w_max {}", self.w_min, self.w_max);
+        }
+        if self.a_plus < 0.0 || self.a_minus < 0.0 {
+            bail!("STDP amplitudes must be non-negative: {self:?}");
+        }
+        Ok(())
+    }
+
+    /// Serialize the rule (snapshot CONN section, format v3).
+    pub fn encode(&self, enc: &mut Encoder) {
+        enc.f32(self.tau_plus_ms);
+        enc.f32(self.tau_minus_ms);
+        enc.f32(self.a_plus);
+        enc.f32(self.a_minus);
+        enc.f32(self.w_min);
+        enc.f32(self.w_max);
+        enc.u8(match self.bound {
+            WeightBound::Additive => 0,
+            WeightBound::Multiplicative => 1,
+        });
+    }
+
+    /// Rebuild from [`StdpRule::encode`] output.
+    pub fn decode(dec: &mut Decoder) -> Result<Self> {
+        let r = StdpRule {
+            tau_plus_ms: dec.f32()?,
+            tau_minus_ms: dec.f32()?,
+            a_plus: dec.f32()?,
+            a_minus: dec.f32()?,
+            w_min: dec.f32()?,
+            w_max: dec.f32()?,
+            bound: match dec.u8()? {
+                0 => WeightBound::Additive,
+                1 => WeightBound::Multiplicative,
+                tag => bail!("unknown STDP bound tag {tag} in snapshot"),
+            },
+        };
+        r.validate()?;
+        Ok(r)
+    }
+}
+
+/// Encoded bytes of one [`StdpRule`] (6 f32 fields + 1 bound tag).
+pub const RULE_ENCODED_BYTES: usize = 6 * 4 + 1;
+
+/// One pending presynaptic arrival at a plastic synapse.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlasticEvent {
+    /// plastic-synapse slot (index into the engine's per-slot arrays)
+    pub slot: u32,
+    /// absolute emission step of the presynaptic spike
+    pub emit: u32,
+    /// push order within the slot (canonical-order tiebreaker)
+    pub seq: u32,
+    /// spike multiplicity (scales the deposited PSP; the STDP update is
+    /// applied once per arrival — neuron sources always have mult 1)
+    pub mult: u16,
+    /// enqueued by the remote-delivery path (exchanged records)
+    pub remote: bool,
+}
+
+/// Arrival-step ring of pending plastic events, advanced once per step in
+/// lockstep with the spike ring buffers. Enqueue offsets are relative to
+/// the *post-advance* cursor of the current step (exactly the ring-buffer
+/// `delay + shift` convention), so an event lands in the `pre_update` of
+/// the same step whose dynamics would consume the equivalent ring deposit.
+#[derive(Debug)]
+pub struct EventRing {
+    slots: Vec<Vec<PlasticEvent>>,
+    cursor: usize,
+}
+
+impl EventRing {
+    pub fn new(depth: usize) -> Self {
+        Self {
+            slots: vec![Vec::new(); depth.max(1)],
+            cursor: 0,
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Queue an arrival `offset ≥ 1` steps ahead of the current cursor.
+    #[inline]
+    pub fn enqueue(&mut self, offset: usize, slot: u32, emit: u32, mult: u16, remote: bool) {
+        debug_assert!(
+            offset >= 1 && offset < self.slots.len(),
+            "plastic arrival offset {offset} outside the event ring"
+        );
+        let i = (self.cursor + offset) % self.slots.len();
+        let seq = self.slots[i].len() as u32;
+        self.slots[i].push(PlasticEvent {
+            slot,
+            emit,
+            seq,
+            mult,
+            remote,
+        });
+    }
+
+    /// Take the current step's events (capacity is given back by
+    /// [`EventRing::put_back`] so the loop stays allocation-free).
+    pub fn take_due(&mut self) -> Vec<PlasticEvent> {
+        std::mem::take(&mut self.slots[self.cursor])
+    }
+
+    /// Return the (cleared) buffer taken by [`EventRing::take_due`].
+    pub fn put_back(&mut self, mut buf: Vec<PlasticEvent>) {
+        buf.clear();
+        self.slots[self.cursor] = buf;
+    }
+
+    /// Advance to the next step's slot.
+    pub fn advance(&mut self) {
+        debug_assert!(
+            self.slots[self.cursor].is_empty(),
+            "advancing the event ring over unprocessed plastic events"
+        );
+        self.cursor = (self.cursor + 1) % self.slots.len();
+    }
+
+    /// Total queued events (all future slots).
+    pub fn pending(&self) -> usize {
+        self.slots.iter().map(|s| s.len()).sum()
+    }
+
+    /// Slots in arrival order starting at the cursor, with their offsets.
+    fn iter_from_cursor(&self) -> impl Iterator<Item = (usize, &[PlasticEvent])> + '_ {
+        (0..self.slots.len())
+            .map(move |o| (o, self.slots[(self.cursor + o) % self.slots.len()].as_slice()))
+    }
+}
+
+/// The per-rank plasticity engine: plastic-synapse index structures,
+/// traces, the arrival event ring and the per-step deposit plane. Built at
+/// `prepare()` (or snapshot restore) when the connection store carries any
+/// registered rule.
+#[derive(Debug)]
+pub struct PlasticityEngine {
+    /// rules copied out of the connection store at build time
+    rules: Vec<StdpRule>,
+    /// per-rule presynaptic decay factor per step, `exp(−dt/τ₊)`
+    decay_plus: Vec<f64>,
+    /// shared postsynaptic decay factor per step, `exp(−dt/τ₋)`
+    decay_minus: f64,
+    /// connection index → plastic slot (`u32::MAX` = static)
+    slot_of: Vec<u32>,
+    /// plastic slot → connection index (ascending in connection index)
+    conn_of: Vec<u32>,
+    /// plastic slot → rule index
+    rule_of: Vec<u16>,
+    /// per-slot presynaptic trace value (at the step of its last arrival)
+    k_pre: Vec<f32>,
+    /// per-slot step of the last presynaptic arrival ([`NEVER`] = none)
+    pre_last: Vec<i64>,
+    /// incoming-plastic CSR offsets per node (len = n_nodes + 1)
+    in_first: Vec<u32>,
+    /// CSR payload: plastic slots grouped by target node
+    in_slots: Vec<u32>,
+    /// per-neuron postsynaptic traces (state-index addressed)
+    post: TraceBuffers,
+    events: EventRing,
+    /// current-step plastic PSP deposits per state slot, merged by the
+    /// dynamics phase after the local and remote planes
+    plane_ex: Vec<f32>,
+    plane_in: Vec<f32>,
+    /// state slots touched this step (sparse zeroing in `end_step`)
+    touched: Vec<u32>,
+    plane_used: bool,
+    tracked: u64,
+}
+
+impl PlasticityEngine {
+    /// Build the engine for a prepared connection store. Validates that
+    /// plastic sources are neurons or images (devices deliver through a
+    /// path with no arrival events), that targets are local neurons, and
+    /// that every rule shares one `tau_minus` (the post trace is per
+    /// neuron, as in NEST, so its decay cannot vary per synapse).
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        conns: &Connections,
+        nodes: &NodeSpace,
+        state_lut: &[u32],
+        n_state: usize,
+        max_delay_steps: u16,
+        exchange_interval: u16,
+        dt_ms: f64,
+        tr: &mut Tracker,
+    ) -> Result<Self> {
+        let rules = conns.rules().to_vec();
+        if rules.is_empty() {
+            bail!("plasticity engine built without any registered rule");
+        }
+        for r in &rules {
+            r.validate()?;
+        }
+        let tau_minus = rules[0].tau_minus_ms;
+        if rules.iter().any(|r| r.tau_minus_ms.to_bits() != tau_minus.to_bits()) {
+            bail!(
+                "heterogeneous tau_minus across STDP rules is unsupported: the \
+                 postsynaptic trace is per neuron and shares one decay"
+            );
+        }
+        let rule_ids = conns
+            .rule_slice()
+            .expect("rules registered but no per-connection rule array");
+        if rule_ids.len() != conns.len() {
+            bail!(
+                "per-connection rule array covers {} of {} connections",
+                rule_ids.len(),
+                conns.len()
+            );
+        }
+
+        let src = conns.source.as_slice();
+        let tgt = conns.target.as_slice();
+        let mut slot_of = vec![u32::MAX; conns.len()];
+        let mut conn_of: Vec<u32> = Vec::new();
+        let mut rule_of: Vec<u16> = Vec::new();
+        for (k, &rid) in rule_ids.iter().enumerate() {
+            if rid == NO_RULE {
+                continue;
+            }
+            if rid as usize >= rules.len() {
+                bail!("connection {k} references unknown STDP rule {rid}");
+            }
+            if matches!(nodes.kind(src[k]), NodeKind::Device { .. }) {
+                bail!(
+                    "connection {k} attaches an STDP rule to a device source \
+                     (node {}); only neuron and image sources can be plastic",
+                    src[k]
+                );
+            }
+            if state_lut[tgt[k] as usize] == u32::MAX {
+                bail!(
+                    "plastic connection {k} targets node {} which is not a neuron",
+                    tgt[k]
+                );
+            }
+            slot_of[k] = conn_of.len() as u32;
+            conn_of.push(k as u32);
+            rule_of.push(rid);
+        }
+        let n_plastic = conn_of.len();
+
+        // incoming-plastic CSR by target node (counting scatter; slots stay
+        // ascending per target — the canonical potentiation order)
+        let m = nodes.m() as usize;
+        let mut in_first = vec![0u32; m + 1];
+        for &k in &conn_of {
+            in_first[tgt[k as usize] as usize + 1] += 1;
+        }
+        for i in 0..m {
+            in_first[i + 1] += in_first[i];
+        }
+        let mut cursor = in_first.clone();
+        let mut in_slots = vec![0u32; n_plastic];
+        for (slot, &k) in conn_of.iter().enumerate() {
+            let t = tgt[k as usize] as usize;
+            in_slots[cursor[t] as usize] = slot as u32;
+            cursor[t] += 1;
+        }
+
+        let decay_plus: Vec<f64> = rules
+            .iter()
+            .map(|r| (-(dt_ms / r.tau_plus_ms as f64)).exp())
+            .collect();
+        let decay_minus = (-(dt_ms / tau_minus as f64)).exp();
+
+        let depth = max_delay_steps as usize + exchange_interval as usize;
+        let bytes = (slot_of.len() * 4
+            + n_plastic * (4 + 2 + 4 + 8)
+            + in_first.len() * 4
+            + in_slots.len() * 4
+            + n_state * 8) as u64;
+        tr.alloc(MemKind::Device, bytes);
+        Ok(Self {
+            rules,
+            decay_plus,
+            decay_minus,
+            slot_of,
+            conn_of,
+            rule_of,
+            k_pre: vec![0.0; n_plastic],
+            pre_last: vec![NEVER; n_plastic],
+            in_first,
+            in_slots,
+            post: TraceBuffers::new(n_state, tr),
+            events: EventRing::new(depth),
+            plane_ex: vec![0.0; n_state],
+            plane_in: vec![0.0; n_state],
+            touched: Vec::new(),
+            plane_used: false,
+            tracked: bytes,
+        })
+    }
+
+    pub fn n_plastic(&self) -> usize {
+        self.conn_of.len()
+    }
+
+    pub fn rules(&self) -> &[StdpRule] {
+        &self.rules
+    }
+
+    /// Plastic slot of connection `k`, if it carries a rule.
+    #[inline]
+    pub fn plastic_slot(&self, k: usize) -> Option<u32> {
+        let s = self.slot_of[k];
+        (s != u32::MAX).then_some(s)
+    }
+
+    /// Queue a presynaptic arrival `offset` steps ahead (delivery paths).
+    #[inline]
+    pub fn enqueue(&mut self, offset: usize, slot: u32, emit: u32, mult: u16, remote: bool) {
+        self.events.enqueue(offset, slot, emit, mult, remote);
+    }
+
+    /// Pending arrival events queued for future steps.
+    pub fn pending_events(&self) -> usize {
+        self.events.pending()
+    }
+
+    /// The current step's plastic deposit plane `(excitatory, inhibitory)`.
+    pub fn plane(&self) -> (&[f32], &[f32]) {
+        (&self.plane_ex, &self.plane_in)
+    }
+
+    /// Whether this step deposited anything (skip the merge otherwise).
+    pub fn plane_used(&self) -> bool {
+        self.plane_used
+    }
+
+    /// **pre_update** phase at step `now`: drain the current arrival slot
+    /// in canonical `(emission step, local-before-remote, push order)`
+    /// order; for each arrival, depress the weight against the target's
+    /// post trace, bump the synapse's pre trace, and deposit the PSP with
+    /// the post-depression weight into the plastic plane.
+    pub fn pre_update(&mut self, now: i64, conns: &mut Connections, state_lut: &[u32]) {
+        let mut evs = self.events.take_due();
+        if evs.is_empty() {
+            self.events.put_back(evs);
+            return;
+        }
+        evs.sort_unstable_by_key(|e| (e.emit, e.remote, e.seq));
+        let (weights, targets, ports) = conns.weights_with_targets_mut();
+        for ev in &evs {
+            let slot = ev.slot as usize;
+            let k = self.conn_of[slot] as usize;
+            let rid = self.rule_of[slot] as usize;
+            let state = state_lut[targets[k] as usize] as usize;
+            let y = self.post.eval(state, now, self.decay_minus);
+            let w = self.rules[rid].depress(weights[k], y);
+            weights[k] = w;
+            self.k_pre[slot] =
+                decayed(self.k_pre[slot], self.pre_last[slot], now, self.decay_plus[rid]) + 1.0;
+            self.pre_last[slot] = now;
+            let psp = w * ev.mult as f32;
+            if ports[k] == 0 {
+                self.plane_ex[state] += psp;
+            } else {
+                self.plane_in[state] += psp;
+            }
+            self.touched.push(state as u32);
+        }
+        self.plane_used = true;
+        self.events.put_back(evs);
+    }
+
+    /// **post_update** phase at step `now`: for every neuron that spiked
+    /// this step (ascending node order), potentiate its incoming plastic
+    /// synapses against their pre traces, then bump its post trace.
+    pub fn post_update(
+        &mut self,
+        now: i64,
+        spiking: &[u32],
+        conns: &mut Connections,
+        state_lut: &[u32],
+    ) {
+        if self.conn_of.is_empty() {
+            return;
+        }
+        let weights = conns.weights_mut();
+        for &node in spiking {
+            let a = self.in_first[node as usize] as usize;
+            let b = self.in_first[node as usize + 1] as usize;
+            for &slot in &self.in_slots[a..b] {
+                let slot = slot as usize;
+                let rid = self.rule_of[slot] as usize;
+                let k = self.conn_of[slot] as usize;
+                let kp =
+                    decayed(self.k_pre[slot], self.pre_last[slot], now, self.decay_plus[rid]);
+                weights[k] = self.rules[rid].potentiate(weights[k], kp);
+            }
+            let state = state_lut[node as usize] as usize;
+            self.post.bump(state, now, self.decay_minus);
+        }
+    }
+
+    /// End-of-step bookkeeping: zero the touched plane entries and advance
+    /// the event ring (called once per step, after the dynamics merge).
+    pub fn end_step(&mut self) {
+        if self.plane_used {
+            for &s in &self.touched {
+                self.plane_ex[s as usize] = 0.0;
+                self.plane_in[s as usize] = 0.0;
+            }
+            self.touched.clear();
+            self.plane_used = false;
+        }
+        self.events.advance();
+    }
+
+    /// Distribution summary (and order-sensitive hash) of the current
+    /// plastic weights, in plastic-slot order.
+    pub fn weight_summary(&self, conns: &Connections) -> WeightSummary {
+        let w = conns.weight.as_slice();
+        WeightSummary::from_weights(self.conn_of.iter().map(|&k| w[k as usize]))
+    }
+
+    /// Every plastic weight honors its rule's `[w_min, w_max]` bounds.
+    pub fn bounds_ok(&self, conns: &Connections) -> bool {
+        let w = conns.weight.as_slice();
+        self.conn_of.iter().zip(self.rule_of.iter()).all(|(&k, &rid)| {
+            let r = &self.rules[rid as usize];
+            let x = w[k as usize];
+            x >= r.w_min && x <= r.w_max
+        })
+    }
+
+    /// Release the engine's tracked device allocations (teardown
+    /// symmetry with the other per-subsystem `release` methods).
+    pub fn release(&mut self, tr: &mut Tracker) {
+        tr.free(MemKind::Device, self.tracked);
+        self.tracked = 0;
+        self.post.release(tr);
+    }
+
+    /// Serialize the mutable mid-run state (PLAS snapshot section):
+    /// per-synapse pre traces, per-neuron post traces, pending arrival
+    /// events. Index structures and decay factors are derived from the
+    /// CONN section at restore and are not persisted.
+    pub fn snapshot_encode(&self, enc: &mut Encoder) {
+        enc.u32(self.conn_of.len() as u32);
+        enc.slice_f32(&self.k_pre);
+        enc.seq_len(self.pre_last.len());
+        for &l in &self.pre_last {
+            enc.u64(l as u64);
+        }
+        self.post.snapshot_encode(enc);
+        enc.u64(self.events.depth() as u64);
+        enc.seq_len(self.events.pending());
+        for (off, evs) in self.events.iter_from_cursor() {
+            for ev in evs {
+                enc.u32(off as u32);
+                enc.u32(ev.slot);
+                enc.u32(ev.emit);
+                enc.u32(ev.seq);
+                enc.u16(ev.mult);
+                enc.bool(ev.remote);
+            }
+        }
+    }
+
+    /// Overwrite a freshly built engine's mutable state from
+    /// [`PlasticityEngine::snapshot_encode`] output.
+    pub fn snapshot_restore(&mut self, dec: &mut Decoder, tr: &mut Tracker) -> Result<()> {
+        let n = dec.u32()? as usize;
+        if n != self.conn_of.len() {
+            bail!(
+                "snapshot carries {n} plastic synapses, the connection store \
+                 implies {}",
+                self.conn_of.len()
+            );
+        }
+        let k_pre = dec.vec_f32()?;
+        let n_last = dec.seq_len(8)?;
+        if k_pre.len() != n || n_last != n {
+            bail!("plastic trace arrays inconsistent with {n} plastic synapses");
+        }
+        let mut pre_last = Vec::with_capacity(n);
+        for _ in 0..n {
+            pre_last.push(dec.u64()? as i64);
+        }
+        let post = TraceBuffers::snapshot_decode(dec, tr)?;
+        if post.n() != self.post.n() {
+            bail!(
+                "post-trace buffers cover {} state slots, the engine expects {}",
+                post.n(),
+                self.post.n()
+            );
+        }
+        let depth = dec.u64()? as usize;
+        if depth != self.events.depth() {
+            bail!(
+                "snapshot event ring depth {depth} differs from the rebuilt \
+                 depth {} (config mismatch)",
+                self.events.depth()
+            );
+        }
+        let n_events = dec.seq_len(4 + 4 + 4 + 4 + 2 + 1)?;
+        let mut events = EventRing::new(depth);
+        for _ in 0..n_events {
+            let off = dec.u32()? as usize;
+            let slot = dec.u32()?;
+            let emit = dec.u32()?;
+            let seq = dec.u32()?;
+            let mult = dec.u16()?;
+            let remote = dec.bool()?;
+            // offset 0 is legal here (unlike at enqueue time): an event
+            // enqueued k steps before the checkpoint with offset k is due
+            // at the very next step's pre_update and sits at the cursor
+            if off >= depth {
+                bail!("plastic event offset {off} outside the ring of {depth}");
+            }
+            if slot as usize >= n {
+                bail!("plastic event references slot {slot} of {n}");
+            }
+            let i = (events.cursor + off) % depth;
+            events.slots[i].push(PlasticEvent {
+                slot,
+                emit,
+                seq,
+                mult,
+                remote,
+            });
+        }
+        // swap in: release the build-time traces so the tracker stays
+        // balanced (the decoded buffers carry their own accounting)
+        let mut old_post = std::mem::replace(&mut self.post, post);
+        old_post.release(tr);
+        self.k_pre = k_pre;
+        self.pre_last = pre_last;
+        self.events = events;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rule(bound: WeightBound) -> StdpRule {
+        StdpRule {
+            tau_plus_ms: 20.0,
+            tau_minus_ms: 20.0,
+            a_plus: 1.0,
+            a_minus: 1.2,
+            w_min: 0.0,
+            w_max: 10.0,
+            bound,
+        }
+    }
+
+    #[test]
+    fn additive_updates_and_clamping() {
+        let r = rule(WeightBound::Additive);
+        assert_eq!(r.potentiate(5.0, 1.0), 6.0);
+        assert_eq!(r.depress(5.0, 1.0), 5.0 - 1.2);
+        // clamped at both ends
+        assert_eq!(r.potentiate(9.9, 5.0), 10.0);
+        assert_eq!(r.depress(0.5, 5.0), 0.0);
+    }
+
+    #[test]
+    fn multiplicative_soft_bounds() {
+        let r = StdpRule {
+            a_plus: 0.5,
+            a_minus: 0.5,
+            ..rule(WeightBound::Multiplicative)
+        };
+        // Δw⁺ shrinks as w -> w_max, Δw⁻ as w -> w_min
+        assert!(r.potentiate(9.0, 1.0) - 9.0 < r.potentiate(1.0, 1.0) - 1.0);
+        assert!(5.0 - r.depress(5.0, 1.0) > 1.0 - r.depress(1.0, 1.0));
+        assert!((r.potentiate(10.0, 1.0) - 10.0).abs() < 1e-6);
+        assert!((r.depress(0.0, 1.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bounds_hold_under_random_update_sequences() {
+        // property: any sequence of depress/potentiate with any trace
+        // values keeps w within [w_min, w_max], for both bound modes
+        let mut rng = Rng::new(42);
+        for trial in 0..200 {
+            let lo = (rng.uniform_range(-5.0, 0.0)) as f32;
+            let hi = (rng.uniform_range(0.5, 20.0)) as f32;
+            let r = StdpRule {
+                tau_plus_ms: 15.0,
+                tau_minus_ms: 30.0,
+                a_plus: rng.uniform_range(0.0, 3.0) as f32,
+                a_minus: rng.uniform_range(0.0, 3.0) as f32,
+                w_min: lo,
+                w_max: hi,
+                bound: if trial % 2 == 0 {
+                    WeightBound::Additive
+                } else {
+                    WeightBound::Multiplicative
+                },
+            };
+            r.validate().unwrap();
+            let mut w = rng.uniform_range(lo as f64, hi as f64) as f32;
+            for _ in 0..100 {
+                let trace = rng.uniform_range(0.0, 4.0) as f32;
+                w = if rng.next_u64() % 2 == 0 {
+                    r.potentiate(w, trace)
+                } else {
+                    r.depress(w, trace)
+                };
+                assert!(
+                    w >= lo && w <= hi,
+                    "w {w} escaped [{lo}, {hi}] ({:?})",
+                    r.bound
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rule_codec_roundtrip() {
+        for bound in [WeightBound::Additive, WeightBound::Multiplicative] {
+            let r = rule(bound);
+            let mut e = Encoder::new();
+            r.encode(&mut e);
+            let bytes = e.into_bytes();
+            assert_eq!(bytes.len(), RULE_ENCODED_BYTES);
+            let mut d = Decoder::new(&bytes);
+            let back = StdpRule::decode(&mut d).unwrap();
+            d.finish().unwrap();
+            assert_eq!(back, r);
+        }
+    }
+
+    #[test]
+    fn invalid_rules_rejected() {
+        let mut r = rule(WeightBound::Additive);
+        r.w_min = 5.0;
+        r.w_max = 1.0;
+        assert!(r.validate().is_err());
+        let mut r = rule(WeightBound::Additive);
+        r.tau_plus_ms = 0.0;
+        assert!(r.validate().is_err());
+        let mut r = rule(WeightBound::Additive);
+        r.a_plus = -1.0;
+        assert!(r.validate().is_err());
+    }
+
+    #[test]
+    fn event_ring_delivers_at_offset_in_canonical_order() {
+        let mut ring = EventRing::new(8);
+        // step t: a local delivery 2 ahead and remote records (older
+        // emissions) arriving in the same slot via a later exchange
+        ring.enqueue(2, 0, 10, 1, false);
+        ring.enqueue(2, 1, 9, 1, true);
+        ring.enqueue(2, 2, 9, 1, false);
+        ring.enqueue(2, 3, 10, 1, true);
+        ring.advance();
+        assert!(ring.take_due().is_empty());
+        let empty = ring.take_due();
+        ring.put_back(empty);
+        ring.advance();
+        let mut due = ring.take_due();
+        assert_eq!(due.len(), 4);
+        due.sort_unstable_by_key(|e| (e.emit, e.remote, e.seq));
+        // canonical: emission ascending, local before remote within a step
+        let order: Vec<u32> = due.iter().map(|e| e.slot).collect();
+        assert_eq!(order, vec![2, 1, 0, 3]);
+        ring.put_back(due);
+        assert_eq!(ring.pending(), 0);
+    }
+
+    #[test]
+    fn engine_memory_tracked_and_released() {
+        use crate::connection::Connections;
+        let mut tr = Tracker::new();
+        let mut nodes = NodeSpace::new();
+        nodes.create_neurons(0, 2);
+        let mut conns = Connections::new();
+        conns.push(0, 1, 1.0, 2, 0, &mut tr);
+        let rid = conns.register_rule(rule(WeightBound::Additive));
+        conns.attach_rule(0, rid, &mut tr);
+        conns.sort_by_source(2, &mut tr);
+        let state_lut = vec![0u32, 1u32];
+        let before = tr.current(MemKind::Device);
+        let mut eng =
+            PlasticityEngine::build(&conns, &nodes, &state_lut, 2, 8, 1, 0.1, &mut tr).unwrap();
+        assert_eq!(eng.n_plastic(), 1);
+        assert!(tr.current(MemKind::Device) > before);
+        eng.release(&mut tr);
+        assert_eq!(tr.current(MemKind::Device), before);
+    }
+
+    #[test]
+    fn event_ring_wraps() {
+        let mut ring = EventRing::new(3);
+        for step in 0..10u32 {
+            ring.enqueue(1, step, step, 1, false);
+            ring.advance();
+            let due = ring.take_due();
+            assert_eq!(due.len(), 1);
+            assert_eq!(due[0].emit, step);
+            ring.put_back(due);
+        }
+    }
+}

@@ -20,10 +20,19 @@
 use anyhow::{bail, Context, Result};
 
 pub const MAGIC: [u8; 8] = *b"NGSNAPv1";
-/// Bumped to 2 when the CONF section grew the exchange-batching fields
-/// (`cfg.exchange_interval` + the resolved effective interval); version-1
-/// files predate min-delay exchange batching and are rejected.
-pub const FORMAT_VERSION: u32 = 2;
+/// Current writer version. History:
+///
+/// - **2** — CONF grew the exchange-batching fields
+///   (`cfg.exchange_interval` + the resolved effective interval);
+/// - **3** — plasticity: CONN appends the STDP rule registry and the
+///   per-connection rule ids, and a `PLAS` section carries traces and
+///   pending plastic arrival events. The v3 CONN fields are strictly
+///   appended, so v2 files (all-static by construction) still load.
+///
+/// Version-1 files predate min-delay exchange batching and are rejected.
+pub const FORMAT_VERSION: u32 = 3;
+/// Oldest version this build still reads.
+pub const MIN_FORMAT_VERSION: u32 = 2;
 
 const TABLE_ENTRY_BYTES: usize = 4 + 8 + 8 + 8;
 
@@ -47,6 +56,9 @@ pub mod tags {
     pub const DEVS: [u8; 4] = *b"DEVS";
     /// construction RNG streams (local + aligned are in REMT)
     pub const RNGS: [u8; 4] = *b"RNGS";
+    /// plasticity state: traces + pending arrival events (v3, optional —
+    /// present iff the network has plastic synapses)
+    pub const PLAS: [u8; 4] = *b"PLAS";
 }
 
 /// One parsed section-table entry (shared by the in-memory and the
@@ -88,8 +100,12 @@ impl TableEntry {
     }
 }
 
-/// Parse and bounds-check the fixed header; returns the section count.
-fn parse_header(fixed: &[u8; 16]) -> Result<usize> {
+/// Parse and bounds-check the fixed header; returns the format version
+/// and the section count. An out-of-range version fails *here*, before
+/// any payload is touched, with an error naming the found and the
+/// supported versions — a newer writer's file must never surface as a
+/// decode failure mid-stream.
+fn parse_header(fixed: &[u8; 16]) -> Result<(u32, usize)> {
     if fixed[..8] != MAGIC {
         bail!(
             "bad snapshot magic {:02x?} (expected {:?})",
@@ -98,20 +114,36 @@ fn parse_header(fixed: &[u8; 16]) -> Result<usize> {
         );
     }
     let version = u32::from_le_bytes(fixed[8..12].try_into().unwrap());
-    if version != FORMAT_VERSION {
-        bail!("unsupported snapshot format version {version} (this build reads {FORMAT_VERSION})");
+    if !(MIN_FORMAT_VERSION..=FORMAT_VERSION).contains(&version) {
+        bail!(
+            "unsupported snapshot format version {version}; this build supports \
+             versions {MIN_FORMAT_VERSION}..={FORMAT_VERSION}"
+        );
     }
-    Ok(u32::from_le_bytes(fixed[12..16].try_into().unwrap()) as usize)
+    Ok((
+        version,
+        u32::from_le_bytes(fixed[12..16].try_into().unwrap()) as usize,
+    ))
 }
 
-/// FNV-1a 64-bit.
-pub fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit offset basis (start value for incremental hashing with
+/// [`fnv1a64_fold`]).
+pub const FNV1A64_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold bytes into a running FNV-1a 64 state — the single implementation
+/// behind both the section checksums here and the streaming weight hashes
+/// in [`crate::stats::weights`].
+pub fn fnv1a64_fold(mut h: u64, bytes: &[u8]) -> u64 {
     for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
     }
     h
+}
+
+/// FNV-1a 64-bit.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_fold(FNV1A64_OFFSET, bytes)
 }
 
 /// Assembles sections and serializes the container.
@@ -137,11 +169,18 @@ impl SnapshotWriter {
 
     /// Serialize header + table + payloads into one buffer.
     pub fn finish(self) -> Vec<u8> {
+        self.finish_with_version(FORMAT_VERSION)
+    }
+
+    /// [`SnapshotWriter::finish`] with an explicit format version —
+    /// compatibility tooling and the cross-version tests use this to
+    /// produce genuine older-version containers.
+    pub fn finish_with_version(self, version: u32) -> Vec<u8> {
         let header_len = 16 + self.sections.len() * TABLE_ENTRY_BYTES;
         let total: usize = header_len + self.sections.iter().map(|(_, p)| p.len()).sum::<usize>();
         let mut out = Vec::with_capacity(total);
         out.extend_from_slice(&MAGIC);
-        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&version.to_le_bytes());
         out.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
         let mut offset = header_len as u64;
         for (tag, payload) in &self.sections {
@@ -161,6 +200,7 @@ impl SnapshotWriter {
 /// Validated view over a serialized snapshot.
 pub struct SnapshotReader<'a> {
     buf: &'a [u8],
+    version: u32,
     table: Vec<([u8; 4], usize, usize)>,
 }
 
@@ -171,7 +211,7 @@ impl<'a> SnapshotReader<'a> {
         if buf.len() < 16 {
             bail!("snapshot too short ({} bytes) for the header", buf.len());
         }
-        let count = parse_header(buf[..16].try_into().unwrap())?;
+        let (version, count) = parse_header(buf[..16].try_into().unwrap())?;
         let header_len = 16 + count * TABLE_ENTRY_BYTES;
         if buf.len() < header_len {
             bail!("snapshot truncated inside the section table");
@@ -194,7 +234,16 @@ impl<'a> SnapshotReader<'a> {
             }
             table.push((entry.tag, off, end - off));
         }
-        Ok(Self { buf, table })
+        Ok(Self {
+            buf,
+            version,
+            table,
+        })
+    }
+
+    /// Format version of the container (within the supported range).
+    pub fn version(&self) -> u32 {
+        self.version
     }
 
     /// Payload bytes of a section; error if absent.
@@ -204,6 +253,15 @@ impl<'a> SnapshotReader<'a> {
             .find(|(t, _, _)| *t == tag)
             .map(|&(_, off, len)| &self.buf[off..off + len])
             .with_context(|| format!("snapshot has no {} section", tag_name(tag)))
+    }
+
+    /// Payload bytes of a section, or `None` if the snapshot lacks it
+    /// (optional sections such as `PLAS`).
+    pub fn try_section(&self, tag: [u8; 4]) -> Option<&'a [u8]> {
+        self.table
+            .iter()
+            .find(|(t, _, _)| *t == tag)
+            .map(|&(_, off, len)| &self.buf[off..off + len])
     }
 
     pub fn section_tags(&self) -> impl Iterator<Item = [u8; 4]> + '_ {
@@ -228,7 +286,7 @@ pub fn read_section_from_file(path: &std::path::Path, tag: [u8; 4]) -> Result<Ve
     let mut fixed = [0u8; 16];
     f.read_exact(&mut fixed)
         .context("snapshot too short for the header")?;
-    let count = parse_header(&fixed)?;
+    let (_, count) = parse_header(&fixed)?;
     let header_len = 16 + count * TABLE_ENTRY_BYTES;
     if header_len as u64 > file_len {
         bail!("snapshot truncated inside the section table");
@@ -301,11 +359,36 @@ mod tests {
     }
 
     #[test]
-    fn wrong_version_rejected() {
+    fn wrong_version_rejected_naming_found_and_supported() {
         let mut bytes = SnapshotWriter::new().finish();
         bytes[8] = 0xFE;
-        let err = SnapshotReader::open(&bytes).unwrap_err();
-        assert!(err.to_string().contains("version"), "{err}");
+        let err = SnapshotReader::open(&bytes).unwrap_err().to_string();
+        // a newer/unknown version must fail up front with both the found
+        // and the supported versions in the message, never as a decode
+        // error mid-stream
+        assert!(err.contains("version 254"), "{err}");
+        assert!(
+            err.contains(&format!("{MIN_FORMAT_VERSION}..={FORMAT_VERSION}")),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn older_supported_version_accepted() {
+        let mut w = SnapshotWriter::new();
+        w.section(tags::CONF, vec![5, 6]);
+        let bytes = w.finish_with_version(MIN_FORMAT_VERSION);
+        let r = SnapshotReader::open(&bytes).unwrap();
+        assert_eq!(r.version(), MIN_FORMAT_VERSION);
+        assert_eq!(r.section(tags::CONF).unwrap(), &[5, 6]);
+        assert!(r.try_section(tags::PLAS).is_none());
+    }
+
+    #[test]
+    fn version_one_rejected() {
+        let bytes = SnapshotWriter::new().finish_with_version(1);
+        let err = SnapshotReader::open(&bytes).unwrap_err().to_string();
+        assert!(err.contains("version 1"), "{err}");
     }
 
     #[test]

@@ -18,6 +18,15 @@
 //!   resumed run continues with bit-identical spike trains, because every
 //!   consumed RNG stream and every ring-buffer slot is restored exactly.
 //!
+//! Since format v3 a snapshot also carries the plasticity state —
+//! evolved weights (in CONN, which grew the STDP rule registry and the
+//! per-connection rule ids) plus traces and pending arrival events (the
+//! optional `PLAS` section) — so a plastic run resumes bit-identically,
+//! weights included. Format-v2 files predate plasticity and still load,
+//! as fully static networks; versions outside
+//! [`MIN_FORMAT_VERSION`]`..=`[`FORMAT_VERSION`] are rejected up front
+//! with an error naming both.
+//!
 //! The per-layer encode/decode impls live next to their types (e.g.
 //! `Connections::snapshot_encode` in `connection/store.rs`), built on the
 //! small [`codec`] layer; [`crate::engine::Simulator::save_snapshot`] and
@@ -30,7 +39,7 @@ pub mod codec;
 pub mod format;
 
 pub use codec::{Decoder, Encoder};
-pub use format::{SnapshotReader, SnapshotWriter, FORMAT_VERSION, MAGIC};
+pub use format::{SnapshotReader, SnapshotWriter, FORMAT_VERSION, MAGIC, MIN_FORMAT_VERSION};
 
 /// Conventional per-rank snapshot file name within a snapshot directory.
 pub fn rank_file_name(rank: usize) -> String {

@@ -7,9 +7,16 @@
 //! quantified with the Earth Mover's Distance (first Wasserstein distance),
 //! comparing seed-vs-seed fluctuations against code-vs-code fluctuations.
 
+//!
+//! Plastic runs add a fourth characterization: the evolved weight
+//! distribution ([`weights`]) — moments, range and an order-sensitive hash
+//! used by the STDP determinism tests.
+
 pub mod emd;
 pub mod spikes;
 pub mod validate;
+pub mod weights;
 
 pub use emd::emd;
 pub use spikes::SpikeData;
+pub use weights::WeightSummary;

@@ -1,0 +1,119 @@
+//! Weight-distribution summaries for plasticity validation (DESIGN.md
+//! §12). A plastic run is characterized by what STDP did to the weights:
+//! the moments and range say whether the distribution drifted, spread or
+//! saturated at a bound, and the order-sensitive FNV-1a hash gives a
+//! one-word bit-identity check for determinism tests (equal hashes over
+//! the same synapse order ⇔ bit-identical weight arrays, up to hash
+//! collision).
+
+use crate::snapshot::format::{fnv1a64_fold, FNV1A64_OFFSET};
+
+/// Summary of one rank's plastic-weight distribution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WeightSummary {
+    pub n: u64,
+    pub mean: f64,
+    /// population standard deviation
+    pub sd: f64,
+    pub min: f32,
+    pub max: f32,
+    /// FNV-1a 64 over the little-endian f32 bytes, in iteration order
+    /// (the same hash the snapshot checksums use)
+    pub hash: u64,
+}
+
+impl WeightSummary {
+    /// Summarize weights in iteration order (the order feeds the hash).
+    pub fn from_weights(weights: impl Iterator<Item = f32>) -> Self {
+        let mut n = 0u64;
+        let mut sum = 0.0f64;
+        let mut sum_sq = 0.0f64;
+        let mut min = f32::INFINITY;
+        let mut max = f32::NEG_INFINITY;
+        let mut hash = FNV1A64_OFFSET;
+        for w in weights {
+            n += 1;
+            sum += w as f64;
+            sum_sq += (w as f64) * (w as f64);
+            min = min.min(w);
+            max = max.max(w);
+            hash = fnv1a64_fold(hash, &w.to_le_bytes());
+        }
+        if n == 0 {
+            return Self {
+                n: 0,
+                mean: 0.0,
+                sd: 0.0,
+                min: 0.0,
+                max: 0.0,
+                hash,
+            };
+        }
+        let mean = sum / n as f64;
+        let var = (sum_sq / n as f64 - mean * mean).max(0.0);
+        Self {
+            n,
+            mean,
+            sd: var.sqrt(),
+            min,
+            max,
+            hash,
+        }
+    }
+}
+
+/// Fixed-range histogram of a weight population (`bins` equal-width bins
+/// over `[lo, hi]`; out-of-range samples clamp into the edge bins, so the
+/// counts always sum to the population size).
+pub fn histogram(weights: impl Iterator<Item = f32>, lo: f32, hi: f32, bins: usize) -> Vec<u64> {
+    assert!(bins >= 1 && hi > lo);
+    let mut out = vec![0u64; bins];
+    let width = (hi - lo) as f64 / bins as f64;
+    for w in weights {
+        let i = (((w - lo) as f64 / width) as isize).clamp(0, bins as isize - 1);
+        out[i as usize] += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_moments_and_range() {
+        let s = WeightSummary::from_weights([1.0f32, 2.0, 3.0, 4.0].into_iter());
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.sd - (1.25f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn empty_summary() {
+        let s = WeightSummary::from_weights(std::iter::empty());
+        assert_eq!(s.n, 0);
+        assert_eq!(s.hash, FNV1A64_OFFSET);
+    }
+
+    #[test]
+    fn hash_is_order_sensitive_and_matches_bitwise_equality() {
+        let a = WeightSummary::from_weights([1.0f32, 2.0].into_iter());
+        let b = WeightSummary::from_weights([1.0f32, 2.0].into_iter());
+        let c = WeightSummary::from_weights([2.0f32, 1.0].into_iter());
+        assert_eq!(a.hash, b.hash);
+        assert_ne!(a.hash, c.hash);
+        // -0.0 and 0.0 differ bitwise, so their hashes must differ too
+        let z = WeightSummary::from_weights([0.0f32].into_iter());
+        let nz = WeightSummary::from_weights([-0.0f32].into_iter());
+        assert_ne!(z.hash, nz.hash);
+    }
+
+    #[test]
+    fn histogram_covers_and_clamps() {
+        let h = histogram([-1.0f32, 0.1, 0.9, 0.5, 2.0].into_iter(), 0.0, 1.0, 2);
+        assert_eq!(h.iter().sum::<u64>(), 5);
+        assert_eq!(h, vec![2, 3]); // -1.0 clamps low, 2.0 clamps high
+    }
+}

@@ -148,17 +148,23 @@ impl PhaseTimer {
 }
 
 /// The named stages of the state-propagation pipeline (one `step_once`):
-/// input → dynamics → collect → route → exchange → deliver. Unlike
-/// [`Phase`], these nest *inside* `Phase::Propagation`, so they are
-/// accumulated separately and never contribute to `construction()`.
+/// input → pre_update → dynamics → collect → post_update → route →
+/// exchange → deliver. Unlike [`Phase`], these nest *inside*
+/// `Phase::Propagation`, so they are accumulated separately and never
+/// contribute to `construction()`. The two plasticity phases stay at zero
+/// on fully static runs (DESIGN.md §12).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum StepPhase {
     /// device input (Poisson generators) into the ring buffers
     Input,
+    /// plasticity: presynaptic arrivals — depression + plastic deposits
+    PreUpdate,
     /// ring-buffer hand-off to the dynamics backend + spike flags
     Dynamics,
     /// spike collection and recording
     Collect,
+    /// plasticity: postsynaptic spikes — potentiation + trace bumps
+    PostUpdate,
     /// remote routing: map positions into p2p packets / group buffers
     Route,
     /// communication: all-to-all-v + per-group allgathers
@@ -167,10 +173,12 @@ pub enum StepPhase {
     Deliver,
 }
 
-pub const ALL_STEP_PHASES: [StepPhase; 6] = [
+pub const ALL_STEP_PHASES: [StepPhase; 8] = [
     StepPhase::Input,
+    StepPhase::PreUpdate,
     StepPhase::Dynamics,
     StepPhase::Collect,
+    StepPhase::PostUpdate,
     StepPhase::Route,
     StepPhase::Exchange,
     StepPhase::Deliver,
@@ -180,8 +188,10 @@ impl StepPhase {
     pub fn name(&self) -> &'static str {
         match self {
             StepPhase::Input => "input",
+            StepPhase::PreUpdate => "pre_update",
             StepPhase::Dynamics => "dynamics",
             StepPhase::Collect => "collect",
+            StepPhase::PostUpdate => "post_update",
             StepPhase::Route => "route",
             StepPhase::Exchange => "exchange",
             StepPhase::Deliver => "deliver",
@@ -193,8 +203,10 @@ impl StepPhase {
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StepTimes {
     pub input: Duration,
+    pub pre_update: Duration,
     pub dynamics: Duration,
     pub collect: Duration,
+    pub post_update: Duration,
     pub route: Duration,
     pub exchange: Duration,
     pub deliver: Duration,
@@ -204,8 +216,10 @@ impl StepTimes {
     pub fn get(&self, p: StepPhase) -> Duration {
         match p {
             StepPhase::Input => self.input,
+            StepPhase::PreUpdate => self.pre_update,
             StepPhase::Dynamics => self.dynamics,
             StepPhase::Collect => self.collect,
+            StepPhase::PostUpdate => self.post_update,
             StepPhase::Route => self.route,
             StepPhase::Exchange => self.exchange,
             StepPhase::Deliver => self.deliver,
@@ -215,8 +229,10 @@ impl StepTimes {
     fn slot(&mut self, p: StepPhase) -> &mut Duration {
         match p {
             StepPhase::Input => &mut self.input,
+            StepPhase::PreUpdate => &mut self.pre_update,
             StepPhase::Dynamics => &mut self.dynamics,
             StepPhase::Collect => &mut self.collect,
+            StepPhase::PostUpdate => &mut self.post_update,
             StepPhase::Route => &mut self.route,
             StepPhase::Exchange => &mut self.exchange,
             StepPhase::Deliver => &mut self.deliver,

@@ -1,0 +1,354 @@
+//! Integration: the STDP plasticity subsystem (DESIGN.md §12).
+//!
+//! - determinism: a plastic balanced run produces bit-identical final
+//!   weights (and spikes) at exchange interval 1 and auto, for 1, 2 and
+//!   4 ranks, over both communication protocols, and across re-runs;
+//! - weight bounds hold end-to-end for both bound modes;
+//! - snapshot format v3 round-trips mid-run plastic state bit-identically;
+//! - format-v2 snapshots still load, as all-static networks;
+//! - unknown newer versions are rejected naming found vs. supported.
+
+use std::path::PathBuf;
+
+use nestgpu::comm::CommWorld;
+use nestgpu::engine::{SimConfig, SimResult, Simulator};
+use nestgpu::harness::{run_cluster, run_cluster_from_snapshot, run_cluster_with_snapshot};
+use nestgpu::models::balanced::{build_balanced, BalancedConfig, StdpScenario};
+use nestgpu::plasticity::NO_RULE;
+use nestgpu::snapshot::format::tags;
+use nestgpu::snapshot::{Encoder, SnapshotReader, SnapshotWriter};
+use nestgpu::stats::weights::histogram;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("nestgpu_it_plast_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Small plastic balanced network: 45 neurons per rank, K_in = 45, STDP
+/// on the recurrent E synapses with a learning rate large enough that
+/// 100 ms visibly moves the weights.
+fn plastic_bal(multiplicative: bool, collective: bool) -> BalancedConfig {
+    BalancedConfig {
+        scale: 0.004,
+        k_scale: 0.004,
+        collective,
+        stdp: Some(StdpScenario {
+            lambda: 0.05,
+            multiplicative,
+            ..Default::default()
+        }),
+        ..Default::default()
+    }
+}
+
+fn cfg_with_interval(interval: Option<u16>) -> SimConfig {
+    SimConfig {
+        exchange_interval: interval,
+        ..Default::default()
+    }
+}
+
+fn run_plastic(
+    interval: Option<u16>,
+    ranks: usize,
+    t_ms: f64,
+    multiplicative: bool,
+    collective: bool,
+) -> Vec<SimResult> {
+    let bal = plastic_bal(multiplicative, collective);
+    run_cluster(
+        ranks,
+        &cfg_with_interval(interval),
+        &move |sim: &mut Simulator| build_balanced(sim, &bal),
+        t_ms,
+    )
+    .unwrap()
+}
+
+/// Per-rank (weight hash, spike train) — the full bit-identity witness.
+fn fingerprints(results: &[SimResult]) -> Vec<(u64, &[(u32, u32)])> {
+    results
+        .iter()
+        .map(|r| (r.plastic.expect("plastic run").hash, r.spikes.as_slice()))
+        .collect()
+}
+
+#[test]
+fn plastic_batching_bit_identical_for_1_2_4_ranks() {
+    for ranks in [1usize, 2, 4] {
+        let per_step = run_plastic(Some(1), ranks, 100.0, false, true);
+        let auto = run_plastic(None, ranks, 100.0, false, true);
+        if ranks > 1 {
+            assert_eq!(per_step[0].exchange_interval, 1);
+            // the model's only delay is 15 steps -> auto interval 15
+            assert_eq!(auto[0].exchange_interval, 15);
+        }
+        let spikes: u64 = per_step.iter().map(|r| r.n_spikes).sum();
+        assert!(spikes > 20, "{ranks} ranks: network must spike ({spikes})");
+        for r in &per_step {
+            assert!(r.n_plastic > 0, "rank {} has no plastic synapses", r.rank);
+            let p = r.plastic.unwrap();
+            assert!(
+                p.sd > 0.0,
+                "rank {}: STDP left every weight identical (sd = 0)",
+                r.rank
+            );
+        }
+        assert_eq!(
+            fingerprints(&per_step),
+            fingerprints(&auto),
+            "{ranks} ranks: batched exchange changed a plastic run"
+        );
+    }
+}
+
+#[test]
+fn plastic_batching_bit_identical_p2p() {
+    let per_step = run_plastic(Some(1), 2, 100.0, false, false);
+    let auto = run_plastic(None, 2, 100.0, false, false);
+    assert_eq!(auto[0].exchange_interval, 15);
+    assert!(per_step.iter().map(|r| r.n_spikes).sum::<u64>() > 20);
+    assert_eq!(fingerprints(&per_step), fingerprints(&auto));
+}
+
+#[test]
+fn plastic_run_reproducible_across_reruns() {
+    let a = run_plastic(None, 2, 60.0, false, true);
+    let b = run_plastic(None, 2, 60.0, false, true);
+    assert_eq!(fingerprints(&a), fingerprints(&b));
+}
+
+#[test]
+fn plastic_weights_respect_bounds_end_to_end() {
+    for multiplicative in [false, true] {
+        let bal = plastic_bal(multiplicative, true);
+        let rule = bal.stdp_rule().unwrap();
+        let results = run_plastic(None, 2, 100.0, multiplicative, true);
+        for r in &results {
+            let p = r.plastic.unwrap();
+            assert!(p.n == r.n_plastic && p.n > 0);
+            assert!(
+                p.min >= rule.w_min && p.max <= rule.w_max,
+                "rank {}: weights [{}, {}] escaped [{}, {}] (mult = \
+                 {multiplicative})",
+                r.rank,
+                p.min,
+                p.max,
+                rule.w_min,
+                rule.w_max
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_invariants_bounds_and_weight_histogram() {
+    // drive a live plastic simulator and check the engine-level
+    // invariants directly: per-rule bounds via `bounds_ok`, and the
+    // weight-distribution histogram covering every plastic synapse
+    let world = CommWorld::new(1);
+    let comm = world.communicators().pop().unwrap();
+    let mut sim = Simulator::new(Box::new(comm), SimConfig::default());
+    let bal = plastic_bal(false, true);
+    let rule = bal.stdp_rule().unwrap();
+    build_balanced(&mut sim, &bal);
+    sim.prepare().unwrap();
+    for _ in 0..300 {
+        sim.step_once().unwrap();
+    }
+    let eng = sim.plasticity_engine().unwrap();
+    assert!(eng.n_plastic() > 0);
+    assert!(
+        eng.bounds_ok(&sim.conns),
+        "a plastic weight escaped its rule's bounds"
+    );
+    let plastic_weights = || {
+        sim.conns
+            .rule_slice()
+            .unwrap()
+            .iter()
+            .zip(sim.conns.weight.as_slice())
+            .filter(|(&rid, _)| rid != NO_RULE)
+            .map(|(_, &w)| w)
+    };
+    let h = histogram(plastic_weights(), rule.w_min, rule.w_max, 8);
+    assert_eq!(h.iter().sum::<u64>(), eng.n_plastic() as u64);
+    assert!(
+        h.iter().filter(|&&c| c > 0).count() > 1,
+        "STDP should spread the weights across bins: {h:?}"
+    );
+}
+
+#[test]
+fn static_run_reports_no_plastic_state() {
+    let bal = BalancedConfig {
+        scale: 0.004,
+        k_scale: 0.004,
+        ..Default::default()
+    };
+    let results = run_cluster(
+        2,
+        &SimConfig::default(),
+        &move |sim: &mut Simulator| build_balanced(sim, &bal),
+        20.0,
+    )
+    .unwrap();
+    for r in &results {
+        assert_eq!(r.n_plastic, 0);
+        assert!(r.plastic.is_none());
+        assert_eq!(r.step_phases.pre_update, std::time::Duration::ZERO);
+        assert_eq!(r.step_phases.post_update, std::time::Duration::ZERO);
+    }
+}
+
+#[test]
+fn snapshot_v3_roundtrips_midrun_plastic_state() {
+    let cfg = SimConfig::default();
+    let dir = tmp_dir("v3_midrun");
+
+    // uninterrupted 100 ms
+    let bal = plastic_bal(false, true);
+    let b2 = bal.clone();
+    let full = run_cluster(
+        2,
+        &cfg,
+        &move |sim: &mut Simulator| build_balanced(sim, &b2),
+        100.0,
+    )
+    .unwrap();
+
+    // 50 ms, checkpoint (flushes the exchange interval mid-flight), resume
+    // another 50 ms — spikes and evolved weights must match bit-exactly
+    let b3 = bal.clone();
+    let half = run_cluster_with_snapshot(
+        2,
+        &cfg,
+        &move |sim: &mut Simulator| build_balanced(sim, &b3),
+        50.0,
+        &dir,
+    )
+    .unwrap();
+    for r in &half {
+        assert!(r.n_plastic > 0);
+    }
+    let resumed = run_cluster_from_snapshot(&dir, 50.0).unwrap();
+
+    assert_eq!(full.len(), resumed.len());
+    for (f, r) in full.iter().zip(resumed.iter()) {
+        assert!(f.n_spikes > 10, "rank {} barely spiked", f.rank);
+        assert_eq!(f.spikes, r.spikes, "rank {}: spike trains diverged", f.rank);
+        assert_eq!(
+            f.plastic.unwrap().hash,
+            r.plastic.unwrap().hash,
+            "rank {}: resumed plastic weights diverged",
+            f.rank
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Build a prepared single-rank *static* simulator and return it.
+fn static_single() -> Simulator {
+    let world = CommWorld::new(1);
+    let comm = world.communicators().pop().unwrap();
+    let mut sim = Simulator::new(Box::new(comm), SimConfig::default());
+    let bal = BalancedConfig {
+        scale: 0.004,
+        k_scale: 0.004,
+        ..Default::default()
+    };
+    build_balanced(&mut sim, &bal);
+    sim.prepare().unwrap();
+    sim
+}
+
+/// Rewrite a v3 snapshot of a *static* network as a genuine v2 container:
+/// strip the (empty) rules block appended to CONN and stamp version 2.
+/// This is byte-exact: the v3 CONN payload of a static store is its v2
+/// payload plus the empty rules block.
+fn downgrade_to_v2(bytes: &[u8]) -> Vec<u8> {
+    let r = SnapshotReader::open(bytes).unwrap();
+    assert!(r.try_section(tags::PLAS).is_none(), "static snapshot expected");
+    let mut empty_rules = Encoder::new();
+    empty_rules.seq_len(0);
+    empty_rules.bool(false);
+    let strip = empty_rules.len();
+    let mut w = SnapshotWriter::new();
+    for tag in r.section_tags() {
+        let mut payload = r.section(tag).unwrap().to_vec();
+        if tag == tags::CONN {
+            payload.truncate(payload.len() - strip);
+        }
+        w.section(tag, payload);
+    }
+    w.finish_with_version(2)
+}
+
+#[test]
+fn v2_snapshot_loads_as_all_static_and_continues_identically() {
+    let mut sim = static_single();
+    for _ in 0..50 {
+        sim.step_once().unwrap();
+    }
+    sim.flush_exchange().unwrap();
+    let v2 = downgrade_to_v2(&sim.snapshot_to_bytes().unwrap());
+
+    let world = CommWorld::new(1);
+    let comm = world.communicators().pop().unwrap();
+    let mut restored = Simulator::load_snapshot_bytes(Box::new(comm), &v2).unwrap();
+    assert!(restored.plasticity_engine().is_none(), "v2 loads all-static");
+    for _ in 0..100 {
+        sim.step_once().unwrap();
+        restored.step_once().unwrap();
+    }
+    assert_eq!(restored.recorder.events, sim.recorder.events);
+    assert!(sim.recorder.events.len() > 5, "network must actually spike");
+}
+
+#[test]
+fn newer_snapshot_version_rejected_naming_versions() {
+    let sim = static_single();
+    let mut bytes = sim.snapshot_to_bytes().unwrap();
+    bytes[8..12].copy_from_slice(&9u32.to_le_bytes());
+    let world = CommWorld::new(1);
+    let comm = world.communicators().pop().unwrap();
+    let err = Simulator::load_snapshot_bytes(Box::new(comm), &bytes)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("version 9"), "{err}");
+    assert!(err.contains("2..=3"), "{err}");
+}
+
+#[test]
+fn plastic_snapshot_rejected_without_plas_section() {
+    // a v3 plastic snapshot whose PLAS section is dropped must fail the
+    // load with a descriptive error, not resume silently static
+    let world = CommWorld::new(1);
+    let comm = world.communicators().pop().unwrap();
+    let mut sim = Simulator::new(Box::new(comm), SimConfig::default());
+    build_balanced(&mut sim, &plastic_bal(false, true));
+    sim.prepare().unwrap();
+    for _ in 0..20 {
+        sim.step_once().unwrap();
+    }
+    sim.flush_exchange().unwrap();
+    let bytes = sim.snapshot_to_bytes().unwrap();
+    let r = SnapshotReader::open(&bytes).unwrap();
+    assert!(r.try_section(tags::PLAS).is_some());
+    let mut w = SnapshotWriter::new();
+    for tag in r.section_tags() {
+        if tag == tags::PLAS {
+            continue;
+        }
+        w.section(tag, r.section(tag).unwrap().to_vec());
+    }
+    let crippled = w.finish();
+    let world = CommWorld::new(1);
+    let comm = world.communicators().pop().unwrap();
+    let err = Simulator::load_snapshot_bytes(Box::new(comm), &crippled)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("PLAS"), "{err}");
+}

@@ -60,7 +60,7 @@ fn prop_connection_store_roundtrip() {
         let bytes = enc.into_bytes();
         let mut tr2 = Tracker::new();
         let mut dec = Decoder::new(&bytes);
-        let d = Connections::snapshot_decode(&mut dec, &mut tr2).unwrap();
+        let d = Connections::snapshot_decode(&mut dec, &mut tr2, true).unwrap();
         dec.finish().unwrap();
         assert_eq!(d.source.as_slice(), c.source.as_slice(), "case {case}");
         assert_eq!(d.target.as_slice(), c.target.as_slice(), "case {case}");

@@ -30,6 +30,12 @@ fn main() -> anyhow::Result<()> {
         // DESIGN.md §11); set Some(1) to force per-step exchange or pass
         // --exchange-interval on the nestgpu CLI
         exchange_interval: None,
+        // observe the run with `obs: Some(ObsConfig { trace_dir:
+        // Some("trace".into()), ..Default::default() })` — per-rank JSONL
+        // traces + a merged cross-rank metrics summary on rank 0, analyzed
+        // offline with `nestgpu report trace` (DESIGN.md §13; CLI:
+        // `--obs-dir` / `--obs-interval`). Results are bit-identical
+        // with observability on or off.
         ..Default::default()
     };
     let bal = BalancedConfig {

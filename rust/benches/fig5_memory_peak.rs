@@ -51,6 +51,36 @@ fn main() {
     }
     t.print();
 
+    // host-side counterpart (memory/tracker.rs): the levels trade device
+    // residency for host staging, so the host peak moves opposite to the
+    // device peak across levels
+    let mut th = Table::new(
+        "Fig. 5 (measured) — host memory peak per rank vs ranks",
+        &["ranks", "level0", "level1", "level2", "level3", "mode"],
+    );
+    for &vr in &RANKS {
+        let cell = |lvl: GpuMemLevel| {
+            pts.iter()
+                .find(|p| p.virtual_ranks == vr && p.level == lvl)
+                .map(|p| fmt_bytes(p.agg.host_peak as u64))
+                .unwrap_or_default()
+        };
+        let est = pts
+            .iter()
+            .find(|p| p.virtual_ranks == vr)
+            .map(|p| p.estimated)
+            .unwrap_or(false);
+        th.row(vec![
+            vr.to_string(),
+            cell(GpuMemLevel::L0),
+            cell(GpuMemLevel::L1),
+            cell(GpuMemLevel::L2),
+            cell(GpuMemLevel::L3),
+            if est { "estimated".into() } else { "simulated".into() },
+        ]);
+    }
+    th.print();
+
     // full-scale analytic extrapolation (the paper's dashed curves)
     let nodes = [32u64, 64, 128, 256, 512, 1024, 2048, 3072, 4096];
     let mut t2 = Table::new(
@@ -97,6 +127,9 @@ fn main() {
                 ("estimated", Json::Bool(p.estimated)),
                 ("device_peak", Json::num(p.agg.device_peak)),
                 ("device_peak_sd", Json::num(p.agg.device_peak_sd)),
+                ("host_peak", Json::num(p.agg.host_peak)),
+                ("host_peak_sd", Json::num(p.agg.host_peak_sd)),
+                ("host_current", Json::num(p.agg.host_current)),
             ])
         })
         .collect();

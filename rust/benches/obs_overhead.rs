@@ -1,0 +1,138 @@
+//! Observability overhead: the balanced network with the telemetry
+//! subsystem off vs. on (per-step metrics registry + JSONL trace sink
+//! sampling every 10 steps). The acceptance bar is <2% steps/s cost
+//! with obs on (DESIGN.md §13).
+//!
+//! Both sides take the best of N repeats to suppress scheduler jitter;
+//! the <2% assertion runs only on the full-size configuration (smoke
+//! runs measure milliseconds of wall clock, where runner noise alone
+//! can cross the bar — the smoke JSON still records `within_2pct` for
+//! the trajectory). Writes a stamped `BENCH_obs_overhead.json` at the
+//! repository root.
+//!
+//! Set `SMOKE=1` for the CI-sized run.
+
+use std::path::PathBuf;
+
+use nestgpu::engine::{SimConfig, SimResult, Simulator};
+use nestgpu::harness::run_cluster;
+use nestgpu::models::balanced::{build_balanced, BalancedConfig};
+use nestgpu::obs::stamp::write_bench_json;
+use nestgpu::obs::ObsConfig;
+use nestgpu::util::json::Json;
+use nestgpu::util::table::Table;
+
+fn steps_per_s(results: &[SimResult], steps: f64) -> f64 {
+    let prop_s = results
+        .iter()
+        .map(|r| r.phases.propagation.as_secs_f64())
+        .fold(0.0, f64::max)
+        .max(1e-9);
+    steps / prop_s
+}
+
+fn measure(
+    obs: Option<ObsConfig>,
+    ranks: usize,
+    bal: &BalancedConfig,
+    t_ms: f64,
+    repeats: usize,
+) -> f64 {
+    let mut best = 0.0f64;
+    for _ in 0..repeats {
+        let cfg = SimConfig {
+            record_spikes: false, // benchmarking runs, as in the paper
+            obs: obs.clone(),
+            ..Default::default()
+        };
+        let steps = (t_ms / cfg.dt_ms).round();
+        let b = bal.clone();
+        let results: Vec<SimResult> = run_cluster(
+            ranks,
+            &cfg,
+            &move |sim: &mut Simulator| build_balanced(sim, &b),
+            t_ms,
+        )
+        .expect("bench run");
+        best = best.max(steps_per_s(&results, steps));
+    }
+    best
+}
+
+fn main() {
+    let smoke = std::env::var("SMOKE").is_ok();
+    let ranks = 2usize;
+    let t_ms = if smoke { 50.0 } else { 400.0 };
+    let repeats = if smoke { 2 } else { 5 };
+    let bal = BalancedConfig {
+        scale: if smoke { 0.01 } else { 0.05 },
+        k_scale: 0.01,
+        ..Default::default()
+    };
+
+    let trace_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("target")
+        .join("obs_overhead_trace");
+    let obs_cfg = ObsConfig {
+        trace_dir: Some(trace_dir.clone()),
+        sample_interval: 10,
+        label: "obs-overhead".to_string(),
+        ..Default::default()
+    };
+
+    println!(
+        "balanced, {ranks} ranks, {t_ms} ms, best of {repeats}{}",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let off = measure(None, ranks, &bal, t_ms, repeats);
+    let on = measure(Some(obs_cfg), ranks, &bal, t_ms, repeats);
+    let overhead = (off - on) / off.max(1e-9);
+
+    let mut t = Table::new(
+        "observability overhead: metrics + trace off vs on",
+        &["config", "steps/s"],
+    );
+    t.row(vec!["obs off".to_string(), format!("{off:.0}")]);
+    t.row(vec!["obs on (interval 10)".to_string(), format!("{on:.0}")]);
+    t.print();
+
+    println!(
+        "\nobs overhead: {:.2}% of steps/s (acceptance bar: < 2%)",
+        overhead * 100.0
+    );
+    assert!(
+        trace_dir.join("rank0000.jsonl").exists(),
+        "obs run must leave a per-rank trace behind"
+    );
+    // asserted only on the full-size run (see module docs)
+    if !smoke {
+        assert!(
+            overhead < 0.02,
+            "obs on costs {:.2}% steps/s (bar: < 2%)",
+            overhead * 100.0
+        );
+    }
+
+    let fields = vec![
+        ("model", Json::str("balanced-obs")),
+        ("ranks", Json::num(ranks as f64)),
+        ("t_ms", Json::num(t_ms)),
+        ("repeats", Json::num(repeats as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("steps_per_s_off", Json::num(off)),
+        ("steps_per_s_on", Json::num(on)),
+        ("overhead_frac", Json::num(overhead)),
+        ("within_2pct", Json::Bool(overhead < 0.02)),
+    ];
+    // at the repository root (one directory above the rust package)
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .join("BENCH_obs_overhead.json");
+    if let Err(e) = write_bench_json(&path, fields) {
+        eprintln!("cannot write {}: {e}", path.display());
+        std::process::exit(1);
+    }
+    println!("[written {}]", path.display());
+}

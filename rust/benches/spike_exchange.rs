@@ -15,6 +15,7 @@ use std::path::PathBuf;
 use nestgpu::engine::{SimConfig, SimResult, Simulator};
 use nestgpu::harness::run_cluster;
 use nestgpu::models::balanced::{build_balanced, BalancedConfig};
+use nestgpu::obs::stamp::write_bench_json;
 use nestgpu::util::json::Json;
 use nestgpu::util::table::{fmt_bytes, Table};
 
@@ -131,7 +132,7 @@ fn main() {
         "batching must reduce the p2p message count"
     );
 
-    let json = Json::obj(vec![
+    let fields = vec![
         ("model", Json::str("balanced-p2p")),
         ("ranks", Json::num(ranks as f64)),
         ("t_ms", Json::num(t_ms)),
@@ -140,14 +141,17 @@ fn main() {
         ("interval_1", per_step.to_json()),
         ("interval_min_delay", batched.to_json()),
         ("p2p_message_reduction", Json::num(reduction)),
-    ]);
-    // at the repository root (one directory above the rust package)
+    ];
+    // at the repository root (one directory above the rust package);
+    // stamped with schema version / timestamp / git revision, and
+    // refuses to clobber a newer-schema file (obs::stamp)
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .parent()
         .expect("rust/ has a parent")
         .join("BENCH_spike_exchange.json");
-    match std::fs::write(&path, json.to_string()) {
-        Ok(()) => println!("[written {}]", path.display()),
-        Err(e) => eprintln!("cannot write {}: {e}", path.display()),
+    if let Err(e) = write_bench_json(&path, fields) {
+        eprintln!("cannot write {}: {e}", path.display());
+        std::process::exit(1);
     }
+    println!("[written {}]", path.display());
 }

@@ -14,6 +14,7 @@ use std::path::PathBuf;
 use nestgpu::engine::{SimConfig, SimResult, Simulator};
 use nestgpu::harness::run_cluster;
 use nestgpu::models::balanced::{build_balanced, BalancedConfig, StdpScenario};
+use nestgpu::obs::stamp::write_bench_json;
 use nestgpu::util::json::Json;
 use nestgpu::util::table::Table;
 
@@ -131,7 +132,7 @@ fn main() {
         );
     }
 
-    let json = Json::obj(vec![
+    let fields = vec![
         ("model", Json::str("balanced-stdp")),
         ("ranks", Json::num(ranks as f64)),
         ("t_ms", Json::num(t_ms)),
@@ -145,14 +146,17 @@ fn main() {
         ("pre_update_s", Json::num(plast.pre_update_s)),
         ("post_update_s", Json::num(plast.post_update_s)),
         ("weight_sd", Json::num(plast.weight_sd)),
-    ]);
-    // at the repository root (one directory above the rust package)
+    ];
+    // at the repository root (one directory above the rust package);
+    // stamped with schema version / timestamp / git revision, and
+    // refuses to clobber a newer-schema file (obs::stamp)
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .parent()
         .expect("rust/ has a parent")
         .join("BENCH_stdp_overhead.json");
-    match std::fs::write(&path, json.to_string()) {
-        Ok(()) => println!("[written {}]", path.display()),
-        Err(e) => eprintln!("cannot write {}: {e}", path.display()),
+    if let Err(e) = write_bench_json(&path, fields) {
+        eprintln!("cannot write {}: {e}", path.display());
+        std::process::exit(1);
     }
+    println!("[written {}]", path.display());
 }

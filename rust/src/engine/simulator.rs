@@ -43,6 +43,10 @@ pub struct SimConfig {
     /// at `prepare()`; an explicit value is clamped to `[1, min_delay]`
     /// so batching can never reorder deliveries (DESIGN.md §11).
     pub exchange_interval: Option<u16>,
+    /// observability: per-step metrics, JSONL tracing and run manifests
+    /// (DESIGN.md §13); `None` disables the whole layer. Not persisted in
+    /// snapshots — telemetry is per-run, not simulation state.
+    pub obs: Option<crate::obs::ObsConfig>,
 }
 
 impl Default for SimConfig {
@@ -57,6 +61,7 @@ impl Default for SimConfig {
             max_delay_steps: 32,
             offboard: false,
             exchange_interval: None,
+            obs: None,
         }
     }
 }
@@ -80,7 +85,9 @@ pub struct SimResult {
     pub map_entries: u64,
     pub device_peak: u64,
     pub device_current: u64,
+    /// host-memory peak/current from `memory/tracker.rs` (per rank)
     pub host_peak: u64,
+    pub host_current: u64,
     pub spikes: Vec<(u32, u32)>,
     pub n_spikes: u64,
     pub p2p_messages: u64,
@@ -95,6 +102,9 @@ pub struct SimResult {
     /// (`None` on static runs); the hash is the bit-identity witness of
     /// the STDP determinism tests
     pub plastic: Option<WeightSummary>,
+    /// merged cross-rank metrics summary; `Some` only on rank 0 of a run
+    /// with observability enabled (DESIGN.md §13)
+    pub obs: Option<crate::obs::ObsSummary>,
 }
 
 /// One population of neurons created by a `create_neurons` call.
@@ -149,6 +159,9 @@ pub struct Simulator {
     pub(super) plasticity: Option<PlasticityEngine>,
     /// persistent hot-loop buffers (see [`StepScratch`]); sized at prepare
     pub(super) scratch: StepScratch,
+    /// observability state (`Some` iff `cfg.obs` is set; built at
+    /// `prepare()`, like the plasticity engine)
+    pub(super) obs: Option<crate::obs::ObsState>,
     /// per-stage pipeline times, accumulated by `step_once`
     pub(super) step_times: StepTimes,
     /// effective exchange-batching interval (resolved at prepare; 1 until then)
@@ -191,6 +204,7 @@ impl Simulator {
             state_lut: Vec::new(),
             plasticity: None,
             scratch: StepScratch::default(),
+            obs: None,
             step_times: StepTimes::default(),
             exchange_every: 1,
             step_now: 0,
@@ -458,8 +472,79 @@ impl Simulator {
         self.remote_buffers = (self.nodes.n_images() > 0)
             .then(|| RingBuffers::new(n_state, remote_slots, &mut self.tracker));
         self.backend = Some(self.cfg.backend.create()?);
+        if let Some(ocfg) = self.cfg.obs.clone() {
+            let mut obs = crate::obs::ObsState::new(ocfg, self.rank())?;
+            obs.set_ring_gauges(
+                self.buffers.as_ref().map_or(0, |b| b.n_slots() as u64),
+                self.remote_buffers.as_ref().map_or(0, |b| b.n_slots() as u64),
+            );
+            // group for the end-of-run aggregation allgather. Registered on
+            // the raw communicator, NOT via `Simulator::register_group` —
+            // this group must not appear in `remote.groups`, or every
+            // exchange round would allgather over it. Collective-safe: the
+            // obs config is part of the SPMD-identical SimConfig, so every
+            // rank registers it here, in the same position.
+            obs.world_group = Some(self.comm.register_group((0..self.n_ranks()).collect()));
+            self.obs = Some(obs);
+        }
         self.prepared = true;
         self.timer.stop();
+        Ok(())
+    }
+
+    /// End-of-run observability: write this rank's summary trace record,
+    /// merge every rank's registry through one world allgather, attach the
+    /// merged [`crate::obs::ObsSummary`] to rank 0's result, and write the
+    /// run manifest. Called by `simulate()` *after* the result is
+    /// collected, so the aggregation traffic never pollutes the run's own
+    /// comm metrics (results stay identical with observability on or off).
+    pub(super) fn obs_finalize(
+        &mut self,
+        res: &mut SimResult,
+        t_ms: f64,
+    ) -> anyhow::Result<()> {
+        let Some(mut obs) = self.obs.take() else {
+            return Ok(());
+        };
+        obs.finalize(self.rank());
+        let n_ranks = self.n_ranks();
+        let merged = if n_ranks > 1 {
+            let group = obs
+                .world_group
+                .expect("obs world group is registered at prepare()");
+            let words = obs.registry.encode_words();
+            let all = self.comm.allgather(group, &words);
+            let mut merged = crate::obs::MetricsRegistry::new();
+            for payload in &all {
+                merged.merge(&crate::obs::MetricsRegistry::decode_words(payload)?);
+            }
+            merged
+        } else {
+            obs.registry.clone()
+        };
+        if self.rank() == 0 {
+            if let Some(dir) = obs.cfg.trace_dir.clone() {
+                let info = crate::obs::manifest::ManifestInfo {
+                    label: obs.cfg.label.clone(),
+                    n_ranks,
+                    t_ms,
+                    dt_ms: self.cfg.dt_ms as f32,
+                    seed: self.cfg.seed,
+                    level: crate::remote::levels::ALL_LEVELS
+                        .iter()
+                        .position(|&l| l == self.cfg.level)
+                        .unwrap_or(0) as u8,
+                    backend: format!("{:?}", self.cfg.backend),
+                    exchange_interval: self.exchange_every,
+                    sample_interval: obs.cfg.sample_interval,
+                    max_delay_steps: self.cfg.max_delay_steps,
+                    record_spikes: self.cfg.record_spikes,
+                };
+                crate::obs::manifest::write_manifest(&dir, &info)?;
+            }
+            res.obs = Some(crate::obs::ObsSummary { n_ranks, merged });
+        }
+        self.obs = Some(obs);
         Ok(())
     }
 
@@ -630,6 +715,7 @@ impl Simulator {
             device_peak: tr.peak(MemKind::Device),
             device_current: tr.current(MemKind::Device),
             host_peak: tr.peak(MemKind::Host),
+            host_current: tr.current(MemKind::Host),
             spikes: self.recorder.events.clone(),
             n_spikes: self.recorder.events.len() as u64,
             p2p_messages: self.comm.traffic().p2p_messages,
@@ -642,6 +728,7 @@ impl Simulator {
                 .plasticity
                 .as_ref()
                 .map(|p| p.weight_summary(&self.conns)),
+            obs: None,
         }
     }
 

@@ -78,6 +78,10 @@ fn decode_config(dec: &mut Decoder) -> Result<SimConfig> {
         max_delay_steps,
         offboard,
         exchange_interval,
+        // telemetry is per-run, not simulation state: a restored run
+        // re-enables it by setting `cfg.obs` before `prepare()`-equivalent
+        // use, never from the snapshot
+        obs: None,
     })
 }
 
@@ -468,6 +472,7 @@ impl Simulator {
             state_lut: Vec::new(),
             plasticity: None,
             scratch: Default::default(),
+            obs: None,
             step_times: Default::default(),
             exchange_every,
             step_now,

@@ -123,7 +123,23 @@ impl Simulator {
         let wall = t0.elapsed().as_secs_f64();
         self.timer.stop();
         let rtf = if t_ms > 0.0 { wall / (t_ms / 1e3) } else { 0.0 };
-        Ok(self.result(rtf, t_ms))
+        // collect the result BEFORE the observability finalize: its
+        // cross-rank aggregation allgather must not leak into the run's
+        // own comm metrics, so results match obs-off runs exactly
+        let mut res = self.result(rtf, t_ms);
+        self.obs_finalize(&mut res, t_ms)?;
+        Ok(res)
+    }
+
+    /// Charge one pipeline phase's elapsed time to both the cumulative
+    /// [`crate::util::timer::StepTimes`] and (when on) the observability
+    /// histograms.
+    #[inline]
+    fn note_phase(&mut self, p: StepPhase, elapsed: std::time::Duration) {
+        self.step_times.accumulate(p, elapsed);
+        if let Some(o) = self.obs.as_mut() {
+            o.phase(p, elapsed.as_nanos() as u64);
+        }
     }
 
     /// One integration step of the pipeline described in the module docs.
@@ -132,6 +148,9 @@ impl Simulator {
         let dt = self.cfg.dt_ms;
         // emission step within the current exchange interval
         let lag = self.scratch.interval_pos as u16;
+        if let Some(o) = self.obs.as_mut() {
+            o.begin_step();
+        }
 
         // ---- input: Poisson devices through their outgoing connections
         let t0 = Instant::now();
@@ -155,14 +174,14 @@ impl Simulator {
                 }
             }
         }
-        self.step_times.accumulate(StepPhase::Input, t0.elapsed());
+        self.note_phase(StepPhase::Input, t0.elapsed());
 
         // ---- pre_update: plastic presynaptic arrivals due this step, in
         // canonical order — depression + deposits into the plastic plane
         if let Some(pl) = self.plasticity.as_mut() {
             let t0 = Instant::now();
             pl.pre_update(self.step_now as i64, &mut self.conns, &self.state_lut);
-            self.step_times.accumulate(StepPhase::PreUpdate, t0.elapsed());
+            self.note_phase(StepPhase::PreUpdate, t0.elapsed());
         }
 
         // ---- dynamics: local + remote + plastic planes -> backend ->
@@ -216,7 +235,7 @@ impl Simulator {
                 pl.end_step();
             }
         }
-        self.step_times.accumulate(StepPhase::Dynamics, t0.elapsed());
+        self.note_phase(StepPhase::Dynamics, t0.elapsed());
 
         // ---- collect: spike flags -> spiking-node list, record
         let t0 = Instant::now();
@@ -231,7 +250,7 @@ impl Simulator {
         for &node in &self.scratch.spiking {
             self.recorder.record(step_now, node);
         }
-        self.step_times.accumulate(StepPhase::Collect, t0.elapsed());
+        self.note_phase(StepPhase::Collect, t0.elapsed());
 
         // ---- post_update: potentiate the spiking neurons' incoming
         // plastic synapses, then bump their postsynaptic traces
@@ -243,7 +262,7 @@ impl Simulator {
                 &mut self.conns,
                 &self.state_lut,
             );
-            self.step_times.accumulate(StepPhase::PostUpdate, t0.elapsed());
+            self.note_phase(StepPhase::PostUpdate, t0.elapsed());
         }
 
         // ---- route: map positions into lag-tagged packets (Fig. 15b) and
@@ -286,7 +305,7 @@ impl Simulator {
                 }
             }
         }
-        self.step_times.accumulate(StepPhase::Route, t0.elapsed());
+        self.note_phase(StepPhase::Route, t0.elapsed());
 
         // ---- deliver (local): own spikes through the connection array
         let t0 = Instant::now();
@@ -308,12 +327,37 @@ impl Simulator {
                 );
             }
         }
-        self.step_times.accumulate(StepPhase::Deliver, t0.elapsed());
+        self.note_phase(StepPhase::Deliver, t0.elapsed());
 
         // ---- exchange + deliver (remote), once per interval
         self.scratch.interval_pos += 1;
         if self.scratch.interval_pos >= self.exchange_every as u32 {
             self.do_exchange(self.step_now)?;
+        }
+
+        // ---- observability: close out the step (counters, gauges, and —
+        // on the sampling cadence — one JSONL record into the sink buffer)
+        if self.obs.is_some() {
+            let sample = crate::obs::StepSample {
+                step: self.step_now,
+                time_ms: self.step_now as f64 * dt,
+                spikes: self.scratch.spiking.len() as u64,
+                pkt_backlog: self.scratch.packets.iter().map(|p| p.len() as u64).sum(),
+                grp_backlog: self
+                    .scratch
+                    .group_bufs
+                    .iter()
+                    .map(|b| (b.len() / COLL_WORDS_PER_SPIKE) as u64)
+                    .sum(),
+                dev_current: self.tracker.current(MemKind::Device),
+                dev_peak: self.tracker.peak(MemKind::Device),
+                host_current: self.tracker.current(MemKind::Host),
+                host_peak: self.tracker.peak(MemKind::Host),
+                traffic: self.comm.traffic(),
+            };
+            if let Some(o) = self.obs.as_mut() {
+                o.end_step(&sample);
+            }
         }
 
         self.step_now += 1;
@@ -355,6 +399,22 @@ impl Simulator {
         let me = self.rank();
         let n_groups = self.remote.groups.len();
 
+        // observability: outgoing record count + comm counters before the
+        // round (pure reads — the exchange itself is untouched)
+        let obs_on = self.obs.is_some();
+        let (obs_records_out, obs_traffic_before) = if obs_on {
+            let p2p: u64 = self.scratch.packets.iter().map(|p| p.len() as u64).sum();
+            let coll: u64 = self
+                .scratch
+                .group_bufs
+                .iter()
+                .map(|b| (b.len() / COLL_WORDS_PER_SPIKE) as u64)
+                .sum();
+            (p2p + coll, self.comm.traffic())
+        } else {
+            (0, crate::comm::TrafficStats::default())
+        };
+
         // ---- communication: one all-to-all-v + one allgather per group
         let t0 = Instant::now();
         let incoming = if n_ranks > 1 {
@@ -375,7 +435,30 @@ impl Simulator {
             data.clear();
             self.scratch.group_bufs[g] = data;
         }
-        self.step_times.accumulate(StepPhase::Exchange, t0.elapsed());
+        self.note_phase(StepPhase::Exchange, t0.elapsed());
+
+        // observability: incoming record count (own collective slot is
+        // excluded, mirroring delivery below) + this round's byte delta;
+        // also the trace sink's flush point, off the per-step path
+        if obs_on {
+            let mut records_in: u64 = incoming
+                .as_ref()
+                .map_or(0, |inc| inc.iter().map(|p| p.len() as u64).sum());
+            for g in 0..n_groups {
+                if let Some(my_mi) = self.remote.groups[g].member_index(me) {
+                    for (mi, payload) in gathered[g].iter().enumerate() {
+                        if mi != my_mi {
+                            records_in += (payload.len() / COLL_WORDS_PER_SPIKE) as u64;
+                        }
+                    }
+                }
+            }
+            let delta_bytes =
+                self.comm.traffic().total_bytes() - obs_traffic_before.total_bytes();
+            if let Some(o) = self.obs.as_mut() {
+                o.on_exchange(obs_records_out, records_in, delta_bytes);
+            }
+        }
 
         // ---- delivery in canonical (lag, σ, group-member) order
         let t0 = Instant::now();
@@ -452,7 +535,7 @@ impl Simulator {
                 );
             }
         }
-        self.step_times.accumulate(StepPhase::Deliver, t0.elapsed());
+        self.note_phase(StepPhase::Deliver, t0.elapsed());
 
         // recycle all buffers: incoming packets become the next interval's
         // outgoing packets (steady-state allocation-free)

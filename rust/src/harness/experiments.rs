@@ -25,6 +25,10 @@ pub struct Agg {
     pub rtf_sd: f64,
     pub device_peak: f64,
     pub device_peak_sd: f64,
+    /// host-side allocation tracking (memory/tracker.rs), mean over ranks
+    pub host_peak: f64,
+    pub host_peak_sd: f64,
+    pub host_current: f64,
     pub n_neurons: f64,
     pub n_connections: f64,
     pub n_images: f64,
@@ -54,6 +58,8 @@ pub fn aggregate(runs: &[Vec<SimResult>]) -> Agg {
     let (construction_s, _) = f(&|r| r.phases.construction().as_secs_f64());
     let (rtf, rtf_sd) = f(&|r| r.rtf);
     let (device_peak, device_peak_sd) = f(&|r| r.device_peak as f64);
+    let (host_peak, host_peak_sd) = f(&|r| r.host_peak as f64);
+    let (host_current, _) = f(&|r| r.host_current as f64);
     let (n_neurons, _) = f(&|r| r.n_neurons as f64);
     let (n_connections, _) = f(&|r| r.n_connections as f64);
     let (n_images, _) = f(&|r| r.n_images as f64);
@@ -73,6 +79,9 @@ pub fn aggregate(runs: &[Vec<SimResult>]) -> Agg {
         rtf_sd,
         device_peak,
         device_peak_sd,
+        host_peak,
+        host_peak_sd,
+        host_current,
         n_neurons,
         n_connections,
         n_images,
@@ -100,6 +109,9 @@ impl Agg {
             ("rtf_sd", Json::num(self.rtf_sd)),
             ("device_peak", Json::num(self.device_peak)),
             ("device_peak_sd", Json::num(self.device_peak_sd)),
+            ("host_peak", Json::num(self.host_peak)),
+            ("host_peak_sd", Json::num(self.host_peak_sd)),
+            ("host_current", Json::num(self.host_current)),
             ("n_neurons", Json::num(self.n_neurons)),
             ("n_connections", Json::num(self.n_connections)),
             ("n_images", Json::num(self.n_images)),

@@ -21,6 +21,16 @@
 //! batched exchange stays bit-identical (`DESIGN.md` §12). Snapshots
 //! carry the plastic state (format v3; v2 files still load as
 //! all-static).
+//!
+//! Every run can be observed without perturbing it: setting
+//! [`engine::SimConfig::obs`] (CLI: `--obs-dir` / `--obs-interval`)
+//! turns on the [`obs`] subsystem — an allocation-free metrics registry
+//! (per-phase latency histograms, spike/record/byte volumes, ring and
+//! memory occupancy), a bounded per-rank JSONL trace sink with a
+//! hash-verified run manifest, and a merged cross-rank summary on rank
+//! 0's `SimResult`. `nestgpu report <trace-dir>` analyzes the traces
+//! offline. Results are bit-identical with observability on or off, at
+//! <2% steps/s overhead (`DESIGN.md` §13).
 
 pub mod comm;
 pub mod connection;
@@ -29,6 +39,7 @@ pub mod harness;
 pub mod memory;
 pub mod models;
 pub mod node;
+pub mod obs;
 pub mod plasticity;
 pub mod remote;
 pub mod runtime;

@@ -19,6 +19,16 @@
 //!                            [--t-ms T] [--level 0..3] [--seed X] [--p2p]
 //!                            [--stdp ...]
 //!   nestgpu snapshot resume  --dir D [--t-ms T]
+//!   nestgpu report <trace-dir> [--json-out PATH] — analyze the JSONL
+//!                            traces of a run started with --obs-dir:
+//!                            per-rank/per-phase p50/p95/max tables plus
+//!                            comm and memory series, and a
+//!                            machine-readable summary JSON
+//!
+//! Observability (DESIGN.md §13): `--obs-dir D` writes per-rank JSONL
+//! traces + a run manifest into D; `--obs-interval N` samples a trace
+//! record every N steps (default 10). Either flag enables the metrics
+//! registry and the merged cross-rank summary printed after the run.
 //!
 //! `--exchange-interval I` batches remote spike exchange to once every I
 //! steps (I is clamped to the minimum remote synaptic delay; 0 or absent =
@@ -40,6 +50,7 @@ use nestgpu::harness::{
 };
 use nestgpu::models::balanced::{build_balanced, BalancedConfig, StdpScenario};
 use nestgpu::models::mam::{MamConfig, MamModel};
+use nestgpu::obs::{report::read_trace_dir, CounterId, HistId, ObsConfig};
 use nestgpu::remote::GpuMemLevel;
 use nestgpu::runtime::BackendKind;
 use nestgpu::util::json::Json;
@@ -153,7 +164,33 @@ fn balanced_config(args: &Args) -> BalancedConfig {
     }
 }
 
+/// The `--obs-*` knobs: observability is on when either `--obs-dir` or
+/// `--obs-interval` is given.
+fn obs_config(args: &Args, label: &str) -> Option<ObsConfig> {
+    let trace_dir = args.flags.get("obs-dir").map(PathBuf::from);
+    let interval = args.get("obs-interval", 0u64);
+    if trace_dir.is_none() && interval == 0 {
+        return None;
+    }
+    let d = ObsConfig::default();
+    let sample_interval = if interval == 0 {
+        d.sample_interval
+    } else {
+        interval
+    };
+    Some(ObsConfig {
+        trace_dir,
+        sample_interval,
+        label: label.to_string(),
+        ..d
+    })
+}
+
 fn sim_config(args: &Args) -> SimConfig {
+    sim_config_labeled(args, "cli")
+}
+
+fn sim_config_labeled(args: &Args, label: &str) -> SimConfig {
     SimConfig {
         seed: args.get("seed", 123u64),
         level: GpuMemLevel::from_index(args.get("level", 2usize)).unwrap_or_default(),
@@ -164,6 +201,7 @@ fn sim_config(args: &Args) -> SimConfig {
             0 => None, // auto: once per minimum remote synaptic delay
             k => Some(k),
         },
+        obs: obs_config(args, label),
         ..Default::default()
     }
 }
@@ -205,6 +243,36 @@ fn print_results(results: &[SimResult], t_ms: f64) {
         ]);
     }
     t.print();
+    // merged cross-rank observability summary (rank 0 carries it)
+    if let Some(obs) = results.iter().find_map(|r| r.obs.as_ref()) {
+        let m = &obs.merged;
+        println!(
+            "obs: {} ranks merged; {} steps, {} spikes, {} exchanges, {} records in",
+            obs.n_ranks,
+            m.counter(CounterId::Steps),
+            m.counter(CounterId::SpikesEmitted),
+            m.counter(CounterId::Exchanges),
+            m.counter(CounterId::RecordsReceived),
+        );
+        let mut t = Table::new(
+            "merged phase histograms (ns/step, all ranks)",
+            &["phase", "count", "p50", "p95", "max"],
+        );
+        for &p in &ALL_STEP_PHASES {
+            let h = m.hist(HistId::PhaseNs(p));
+            if h.count == 0 {
+                continue;
+            }
+            t.row(vec![
+                p.name().to_string(),
+                h.count.to_string(),
+                h.p50().to_string(),
+                h.p95().to_string(),
+                h.max.to_string(),
+            ]);
+        }
+        t.print();
+    }
     if results.iter().any(|r| r.n_plastic > 0) {
         let mut t = Table::new(
             "plastic weights (STDP)",
@@ -240,7 +308,7 @@ fn cmd_balanced(args: &Args) -> anyhow::Result<()> {
         sim_config(args).level.name(),
         if bal.stdp.is_some() { ", STDP on E synapses" } else { "" },
     );
-    let cfg = sim_config(args);
+    let cfg = sim_config_labeled(args, "balanced");
     let results = run_cluster(
         ranks,
         &cfg,
@@ -266,7 +334,7 @@ fn cmd_mam(args: &Args) -> anyhow::Result<()> {
         m.total_neurons(),
         mam_cfg.chi
     );
-    let cfg = sim_config(args);
+    let cfg = sim_config_labeled(args, "mam");
     let results = run_cluster(
         ranks,
         &cfg,
@@ -312,8 +380,9 @@ fn cmd_phases(args: &Args) -> anyhow::Result<()> {
     let bal = balanced_config(args);
     check_stdp(args, &bal)?;
     let t_ms = args.get("t-ms", 100.0f64);
-    let cfg = sim_config(args);
+    let cfg = sim_config_labeled(args, "phases");
     let stdp_on = bal.stdp.is_some();
+    let protocol = if bal.collective { "collective" } else { "p2p" };
     let results = run_cluster(
         ranks,
         &cfg,
@@ -347,11 +416,118 @@ fn cmd_phases(args: &Args) -> anyhow::Result<()> {
             "exchange_interval",
             Json::num(results.first().map_or(0.0, |r| r.exchange_interval as f64)),
         ),
+        ("protocol", Json::str(protocol)),
         ("stdp", Json::Bool(stdp_on)),
         ("per_rank", Json::Arr(per_rank)),
     ]);
     let text = out.to_string();
     println!("{text}");
+    if let Some(path) = args.flags.get("json-out") {
+        std::fs::write(path, &text)
+            .map_err(|e| anyhow::anyhow!("write --json-out {path}: {e}"))?;
+        eprintln!("phases JSON written to {path}");
+    }
+    Ok(())
+}
+
+/// `nestgpu report <trace-dir>`: render the per-rank/per-phase latency,
+/// comm and memory statistics extracted from a run's JSONL traces, and
+/// write the machine-readable summary JSON.
+fn cmd_report(argv: &[String]) -> anyhow::Result<()> {
+    // first positional (non-flag, non-flag-value) argument is the dir;
+    // `--dir D` also accepted
+    let args = Args::parse(argv);
+    let mut positional: Option<String> = None;
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if a.starts_with("--") {
+            // skip the flag and its value (mirrors Args::parse)
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                i += 2;
+            } else {
+                i += 1;
+            }
+        } else {
+            positional = Some(a.clone());
+            break;
+        }
+    }
+    let dir = positional
+        .or_else(|| args.flags.get("dir").cloned())
+        .map(PathBuf::from)
+        .ok_or_else(|| {
+            anyhow::anyhow!("usage: nestgpu report <trace-dir> [--json-out PATH]")
+        })?;
+    let rep = read_trace_dir(&dir)?;
+
+    if let Some(m) = &rep.manifest {
+        println!(
+            "run '{}': {} ranks, {} ms, exchange every {} step(s), sampled every {} step(s), \
+             rev {} ({})",
+            m.get("label").and_then(|v| v.as_str()).unwrap_or("?"),
+            m.get("n_ranks").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            m.get("t_ms").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            m.get("exchange_interval").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            m.get("sample_interval").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            m.get("git_rev").and_then(|v| v.as_str()).unwrap_or("?"),
+            m.get("created").and_then(|v| v.as_str()).unwrap_or("?"),
+        );
+    } else {
+        println!("(no valid manifest.json in {})", dir.display());
+    }
+
+    let mut t = Table::new(
+        "per-rank phase latency (ns per sampled step)",
+        &["rank", "phase", "p50", "p95", "max", "mean"],
+    );
+    for r in &rep.ranks {
+        for (p, s) in ALL_STEP_PHASES.iter().zip(r.phase_ns.iter()) {
+            if s.count == 0 || s.max == 0 {
+                continue;
+            }
+            t.row(vec![
+                r.rank.to_string(),
+                p.name().to_string(),
+                s.p50.to_string(),
+                s.p95.to_string(),
+                s.max.to_string(),
+                format!("{:.0}", s.mean),
+            ]);
+        }
+    }
+    t.print();
+
+    let mut t = Table::new(
+        "per-rank comm + memory",
+        &[
+            "rank", "samples", "spikes p95", "p2p msgs", "p2p", "allgathers", "coll",
+            "dev peak", "host peak",
+        ],
+    );
+    for r in &rep.ranks {
+        t.row(vec![
+            r.rank.to_string(),
+            r.samples.to_string(),
+            r.spikes.p95.to_string(),
+            r.p2p_messages.to_string(),
+            fmt_bytes(r.p2p_bytes),
+            r.coll_calls.to_string(),
+            fmt_bytes(r.coll_bytes),
+            fmt_bytes(r.dev_peak),
+            fmt_bytes(r.host_peak),
+        ]);
+    }
+    t.print();
+
+    let out_path = args
+        .flags
+        .get("json-out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| dir.join("report.json"));
+    std::fs::write(&out_path, rep.to_json().to_string())
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", out_path.display()))?;
+    println!("summary JSON written to {}", out_path.display());
     Ok(())
 }
 
@@ -436,6 +612,7 @@ fn main() -> anyhow::Result<()> {
         "mam" => cmd_mam(&args),
         "estimate" => cmd_estimate(&args),
         "phases" => cmd_phases(&args),
+        "report" => cmd_report(&argv[1.min(argv.len())..]),
         "snapshot" => cmd_snapshot(&argv[1.min(argv.len())..]),
         "info" | "--help" | "-h" => {
             cmd_info();
@@ -444,7 +621,7 @@ fn main() -> anyhow::Result<()> {
         other => {
             eprintln!(
                 "unknown subcommand '{other}'; try: info | balanced | mam | estimate | \
-                 phases | snapshot"
+                 phases | report | snapshot"
             );
             std::process::exit(2);
         }

@@ -1,0 +1,205 @@
+//! Run manifest: a `manifest.json` written by rank 0 into the trace
+//! directory so a trace is self-describing — which config, seed, rank
+//! layout, exchange interval and code revision produced it. The manifest
+//! carries an FNV-1a content hash over its own serialized fields (hash
+//! field excluded) so tooling can detect truncated or hand-edited files.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::snapshot::format::{fnv1a64_fold, FNV1A64_OFFSET};
+use crate::util::json::Json;
+
+/// Manifest schema version (bump on field changes).
+pub const MANIFEST_SCHEMA: u64 = 1;
+
+/// The run facts a manifest records.
+#[derive(Clone, Debug)]
+pub struct ManifestInfo {
+    /// free-form run label (CLI subcommand / bench name)
+    pub label: String,
+    pub n_ranks: usize,
+    pub t_ms: f64,
+    pub dt_ms: f32,
+    pub seed: u64,
+    pub level: u8,
+    pub backend: String,
+    pub exchange_interval: u16,
+    pub sample_interval: u64,
+    pub max_delay_steps: u16,
+    pub record_spikes: bool,
+}
+
+/// Git revision of the working tree, or "unknown" outside a checkout.
+pub fn git_revision() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// ISO-8601 UTC timestamp (`YYYY-MM-DDThh:mm:ssZ`) from the system clock,
+/// without a date/time dependency: civil-from-days per Howard Hinnant's
+/// algorithm.
+pub fn iso8601_now() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as i64)
+        .unwrap_or(0);
+    iso8601_from_unix(secs)
+}
+
+/// `YYYY-MM-DDThh:mm:ssZ` for a unix timestamp (UTC).
+pub fn iso8601_from_unix(secs: i64) -> String {
+    let days = secs.div_euclid(86_400);
+    let sod = secs.rem_euclid(86_400);
+    let (h, m, s) = (sod / 3600, (sod % 3600) / 60, sod % 60);
+    // civil-from-days
+    let z = days + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z - era * 146_097; // [0, 146096]
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let mon = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = if mon <= 2 { y + 1 } else { y };
+    format!("{y:04}-{mon:02}-{d:02}T{h:02}:{m:02}:{s:02}Z")
+}
+
+fn manifest_json(info: &ManifestInfo) -> Json {
+    Json::obj(vec![
+        ("schema", Json::num(MANIFEST_SCHEMA as f64)),
+        ("label", Json::str(&info.label)),
+        ("n_ranks", Json::num(info.n_ranks as f64)),
+        ("t_ms", Json::num(info.t_ms)),
+        ("dt_ms", Json::num(info.dt_ms as f64)),
+        ("seed", Json::num(info.seed as f64)),
+        ("level", Json::num(info.level as f64)),
+        ("backend", Json::str(&info.backend)),
+        ("exchange_interval", Json::num(info.exchange_interval as f64)),
+        ("sample_interval", Json::num(info.sample_interval as f64)),
+        ("max_delay_steps", Json::num(info.max_delay_steps as f64)),
+        ("record_spikes", Json::Bool(info.record_spikes)),
+        ("crate_version", Json::str(env!("CARGO_PKG_VERSION"))),
+        ("git_rev", Json::str(&git_revision())),
+        ("created", Json::str(&iso8601_now())),
+    ])
+}
+
+/// FNV-1a over the canonical serialization (BTreeMap key order makes it
+/// deterministic for identical field values).
+pub fn content_hash(j: &Json) -> u64 {
+    fnv1a64_fold(FNV1A64_OFFSET, j.to_string().as_bytes())
+}
+
+/// Write `manifest.json` into `dir`. Returns the serialized JSON.
+pub fn write_manifest(dir: &Path, info: &ManifestInfo) -> anyhow::Result<Json> {
+    let body = manifest_json(info);
+    let hash = content_hash(&body);
+    let full = match body {
+        Json::Obj(mut m) => {
+            m.insert("content_hash".to_string(), Json::str(&format!("{hash:016x}")));
+            Json::Obj(m)
+        }
+        other => other,
+    };
+    let path = dir.join("manifest.json");
+    std::fs::write(&path, full.to_string())
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))?;
+    Ok(full)
+}
+
+/// Load and verify a manifest; `Ok(json)` when present and hash-clean.
+pub fn read_manifest(dir: &Path) -> anyhow::Result<Json> {
+    let path = dir.join("manifest.json");
+    let j = Json::parse_file(&path).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let stored = j
+        .get("content_hash")
+        .and_then(|h| h.as_str())
+        .ok_or_else(|| anyhow::anyhow!("{}: missing content_hash", path.display()))?;
+    let body = match &j {
+        Json::Obj(m) => {
+            let mut m2: BTreeMap<String, Json> = m.clone();
+            m2.remove("content_hash");
+            Json::Obj(m2)
+        }
+        other => other.clone(),
+    };
+    let expect = format!("{:016x}", content_hash(&body));
+    if stored != expect {
+        anyhow::bail!(
+            "{}: content hash mismatch (stored {stored}, computed {expect})",
+            path.display()
+        );
+    }
+    Ok(j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn info() -> ManifestInfo {
+        ManifestInfo {
+            label: "test".into(),
+            n_ranks: 4,
+            t_ms: 100.0,
+            dt_ms: 0.1,
+            seed: 12345,
+            level: 1,
+            backend: "reference".into(),
+            exchange_interval: 8,
+            sample_interval: 10,
+            max_delay_steps: 32,
+            record_spikes: false,
+        }
+    }
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "nestgpu_obs_manifest_{name}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn iso8601_known_values() {
+        assert_eq!(iso8601_from_unix(0), "1970-01-01T00:00:00Z");
+        assert_eq!(iso8601_from_unix(951_786_000), "2000-02-29T01:00:00Z");
+        assert_eq!(iso8601_from_unix(1_754_611_200), "2025-08-08T00:00:00Z");
+    }
+
+    #[test]
+    fn manifest_roundtrips_and_verifies() {
+        let dir = tmp_dir("roundtrip");
+        let written = write_manifest(&dir, &info()).unwrap();
+        let read = read_manifest(&dir).unwrap();
+        assert_eq!(written, read);
+        assert_eq!(read.get("n_ranks").unwrap().as_usize(), Some(4));
+        assert_eq!(read.get("exchange_interval").unwrap().as_usize(), Some(8));
+        assert_eq!(read.get("schema").unwrap().as_usize(), Some(MANIFEST_SCHEMA as usize));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tampering_is_detected() {
+        let dir = tmp_dir("tamper");
+        write_manifest(&dir, &info()).unwrap();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.replace("\"seed\":12345", "\"seed\":99")).unwrap();
+        assert!(read_manifest(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,559 @@
+//! Allocation-free metrics registry: counters, gauges and fixed
+//! log-bucket histograms over a compile-time metric catalog.
+//!
+//! The registry is a plain struct of fixed-size arrays — recording a value
+//! is an array index plus a handful of integer ops, so the step pipeline
+//! can feed it every step without heap traffic. Histograms use power-of-two
+//! buckets (bucket `b ≥ 1` holds `[2^(b-1), 2^b − 1]`, bucket 0 holds the
+//! exact value 0, the last bucket saturates), which keeps quantile
+//! estimates within a factor of two — plenty for the "where does step time
+//! go" question of the paper's Fig. 3a/6 and for Pronold-style per-phase
+//! hot-spot hunting, at a per-record cost of one `leading_zeros`.
+//!
+//! Registries serialize to `u32` words so a whole rank's metrics travel
+//! through the existing `Communicator::allgather_into` at run end; merging
+//! is integer-only (counters add, gauges take the max, histogram buckets
+//! add), so the cross-rank merged summary is bit-stable for any rank count
+//! and either exchange protocol.
+
+use crate::util::json::Json;
+use crate::util::timer::{StepPhase, ALL_STEP_PHASES};
+
+/// Number of log buckets (covers the full `u64` range).
+pub const N_BUCKETS: usize = 64;
+
+/// Fixed log-bucket histogram with exact count/sum/max sidecars.
+#[derive(Clone, Copy, Debug)]
+pub struct Histogram {
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+    buckets: [u64; N_BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            count: 0,
+            sum: 0,
+            max: 0,
+            buckets: [0; N_BUCKETS],
+        }
+    }
+}
+
+impl Histogram {
+    /// Bucket index of a value: 0 for 0, else `64 − leading_zeros`,
+    /// saturating at the last bucket. Bucket `b ≥ 1` therefore covers
+    /// `[2^(b−1), 2^b − 1]`; the last bucket covers everything from
+    /// `2^(N_BUCKETS−2)` up.
+    #[inline]
+    pub fn bucket_of(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            (64 - v.leading_zeros() as usize).min(N_BUCKETS - 1)
+        }
+    }
+
+    /// Inclusive upper edge of a bucket (what quantile estimates report).
+    pub fn bucket_upper(b: usize) -> u64 {
+        match b {
+            0 => 0,
+            b if b >= N_BUCKETS - 1 => u64::MAX,
+            b => (1u64 << b) - 1,
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        if v > self.max {
+            self.max = v;
+        }
+        self.buckets[Self::bucket_of(v)] += 1;
+    }
+
+    pub fn bucket_count(&self, b: usize) -> u64 {
+        self.buckets[b]
+    }
+
+    /// Quantile estimate: the upper edge of the bucket where the
+    /// cumulative count first reaches `⌈q·count⌉`, clamped to the exact
+    /// observed max (so `quantile(1.0) == max`). Zero if empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (b, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return Self::bucket_upper(b).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.max = self.max.max(other.max);
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += *b;
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("mean", Json::num(self.mean())),
+            ("p50", Json::num(self.p50() as f64)),
+            ("p95", Json::num(self.p95() as f64)),
+            ("max", Json::num(self.max as f64)),
+        ])
+    }
+}
+
+/// Monotonic event counts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CounterId {
+    /// integration steps executed
+    Steps,
+    /// spikes emitted by local neurons (collect phase)
+    SpikesEmitted,
+    /// remote spike records routed out (p2p records + collective spikes)
+    RecordsSent,
+    /// remote spike records received and delivered
+    RecordsReceived,
+    /// exchange rounds performed
+    Exchanges,
+    /// JSONL trace records written
+    TraceRecords,
+    /// JSONL trace records dropped at the bound
+    TraceDropped,
+}
+
+pub const ALL_COUNTERS: [CounterId; 7] = [
+    CounterId::Steps,
+    CounterId::SpikesEmitted,
+    CounterId::RecordsSent,
+    CounterId::RecordsReceived,
+    CounterId::Exchanges,
+    CounterId::TraceRecords,
+    CounterId::TraceDropped,
+];
+
+impl CounterId {
+    pub fn name(self) -> &'static str {
+        match self {
+            CounterId::Steps => "steps",
+            CounterId::SpikesEmitted => "spikes_emitted",
+            CounterId::RecordsSent => "records_sent",
+            CounterId::RecordsReceived => "records_received",
+            CounterId::Exchanges => "exchanges",
+            CounterId::TraceRecords => "trace_records",
+            CounterId::TraceDropped => "trace_dropped",
+        }
+    }
+    fn index(self) -> usize {
+        ALL_COUNTERS.iter().position(|&c| c == self).unwrap()
+    }
+}
+
+/// Last-sampled values (merged across ranks with `max`, so the world
+/// summary reports the worst rank — the scaling-cliff question).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GaugeId {
+    /// p2p spike records waiting for the next exchange (scratch backlog)
+    PacketBacklog,
+    /// collective spikes waiting for the next exchange (scratch backlog)
+    GroupBacklog,
+    /// local-plane ring slots (capacity; fixed after prepare)
+    LocalRingSlots,
+    /// remote-plane ring slots (0 on ranks without image neurons)
+    RemoteRingSlots,
+    /// device bytes currently allocated (memory/tracker.rs)
+    DeviceCurrent,
+    /// device bytes peak
+    DevicePeak,
+    /// host bytes currently allocated
+    HostCurrent,
+    /// host bytes peak
+    HostPeak,
+}
+
+pub const ALL_GAUGES: [GaugeId; 8] = [
+    GaugeId::PacketBacklog,
+    GaugeId::GroupBacklog,
+    GaugeId::LocalRingSlots,
+    GaugeId::RemoteRingSlots,
+    GaugeId::DeviceCurrent,
+    GaugeId::DevicePeak,
+    GaugeId::HostCurrent,
+    GaugeId::HostPeak,
+];
+
+impl GaugeId {
+    pub fn name(self) -> &'static str {
+        match self {
+            GaugeId::PacketBacklog => "pkt_backlog",
+            GaugeId::GroupBacklog => "grp_backlog",
+            GaugeId::LocalRingSlots => "local_ring_slots",
+            GaugeId::RemoteRingSlots => "remote_ring_slots",
+            GaugeId::DeviceCurrent => "dev_cur",
+            GaugeId::DevicePeak => "dev_peak",
+            GaugeId::HostCurrent => "host_cur",
+            GaugeId::HostPeak => "host_peak",
+        }
+    }
+    fn index(self) -> usize {
+        ALL_GAUGES.iter().position(|&g| g == self).unwrap()
+    }
+}
+
+/// Histogram catalog: one per pipeline phase (recorded when the phase
+/// runs — exchange/deliver at exchange cadence), plus per-step spike
+/// counts and per-exchange record/byte volumes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HistId {
+    /// wall-clock ns of one execution of a pipeline phase
+    PhaseNs(StepPhase),
+    /// spikes emitted per step
+    SpikesPerStep,
+    /// remote records received per exchange round
+    RecordsPerExchange,
+    /// comm bytes (p2p + collective) sent per exchange round
+    BytesPerExchange,
+}
+
+pub const N_HISTS: usize = ALL_STEP_PHASES.len() + 3;
+
+pub const ALL_HISTS: [HistId; N_HISTS] = [
+    HistId::PhaseNs(StepPhase::Input),
+    HistId::PhaseNs(StepPhase::PreUpdate),
+    HistId::PhaseNs(StepPhase::Dynamics),
+    HistId::PhaseNs(StepPhase::Collect),
+    HistId::PhaseNs(StepPhase::PostUpdate),
+    HistId::PhaseNs(StepPhase::Route),
+    HistId::PhaseNs(StepPhase::Exchange),
+    HistId::PhaseNs(StepPhase::Deliver),
+    HistId::SpikesPerStep,
+    HistId::RecordsPerExchange,
+    HistId::BytesPerExchange,
+];
+
+impl HistId {
+    pub fn name(self) -> &'static str {
+        match self {
+            HistId::PhaseNs(p) => p.name(),
+            HistId::SpikesPerStep => "spikes_per_step",
+            HistId::RecordsPerExchange => "records_per_exchange",
+            HistId::BytesPerExchange => "bytes_per_exchange",
+        }
+    }
+    #[inline]
+    fn index(self) -> usize {
+        match self {
+            HistId::PhaseNs(p) => p.index(),
+            HistId::SpikesPerStep => ALL_STEP_PHASES.len(),
+            HistId::RecordsPerExchange => ALL_STEP_PHASES.len() + 1,
+            HistId::BytesPerExchange => ALL_STEP_PHASES.len() + 2,
+        }
+    }
+}
+
+/// Wire-format version of [`MetricsRegistry::encode_words`].
+const REGISTRY_WIRE_VERSION: u32 = 1;
+
+/// The per-rank metrics registry: fixed arrays indexed by the catalogs
+/// above, so recording never allocates.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counters: [u64; ALL_COUNTERS.len()],
+    gauges: [u64; ALL_GAUGES.len()],
+    hists: [Histogram; N_HISTS],
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&mut self, c: CounterId, n: u64) {
+        self.counters[c.index()] += n;
+    }
+    #[inline]
+    pub fn counter(&self, c: CounterId) -> u64 {
+        self.counters[c.index()]
+    }
+    #[inline]
+    pub fn set(&mut self, g: GaugeId, v: u64) {
+        self.gauges[g.index()] = v;
+    }
+    #[inline]
+    pub fn gauge(&self, g: GaugeId) -> u64 {
+        self.gauges[g.index()]
+    }
+    #[inline]
+    pub fn record(&mut self, h: HistId, v: u64) {
+        self.hists[h.index()].record(v);
+    }
+    #[inline]
+    pub fn hist(&self, h: HistId) -> &Histogram {
+        &self.hists[h.index()]
+    }
+
+    /// Merge another rank's registry: counters add, gauges take the max
+    /// (worst rank), histograms add bucket-wise. Integer-only, so merge
+    /// order cannot change the result.
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        for (a, b) in self.counters.iter_mut().zip(other.counters.iter()) {
+            *a += *b;
+        }
+        for (a, b) in self.gauges.iter_mut().zip(other.gauges.iter()) {
+            *a = (*a).max(*b);
+        }
+        for (a, b) in self.hists.iter_mut().zip(other.hists.iter()) {
+            a.merge(b);
+        }
+    }
+
+    /// Serialize to `u32` words for `Communicator::allgather_into`.
+    pub fn encode_words(&self) -> Vec<u32> {
+        let mut w = Vec::with_capacity(
+            4 + 2 * (self.counters.len() + self.gauges.len() + N_HISTS * (3 + N_BUCKETS)),
+        );
+        w.push(REGISTRY_WIRE_VERSION);
+        w.push(self.counters.len() as u32);
+        w.push(self.gauges.len() as u32);
+        w.push(N_HISTS as u32);
+        let mut push_u64 = |w: &mut Vec<u32>, v: u64| {
+            w.push(v as u32);
+            w.push((v >> 32) as u32);
+        };
+        for &c in &self.counters {
+            push_u64(&mut w, c);
+        }
+        for &g in &self.gauges {
+            push_u64(&mut w, g);
+        }
+        for h in &self.hists {
+            push_u64(&mut w, h.count);
+            push_u64(&mut w, h.sum);
+            push_u64(&mut w, h.max);
+            for &b in &h.buckets {
+                push_u64(&mut w, b);
+            }
+        }
+        w
+    }
+
+    /// Inverse of [`MetricsRegistry::encode_words`].
+    pub fn decode_words(words: &[u32]) -> anyhow::Result<Self> {
+        let mut i = 0usize;
+        let mut next = |words: &[u32]| -> anyhow::Result<u32> {
+            let v = *words
+                .get(i)
+                .ok_or_else(|| anyhow::anyhow!("metrics payload truncated at word {i}"))?;
+            i += 1;
+            Ok(v)
+        };
+        let version = next(words)?;
+        if version != REGISTRY_WIRE_VERSION {
+            anyhow::bail!(
+                "metrics wire version {version} != supported {REGISTRY_WIRE_VERSION}"
+            );
+        }
+        let (nc, ng, nh) = (next(words)?, next(words)?, next(words)?);
+        if nc as usize != ALL_COUNTERS.len()
+            || ng as usize != ALL_GAUGES.len()
+            || nh as usize != N_HISTS
+        {
+            anyhow::bail!(
+                "metrics catalog mismatch: got {nc}/{ng}/{nh} counters/gauges/hists, \
+                 expected {}/{}/{}",
+                ALL_COUNTERS.len(),
+                ALL_GAUGES.len(),
+                N_HISTS
+            );
+        }
+        let mut next_u64 = |words: &[u32]| -> anyhow::Result<u64> {
+            let lo = next(words)? as u64;
+            let hi = next(words)? as u64;
+            Ok(lo | (hi << 32))
+        };
+        let mut out = Self::default();
+        for c in out.counters.iter_mut() {
+            *c = next_u64(words)?;
+        }
+        for g in out.gauges.iter_mut() {
+            *g = next_u64(words)?;
+        }
+        for h in out.hists.iter_mut() {
+            h.count = next_u64(words)?;
+            h.sum = next_u64(words)?;
+            h.max = next_u64(words)?;
+            for b in h.buckets.iter_mut() {
+                *b = next_u64(words)?;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Full registry dump (summary JSONL record, `nestgpu report` input).
+    pub fn to_json(&self) -> Json {
+        let counters: Vec<(&str, Json)> = ALL_COUNTERS
+            .iter()
+            .map(|&c| (c.name(), Json::num(self.counter(c) as f64)))
+            .collect();
+        let gauges: Vec<(&str, Json)> = ALL_GAUGES
+            .iter()
+            .map(|&g| (g.name(), Json::num(self.gauge(g) as f64)))
+            .collect();
+        let hists: Vec<(&str, Json)> = ALL_HISTS
+            .iter()
+            .map(|&h| (h.name(), self.hist(h).to_json()))
+            .collect();
+        Json::obj(vec![
+            ("counters", Json::obj(counters)),
+            ("gauges", Json::obj(gauges)),
+            ("hists", Json::obj(hists)),
+        ])
+    }
+}
+
+/// Cross-rank summary attached to rank 0's `SimResult` when observability
+/// is on: every rank's registry merged in member order.
+#[derive(Clone, Debug)]
+pub struct ObsSummary {
+    pub n_ranks: usize,
+    pub merged: MetricsRegistry,
+}
+
+impl ObsSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n_ranks", Json::num(self.n_ranks as f64)),
+            ("merged", self.merged.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_follow_powers_of_two() {
+        // exact log-bucket edges: 0 | [1,1] | [2,3] | [4,7] | [8,15] | …
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 1);
+        assert_eq!(Histogram::bucket_of(2), 2);
+        assert_eq!(Histogram::bucket_of(3), 2);
+        assert_eq!(Histogram::bucket_of(4), 3);
+        assert_eq!(Histogram::bucket_of(7), 3);
+        assert_eq!(Histogram::bucket_of(8), 4);
+        for b in 1..N_BUCKETS - 1 {
+            let lo = 1u64 << (b - 1);
+            let hi = (1u64 << b) - 1;
+            assert_eq!(Histogram::bucket_of(lo), b, "lower edge of bucket {b}");
+            assert_eq!(Histogram::bucket_of(hi), b, "upper edge of bucket {b}");
+        }
+    }
+
+    #[test]
+    fn bucket_saturates_at_max() {
+        assert_eq!(Histogram::bucket_of(u64::MAX), N_BUCKETS - 1);
+        assert_eq!(Histogram::bucket_of(1u64 << 62), N_BUCKETS - 1);
+        assert_eq!(Histogram::bucket_of(1u64 << 63), N_BUCKETS - 1);
+        assert_eq!(Histogram::bucket_upper(N_BUCKETS - 1), u64::MAX);
+        let mut h = Histogram::default();
+        h.record(u64::MAX);
+        h.record(1u64 << 63);
+        assert_eq!(h.bucket_count(N_BUCKETS - 1), 2);
+        assert_eq!(h.max, u64::MAX);
+        // saturating sum must not wrap
+        assert_eq!(h.sum, u64::MAX);
+    }
+
+    #[test]
+    fn quantiles_clamp_to_observed_max() {
+        let mut h = Histogram::default();
+        for v in [10u64, 20, 30, 40, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count, 5);
+        // p50 lands in bucket [16,31] -> upper edge 31
+        assert_eq!(h.p50(), 31);
+        // p95/p100 land in the 1000 bucket [512,1023], clamped to max 1000
+        assert_eq!(h.quantile(1.0), 1000);
+        assert_eq!(h.p95(), 1000);
+        assert_eq!(h.mean(), 220.0);
+        let empty = Histogram::default();
+        assert_eq!(empty.p50(), 0);
+        assert_eq!(empty.quantile(1.0), 0);
+    }
+
+    #[test]
+    fn registry_roundtrips_through_words() {
+        let mut r = MetricsRegistry::new();
+        r.add(CounterId::SpikesEmitted, 42);
+        r.add(CounterId::Steps, 1000);
+        r.set(GaugeId::DevicePeak, u64::MAX - 1);
+        r.record(HistId::SpikesPerStep, 7);
+        r.record(HistId::PhaseNs(StepPhase::Dynamics), 1_000_000_007);
+        let words = r.encode_words();
+        let back = MetricsRegistry::decode_words(&words).unwrap();
+        assert_eq!(back.counter(CounterId::SpikesEmitted), 42);
+        assert_eq!(back.gauge(GaugeId::DevicePeak), u64::MAX - 1);
+        assert_eq!(back.hist(HistId::SpikesPerStep).count, 1);
+        assert_eq!(
+            back.hist(HistId::PhaseNs(StepPhase::Dynamics)).max,
+            1_000_000_007
+        );
+        assert!(MetricsRegistry::decode_words(&words[..8]).is_err());
+        let mut bad = words.clone();
+        bad[0] = 99;
+        assert!(MetricsRegistry::decode_words(&bad).is_err());
+    }
+
+    #[test]
+    fn merge_is_order_insensitive() {
+        let mut a = MetricsRegistry::new();
+        a.add(CounterId::SpikesEmitted, 10);
+        a.set(GaugeId::HostPeak, 100);
+        a.record(HistId::SpikesPerStep, 5);
+        let mut b = MetricsRegistry::new();
+        b.add(CounterId::SpikesEmitted, 32);
+        b.set(GaugeId::HostPeak, 70);
+        b.record(HistId::SpikesPerStep, 900);
+
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab.encode_words(), ba.encode_words());
+        assert_eq!(ab.counter(CounterId::SpikesEmitted), 42);
+        assert_eq!(ab.gauge(GaugeId::HostPeak), 100, "gauges merge with max");
+        assert_eq!(ab.hist(HistId::SpikesPerStep).count, 2);
+        assert_eq!(ab.hist(HistId::SpikesPerStep).max, 900);
+    }
+}

@@ -1,0 +1,304 @@
+//! Observability subsystem (DESIGN.md §13).
+//!
+//! Layered so each piece is independently testable:
+//!
+//! - [`metrics`] — allocation-free counters/gauges/log-bucket histograms
+//!   with a `u32`-word wire format for cross-rank aggregation;
+//! - [`trace`] — bounded, buffered per-rank JSONL sink (flushed at
+//!   exchange boundaries, never per step);
+//! - [`manifest`] — self-describing `manifest.json` per trace directory,
+//!   hashed with the snapshot FNV-1a;
+//! - [`report`] — offline trace-dir analysis behind `nestgpu report`;
+//! - [`stamp`] — provenance stamping for `BENCH_*.json` outputs.
+//!
+//! [`ObsState`] is the engine-facing facade: `Simulator` owns an
+//! `Option<ObsState>` (exactly like the plasticity engine) and feeds it
+//! from `step_once`. With `SimConfig::obs == None` the entire layer is a
+//! handful of `Option::is_some` branch checks; `benches/obs_overhead.rs`
+//! holds the enabled path under a <2% steps/s budget.
+
+pub mod manifest;
+pub mod metrics;
+pub mod report;
+pub mod stamp;
+pub mod trace;
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use crate::comm::TrafficStats;
+use crate::util::timer::{StepPhase, ALL_STEP_PHASES};
+
+pub use metrics::{CounterId, GaugeId, HistId, MetricsRegistry, ObsSummary};
+pub use trace::TraceSink;
+
+/// Schema version of the JSONL step records.
+pub const TRACE_SCHEMA: u64 = 1;
+
+/// Observability configuration (part of `SimConfig`; must be identical on
+/// every rank, like the rest of the config — SPMD).
+#[derive(Clone, Debug)]
+pub struct ObsConfig {
+    /// where to write `rank*.jsonl` + `manifest.json`; `None` = metrics
+    /// only (registry + merged summary, no trace files)
+    pub trace_dir: Option<PathBuf>,
+    /// sample a JSONL step record every this many steps
+    pub sample_interval: u64,
+    /// per-rank trace record bound (drops are counted, never silent)
+    pub max_trace_records: u64,
+    /// free-form run label recorded in the manifest
+    pub label: String,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        Self {
+            trace_dir: None,
+            sample_interval: 10,
+            max_trace_records: 1_000_000,
+            label: "run".to_string(),
+        }
+    }
+}
+
+/// Everything `step_once` hands to [`ObsState::end_step`] — plain counts
+/// read off the simulator, assembled only when observability is on.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepSample {
+    pub step: u32,
+    pub time_ms: f64,
+    /// local spikes this step
+    pub spikes: u64,
+    /// p2p records waiting in scratch packets
+    pub pkt_backlog: u64,
+    /// collective spikes waiting in scratch group buffers
+    pub grp_backlog: u64,
+    pub dev_current: u64,
+    pub dev_peak: u64,
+    pub host_current: u64,
+    pub host_peak: u64,
+    /// cumulative comm counters at this step
+    pub traffic: TrafficStats,
+}
+
+/// Per-rank observability state, owned by the simulator.
+pub struct ObsState {
+    pub cfg: ObsConfig,
+    pub registry: MetricsRegistry,
+    sink: Option<TraceSink>,
+    /// reusable formatting buffer for one JSONL line
+    line: String,
+    /// this step's per-phase ns (reset by `begin_step`); phases that do
+    /// not run this step (exchange off-cadence, static plasticity) stay 0
+    /// in the trace record but are *not* recorded into the histograms
+    cur_phase_ns: [u64; ALL_STEP_PHASES.len()],
+    /// comm-world group id for the finalize-time aggregation allgather
+    pub world_group: Option<usize>,
+}
+
+impl ObsState {
+    /// Build the rank's observability state; creates the trace directory
+    /// and this rank's JSONL file when tracing is configured.
+    pub fn new(cfg: ObsConfig, rank: usize) -> anyhow::Result<Self> {
+        let sink = match &cfg.trace_dir {
+            Some(dir) => {
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| anyhow::anyhow!("create trace dir {}: {e}", dir.display()))?;
+                Some(TraceSink::create(dir, rank, cfg.max_trace_records)?)
+            }
+            None => None,
+        };
+        Ok(Self {
+            cfg,
+            registry: MetricsRegistry::new(),
+            sink,
+            line: String::with_capacity(512),
+            cur_phase_ns: [0; ALL_STEP_PHASES.len()],
+            world_group: None,
+        })
+    }
+
+    /// Record fixed ring-plane capacities (known at `prepare()`).
+    pub fn set_ring_gauges(&mut self, local_slots: u64, remote_slots: u64) {
+        self.registry.set(GaugeId::LocalRingSlots, local_slots);
+        self.registry.set(GaugeId::RemoteRingSlots, remote_slots);
+    }
+
+    /// Reset the per-step phase scratch.
+    #[inline]
+    pub fn begin_step(&mut self) {
+        self.cur_phase_ns = [0; ALL_STEP_PHASES.len()];
+    }
+
+    /// One pipeline phase ran for `ns` this step.
+    #[inline]
+    pub fn phase(&mut self, p: StepPhase, ns: u64) {
+        self.cur_phase_ns[p.index()] += ns;
+        self.registry.record(HistId::PhaseNs(p), ns);
+    }
+
+    /// An exchange round completed: `records_out`/`records_in` remote
+    /// spike records, `delta_bytes` comm bytes this round. Also the flush
+    /// point for the trace sink — one buffered write per interval, not
+    /// per step.
+    pub fn on_exchange(&mut self, records_out: u64, records_in: u64, delta_bytes: u64) {
+        self.registry.add(CounterId::Exchanges, 1);
+        self.registry.add(CounterId::RecordsSent, records_out);
+        self.registry.add(CounterId::RecordsReceived, records_in);
+        self.registry.record(HistId::RecordsPerExchange, records_in);
+        self.registry.record(HistId::BytesPerExchange, delta_bytes);
+        if let Some(s) = self.sink.as_mut() {
+            s.maybe_flush();
+        }
+    }
+
+    /// Close out one step: counters, gauges, and (on the sampling cadence)
+    /// one JSONL record into the sink buffer.
+    pub fn end_step(&mut self, s: &StepSample) {
+        let r = &mut self.registry;
+        r.add(CounterId::Steps, 1);
+        r.add(CounterId::SpikesEmitted, s.spikes);
+        r.record(HistId::SpikesPerStep, s.spikes);
+        // backlogs are high-water gauges; memory gauges track the tracker
+        let pkt = r.gauge(GaugeId::PacketBacklog).max(s.pkt_backlog);
+        r.set(GaugeId::PacketBacklog, pkt);
+        let grp = r.gauge(GaugeId::GroupBacklog).max(s.grp_backlog);
+        r.set(GaugeId::GroupBacklog, grp);
+        r.set(GaugeId::DeviceCurrent, s.dev_current);
+        r.set(GaugeId::DevicePeak, s.dev_peak);
+        r.set(GaugeId::HostCurrent, s.host_current);
+        r.set(GaugeId::HostPeak, s.host_peak);
+        if self.sink.is_some() && s.step as u64 % self.cfg.sample_interval == 0 {
+            self.write_step_record(s);
+        }
+    }
+
+    /// Format one `{"t":"step",…}` record into the reusable line buffer
+    /// and push it into the sink.
+    fn write_step_record(&mut self, s: &StepSample) {
+        self.line.clear();
+        let _ = write!(
+            self.line,
+            r#"{{"t":"step","step":{},"time_ms":{:.3},"phase_ns":{{"#,
+            s.step, s.time_ms
+        );
+        for (i, p) in ALL_STEP_PHASES.iter().enumerate() {
+            let _ = write!(
+                self.line,
+                "{}\"{}\":{}",
+                if i > 0 { "," } else { "" },
+                p.name(),
+                self.cur_phase_ns[i]
+            );
+        }
+        let _ = write!(
+            self.line,
+            r#"}},"spikes":{},"pkt_backlog":{},"grp_backlog":{},"dev_cur":{},"dev_peak":{},"host_cur":{},"host_peak":{},"p2p_msgs":{},"p2p_bytes":{},"coll_calls":{},"coll_bytes":{}}}"#,
+            s.spikes,
+            s.pkt_backlog,
+            s.grp_backlog,
+            s.dev_current,
+            s.dev_peak,
+            s.host_current,
+            s.host_peak,
+            s.traffic.p2p_messages,
+            s.traffic.p2p_bytes,
+            s.traffic.coll_calls,
+            s.traffic.coll_bytes
+        );
+        if let Some(sink) = self.sink.as_mut() {
+            sink.push_line(&self.line);
+        }
+    }
+
+    /// End of run: stamp the trace counters, append the summary record,
+    /// flush everything. Must run before the registries are aggregated so
+    /// every rank's trace counters are final.
+    pub fn finalize(&mut self, rank: usize) {
+        if let Some(sink) = self.sink.as_ref() {
+            // finalize runs once, so adding onto zero sets the counters;
+            // the summary record written below is intentionally not counted
+            let recs = sink.records();
+            let dropped = sink.dropped();
+            self.registry.add(CounterId::TraceRecords, recs);
+            self.registry.add(CounterId::TraceDropped, dropped);
+        }
+        if self.sink.is_some() {
+            self.line.clear();
+            let _ = write!(
+                self.line,
+                r#"{{"t":"summary","schema":{TRACE_SCHEMA},"rank":{rank},"registry":"#
+            );
+            self.line.push_str(&self.registry.to_json().to_string());
+            self.line.push('}');
+            let line = std::mem::take(&mut self.line);
+            if let Some(sink) = self.sink.as_mut() {
+                sink.push_line(&line);
+                sink.flush();
+            }
+            self.line = line;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracing_still_collects_metrics() {
+        let mut o = ObsState::new(ObsConfig::default(), 0).unwrap();
+        o.begin_step();
+        o.phase(StepPhase::Dynamics, 1000);
+        o.end_step(&StepSample {
+            step: 0,
+            spikes: 5,
+            ..StepSample::default()
+        });
+        assert_eq!(o.registry.counter(CounterId::Steps), 1);
+        assert_eq!(o.registry.counter(CounterId::SpikesEmitted), 5);
+        assert_eq!(
+            o.registry.hist(HistId::PhaseNs(StepPhase::Dynamics)).count,
+            1
+        );
+        o.finalize(0); // no sink: must be a no-op, not a crash
+    }
+
+    #[test]
+    fn step_records_land_on_the_sampling_cadence() {
+        let dir = std::env::temp_dir().join(format!(
+            "nestgpu_obs_mod_cadence_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = ObsConfig {
+            trace_dir: Some(dir.clone()),
+            sample_interval: 5,
+            ..ObsConfig::default()
+        };
+        let mut o = ObsState::new(cfg, 2).unwrap();
+        for step in 0..12u32 {
+            o.begin_step();
+            o.phase(StepPhase::Input, 10 + step as u64);
+            o.end_step(&StepSample {
+                step,
+                spikes: step as u64,
+                ..StepSample::default()
+            });
+        }
+        o.finalize(2);
+        let text =
+            std::fs::read_to_string(TraceSink::rank_file(&dir, 2)).unwrap();
+        // steps 0, 5, 10 sampled + 1 summary line
+        assert_eq!(text.lines().count(), 4);
+        assert!(text.lines().last().unwrap().contains("\"t\":\"summary\""));
+        let first = crate::util::json::Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(first.get("t").unwrap().as_str(), Some("step"));
+        assert_eq!(
+            first.get("phase_ns").unwrap().get("input").unwrap().as_f64(),
+            Some(10.0)
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

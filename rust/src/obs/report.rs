@@ -1,0 +1,274 @@
+//! Offline analysis of a trace directory: `nestgpu report <trace-dir>`.
+//!
+//! Reads the run manifest plus every `rank*.jsonl` trace (schema in
+//! DESIGN.md §13) and produces per-rank, per-phase latency statistics
+//! (exact nearest-rank p50/p95/max over the sampled steps — unlike the
+//! in-process histograms these are computed from the raw samples), comm
+//! byte/message totals, and memory peaks. `TraceReport::to_json` is the
+//! machine-readable summary.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::util::timer::ALL_STEP_PHASES;
+
+/// Statistics over one sampled series (per-phase ns, spikes, …).
+#[derive(Clone, Debug, Default)]
+pub struct SeriesStat {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: u64,
+    pub p95: u64,
+    pub max: u64,
+}
+
+impl SeriesStat {
+    /// Exact nearest-rank percentiles over the raw samples.
+    pub fn from_samples(mut samples: Vec<u64>) -> SeriesStat {
+        if samples.is_empty() {
+            return SeriesStat::default();
+        }
+        samples.sort_unstable();
+        let n = samples.len();
+        let pick = |q: f64| -> u64 {
+            let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+            samples[rank - 1]
+        };
+        SeriesStat {
+            count: n,
+            mean: samples.iter().map(|&x| x as f64).sum::<f64>() / n as f64,
+            p50: pick(0.50),
+            p95: pick(0.95),
+            max: samples[n - 1],
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("mean", Json::num(self.mean)),
+            ("p50", Json::num(self.p50 as f64)),
+            ("p95", Json::num(self.p95 as f64)),
+            ("max", Json::num(self.max as f64)),
+        ])
+    }
+}
+
+/// Everything extracted from one rank's JSONL trace.
+#[derive(Clone, Debug, Default)]
+pub struct RankReport {
+    pub rank: usize,
+    pub samples: usize,
+    /// indexed like [`ALL_STEP_PHASES`]
+    pub phase_ns: Vec<SeriesStat>,
+    pub spikes: SeriesStat,
+    /// cumulative comm counters from the last sampled step
+    pub p2p_bytes: u64,
+    pub coll_bytes: u64,
+    pub p2p_messages: u64,
+    pub coll_calls: u64,
+    /// memory tracker maxima over the sampled series
+    pub dev_peak: u64,
+    pub host_peak: u64,
+    /// the finalize-time registry dump, when the trace has one
+    pub summary: Option<Json>,
+}
+
+impl RankReport {
+    pub fn to_json(&self) -> Json {
+        let phases: Vec<(&str, Json)> = ALL_STEP_PHASES
+            .iter()
+            .zip(self.phase_ns.iter())
+            .map(|(p, s)| (p.name(), s.to_json()))
+            .collect();
+        let mut fields = vec![
+            ("rank", Json::num(self.rank as f64)),
+            ("samples", Json::num(self.samples as f64)),
+            ("phase_ns", Json::obj(phases)),
+            ("spikes_per_step", self.spikes.to_json()),
+            (
+                "comm",
+                Json::obj(vec![
+                    ("p2p_bytes", Json::num(self.p2p_bytes as f64)),
+                    ("coll_bytes", Json::num(self.coll_bytes as f64)),
+                    ("p2p_messages", Json::num(self.p2p_messages as f64)),
+                    ("coll_calls", Json::num(self.coll_calls as f64)),
+                ]),
+            ),
+            (
+                "memory",
+                Json::obj(vec![
+                    ("dev_peak", Json::num(self.dev_peak as f64)),
+                    ("host_peak", Json::num(self.host_peak as f64)),
+                ]),
+            ),
+        ];
+        if let Some(s) = &self.summary {
+            fields.push(("summary", s.clone()));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// A fully parsed trace directory.
+#[derive(Clone, Debug)]
+pub struct TraceReport {
+    pub manifest: Option<Json>,
+    pub ranks: Vec<RankReport>,
+}
+
+impl TraceReport {
+    pub fn to_json(&self) -> Json {
+        let mut fields = Vec::new();
+        if let Some(m) = &self.manifest {
+            fields.push(("manifest", m.clone()));
+        }
+        fields.push((
+            "ranks",
+            Json::Arr(self.ranks.iter().map(|r| r.to_json()).collect()),
+        ));
+        Json::obj(fields)
+    }
+}
+
+fn get_u64(j: &Json, key: &str) -> u64 {
+    j.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64
+}
+
+fn parse_rank_trace(path: &Path, rank: usize) -> anyhow::Result<RankReport> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+    let mut phase_samples: Vec<Vec<u64>> = vec![Vec::new(); ALL_STEP_PHASES.len()];
+    let mut spike_samples: Vec<u64> = Vec::new();
+    let mut out = RankReport {
+        rank,
+        ..RankReport::default()
+    };
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| {
+            anyhow::anyhow!("{}:{}: bad JSONL record: {e}", path.display(), lineno + 1)
+        })?;
+        match j.get("t").and_then(|t| t.as_str()) {
+            Some("step") => {
+                out.samples += 1;
+                if let Some(ph) = j.get("phase_ns") {
+                    for (i, p) in ALL_STEP_PHASES.iter().enumerate() {
+                        phase_samples[i].push(get_u64(ph, p.name()));
+                    }
+                }
+                spike_samples.push(get_u64(&j, "spikes"));
+                out.p2p_bytes = get_u64(&j, "p2p_bytes");
+                out.coll_bytes = get_u64(&j, "coll_bytes");
+                out.p2p_messages = get_u64(&j, "p2p_msgs");
+                out.coll_calls = get_u64(&j, "coll_calls");
+                out.dev_peak = out.dev_peak.max(get_u64(&j, "dev_peak"));
+                out.host_peak = out.host_peak.max(get_u64(&j, "host_peak"));
+            }
+            Some("summary") => {
+                out.summary = j.get("registry").cloned();
+            }
+            _ => {} // unknown record types are forward-compatible noise
+        }
+    }
+    out.phase_ns = phase_samples
+        .into_iter()
+        .map(SeriesStat::from_samples)
+        .collect();
+    out.spikes = SeriesStat::from_samples(spike_samples);
+    Ok(out)
+}
+
+/// Parse a whole trace directory (manifest optional, traces required).
+pub fn read_trace_dir(dir: &Path) -> anyhow::Result<TraceReport> {
+    if !dir.is_dir() {
+        anyhow::bail!("{} is not a directory", dir.display());
+    }
+    let manifest = crate::obs::manifest::read_manifest(dir).ok();
+    let mut rank_files: Vec<(usize, std::path::PathBuf)> = Vec::new();
+    for entry in std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("read dir {}: {e}", dir.display()))?
+    {
+        let entry = entry.map_err(|e| anyhow::anyhow!("read dir entry: {e}"))?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if let Some(num) = name
+            .strip_prefix("rank")
+            .and_then(|s| s.strip_suffix(".jsonl"))
+        {
+            if let Ok(rank) = num.parse::<usize>() {
+                rank_files.push((rank, entry.path()));
+            }
+        }
+    }
+    if rank_files.is_empty() {
+        anyhow::bail!("{}: no rank*.jsonl trace files found", dir.display());
+    }
+    rank_files.sort_by_key(|(r, _)| *r);
+    let ranks = rank_files
+        .into_iter()
+        .map(|(r, p)| parse_rank_trace(&p, r))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    Ok(TraceReport { manifest, ranks })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "nestgpu_obs_report_{name}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn nearest_rank_percentiles_are_exact() {
+        let s = SeriesStat::from_samples((1..=100).collect());
+        assert_eq!(s.p50, 50);
+        assert_eq!(s.p95, 95);
+        assert_eq!(s.max, 100);
+        assert_eq!(s.mean, 50.5);
+        let s1 = SeriesStat::from_samples(vec![7u64]);
+        assert_eq!((s1.p50, s1.p95, s1.max), (7, 7, 7));
+        assert_eq!(SeriesStat::from_samples(Vec::new()).count, 0);
+    }
+
+    #[test]
+    fn parses_step_and_summary_records() {
+        let dir = tmp_dir("parse");
+        let lines = [
+            r#"{"t":"step","step":0,"phase_ns":{"input":10,"pre_update":0,"dynamics":100,"collect":5,"post_update":0,"route":7,"exchange":50,"deliver":20},"spikes":3,"p2p_bytes":64,"coll_bytes":0,"p2p_msgs":2,"coll_calls":0,"dev_peak":1000,"host_peak":500}"#,
+            r#"{"t":"step","step":10,"phase_ns":{"input":20,"pre_update":0,"dynamics":200,"collect":5,"post_update":0,"route":9,"exchange":70,"deliver":30},"spikes":5,"p2p_bytes":128,"coll_bytes":0,"p2p_msgs":4,"coll_calls":0,"dev_peak":1200,"host_peak":500}"#,
+            r#"{"t":"summary","rank":0,"registry":{"counters":{"steps":20}}}"#,
+        ];
+        std::fs::write(dir.join("rank0000.jsonl"), lines.join("\n")).unwrap();
+        let rep = read_trace_dir(&dir).unwrap();
+        assert_eq!(rep.ranks.len(), 1);
+        let r = &rep.ranks[0];
+        assert_eq!(r.samples, 2);
+        // dynamics is phase index 2
+        assert_eq!(r.phase_ns[2].max, 200);
+        assert_eq!(r.phase_ns[2].p50, 100);
+        assert_eq!(r.spikes.max, 5);
+        assert_eq!(r.p2p_bytes, 128, "comm counters take the last sample");
+        assert_eq!(r.dev_peak, 1200);
+        assert!(r.summary.is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_dir_and_empty_dir_error() {
+        let dir = tmp_dir("empty");
+        assert!(read_trace_dir(&dir.join("nope")).is_err());
+        assert!(read_trace_dir(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

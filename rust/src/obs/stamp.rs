@@ -1,0 +1,110 @@
+//! Provenance stamping for `BENCH_*.json` outputs.
+//!
+//! Every bench result file carries a schema version, an ISO-8601
+//! timestamp and the git revision, so committed baselines and CI
+//! artifacts are comparable across time. Writing refuses to clobber a
+//! file whose schema version is *newer* than this binary understands —
+//! an old binary on a new checkout must not silently destroy data the
+//! new schema added.
+
+use std::path::Path;
+
+use crate::obs::manifest::{git_revision, iso8601_now};
+use crate::util::json::Json;
+
+/// Current schema for stamped bench files.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// Stamp `fields` with provenance and write them to `path`.
+///
+/// Fails (leaving the existing file untouched) when `path` already holds
+/// a stamped result with `schema_version > BENCH_SCHEMA_VERSION`.
+pub fn write_bench_json(path: &Path, fields: Vec<(&str, Json)>) -> anyhow::Result<()> {
+    if path.exists() {
+        if let Ok(existing) = Json::parse_file(path) {
+            if let Some(v) = existing.get("schema_version").and_then(|v| v.as_f64()) {
+                if v as u64 > BENCH_SCHEMA_VERSION {
+                    anyhow::bail!(
+                        "{}: existing schema_version {} is newer than supported {}; \
+                         refusing to overwrite (delete the file to regenerate)",
+                        path.display(),
+                        v as u64,
+                        BENCH_SCHEMA_VERSION
+                    );
+                }
+            }
+        }
+    }
+    let mut all = vec![
+        ("schema_version", Json::num(BENCH_SCHEMA_VERSION as f64)),
+        ("generated_at", Json::str(&iso8601_now())),
+        ("git_rev", Json::str(&git_revision())),
+    ];
+    all.extend(fields);
+    let j = Json::obj(all);
+    std::fs::write(path, j.to_string())
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp_file(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "nestgpu_obs_stamp_{name}_{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    #[test]
+    fn stamps_provenance_fields() {
+        let p = tmp_file("stamp");
+        write_bench_json(&p, vec![("steps_per_s", Json::num(123.0))]).unwrap();
+        let j = Json::parse_file(&p).unwrap();
+        assert_eq!(
+            j.get("schema_version").unwrap().as_usize(),
+            Some(BENCH_SCHEMA_VERSION as usize)
+        );
+        assert!(j.get("generated_at").unwrap().as_str().unwrap().ends_with('Z'));
+        assert!(j.get("git_rev").is_some());
+        assert_eq!(j.get("steps_per_s").unwrap().as_f64(), Some(123.0));
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn refuses_newer_schema_keeps_file() {
+        let p = tmp_file("newer");
+        let newer = format!(
+            "{{\"schema_version\": {}, \"keep\": true}}",
+            BENCH_SCHEMA_VERSION + 1
+        );
+        std::fs::write(&p, &newer).unwrap();
+        let err = write_bench_json(&p, vec![("x", Json::num(1.0))]).unwrap_err();
+        assert!(err.to_string().contains("newer"), "{err}");
+        // original content untouched
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), newer);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn overwrites_same_or_older_schema() {
+        let p = tmp_file("older");
+        std::fs::write(&p, "{\"schema_version\": 0}").unwrap();
+        write_bench_json(&p, vec![("x", Json::num(2.0))]).unwrap();
+        let j = Json::parse_file(&p).unwrap();
+        assert_eq!(j.get("x").unwrap().as_f64(), Some(2.0));
+        // unparseable files are treated as legacy and replaced
+        std::fs::write(&p, "not json").unwrap();
+        write_bench_json(&p, vec![("x", Json::num(3.0))]).unwrap();
+        assert_eq!(
+            Json::parse_file(&p).unwrap().get("x").unwrap().as_f64(),
+            Some(3.0)
+        );
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -1,0 +1,174 @@
+//! Bounded, buffered per-rank JSONL trace sink.
+//!
+//! The step pipeline appends pre-formatted JSON lines into an in-memory
+//! buffer; actual filesystem writes happen only at exchange boundaries and
+//! at finalize (`maybe_flush`/`flush`), keeping `write(2)` off the per-step
+//! hot path. The sink is bounded two ways: a record cap (`max_records`,
+//! excess records are counted and dropped, never silently) and a byte
+//! backstop that forces a flush if a pathological sampling config fills
+//! the buffer between exchanges.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Force a flush if the pending buffer exceeds this many bytes even
+/// between exchange boundaries (backstop, not the normal path).
+const FLUSH_BACKSTOP_BYTES: usize = 8 << 20;
+
+/// Buffered writer for one rank's `rank<NNNN>.jsonl` trace file.
+pub struct TraceSink {
+    path: PathBuf,
+    file: Option<File>,
+    buf: String,
+    records: u64,
+    dropped: u64,
+    max_records: u64,
+}
+
+impl TraceSink {
+    /// Standard per-rank trace file name inside a trace directory.
+    pub fn rank_file(dir: &Path, rank: usize) -> PathBuf {
+        dir.join(format!("rank{rank:04}.jsonl"))
+    }
+
+    /// Create (truncate) the rank's trace file. The directory must exist.
+    pub fn create(dir: &Path, rank: usize, max_records: u64) -> anyhow::Result<Self> {
+        let path = Self::rank_file(dir, rank);
+        let file = OpenOptions::new()
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .map_err(|e| anyhow::anyhow!("create trace file {}: {e}", path.display()))?;
+        Ok(Self {
+            path,
+            file: Some(file),
+            buf: String::with_capacity(64 << 10),
+            records: 0,
+            dropped: 0,
+            max_records,
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+    /// Records accepted so far (== lines that will reach the file).
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+    /// Records rejected at the bound.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Append one JSONL record (`line` must be a single JSON value without
+    /// a trailing newline). Returns whether the record was accepted.
+    pub fn push_line(&mut self, line: &str) -> bool {
+        if self.records >= self.max_records {
+            self.dropped += 1;
+            return false;
+        }
+        self.records += 1;
+        self.buf.push_str(line);
+        self.buf.push('\n');
+        if self.buf.len() >= FLUSH_BACKSTOP_BYTES {
+            self.flush();
+        }
+        true
+    }
+
+    /// Flush if anything is pending. Called at exchange boundaries so the
+    /// write syscall amortizes over the exchange interval.
+    pub fn maybe_flush(&mut self) {
+        if !self.buf.is_empty() {
+            self.flush();
+        }
+    }
+
+    /// Write the pending buffer out. Trace I/O is best-effort telemetry:
+    /// a failing disk must not kill the simulation, so errors drop the
+    /// file handle (stopping further writes) instead of propagating.
+    pub fn flush(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        if let Some(f) = self.file.as_mut() {
+            if f.write_all(self.buf.as_bytes()).is_err() {
+                self.file = None;
+            }
+        }
+        self.buf.clear();
+    }
+}
+
+impl Drop for TraceSink {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "nestgpu_obs_trace_{name}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn buffers_until_flush_then_appends() {
+        let dir = tmp_dir("buffer");
+        let mut sink = TraceSink::create(&dir, 0, 100).unwrap();
+        assert!(sink.push_line(r#"{"step":0}"#));
+        assert!(sink.push_line(r#"{"step":10}"#));
+        // nothing on disk before the flush
+        assert_eq!(std::fs::read_to_string(sink.path()).unwrap(), "");
+        sink.maybe_flush();
+        let text = std::fs::read_to_string(sink.path()).unwrap();
+        assert_eq!(text, "{\"step\":0}\n{\"step\":10}\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bounded_drops_are_counted_not_silent() {
+        let dir = tmp_dir("bound");
+        let mut sink = TraceSink::create(&dir, 3, 2).unwrap();
+        assert!(sink.push_line("{}"));
+        assert!(sink.push_line("{}"));
+        assert!(!sink.push_line("{}"));
+        assert!(!sink.push_line("{}"));
+        assert_eq!(sink.records(), 2);
+        assert_eq!(sink.dropped(), 2);
+        sink.flush();
+        let text = std::fs::read_to_string(sink.path()).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn drop_flushes_pending_lines() {
+        let dir = tmp_dir("drop");
+        let path;
+        {
+            let mut sink = TraceSink::create(&dir, 7, 10).unwrap();
+            path = sink.path().to_path_buf();
+            sink.push_line(r#"{"a":1}"#);
+        }
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "{\"a\":1}\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rank_file_naming() {
+        let p = TraceSink::rank_file(Path::new("/tmp/t"), 12);
+        assert_eq!(p, Path::new("/tmp/t/rank0012.jsonl"));
+    }
+}

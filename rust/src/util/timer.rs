@@ -135,15 +135,28 @@ impl PhaseTimer {
     }
 
     /// Time a closure under a phase (restores the previous phase after).
+    ///
+    /// Panic-safe: the accumulate-and-restore runs from a drop guard, so a
+    /// panic inside `f` (e.g. a rank assert surfacing through
+    /// `join_ranks`) still charges the elapsed time to `p` and leaves the
+    /// timer in the enclosing phase instead of stuck in `p`.
     pub fn scope<T>(&mut self, p: Phase, f: impl FnOnce() -> T) -> T {
+        struct Restore<'a> {
+            timer: &'a mut PhaseTimer,
+            prev: Option<Phase>,
+        }
+        impl Drop for Restore<'_> {
+            fn drop(&mut self) {
+                self.timer.stop();
+                if let Some(ph) = self.prev {
+                    self.timer.enter(ph);
+                }
+            }
+        }
         let prev = self.current.map(|(ph, _)| ph);
         self.enter(p);
-        let out = f();
-        self.stop();
-        if let Some(ph) = prev {
-            self.enter(ph);
-        }
-        out
+        let _restore = Restore { timer: self, prev };
+        f()
     }
 }
 
@@ -185,6 +198,22 @@ pub const ALL_STEP_PHASES: [StepPhase; 8] = [
 ];
 
 impl StepPhase {
+    /// Position in [`ALL_STEP_PHASES`] — dense array index for metric
+    /// catalogs (`obs::metrics`).
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            StepPhase::Input => 0,
+            StepPhase::PreUpdate => 1,
+            StepPhase::Dynamics => 2,
+            StepPhase::Collect => 3,
+            StepPhase::PostUpdate => 4,
+            StepPhase::Route => 5,
+            StepPhase::Exchange => 6,
+            StepPhase::Deliver => 7,
+        }
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             StepPhase::Input => "input",
@@ -314,6 +343,62 @@ mod tests {
         t.stop();
         assert!(t.times.preparation >= Duration::from_millis(1));
         assert!(t.times.propagation >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn scope_restores_previous_phase_on_panic() {
+        let mut t = PhaseTimer::new();
+        t.enter(Phase::Propagation);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.scope(Phase::Preparation, || {
+                std::thread::sleep(Duration::from_millis(1));
+                panic!("rank failure inside scope");
+            })
+        }));
+        assert!(caught.is_err());
+        // the panicking scope still charged its elapsed time...
+        assert!(t.times.preparation >= Duration::from_millis(1));
+        // ...and the timer resumed the enclosing phase, so later time
+        // lands in propagation, not preparation
+        std::thread::sleep(Duration::from_millis(1));
+        t.stop();
+        assert!(t.times.propagation >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn scope_returns_value_and_restores_nesting() {
+        let mut t = PhaseTimer::new();
+        t.enter(Phase::Propagation);
+        let v = t.scope(Phase::Preparation, || {
+            std::thread::sleep(Duration::from_millis(1));
+            7u32
+        });
+        assert_eq!(v, 7);
+        std::thread::sleep(Duration::from_millis(1));
+        t.stop();
+        assert!(t.times.preparation >= Duration::from_millis(1));
+        assert!(t.times.propagation >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn scope_without_enclosing_phase_leaves_timer_idle() {
+        let mut t = PhaseTimer::new();
+        t.scope(Phase::NodeCreation, || {
+            std::thread::sleep(Duration::from_millis(1));
+        });
+        // nothing enclosing to restore: time after the scope is uncharged
+        std::thread::sleep(Duration::from_millis(1));
+        t.stop();
+        assert!(t.times.node_creation >= Duration::from_millis(1));
+        assert_eq!(t.times.propagation, Duration::ZERO);
+        assert_eq!(t.times.preparation, Duration::ZERO);
+    }
+
+    #[test]
+    fn step_phase_index_matches_catalog_order() {
+        for (i, p) in ALL_STEP_PHASES.iter().enumerate() {
+            assert_eq!(p.index(), i);
+        }
     }
 
     #[test]

@@ -1,0 +1,178 @@
+//! Integration: the observability subsystem (DESIGN.md §13) — obs on vs
+//! off is bit-identical (spikes AND comm metrics), the merged cross-rank
+//! summary is bit-stable over reruns for 1/2/4 ranks on both exchange
+//! protocols, and a traced 4-rank run round-trips through
+//! `obs::report::read_trace_dir` with per-rank per-phase statistics,
+//! comm/memory series and a hash-verified manifest.
+
+use std::path::PathBuf;
+
+use nestgpu::engine::{SimConfig, SimResult, Simulator};
+use nestgpu::harness::run_cluster;
+use nestgpu::models::balanced::{build_balanced, BalancedConfig};
+use nestgpu::obs::metrics::{ALL_COUNTERS, ALL_GAUGES, N_BUCKETS};
+use nestgpu::obs::report::read_trace_dir;
+use nestgpu::obs::{CounterId, HistId, MetricsRegistry, ObsConfig};
+use nestgpu::util::timer::StepPhase;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("nestgpu_it_obs_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn spikes(results: &[SimResult]) -> Vec<&[(u32, u32)]> {
+    results.iter().map(|r| r.spikes.as_slice()).collect()
+}
+
+fn run_balanced(
+    obs: Option<ObsConfig>,
+    collective: bool,
+    ranks: usize,
+    t_ms: f64,
+) -> Vec<SimResult> {
+    let bal = BalancedConfig {
+        scale: 0.01,
+        k_scale: 0.01,
+        collective,
+        ..Default::default()
+    };
+    let cfg = SimConfig {
+        obs,
+        ..Default::default()
+    };
+    run_cluster(
+        ranks,
+        &cfg,
+        &move |sim: &mut Simulator| build_balanced(sim, &bal),
+        t_ms,
+    )
+    .unwrap()
+}
+
+/// The wall-clock-free projection of a registry: every counter and gauge,
+/// plus the full bucket state of the value histograms. The per-phase ns
+/// histograms are excluded — they measure wall clock and legitimately
+/// differ between reruns.
+fn deterministic_key(r: &MetricsRegistry) -> Vec<u64> {
+    let mut k = Vec::new();
+    for c in ALL_COUNTERS {
+        k.push(r.counter(c));
+    }
+    for g in ALL_GAUGES {
+        k.push(r.gauge(g));
+    }
+    for h in [
+        HistId::SpikesPerStep,
+        HistId::RecordsPerExchange,
+        HistId::BytesPerExchange,
+    ] {
+        let hist = r.hist(h);
+        k.push(hist.count);
+        k.push(hist.sum);
+        k.push(hist.max);
+        for b in 0..N_BUCKETS {
+            k.push(hist.bucket_count(b));
+        }
+    }
+    k
+}
+
+#[test]
+fn obs_on_is_bit_identical_to_obs_off() {
+    for collective in [false, true] {
+        let off = run_balanced(None, collective, 2, 30.0);
+        let dir = tmp_dir(if collective { "identity_coll" } else { "identity_p2p" });
+        let obs = ObsConfig {
+            trace_dir: Some(dir.clone()),
+            sample_interval: 3,
+            ..ObsConfig::default()
+        };
+        let on = run_balanced(Some(obs), collective, 2, 30.0);
+
+        assert!(
+            off.iter().map(|r| r.n_spikes).sum::<u64>() > 0,
+            "network must spike"
+        );
+        assert_eq!(spikes(&off), spikes(&on), "collective={collective}");
+        // the run's comm metrics must be untouched by observability: the
+        // finalize-time aggregation allgather happens after the result is
+        // collected, and the obs world group never joins the exchange
+        for (a, b) in off.iter().zip(on.iter()) {
+            assert_eq!(a.p2p_messages, b.p2p_messages);
+            assert_eq!(a.p2p_bytes, b.p2p_bytes);
+            assert_eq!(a.coll_calls, b.coll_calls);
+            assert_eq!(a.coll_bytes, b.coll_bytes);
+        }
+        // merged summary lands on rank 0 only
+        assert!(on[0].obs.is_some());
+        assert!(on[1].obs.is_none());
+        assert!(off[0].obs.is_none(), "obs off must not produce a summary");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn merged_summary_deterministic_subset_is_bit_stable() {
+    for collective in [false, true] {
+        for ranks in [1usize, 2, 4] {
+            let a = run_balanced(Some(ObsConfig::default()), collective, ranks, 25.0);
+            let b = run_balanced(Some(ObsConfig::default()), collective, ranks, 25.0);
+            let sa = a[0].obs.as_ref().expect("rank 0 carries the summary");
+            let sb = b[0].obs.as_ref().expect("rank 0 carries the summary");
+            assert_eq!(sa.n_ranks, ranks);
+            assert_eq!(
+                deterministic_key(&sa.merged),
+                deterministic_key(&sb.merged),
+                "collective={collective} ranks={ranks}"
+            );
+            // 25 ms at dt 0.1 = 250 steps per rank; counters add on merge
+            assert_eq!(sa.merged.counter(CounterId::Steps), 250 * ranks as u64);
+            assert!(sa.merged.counter(CounterId::SpikesEmitted) > 0);
+            assert!(sa.merged.counter(CounterId::Exchanges) > 0);
+            // the phase histograms fed every step on every rank
+            let dynamics = sa.merged.hist(HistId::PhaseNs(StepPhase::Dynamics));
+            assert_eq!(dynamics.count, 250 * ranks as u64);
+        }
+    }
+}
+
+#[test]
+fn four_rank_trace_report_end_to_end() {
+    let dir = tmp_dir("report4");
+    let obs = ObsConfig {
+        trace_dir: Some(dir.clone()),
+        sample_interval: 2,
+        label: "it-obs".to_string(),
+        ..ObsConfig::default()
+    };
+    let results = run_balanced(Some(obs), false, 4, 30.0);
+    assert!(results.iter().map(|r| r.n_spikes).sum::<u64>() > 0);
+
+    let rep = read_trace_dir(&dir).unwrap();
+    let manifest = rep
+        .manifest
+        .as_ref()
+        .expect("manifest.json present and hash-clean");
+    assert_eq!(manifest.get("n_ranks").unwrap().as_usize(), Some(4));
+    assert_eq!(manifest.get("label").unwrap().as_str(), Some("it-obs"));
+    assert_eq!(manifest.get("sample_interval").unwrap().as_usize(), Some(2));
+
+    assert_eq!(rep.ranks.len(), 4, "one trace per rank");
+    for (i, r) in rep.ranks.iter().enumerate() {
+        assert_eq!(r.rank, i);
+        assert!(r.samples > 0);
+        // dynamics runs every step on every rank: populated and ordered
+        let dynamics = &r.phase_ns[StepPhase::Dynamics.index()];
+        assert_eq!(dynamics.count, r.samples);
+        assert!(dynamics.max > 0);
+        for s in &r.phase_ns {
+            assert!(s.p50 <= s.p95 && s.p95 <= s.max);
+        }
+        // comm and memory series are populated (p2p run, host tracker)
+        assert!(r.p2p_bytes > 0, "rank {i} p2p bytes");
+        assert!(r.host_peak > 0, "rank {i} host peak");
+        assert!(r.summary.is_some(), "rank {i} summary record");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

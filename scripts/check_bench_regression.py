@@ -1,0 +1,146 @@
+#!/usr/bin/env python3
+"""Guard bench results against throughput regressions.
+
+Compares the freshly generated ``BENCH_*.json`` files (written by the
+``cargo bench`` smoke runs; stamped by ``rust/src/obs/stamp.rs``) against
+the committed baselines in ``scripts/BENCH_baselines.json``.
+
+Only *regressions* fail the check, with a relative tolerance (default
++/-15%, override with ``--tolerance`` or the ``BENCH_TOLERANCE`` env
+var):
+
+- higher-is-better metrics (anything named ``*steps_per_s*``) fail when
+  they drop more than the tolerance below the baseline;
+- lower-is-better metrics (``overhead_ratio``, ``overhead_frac``) fail
+  when they rise more than the tolerance above it.
+
+Improvements never fail. Metrics without a committed baseline are
+reported and skipped, so the check is a no-op until baselines are
+captured on a reference machine with ``--write``:
+
+    cargo bench --bench spike_exchange   # etc., SMOKE=1 for CI size
+    python3 scripts/check_bench_regression.py --write BENCH_*.json
+"""
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BASELINES = os.path.join(os.path.dirname(__file__), "BENCH_baselines.json")
+DEFAULT_TOLERANCE = 0.15
+
+# provenance / config fields that are never performance metrics
+SKIP_KEYS = {"schema_version", "generated_at", "git_rev", "ranks", "t_ms",
+             "scale", "repeats", "min_delay", "interval", "n_plastic"}
+
+
+def metric_direction(name):
+    """'higher' / 'lower' for tracked metrics, None for untracked ones."""
+    leaf = name.rsplit(".", 1)[-1]
+    if leaf in SKIP_KEYS:
+        return None
+    if "steps_per_s" in leaf:
+        return "higher"
+    if leaf in ("overhead_ratio", "overhead_frac"):
+        return "lower"
+    return None
+
+
+def flatten(value, prefix=""):
+    """Numeric leaves of a JSON value as {dotted.path: float}."""
+    out = {}
+    if isinstance(value, dict):
+        for k, v in value.items():
+            out.update(flatten(v, f"{prefix}{k}." if prefix else f"{k}."))
+    elif isinstance(value, bool):
+        pass
+    elif isinstance(value, (int, float)):
+        out[prefix.rstrip(".")] = float(value)
+    return out
+
+
+def tracked_metrics(path):
+    with open(path) as f:
+        data = json.load(f)
+    name = os.path.splitext(os.path.basename(path))[0]
+    out = {}
+    for metric, v in sorted(flatten(data).items()):
+        direction = metric_direction(metric)
+        if direction is not None:
+            out[metric] = {"value": v, "dir": direction}
+    return name, out
+
+
+def check(bench_files, baselines, tolerance):
+    failures, missing = [], []
+    for path in bench_files:
+        name, metrics = tracked_metrics(path)
+        base_bench = baselines.get("benches", {}).get(name, {})
+        for metric, cur in metrics.items():
+            base = base_bench.get(metric)
+            if base is None:
+                missing.append(f"{name}:{metric}")
+                continue
+            bv, cv = float(base["value"]), cur["value"]
+            if cur["dir"] == "higher":
+                bad = cv < bv * (1.0 - tolerance)
+                delta = (cv - bv) / bv if bv else 0.0
+            else:
+                bad = cv > bv * (1.0 + tolerance)
+                delta = (bv - cv) / bv if bv else 0.0
+            status = "FAIL" if bad else "ok"
+            print(f"  [{status}] {name}:{metric} = {cv:.4g} "
+                  f"(baseline {bv:.4g}, {delta:+.1%} vs worse-by "
+                  f">{tolerance:.0%} fails)")
+            if bad:
+                failures.append(f"{name}:{metric}")
+    return failures, missing
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("bench_files", nargs="+", help="BENCH_*.json files to check")
+    ap.add_argument("--baselines", default=DEFAULT_BASELINES)
+    ap.add_argument("--tolerance",
+                    type=float,
+                    default=float(os.environ.get("BENCH_TOLERANCE", DEFAULT_TOLERANCE)))
+    ap.add_argument("--write", action="store_true",
+                    help="capture current results as the new baselines")
+    args = ap.parse_args()
+
+    bench_files = [p for p in args.bench_files if os.path.exists(p)]
+    for p in set(args.bench_files) - set(bench_files):
+        print(f"  [skip] {p}: not found")
+
+    if args.write:
+        baselines = {"schema_version": 1, "benches": {}}
+        for path in bench_files:
+            name, metrics = tracked_metrics(path)
+            baselines["benches"][name] = metrics
+        with open(args.baselines, "w") as f:
+            json.dump(baselines, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"baselines written to {args.baselines}")
+        return 0
+
+    try:
+        with open(args.baselines) as f:
+            baselines = json.load(f)
+    except FileNotFoundError:
+        print(f"no baselines at {args.baselines}; nothing to check")
+        return 0
+
+    failures, missing = check(bench_files, baselines, args.tolerance)
+    for m in missing:
+        print(f"  [skip] {m}: no committed baseline")
+    if failures:
+        print(f"\n{len(failures)} bench regression(s) beyond "
+              f"{args.tolerance:.0%}: {', '.join(failures)}")
+        return 1
+    print("\nbench regression check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,20 +1,31 @@
 //! §Perf microbenches: the coordinator's hot paths, measured in isolation.
 //!
 //! 1. connection sort-by-source (the dominant preparation cost, Fig. 6b);
-//! 2. spike delivery inner loop (ring-buffer accumulate);
-//! 3. (R, L) map merge (`RemoteConnect`'s ensure_images);
-//! 4. p2p exchange round-trip (2-rank world);
-//! 5. PJRT kernel call overhead vs the native backend, per block size.
+//! 2. spike delivery: naive per-record scatter vs the prepared
+//!    [`DeliveryPlan`] + slot-bucketed [`DeliveryQueue`] (DESIGN.md §14);
+//! 3. fused accumulation-plane merge (`merge_planes`) throughput;
+//! 4. (R, L) map merge (`RemoteConnect`'s ensure_images);
+//! 5. p2p exchange round-trip (2-rank world);
+//! 6. LIF dynamics (native SIMD-shaped backend; PJRT too when artifacts
+//!    are present), per block size.
 //!
-//! Results feed the EXPERIMENTS.md §Perf before/after log.
+//! Results feed the EXPERIMENTS.md §Perf before/after log and are written
+//! to `BENCH_perf_hotpaths.json` at the repository root for the CI ±15%
+//! regression gate (`scripts/check_bench_regression.py`).
+//!
+//! Set `SMOKE=1` for the CI-sized run.
 
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::Instant;
 
 use nestgpu::comm::{CommWorld, Communicator, SpikeRecord};
 use nestgpu::connection::Connections;
+use nestgpu::engine::delivery::{merge_planes, DeliveryPlan, DeliveryQueue};
 use nestgpu::memory::{MemKind, Tracker};
 use nestgpu::node::neuron::LifParams;
-use nestgpu::node::RingBuffers;
+use nestgpu::node::{NodeSpace, RingBuffers};
+use nestgpu::obs::stamp::write_bench_json;
 use nestgpu::remote::pair_map::PairMap;
 use nestgpu::runtime::{native::NativeBackend, Backend, StateChunk};
 use nestgpu::util::json::Json;
@@ -62,28 +73,62 @@ fn bench_sort(n_conns: usize, n_nodes: usize) -> (f64, f64) {
     (secs, n_conns as f64 / sort_only)
 }
 
-fn bench_delivery(n_targets: usize) -> f64 {
+/// One high-fanout node delivering into the ring buffers: the naive
+/// per-record path (LUT lookup + port branch + per-record slot math) vs
+/// the prepared plan (port-baked runs through the slot-bucketed queue).
+/// Returns (naive records/s, plan records/s).
+fn bench_delivery(n_targets: usize, reps: usize) -> (f64, f64) {
+    let n_state = 10_001u32;
     let mut tr = Tracker::new();
     let mut conns = Connections::new();
     let mut rng = Rng::new(3);
     for _ in 0..n_targets {
-        conns.push(0, rng.below(10_000), 1.0, 1 + (rng.below(14) as u16), 0, &mut tr);
+        conns.push(
+            0,
+            rng.below(10_000),
+            1.0,
+            1 + (rng.below(14) as u16),
+            rng.below(2) as u8,
+            &mut tr,
+        );
     }
-    conns.sort_by_source(10_001, &mut tr);
-    let lut: Vec<u32> = (0..10_001).collect();
-    let mut rb = RingBuffers::new(10_001, 16, &mut tr);
-    let per_call = time(200, || {
-        let rng_range = conns.outgoing(0);
-        let targets = &conns.target.as_slice()[rng_range.clone()];
-        let ports = &conns.port.as_slice()[rng_range.clone()];
-        let delays = &conns.delay.as_slice()[rng_range.clone()];
-        let weights = &conns.weight.as_slice()[rng_range];
-        for i in 0..targets.len() {
-            rb.add(lut[targets[i] as usize], ports[i], delays[i], weights[i], 1);
+    conns.sort_by_source(n_state as usize, &mut tr);
+    let mut nodes = NodeSpace::new();
+    nodes.create_neurons(0, n_state);
+    let lut: Vec<u32> = (0..n_state).collect();
+    let plan = DeliveryPlan::build(&conns, &nodes, &lut, n_state, None);
+    let mut rb = RingBuffers::new(n_state as usize, 16, &mut tr);
+    let naive = time(reps, || {
+        let v = conns.view(conns.outgoing(0));
+        for i in 0..v.target.len() {
+            rb.add(lut[v.target[i] as usize], v.port[i], v.delay[i], v.weight[i], 1);
         }
         rb.advance();
     });
-    n_targets as f64 / per_call // synapse events per second
+    let mut q = DeliveryQueue::default();
+    q.ensure_slots(rb.n_slots());
+    let planned = time(reps, || {
+        for run in plan.runs_of(0) {
+            q.push(rb.slot_of(run.delay), run.start, run.end, 1);
+        }
+        q.drain_into(&mut rb, &plan);
+        rb.advance();
+    });
+    (n_targets as f64 / naive, n_targets as f64 / planned)
+}
+
+/// Fused three-plane merge throughput in GB/s (3 plane reads + 1 store,
+/// 4 bytes each).
+fn bench_merge(n: usize, reps: usize) -> f64 {
+    let mut rng = Rng::new(9);
+    let mut mk = || (0..n).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect::<Vec<f32>>();
+    let (local, remote, plastic) = (mk(), mk(), mk());
+    let mut dst = vec![0.0f32; n];
+    let secs = time(reps, || {
+        merge_planes(&mut dst, &local, Some(&remote), Some(&plastic));
+        std::hint::black_box(&dst);
+    });
+    (4.0 * 4.0 * n as f64) / secs / 1e9
 }
 
 fn bench_map_merge(map_size: usize, batch: usize) -> f64 {
@@ -140,27 +185,29 @@ fn bench_exchange(packet_len: usize) -> f64 {
     per_round
 }
 
-fn bench_backends() -> Vec<(String, f64)> {
+/// LIF dynamics throughput per block size, native backend (plus PJRT when
+/// the AOT artifacts are present). Returns (label, block, neurons/s).
+fn bench_backends(blocks: &[usize]) -> Vec<(String, usize, f64)> {
     let mut out = Vec::new();
     let params = LifParams::default().packed(0.1);
     let mut tr = Tracker::new();
-    for &n in &[1024usize, 8192] {
+    for &n in blocks {
         let mut chunk = StateChunk::new(n, params, &mut tr);
         let mut nat = NativeBackend::new();
         let t = time(50, || {
             nat.step(&mut chunk).unwrap();
         });
-        out.push((format!("native n={n}"), n as f64 / t));
+        out.push(("native".to_string(), n, n as f64 / t));
     }
-    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.json").exists() {
         let mut pjrt = nestgpu::runtime::pjrt::PjrtBackend::load(&dir).unwrap();
-        for &n in &[1024usize, 8192] {
+        for &n in blocks {
             let mut chunk = StateChunk::new(n, params, &mut tr);
             let t = time(50, || {
                 pjrt.step(&mut chunk).unwrap();
             });
-            out.push((format!("pjrt   n={n}"), n as f64 / t));
+            out.push(("pjrt".to_string(), n, n as f64 / t));
         }
     } else {
         println!("(skipping PJRT backend bench: run `make artifacts`)");
@@ -169,10 +216,16 @@ fn bench_backends() -> Vec<(String, f64)> {
 }
 
 fn main() {
+    let smoke = std::env::var("SMOKE").is_ok();
     let mut t = Table::new("§Perf — coordinator hot paths", &["path", "metric", "value"]);
     let mut json = Vec::new();
 
-    let (_, sort_rate) = bench_sort(2_000_000, 100_000);
+    let (sort_n, sort_nodes) = if smoke {
+        (200_000, 10_000)
+    } else {
+        (2_000_000, 100_000)
+    };
+    let (_, sort_rate) = bench_sort(sort_n, sort_nodes);
     t.row(vec![
         "connection sort-by-source".into(),
         "conns/s".into(),
@@ -183,20 +236,46 @@ fn main() {
         ("conns_per_s", Json::num(sort_rate)),
     ]));
 
-    let deliv = bench_delivery(10_000);
+    let fanout = 10_000usize;
+    let (naive, planned) = bench_delivery(fanout, if smoke { 50 } else { 200 });
+    let speedup = planned / naive;
     t.row(vec![
-        "spike delivery (10k fanout)".into(),
-        "syn events/s".into(),
-        format!("{:.2e}", deliv),
+        "delivery naive (10k fanout)".into(),
+        "records/s".into(),
+        format!("{:.2e}", naive),
+    ]);
+    t.row(vec![
+        "delivery plan  (10k fanout)".into(),
+        "records/s".into(),
+        format!("{:.2e} ({speedup:.2}x)", planned),
     ]);
     json.push(Json::obj(vec![
         ("path", Json::str("delivery")),
-        ("events_per_s", Json::num(deliv)),
+        ("naive_records_per_s", Json::num(naive)),
+        ("plan_records_per_s", Json::num(planned)),
+        ("speedup", Json::num(speedup)),
     ]));
 
-    let merge = bench_map_merge(100_000, 10_000);
+    let merge_n = if smoke { 262_144 } else { 1 << 20 };
+    let merge_gbps = bench_merge(merge_n, if smoke { 20 } else { 50 });
     t.row(vec![
-        "map merge (100k + 10k)".into(),
+        format!("plane merge ({merge_n} f32)"),
+        "GB/s".into(),
+        format!("{merge_gbps:.1}"),
+    ]);
+    json.push(Json::obj(vec![
+        ("path", Json::str("plane_merge")),
+        ("gb_per_s", Json::num(merge_gbps)),
+    ]));
+
+    let (map_n, map_b) = if smoke {
+        (20_000, 2_000)
+    } else {
+        (100_000, 10_000)
+    };
+    let merge = bench_map_merge(map_n, map_b);
+    t.row(vec![
+        format!("map merge ({map_n} + {map_b})"),
         "s/call".into(),
         fmt_secs(merge),
     ]);
@@ -216,18 +295,54 @@ fn main() {
         ("secs_per_round", Json::num(xch)),
     ]));
 
-    for (name, rate) in bench_backends() {
+    let blocks: &[usize] = if smoke {
+        &[1024, 8192]
+    } else {
+        &[1024, 8192, 65_536]
+    };
+    let mut lif = BTreeMap::new();
+    for (name, n, rate) in bench_backends(blocks) {
         t.row(vec![
-            format!("backend step {name}"),
+            format!("backend step {name} n={n}"),
             "neuron updates/s".into(),
             format!("{:.2e}", rate),
         ]);
         json.push(Json::obj(vec![
-            ("path", Json::str(&format!("backend {name}"))),
+            ("path", Json::str(&format!("backend {name} n={n}"))),
             ("updates_per_s", Json::num(rate)),
         ]));
+        lif.insert(
+            format!("{name}_n{n}"),
+            Json::obj(vec![("neurons_per_s", Json::num(rate))]),
+        );
     }
 
     t.print();
     nestgpu::harness::experiments::write_result("perf_hotpaths", &Json::Arr(json));
+
+    let fields = vec![
+        ("smoke", Json::Bool(smoke)),
+        (
+            "delivery",
+            Json::obj(vec![
+                ("fanout", Json::num(fanout as f64)),
+                ("naive_records_per_s", Json::num(naive)),
+                ("plan_records_per_s", Json::num(planned)),
+                ("speedup", Json::num(speedup)),
+            ]),
+        ),
+        ("lif", Json::Obj(lif)),
+        ("plane_merge", Json::obj(vec![("gb_per_s", Json::num(merge_gbps))])),
+        ("sort", Json::obj(vec![("conns_per_s", Json::num(sort_rate))])),
+    ];
+    // at the repository root, stamped like the other BENCH files
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .join("BENCH_perf_hotpaths.json");
+    if let Err(e) = write_bench_json(&path, fields) {
+        eprintln!("cannot write {}: {e}", path.display());
+        std::process::exit(1);
+    }
+    println!("[written {}]", path.display());
 }

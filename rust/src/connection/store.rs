@@ -12,6 +12,15 @@ use crate::memory::tracker::{Tracker, TrackedVec};
 use crate::memory::MemKind;
 use crate::plasticity::{StdpRule, NO_RULE};
 
+/// Borrowed SoA view of one connection index range (see
+/// [`Connections::view`]).
+pub struct ConnView<'a> {
+    pub target: &'a [u32],
+    pub port: &'a [u8],
+    pub delay: &'a [u16],
+    pub weight: &'a [f32],
+}
+
 /// SoA connection store (one per rank).
 pub struct Connections {
     pub source: TrackedVec<u32>,
@@ -247,6 +256,19 @@ impl Connections {
     /// Borrow the full CSR offsets (n_nodes + 1 entries).
     pub fn first_out(&self) -> &[u32] {
         &self.first_out
+    }
+
+    /// Borrowed SoA view of a connection index range — the shared access
+    /// path of everything that walks a node's outgoing block (delivery-plan
+    /// construction, benches, equivalence tests).
+    #[inline]
+    pub fn view(&self, rng: std::ops::Range<usize>) -> ConnView<'_> {
+        ConnView {
+            target: &self.target.as_slice()[rng.clone()],
+            port: &self.port.as_slice()[rng.clone()],
+            delay: &self.delay.as_slice()[rng.clone()],
+            weight: &self.weight.as_slice()[rng],
+        }
     }
 
     /// Serialize the full store (SoA arrays, CSR offsets, sort flag; since

@@ -1,0 +1,422 @@
+//! Cache-aware spike delivery: the per-node delivery plan, the slot-sorted
+//! delivery queue, and the fused accumulation-plane merge (DESIGN.md §14).
+//!
+//! The naive delivery loop walks a node's outgoing connections in creation
+//! order and, per record, re-derives the target's state index through the
+//! node→state LUT, branches on the receptor port, and `%`-wraps the ring
+//! cursor — a scattered, branchy access pattern that Pronold et al. (PAPERS
+//! .md) identify as the cache bottleneck of NEST-style delivery. The
+//! [`DeliveryPlan`] moves all of that to `prepare()` time:
+//!
+//! - every static connection is lowered to a *port-baked destination index*
+//!   `port · n_state + state` into a merged `[slot][port][neuron]` ring row,
+//!   eliminating the port branch and the LUT lookup from the hot loop;
+//! - each node's block is reordered by a **stable** `(delay, port)` sort and
+//!   summarized by a run directory, so delivery becomes branch-free runs of
+//!   contiguous `row[dest] += w · mult` writes into a single ring slot;
+//! - plastic connections are split into a per-node creation-order side list
+//!   ([`PlasticLink`]): their arrival events must enqueue in creation order
+//!   (the event ring's canonical-order key includes push order, DESIGN.md
+//!   §12), so they are excluded from the sorted runs entirely;
+//! - device (Poisson) blocks keep creation order — the input loop draws one
+//!   RNG multiplicity per connection in creation order, which a sort would
+//!   permute — and are served by the creation-order SoA view
+//!   ([`DeliveryPlan::entries_of`]).
+//!
+//! Bit-identity argument: two entries that land in the *same* accumulator
+//! cell share (target, port, delay), hence the same sort key, and a stable
+//! sort preserves their relative (creation) order; entries landing in
+//! different cells are independent f32 accumulators, so reordering across
+//! cells cannot change any sum. The same argument covers the
+//! [`DeliveryQueue`]: runs are pushed in canonical order and drained in
+//! push order per slot bucket, and a cell lives in exactly one slot, so the
+//! per-cell addition order is exactly the naive order.
+
+use crate::connection::Connections;
+use crate::node::{NodeKind, NodeSpace, RingBuffers};
+use crate::plasticity::PlasticityEngine;
+
+/// One branch-free delivery run: a contiguous range of plan entries that
+/// share a delay (and therefore a ring slot).
+#[derive(Clone, Copy, Debug)]
+pub struct Run {
+    pub delay: u16,
+    /// plan-global entry range `[start, end)` into the dest/weight SoA
+    pub start: u32,
+    pub end: u32,
+}
+
+/// One plastic connection of a node, in creation order: the plastic-slot
+/// index of the arrival-event ring plus the synaptic delay.
+#[derive(Clone, Copy, Debug)]
+pub struct PlasticLink {
+    pub slot: u32,
+    pub delay: u16,
+}
+
+/// Prepared per-node delivery layout (derived state: rebuilt at
+/// `prepare()` and at snapshot restore, never persisted or tracked —
+/// like the node→state LUT it replaces in the hot loop).
+#[derive(Debug, Default)]
+pub struct DeliveryPlan {
+    /// port-baked destination `port · n_state + state`, plan order
+    dest: Vec<u32>,
+    weight: Vec<f32>,
+    delay: Vec<u16>,
+    /// CSR into the entry SoA per node (`m + 1` offsets)
+    first: Vec<u32>,
+    runs: Vec<Run>,
+    /// CSR into `runs` per node (`m + 1` offsets)
+    run_first: Vec<u32>,
+    /// plastic side lists, creation order within each node
+    plastic: Vec<PlasticLink>,
+    /// CSR into `plastic` per node (`m + 1` offsets)
+    plastic_first: Vec<u32>,
+}
+
+impl DeliveryPlan {
+    /// Lower a sorted connection store into the plan. `plast` marks the
+    /// plastic connections (excluded from the sorted runs); device blocks
+    /// keep creation order (see the module docs for both constraints).
+    pub fn build(
+        conns: &Connections,
+        nodes: &NodeSpace,
+        state_lut: &[u32],
+        n_state: u32,
+        plast: Option<&PlasticityEngine>,
+    ) -> Self {
+        let m = nodes.m() as usize;
+        let mut plan = DeliveryPlan::default();
+        plan.dest.reserve(conns.len());
+        plan.weight.reserve(conns.len());
+        plan.delay.reserve(conns.len());
+        plan.first.reserve(m + 1);
+        plan.run_first.reserve(m + 1);
+        plan.plastic_first.reserve(m + 1);
+        plan.first.push(0);
+        plan.run_first.push(0);
+        plan.plastic_first.push(0);
+        let mut order: Vec<usize> = Vec::new();
+        for node in 0..m as u32 {
+            let rng = conns.outgoing(node);
+            let v = conns.view(rng.clone());
+            // devices keep creation order: the Poisson input loop draws
+            // one RNG multiplicity per connection, in creation order, and
+            // never takes the plastic path (matching the input phase)
+            let is_device = matches!(nodes.kind(node), NodeKind::Device { .. });
+            order.clear();
+            for (i, k) in rng.enumerate() {
+                let plastic = if is_device {
+                    None
+                } else {
+                    plast.and_then(|p| p.plastic_slot(k))
+                };
+                match plastic {
+                    Some(slot) => plan.plastic.push(PlasticLink {
+                        slot,
+                        delay: v.delay[i],
+                    }),
+                    None => order.push(i),
+                }
+            }
+            if !is_device {
+                // stable: entries of one accumulator cell share the key
+                // (same target/port/delay), so their creation order — the
+                // f32 addition order — is preserved
+                order.sort_by_key(|&i| (v.delay[i], v.port[i]));
+            }
+            let block_start = plan.dest.len();
+            for &i in &order {
+                let state = state_lut[v.target[i] as usize];
+                debug_assert!(state != u32::MAX, "connection targets a non-neuron");
+                let pos = plan.dest.len() as u32;
+                plan.dest.push(u32::from(v.port[i]) * n_state + state);
+                plan.weight.push(v.weight[i]);
+                plan.delay.push(v.delay[i]);
+                match plan.runs.last_mut() {
+                    Some(last) if pos as usize > block_start && last.delay == v.delay[i] => {
+                        last.end = pos + 1;
+                    }
+                    _ => plan.runs.push(Run {
+                        delay: v.delay[i],
+                        start: pos,
+                        end: pos + 1,
+                    }),
+                }
+            }
+            plan.first.push(plan.dest.len() as u32);
+            plan.run_first.push(plan.runs.len() as u32);
+            plan.plastic_first.push(plan.plastic.len() as u32);
+        }
+        plan
+    }
+
+    /// The delivery runs of one node's static connections (plan order).
+    #[inline]
+    pub fn runs_of(&self, node: u32) -> &[Run] {
+        let a = self.run_first[node as usize] as usize;
+        let b = self.run_first[node as usize + 1] as usize;
+        &self.runs[a..b]
+    }
+
+    /// The plastic links of one node, in creation order.
+    #[inline]
+    pub fn plastic_of(&self, node: u32) -> &[PlasticLink] {
+        let a = self.plastic_first[node as usize] as usize;
+        let b = self.plastic_first[node as usize + 1] as usize;
+        &self.plastic[a..b]
+    }
+
+    /// The `(dest, weight)` entry slices of one run.
+    #[inline]
+    pub fn run_entries(&self, start: u32, end: u32) -> (&[u32], &[f32]) {
+        (
+            &self.dest[start as usize..end as usize],
+            &self.weight[start as usize..end as usize],
+        )
+    }
+
+    /// The `(dest, weight, delay)` SoA of one node's full static block —
+    /// creation order for device nodes (the Poisson input path).
+    #[inline]
+    pub fn entries_of(&self, node: u32) -> (&[u32], &[f32], &[u16]) {
+        let a = self.first[node as usize] as usize;
+        let b = self.first[node as usize + 1] as usize;
+        (&self.dest[a..b], &self.weight[a..b], &self.delay[a..b])
+    }
+
+    /// Total static entries in the plan (bench/test introspection).
+    pub fn n_entries(&self) -> usize {
+        self.dest.len()
+    }
+
+    /// Total runs in the plan (bench/test introspection).
+    pub fn n_runs(&self) -> usize {
+        self.runs.len()
+    }
+}
+
+/// Slot-bucketed batch of delivery runs: the step's (or the exchange
+/// round's) deliveries are collected per ring slot and drained in one
+/// sweep, so writes stream through each slot row instead of hopping
+/// between slots per record. Buckets are pushed in canonical delivery
+/// order and drained in push order, which preserves the per-cell f32
+/// addition order (a cell lives in exactly one slot).
+#[derive(Debug, Default)]
+pub struct DeliveryQueue {
+    /// per ring slot: queued `(start, end, mult)` runs
+    buckets: Vec<Vec<(u32, u32, u16)>>,
+}
+
+impl DeliveryQueue {
+    /// Grow to cover `slots` ring slots (idempotent; buckets persist
+    /// across steps, so this is allocation-free at steady state).
+    pub fn ensure_slots(&mut self, slots: usize) {
+        if self.buckets.len() < slots {
+            self.buckets.resize_with(slots, Vec::new);
+        }
+    }
+
+    /// Queue one run for `slot` with multiplicity `mult`.
+    #[inline]
+    pub fn push(&mut self, slot: usize, start: u32, end: u32, mult: u16) {
+        self.buckets[slot].push((start, end, mult));
+    }
+
+    /// Deliver everything queued, slot by slot, and clear the buckets.
+    pub fn drain_into(&mut self, rb: &mut RingBuffers, plan: &DeliveryPlan) {
+        for (slot, bucket) in self.buckets.iter_mut().enumerate() {
+            if bucket.is_empty() {
+                continue;
+            }
+            let row = rb.row_mut(slot);
+            for &(start, end, mult) in bucket.iter() {
+                let (dest, weight) = plan.run_entries(start, end);
+                if mult == 1 {
+                    // w * 1.0 is bitwise w for every non-NaN weight
+                    for (&d, &w) in dest.iter().zip(weight) {
+                        row[d as usize] += w;
+                    }
+                } else {
+                    let m = mult as f32;
+                    for (&d, &w) in dest.iter().zip(weight) {
+                        row[d as usize] += w * m;
+                    }
+                }
+            }
+            bucket.clear();
+        }
+    }
+}
+
+/// Fused accumulation-plane merge of the dynamics phase: one pass writing
+/// `dst = local (+ remote) (+ plastic)` with the additions left-associated
+/// exactly as the former copy-then-add-then-add sequence — bit-identical,
+/// but one store per element instead of up to three read-modify-writes.
+pub fn merge_planes(
+    dst: &mut [f32],
+    local: &[f32],
+    remote: Option<&[f32]>,
+    plastic: Option<&[f32]>,
+) {
+    match (remote, plastic) {
+        (None, None) => dst.copy_from_slice(local),
+        (Some(r), None) => {
+            for ((d, &l), &r) in dst.iter_mut().zip(local).zip(r) {
+                *d = l + r;
+            }
+        }
+        (None, Some(p)) => {
+            for ((d, &l), &p) in dst.iter_mut().zip(local).zip(p) {
+                *d = l + p;
+            }
+        }
+        (Some(r), Some(p)) => {
+            for (((d, &l), &r), &p) in dst.iter_mut().zip(local).zip(r).zip(p) {
+                *d = (l + r) + p;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::Tracker;
+    use crate::util::rng::Rng;
+
+    /// 3 neurons + 1 device; node→state identity for the neurons.
+    fn world() -> (NodeSpace, Vec<u32>) {
+        let mut nodes = NodeSpace::new();
+        nodes.create_neurons(0, 3);
+        nodes.create_device(0);
+        (nodes, vec![0, 1, 2, u32::MAX])
+    }
+
+    #[test]
+    fn runs_are_delay_sorted_and_port_baked() {
+        let (nodes, lut) = world();
+        let mut tr = Tracker::new();
+        let mut c = Connections::new();
+        // node 0: mixed delays/ports, creation order deliberately shuffled
+        c.push(0, 1, 1.0, 3, 0, &mut tr);
+        c.push(0, 2, 2.0, 1, 1, &mut tr);
+        c.push(0, 0, 3.0, 1, 0, &mut tr);
+        c.push(0, 1, 4.0, 3, 0, &mut tr);
+        c.sort_by_source(4, &mut tr);
+        let plan = DeliveryPlan::build(&c, &nodes, &lut, 3, None);
+        assert_eq!(plan.n_entries(), 4);
+        // sorted (delay, port): (1,0)->n0, (1,1)->n2, (3,0)->n1, (3,0)->n1
+        let (dest, weight, delay) = plan.entries_of(0);
+        assert_eq!(dest, &[0, 3 + 2, 1, 1]); // port 1 bakes +n_state
+        assert_eq!(weight, &[3.0, 2.0, 1.0, 4.0]);
+        assert_eq!(delay, &[1, 1, 3, 3]);
+        // two runs: delay 1 (both ports merged) and delay 3
+        let runs = plan.runs_of(0);
+        assert_eq!(runs.len(), 2);
+        assert_eq!((runs[0].delay, runs[0].start, runs[0].end), (1, 0, 2));
+        assert_eq!((runs[1].delay, runs[1].start, runs[1].end), (3, 2, 4));
+        assert!(plan.runs_of(1).is_empty() && plan.plastic_of(0).is_empty());
+    }
+
+    #[test]
+    fn device_blocks_keep_creation_order() {
+        let (nodes, lut) = world();
+        let mut tr = Tracker::new();
+        let mut c = Connections::new();
+        // device node 3: delays out of order must NOT be sorted
+        c.push(3, 0, 1.0, 5, 0, &mut tr);
+        c.push(3, 1, 2.0, 1, 1, &mut tr);
+        c.push(3, 2, 3.0, 5, 0, &mut tr);
+        c.sort_by_source(4, &mut tr);
+        let plan = DeliveryPlan::build(&c, &nodes, &lut, 3, None);
+        let (dest, weight, delay) = plan.entries_of(3);
+        assert_eq!(delay, &[5, 1, 5]);
+        assert_eq!(weight, &[1.0, 2.0, 3.0]);
+        assert_eq!(dest, &[0, 3 + 1, 2]);
+        // run directory still segments by contiguous delay
+        assert_eq!(plan.runs_of(3).len(), 3);
+    }
+
+    #[test]
+    fn queue_drain_matches_direct_adds_bitwise() {
+        let (nodes, lut) = world();
+        let mut tr = Tracker::new();
+        let mut c = Connections::new();
+        let mut rng = Rng::new(11);
+        for _ in 0..40 {
+            c.push(
+                rng.below(3),
+                rng.below(3),
+                rng.uniform_range(-2.0, 2.0) as f32,
+                1 + rng.below(6) as u16,
+                rng.below(2) as u8,
+                &mut tr,
+            );
+        }
+        c.sort_by_source(4, &mut tr);
+        let plan = DeliveryPlan::build(&c, &nodes, &lut, 3, None);
+        let mut rb_naive = RingBuffers::new(3, 6, &mut tr);
+        let mut rb_plan = RingBuffers::new(3, 6, &mut tr);
+        let mut q = DeliveryQueue::default();
+        q.ensure_slots(rb_plan.n_slots());
+        for step in 0..20u32 {
+            for node in 0..3u32 {
+                if (step + node) % 3 != 0 {
+                    continue;
+                }
+                let mult = 1 + (step % 3) as u16;
+                let v = c.view(c.outgoing(node));
+                for i in 0..v.target.len() {
+                    let state = lut[v.target[i] as usize];
+                    rb_naive.add(state, v.port[i], v.delay[i], v.weight[i], mult);
+                }
+                for run in plan.runs_of(node) {
+                    q.push(rb_plan.slot_of(run.delay), run.start, run.end, mult);
+                }
+            }
+            q.drain_into(&mut rb_plan, &plan);
+            let (ea, ia) = rb_naive.current();
+            let (eb, ib) = rb_plan.current();
+            let bits = |s: &[f32]| s.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(ea), bits(eb), "ex plane diverged at step {step}");
+            assert_eq!(bits(ia), bits(ib), "inh plane diverged at step {step}");
+            rb_naive.advance();
+            rb_plan.advance();
+        }
+    }
+
+    #[test]
+    fn merge_planes_is_bit_identical_to_sequential_adds() {
+        let mut rng = Rng::new(5);
+        let n = 97;
+        let mk = |rng: &mut Rng| -> Vec<f32> {
+            (0..n).map(|_| rng.uniform_range(-3.0, 3.0) as f32).collect()
+        };
+        let (l, r, p) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        for (rem, pla) in [
+            (None, None),
+            (Some(&r), None),
+            (None, Some(&p)),
+            (Some(&r), Some(&p)),
+        ] {
+            let mut want = l.clone();
+            if let Some(r) = rem {
+                for (w, &x) in want.iter_mut().zip(r.iter()) {
+                    *w += x;
+                }
+            }
+            if let Some(p) = pla {
+                for (w, &x) in want.iter_mut().zip(p.iter()) {
+                    *w += x;
+                }
+            }
+            let mut got = vec![0.0f32; n];
+            merge_planes(&mut got, &l, rem.map(|v| v.as_slice()), pla.map(|v| v.as_slice()));
+            assert_eq!(
+                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+}

@@ -2,6 +2,7 @@
 //! `Connect`, `RemoteConnect`), simulation preparation, and the state
 //! propagation loop with point-to-point and collective spike exchange.
 
+pub mod delivery;
 mod scratch;
 pub mod simulator;
 pub mod snapshot;

@@ -7,6 +7,7 @@
 //! steady-state heap allocation (buffers grow to the high-water mark of
 //! the run and stay there).
 
+use super::delivery::DeliveryQueue;
 use crate::comm::SpikeRecord;
 
 /// Reusable buffers of the step pipeline, owned by the `Simulator` and
@@ -37,6 +38,10 @@ pub struct StepScratch {
     /// steps accumulated since the last exchange (< exchange interval,
     /// except transiently inside `step_once`)
     pub interval_pos: u32,
+    /// slot-bucketed run batches for local delivery (drained every step)
+    pub local_q: DeliveryQueue,
+    /// slot-bucketed run batches for remote delivery (drained per exchange)
+    pub remote_q: DeliveryQueue,
 }
 
 impl StepScratch {
@@ -53,6 +58,8 @@ impl StepScratch {
             staged: Vec::new(),
             state_bases,
             interval_pos: 0,
+            local_q: DeliveryQueue::default(),
+            remote_q: DeliveryQueue::default(),
         }
     }
 

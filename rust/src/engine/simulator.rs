@@ -17,6 +17,7 @@ use crate::stats::weights::WeightSummary;
 use crate::util::rng::Rng;
 use crate::util::timer::{Phase, PhaseTimer, PhaseTimes, StepTimes};
 
+use super::delivery::DeliveryPlan;
 use super::scratch::StepScratch;
 
 /// Engine configuration.
@@ -148,9 +149,11 @@ pub struct Simulator {
     pub(super) local_rng: Rng,
     pub(super) backend: Option<Box<dyn Backend>>,
     pub(super) offboard_local: Option<OffboardBuilder>,
-    /// host mirrors of (first, count) for GML 0/1 (image spike delivery
-    /// goes through the host on those levels)
-    pub(super) host_first_count: Option<(Vec<u32>, Vec<u32>)>,
+    /// prepared delivery layout: per-node (delay, port)-sorted runs with
+    /// port-baked destinations + creation-order plastic links (DESIGN.md
+    /// §14). Derived state — rebuilt at `prepare()` and snapshot restore,
+    /// never persisted, untracked (like `state_lut` and the scratch).
+    pub(super) plan: DeliveryPlan,
     /// node index -> state index (u32::MAX for non-neurons); built at prepare
     pub(super) state_lut: Vec<u32>,
     /// the STDP subsystem (`Some` iff any connect call attached a rule);
@@ -200,7 +203,7 @@ impl Simulator {
             local_rng,
             backend: None,
             offboard_local,
-            host_first_count: None,
+            plan: DeliveryPlan::default(),
             state_lut: Vec::new(),
             plasticity: None,
             scratch: StepScratch::default(),
@@ -452,6 +455,13 @@ impl Simulator {
                 &mut self.tracker,
             )?);
         }
+        self.plan = DeliveryPlan::build(
+            &self.conns,
+            &self.nodes,
+            &self.state_lut,
+            self.n_state,
+            self.plasticity.as_ref(),
+        );
 
         self.buffers = Some(RingBuffers::new(
             self.n_state as usize,
@@ -612,14 +622,14 @@ impl Simulator {
         let m = self.nodes.m() as usize;
         match self.cfg.level {
             GpuMemLevel::L0 | GpuMemLevel::L1 => {
-                // host mirrors used for image spike delivery
-                let first: Vec<u32> = self.conns.first_out().to_vec();
-                let count: Vec<u32> = (0..m as u32)
-                    .map(|node| self.conns.out_degree(node))
-                    .collect();
+                // host mirrors of the per-node (first, count) structures:
+                // image spike delivery is staged through the host on these
+                // levels. Delivery itself goes through the prepared plan
+                // (identical on every level), so the mirrors are modeled as
+                // resident host bytes only — same accounting as holding the
+                // `m + 1` first indices and `m` counts.
                 self.tracker
-                    .alloc(MemKind::Host, (first.len() * 4 + count.len() * 4) as u64);
-                self.host_first_count = Some((first, count));
+                    .alloc(MemKind::Host, ((m + 1) * 4 + m * 4) as u64);
             }
             GpuMemLevel::L2 => {
                 // first index on device (part of the CSR); count on the fly

@@ -468,7 +468,7 @@ impl Simulator {
             local_rng,
             backend: Some(backend),
             offboard_local: None,
-            host_first_count: None,
+            plan: Default::default(),
             state_lut: Vec::new(),
             plasticity: None,
             scratch: Default::default(),
@@ -511,6 +511,15 @@ impl Simulator {
                 bail!("snapshot has a PLAS section but no plastic connections");
             }
         }
+        // the delivery plan is derived from the (restored) connection store
+        // and plastic index, so it is rebuilt last
+        sim.plan = super::delivery::DeliveryPlan::build(
+            &sim.conns,
+            &sim.nodes,
+            &sim.state_lut,
+            sim.n_state,
+            sim.plasticity.as_ref(),
+        );
         sim.timer.stop();
         Ok(sim)
     }

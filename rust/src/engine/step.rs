@@ -10,8 +10,9 @@
 //!    trace, deposit the PSP with the post-depression weight into the
 //!    plastic plane (DESIGN.md §12);
 //! 3. **dynamics** — merge the local, remote and plastic accumulation
-//!    planes and hand the result to the dynamics backend (the
-//!    AOT-compiled Pallas kernel via PJRT, or the native reference);
+//!    planes in one fused pass and hand the result to the dynamics
+//!    backend (the AOT-compiled Pallas kernel via PJRT, or the native
+//!    reference);
 //! 4. **collect** — gather spike flags into the spiking-node list, record;
 //! 5. **post_update** — plasticity: potentiate the spiking neurons'
 //!    incoming plastic synapses against their pre traces, then bump the
@@ -23,12 +24,16 @@
 //!    p2p packets + one Allgather per group (the interval bound
 //!    `exchange_interval ≤ min remote delay` keeps results bit-identical
 //!    to per-step exchange);
-//! 8. **deliver** — local spikes each step into the local plane; incoming
-//!    remote records at exchange time into the *remote* plane, replayed in
-//!    canonical (lag, σ, group) order, each into ring slot
-//!    `delay + lag + 1 − interval_len` (host-staged on GPU memory levels
-//!    0/1). Plastic synapses enqueue arrival events instead of depositing
-//!    (their PSP uses the weight at arrival).
+//! 8. **deliver** — through the prepared [`super::delivery::DeliveryPlan`]
+//!    (per-node (delay, port)-sorted runs with port-baked destinations,
+//!    DESIGN.md §14): each spiking node's runs are batched into a
+//!    slot-bucketed [`super::delivery::DeliveryQueue`] and drained as
+//!    streaming `row[dest] += w·mult` passes — local spikes each step into
+//!    the local plane; incoming remote records at exchange time into the
+//!    *remote* plane, enqueued in canonical (lag, σ, group) order with
+//!    each run re-slotted by `delay + lag + 1 − interval_len`. Plastic
+//!    synapses enqueue arrival events instead of depositing (their PSP
+//!    uses the weight at arrival).
 //!
 //! Keeping remote deliveries in their own accumulation plane — merged with
 //! the local plane only at consumption — pins down the f32 summation
@@ -37,7 +42,10 @@
 //! argument extends to plastic runs: arrival events carry their absolute
 //! emission step and replay in the canonical (emission, local-before-
 //! remote, push-order) order, so weight updates and deposits are
-//! step-for-step identical for every admissible exchange interval.
+//! step-for-step identical for every admissible exchange interval. The
+//! slot-sorted queue preserves all of this because entries that land in
+//! the same accumulator cell share a ring slot and drain in push
+//! (canonical) order — see `engine/delivery.rs`.
 //!
 //! All per-step buffers live in the persistent [`StepScratch`], so the
 //! loop performs no steady-state heap allocation.
@@ -49,65 +57,12 @@ use crate::comm::{
     SPIKE_RECORD_BYTES,
 };
 use crate::memory::MemKind;
-use crate::node::RingBuffers;
 use crate::remote::GpuMemLevel;
 
+use super::delivery::merge_planes;
 use super::scratch::StepScratch;
 use super::simulator::{SimResult, Simulator};
-use crate::connection::Connections;
-use crate::plasticity::PlasticityEngine;
 use crate::util::timer::{Phase, StepPhase};
-
-/// Deliver through `node`'s outgoing connections into the given ring
-/// buffers, shifting every delay by `shift` slots (0 for same-step local
-/// delivery; `lag + 1 − interval_len ≤ 0` for batched remote delivery,
-/// which re-anchors the record at its emission step). Free function over
-/// the split-out pieces so the borrows stay field-local.
-///
-/// Plastic connections do not deposit here: their PSP must use the weight
-/// at *arrival* (after that step's depression), which is what keeps
-/// batched exchange bit-identical once weights mutate mid-run. They
-/// enqueue an arrival event instead — `emit` is the absolute emission step
-/// (the canonical-order key) and `remote` marks exchanged records, which
-/// replay after local events of the same emission step (DESIGN.md §12).
-#[allow(clippy::too_many_arguments)]
-#[inline]
-fn deliver_outgoing(
-    conns: &Connections,
-    state_lut: &[u32],
-    rb: &mut RingBuffers,
-    mut plast: Option<&mut PlasticityEngine>,
-    node: u32,
-    mult: u16,
-    shift: i32,
-    emit: u32,
-    remote: bool,
-) {
-    let rng = conns.outgoing(node);
-    let first = rng.start;
-    let targets = &conns.target.as_slice()[rng.clone()];
-    let ports = &conns.port.as_slice()[rng.clone()];
-    let delays = &conns.delay.as_slice()[rng.clone()];
-    let weights = &conns.weight.as_slice()[rng];
-    for (i, (((&target, &port), &delay), &weight)) in
-        targets.iter().zip(ports).zip(delays).zip(weights).enumerate()
-    {
-        let d = delay as i32 + shift;
-        debug_assert!(
-            d >= 1 && rb.supports(d as u16),
-            "shifted delay {d} outside the ring (interval exceeds a remote delay?)"
-        );
-        if let Some(pl) = plast.as_deref_mut() {
-            if let Some(slot) = pl.plastic_slot(first + i) {
-                pl.enqueue(d as usize, slot, emit, mult, remote);
-                continue;
-            }
-        }
-        let state = state_lut[target as usize];
-        debug_assert!(state != u32::MAX, "connection targets a non-neuron");
-        rb.add(state, port, d as u16, weight, mult);
-    }
-}
 
 impl Simulator {
     /// Run the propagation loop for `t_ms` of model time; returns the
@@ -152,24 +107,20 @@ impl Simulator {
             o.begin_step();
         }
 
-        // ---- input: Poisson devices through their outgoing connections
+        // ---- input: Poisson devices through their outgoing connections.
+        // Device blocks keep creation order in the plan (one RNG draw per
+        // connection, in push order), served through the same SoA view as
+        // spike delivery.
         let t0 = Instant::now();
         {
             let rb = self.buffers.as_mut().unwrap();
-            let conns = &self.conns;
-            let lut = &self.state_lut;
+            let plan = &self.plan;
             for g in self.poissons.iter_mut() {
-                for k in conns.outgoing(g.node) {
+                let (dest, weight, delay) = plan.entries_of(g.node);
+                for ((&dst, &w), &d) in dest.iter().zip(weight).zip(delay) {
                     let mult = g.draw_mult(dt);
                     if mult > 0 {
-                        let state = lut[conns.target.as_slice()[k] as usize];
-                        rb.add(
-                            state,
-                            conns.port.as_slice()[k],
-                            conns.delay.as_slice()[k],
-                            conns.weight.as_slice()[k],
-                            mult,
-                        );
+                        rb.add_dest(dst, d, w, mult);
                     }
                 }
             }
@@ -205,25 +156,21 @@ impl Simulator {
             for (i, chunk) in self.chunks.iter_mut().enumerate() {
                 let n = chunk.n;
                 let a = state_bases[i];
-                chunk.w_ex[..n].copy_from_slice(&ex[a..a + n]);
-                chunk.w_in[..n].copy_from_slice(&inh[a..a + n]);
-                // canonical merge: local plane, remote plane, plastic plane
-                if let Some((ex_r, inh_r)) = remote_cur {
-                    for (w, &r) in chunk.w_ex[..n].iter_mut().zip(&ex_r[a..a + n]) {
-                        *w += r;
-                    }
-                    for (w, &r) in chunk.w_in[..n].iter_mut().zip(&inh_r[a..a + n]) {
-                        *w += r;
-                    }
-                }
-                if let Some((ex_p, inh_p)) = plastic_cur {
-                    for (w, &r) in chunk.w_ex[..n].iter_mut().zip(&ex_p[a..a + n]) {
-                        *w += r;
-                    }
-                    for (w, &r) in chunk.w_in[..n].iter_mut().zip(&inh_p[a..a + n]) {
-                        *w += r;
-                    }
-                }
+                // fused canonical merge: local, then remote, then plastic
+                // (left-associated adds — same per-element order as the
+                // former copy + zip-add passes)
+                merge_planes(
+                    &mut chunk.w_ex[..n],
+                    &ex[a..a + n],
+                    remote_cur.map(|(re, _)| &re[a..a + n]),
+                    plastic_cur.map(|(pe, _)| &pe[a..a + n]),
+                );
+                merge_planes(
+                    &mut chunk.w_in[..n],
+                    &inh[a..a + n],
+                    remote_cur.map(|(_, ri)| &ri[a..a + n]),
+                    plastic_cur.map(|(_, pi)| &pi[a..a + n]),
+                );
                 backend.step(chunk)?;
             }
             rb.advance();
@@ -307,25 +254,31 @@ impl Simulator {
         }
         self.note_phase(StepPhase::Route, t0.elapsed());
 
-        // ---- deliver (local): own spikes through the connection array
+        // ---- deliver (local): own spikes through the delivery plan —
+        // plastic links enqueue arrival events in creation order, static
+        // runs batch into the slot-bucketed queue and drain as streaming
+        // contiguous adds
         let t0 = Instant::now();
         {
             let rb = self.buffers.as_mut().unwrap();
+            let plan = &self.plan;
+            let q = &mut self.scratch.local_q;
+            q.ensure_slots(rb.n_slots());
             let mut pl = self.plasticity.as_mut();
             let emit = self.step_now;
             for &node in &self.scratch.spiking {
-                deliver_outgoing(
-                    &self.conns,
-                    &self.state_lut,
-                    rb,
-                    pl.as_deref_mut(),
-                    node,
-                    1,
-                    0,
-                    emit,
-                    false,
-                );
+                if let Some(p) = pl.as_deref_mut() {
+                    for l in plan.plastic_of(node) {
+                        debug_assert!(rb.supports(l.delay));
+                        p.enqueue(l.delay as usize, l.slot, emit, 1, false);
+                    }
+                }
+                for run in plan.runs_of(node) {
+                    debug_assert!(rb.supports(run.delay));
+                    q.push(rb.slot_of(run.delay), run.start, run.end, 1);
+                }
             }
+            q.drain_into(rb, plan);
         }
         self.note_phase(StepPhase::Deliver, t0.elapsed());
 
@@ -388,10 +341,13 @@ impl Simulator {
     /// absolute emission step `last_step + lag + 1 − interval_len` is
     /// reconstructed for the plastic arrival events.
     ///
-    /// Delivery replays the received records in canonical
+    /// Delivery enqueues the received records in canonical
     /// (lag, σ, group-member) order — exactly the order per-step exchange
-    /// produces — into the remote accumulation plane, so the f32 sums are
-    /// bit-identical for every `1 ≤ interval ≤ min remote delay`.
+    /// produces — then drains the slot-bucketed queue into the remote
+    /// accumulation plane once per exchange. Entries landing in the same
+    /// accumulator cell share a ring slot and drain in enqueue order, so
+    /// the f32 sums stay bit-identical for every
+    /// `1 ≤ interval ≤ min remote delay` (DESIGN.md §14).
     fn do_exchange(&mut self, last_step: u32) -> anyhow::Result<()> {
         let interval_len = self.scratch.interval_pos;
         debug_assert!(interval_len >= 1);
@@ -460,7 +416,7 @@ impl Simulator {
             }
         }
 
-        // ---- delivery in canonical (lag, σ, group-member) order
+        // ---- delivery enqueue in canonical (lag, σ, group-member) order
         let t0 = Instant::now();
         let mut pkt_cursor = std::mem::take(&mut self.scratch.pkt_cursor);
         let mut coll_cursor = std::mem::take(&mut self.scratch.coll_cursor);
@@ -535,6 +491,13 @@ impl Simulator {
                 );
             }
         }
+        // one streaming drain for the whole exchange: the ring cursor is
+        // constant between steps, so batching the writes cannot move any
+        // entry to a different slot, and per-cell enqueue order is the
+        // canonical replay order established above
+        if let Some(rb) = self.remote_buffers.as_mut() {
+            self.scratch.remote_q.drain_into(rb, &self.plan);
+        }
         self.note_phase(StepPhase::Deliver, t0.elapsed());
 
         // recycle all buffers: incoming packets become the next interval's
@@ -552,12 +515,58 @@ impl Simulator {
         Ok(())
     }
 
-    /// Deliver incoming p2p records (one source rank σ, one lag):
-    /// positions -> L (image index) -> outgoing connections into the
-    /// remote plane, shifting delays by `lag + 1 − interval_len`. On GPU
-    /// memory levels 0/1 the map and the first/count structures live in
-    /// host memory, so the translation is staged through the host before
-    /// the device delivery pass (the measured cost of the lower levels).
+    /// Enqueue translated remote records — (image node, mult, lag) triples
+    /// in canonical order — onto the remote delivery queue, re-slotting
+    /// every run by `lag + 1 − interval_len` (which re-anchors the record
+    /// at its emission step). Plastic links enqueue arrival events instead:
+    /// their PSP must use the weight at *arrival*, which is what keeps
+    /// batched exchange bit-identical once weights mutate mid-run (`emit`
+    /// is the absolute emission step, the canonical-order key; `remote`
+    /// replays after local events of the same emission step, DESIGN.md §12).
+    fn queue_remote_records(
+        &mut self,
+        staged: &[(u32, u16, u16)],
+        interval_len: u32,
+        last_step: u32,
+    ) {
+        let rb = self
+            .remote_buffers
+            .as_ref()
+            .expect("remote spike record arrived on a rank without image neurons");
+        let plan = &self.plan;
+        let q = &mut self.scratch.remote_q;
+        q.ensure_slots(rb.n_slots());
+        let mut pl = self.plasticity.as_mut();
+        for &(image, mult, lag) in staged {
+            debug_assert!(self.nodes.is_image(image));
+            let shift = lag as i32 + 1 - interval_len as i32;
+            let emit = (last_step as i32 + shift) as u32;
+            if let Some(p) = pl.as_deref_mut() {
+                for link in plan.plastic_of(image) {
+                    let d = link.delay as i32 + shift;
+                    debug_assert!(
+                        d >= 1 && rb.supports(d as u16),
+                        "shifted delay {d} outside the ring (interval exceeds a remote delay?)"
+                    );
+                    p.enqueue(d as usize, link.slot, emit, mult, true);
+                }
+            }
+            for run in plan.runs_of(image) {
+                let d = run.delay as i32 + shift;
+                debug_assert!(
+                    d >= 1 && rb.supports(d as u16),
+                    "shifted delay {d} outside the ring (interval exceeds a remote delay?)"
+                );
+                q.push(rb.slot_of(d as u16), run.start, run.end, mult);
+            }
+        }
+    }
+
+    /// Translate incoming p2p records (one source rank σ, one lag):
+    /// positions -> L (image index) -> delivery-plan runs onto the remote
+    /// queue. On GPU memory levels 0/1 the translation is staged through
+    /// host memory before the device delivery pass (the measured cost of
+    /// the lower levels), modeled as a transient host allocation.
     fn deliver_p2p_records(
         &mut self,
         sigma: usize,
@@ -565,8 +574,7 @@ impl Simulator {
         interval_len: u32,
         last_step: u32,
     ) {
-        let host_staged = matches!(self.cfg.level, GpuMemLevel::L0 | GpuMemLevel::L1);
-        if host_staged {
+        if matches!(self.cfg.level, GpuMemLevel::L0 | GpuMemLevel::L1) {
             let bytes = pkt.len() as u64 * SPIKE_RECORD_BYTES;
             self.tracker.alloc(MemKind::Host, bytes);
             self.tracker.transient_events += 1;
@@ -576,67 +584,14 @@ impl Simulator {
         staged.clear();
         let map = &self.remote.p2p_maps[sigma];
         staged.extend(pkt.iter().map(|r| (map.l_at(r.pos), r.mult, r.lag)));
-        let rb = self
-            .remote_buffers
-            .as_mut()
-            .expect("p2p spike record arrived on a rank without image neurons");
-        let mut pl = self.plasticity.as_mut();
-        if host_staged {
-            // the host mirror of (first, count) drives the lookup
-            let (first, count) = self.host_first_count.as_ref().unwrap();
-            for &(image, mult, lag) in &staged {
-                debug_assert!(self.nodes.is_image(image));
-                let shift = lag as i32 + 1 - interval_len as i32;
-                let emit = (last_step as i32 + shift) as u32;
-                let a = first[image as usize] as usize;
-                let b = a + count[image as usize] as usize;
-                for k in a..b {
-                    let d = self.conns.delay.as_slice()[k] as i32 + shift;
-                    debug_assert!(
-                        d >= 1 && rb.supports(d as u16),
-                        "shifted delay {d} outside the ring (interval exceeds a remote delay?)"
-                    );
-                    if let Some(p) = pl.as_deref_mut() {
-                        if let Some(slot) = p.plastic_slot(k) {
-                            p.enqueue(d as usize, slot, emit, mult, true);
-                            continue;
-                        }
-                    }
-                    let state = self.state_lut[self.conns.target.as_slice()[k] as usize];
-                    rb.add(
-                        state,
-                        self.conns.port.as_slice()[k],
-                        d as u16,
-                        self.conns.weight.as_slice()[k],
-                        mult,
-                    );
-                }
-            }
-        } else {
-            for &(image, mult, lag) in &staged {
-                debug_assert!(self.nodes.is_image(image));
-                let shift = lag as i32 + 1 - interval_len as i32;
-                let emit = (last_step as i32 + shift) as u32;
-                deliver_outgoing(
-                    &self.conns,
-                    &self.state_lut,
-                    rb,
-                    pl.as_deref_mut(),
-                    image,
-                    mult,
-                    shift,
-                    emit,
-                    true,
-                );
-            }
-        }
+        self.queue_remote_records(&staged, interval_len, last_step);
         self.scratch.staged = staged;
     }
 
-    /// Deliver incoming collective records (one group member, one lag):
+    /// Translate incoming collective records (one group member, one lag):
     /// word pairs `[pos, (lag<<16)|mult]` -> position in H -> I image
-    /// array (−1 = no image here) -> outgoing connections (Fig. 2), with
-    /// the same lag shift into the remote plane as the p2p path.
+    /// array (−1 = no image here) -> delivery-plan runs onto the remote
+    /// queue (Fig. 2), with the same lag shift as the p2p path.
     fn deliver_collective_records(
         &mut self,
         g: usize,
@@ -666,26 +621,7 @@ impl Simulator {
         }
         // every position may resolve to -1 here (no image on this rank)
         if !staged.is_empty() {
-            let rb = self
-                .remote_buffers
-                .as_mut()
-                .expect("collective spike resolved to an image on a rank without image neurons");
-            let mut pl = self.plasticity.as_mut();
-            for &(image, mult, lag) in &staged {
-                let shift = lag as i32 + 1 - interval_len as i32;
-                let emit = (last_step as i32 + shift) as u32;
-                deliver_outgoing(
-                    &self.conns,
-                    &self.state_lut,
-                    rb,
-                    pl.as_deref_mut(),
-                    image,
-                    mult,
-                    shift,
-                    emit,
-                    true,
-                );
-            }
+            self.queue_remote_records(&staged, interval_len, last_step);
         }
         self.scratch.staged = staged;
     }

@@ -12,9 +12,12 @@
 //!                     [--exchange-interval I]
 //!   nestgpu estimate  [--live K] [--ranks N] [--scale S] [--level 0..3]
 //!   nestgpu validate  [--seeds N] [--t-ms T]
-//!   nestgpu phases    [same knobs as balanced] — run the balanced model
-//!                     and dump `SimResult::step_phases` as JSON (per-rank
-//!                     per-phase ns) for bench trajectories
+//!   nestgpu phases    [same knobs as balanced] [--json-out PATH]
+//!                     [--compare BASE.json] — run the balanced model and
+//!                     dump `SimResult::step_phases` as JSON (per-rank
+//!                     per-phase ns) for bench trajectories; `--compare`
+//!                     prints per-phase deltas vs a baseline captured
+//!                     earlier with `--json-out`
 //!   nestgpu snapshot save    --dir D [--ranks N] [--scale S] [--k-scale K]
 //!                            [--t-ms T] [--level 0..3] [--seed X] [--p2p]
 //!                            [--stdp ...]
@@ -427,7 +430,64 @@ fn cmd_phases(args: &Args) -> anyhow::Result<()> {
             .map_err(|e| anyhow::anyhow!("write --json-out {path}: {e}"))?;
         eprintln!("phases JSON written to {path}");
     }
+    if let Some(base) = args.flags.get("compare") {
+        print_phase_compare(&out, std::path::Path::new(base))?;
+    }
     Ok(())
+}
+
+/// `nestgpu phases --compare BASE.json`: per-phase deltas of the current
+/// run vs a baseline captured earlier with `--json-out` (ns summed over
+/// ranks) — the before/after proof table for delivery/dynamics perf work.
+fn print_phase_compare(current: &Json, base_path: &std::path::Path) -> anyhow::Result<()> {
+    let base = Json::parse_file(base_path)
+        .map_err(|e| anyhow::anyhow!("--compare {}: {e}", base_path.display()))?;
+    let sum_phase = |doc: &Json, phase: &str| -> f64 {
+        doc.get("per_rank").and_then(|p| p.as_arr()).map_or(0.0, |ranks| {
+            ranks
+                .iter()
+                .filter_map(|r| r.get("step_phases_ns")?.get(phase)?.as_f64())
+                .sum()
+        })
+    };
+    let mut t = Table::new(
+        &format!("phase deltas vs {}", base_path.display()),
+        &["phase", "baseline", "current", "delta"],
+    );
+    let (mut b_total, mut c_total) = (0.0, 0.0);
+    for p in ALL_STEP_PHASES {
+        let (b, c) = (sum_phase(&base, p.name()), sum_phase(current, p.name()));
+        b_total += b;
+        c_total += c;
+        if b == 0.0 && c == 0.0 {
+            continue; // phase inactive in both runs (e.g. plasticity off)
+        }
+        t.row(vec![
+            p.name().to_string(),
+            fmt_phase_ns(b),
+            fmt_phase_ns(c),
+            fmt_delta(b, c),
+        ]);
+    }
+    t.row(vec![
+        "TOTAL".to_string(),
+        fmt_phase_ns(b_total),
+        fmt_phase_ns(c_total),
+        fmt_delta(b_total, c_total),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn fmt_phase_ns(ns: f64) -> String {
+    fmt_secs(ns / 1e9)
+}
+
+fn fmt_delta(base: f64, cur: f64) -> String {
+    if base <= 0.0 {
+        return "n/a".into();
+    }
+    format!("{:+.1}%", (cur - base) / base * 100.0)
 }
 
 /// `nestgpu report <trace-dir>`: render the per-rank/per-phase latency,

@@ -2,10 +2,13 @@
 //!
 //! Each neuron has a circular buffer per receptor port; a delivered spike
 //! is accumulated into the slot shifted from the current time step by its
-//! delay, adding `multiplicity × weight`. The layout is slot-major
-//! (`[slot][neuron]`) so that reading the current step's input for all
-//! neurons of a rank — the hand-off to the device kernel — is a contiguous
-//! slice per port.
+//! delay, adding `multiplicity × weight`. The layout is a single merged
+//! array, slot-major with the two ports interleaved per slot
+//! (`[slot][port][neuron]`): reading the current step's input for all
+//! neurons — the hand-off to the device kernel — is one contiguous row
+//! split in half, and the delivery hot path addresses a cell by a single
+//! precomputed *port-baked destination* `port · n + neuron` inside a slot
+//! row (no port branch, see `engine/delivery.rs` and DESIGN.md §14).
 
 use crate::memory::{MemKind, Tracker};
 
@@ -14,10 +17,9 @@ pub struct RingBuffers {
     n: usize,
     slots: usize,
     cursor: usize,
-    /// excitatory accumulation, `[slot][neuron]` flattened
-    ex: Vec<f32>,
-    /// inhibitory accumulation
-    inh: Vec<f32>,
+    /// merged accumulation, `[slot][port][neuron]` flattened — each slot
+    /// row is `2n` wide: excitatory half, then inhibitory half
+    data: Vec<f32>,
     tracked: u64,
 }
 
@@ -40,8 +42,7 @@ impl RingBuffers {
             n,
             slots,
             cursor: 0,
-            ex: vec![0.0; n * slots],
-            inh: vec![0.0; n * slots],
+            data: vec![0.0; n * slots * 2],
             tracked: bytes,
         }
     }
@@ -60,33 +61,53 @@ impl RingBuffers {
         delay >= 1 && (delay as usize) < self.slots
     }
 
+    /// The ring slot a delivery `delay` steps from now lands in.
+    #[inline]
+    pub fn slot_of(&self, delay: u16) -> usize {
+        debug_assert!(self.supports(delay));
+        (self.cursor + delay as usize) % self.slots
+    }
+
+    /// One slot's full accumulation row (`2n` cells: excitatory half then
+    /// inhibitory half), addressed by port-baked destination indexes —
+    /// the delivery queue's streaming write target.
+    #[inline]
+    pub fn row_mut(&mut self, slot: usize) -> &mut [f32] {
+        debug_assert!(slot < self.slots);
+        let a = slot * 2 * self.n;
+        &mut self.data[a..a + 2 * self.n]
+    }
+
     /// Accumulate a spike: `delay` steps from now, on `port`, adding
     /// `weight * mult`. Delays must satisfy `1 <= delay <= max_delay`.
     #[inline]
     pub fn add(&mut self, neuron: u32, port: u8, delay: u16, weight: f32, mult: u16) {
-        debug_assert!(delay >= 1 && (delay as usize) < self.slots);
         debug_assert!((neuron as usize) < self.n);
-        let slot = (self.cursor + delay as usize) % self.slots;
-        let idx = slot * self.n + neuron as usize;
-        let w = weight * mult as f32;
-        if port == 0 {
-            self.ex[idx] += w;
-        } else {
-            self.inh[idx] += w;
-        }
+        let dest = u32::from(port) * self.n as u32 + neuron;
+        self.add_dest(dest, delay, weight, mult);
     }
 
-    /// The input slices for the current step (to feed the device kernel).
+    /// Accumulate by port-baked destination `port · n + neuron` (the
+    /// prepared-plan fast path: no port branch, no LUT lookup).
+    #[inline]
+    pub fn add_dest(&mut self, dest: u32, delay: u16, weight: f32, mult: u16) {
+        debug_assert!((dest as usize) < 2 * self.n);
+        let idx = self.slot_of(delay) * 2 * self.n + dest as usize;
+        self.data[idx] += weight * mult as f32;
+    }
+
+    /// The input slices for the current step (to feed the device kernel):
+    /// `(excitatory, inhibitory)`.
     pub fn current(&self) -> (&[f32], &[f32]) {
-        let a = self.cursor * self.n;
-        (&self.ex[a..a + self.n], &self.inh[a..a + self.n])
+        let a = self.cursor * 2 * self.n;
+        let row = &self.data[a..a + 2 * self.n];
+        row.split_at(self.n)
     }
 
     /// Zero the consumed slot and advance the cursor by one step.
     pub fn advance(&mut self) {
-        let a = self.cursor * self.n;
-        self.ex[a..a + self.n].fill(0.0);
-        self.inh[a..a + self.n].fill(0.0);
+        let a = self.cursor * 2 * self.n;
+        self.data[a..a + 2 * self.n].fill(0.0);
         self.cursor = (self.cursor + 1) % self.slots;
     }
 
@@ -98,12 +119,26 @@ impl RingBuffers {
     /// Serialize the buffers including the cursor and every pending slot —
     /// restoring mid-run means spikes already in flight (delivered but not
     /// yet consumed) must survive the checkpoint.
+    ///
+    /// The byte layout is the original plane-major format (all excitatory
+    /// slots, then all inhibitory slots), kept stable across the internal
+    /// move to the merged `[slot][port][neuron]` array so existing
+    /// snapshot files load unchanged.
     pub fn snapshot_encode(&self, enc: &mut crate::snapshot::Encoder) {
         enc.u64(self.n as u64);
         enc.u64(self.slots as u64);
         enc.u64(self.cursor as u64);
-        enc.slice_f32(&self.ex);
-        enc.slice_f32(&self.inh);
+        let mut plane = vec![0.0f32; self.n * self.slots];
+        for s in 0..self.slots {
+            let a = s * 2 * self.n;
+            plane[s * self.n..(s + 1) * self.n].copy_from_slice(&self.data[a..a + self.n]);
+        }
+        enc.slice_f32(&plane);
+        for s in 0..self.slots {
+            let a = s * 2 * self.n + self.n;
+            plane[s * self.n..(s + 1) * self.n].copy_from_slice(&self.data[a..a + self.n]);
+        }
+        enc.slice_f32(&plane);
     }
 
     /// Rebuild from [`RingBuffers::snapshot_encode`] output.
@@ -126,12 +161,17 @@ impl RingBuffers {
         }
         let bytes = (n * slots * 2 * 4) as u64;
         tr.alloc(MemKind::Device, bytes);
+        let mut data = vec![0.0f32; n * slots * 2];
+        for s in 0..slots {
+            let a = s * 2 * n;
+            data[a..a + n].copy_from_slice(&ex[s * n..(s + 1) * n]);
+            data[a + n..a + 2 * n].copy_from_slice(&inh[s * n..(s + 1) * n]);
+        }
         Ok(Self {
             n,
             slots,
             cursor,
-            ex,
-            inh,
+            data,
             tracked: bytes,
         })
     }
@@ -217,6 +257,61 @@ mod tests {
     }
 
     #[test]
+    fn slot_arithmetic_wraps_at_interval_headroom_size() {
+        // wrap arithmetic at the batched-remote ring size
+        // slots = max_delay + interval, over two full wraps
+        let mut tr = Tracker::new();
+        let (max_delay, interval) = (5u16, 3u16);
+        let mut rb = RingBuffers::new(1, max_delay + interval - 1, &mut tr);
+        let slots = rb.n_slots();
+        assert_eq!(slots, (max_delay + interval) as usize);
+        for step in 0..(2 * slots) {
+            for d in 1..(max_delay + interval) {
+                assert_eq!(
+                    rb.slot_of(d),
+                    (step + d as usize) % slots,
+                    "step {step} delay {d}"
+                );
+            }
+            rb.advance();
+        }
+    }
+
+    #[test]
+    fn add_dest_bakes_the_port() {
+        let mut tr = Tracker::new();
+        let n = 3u32;
+        let mut a = RingBuffers::new(n as usize, 4, &mut tr);
+        let mut b = RingBuffers::new(n as usize, 4, &mut tr);
+        for (neuron, port, delay, w, mult) in
+            [(0u32, 0u8, 1u16, 1.25f32, 1u16), (2, 1, 3, -0.5, 2), (1, 1, 4, 2.0, 1)]
+        {
+            a.add(neuron, port, delay, w, mult);
+            b.add_dest(u32::from(port) * n + neuron, delay, w, mult);
+        }
+        for _ in 0..5 {
+            assert_eq!(a.current(), b.current());
+            a.advance();
+            b.advance();
+        }
+    }
+
+    #[test]
+    fn row_mut_writes_land_like_add() {
+        let mut tr = Tracker::new();
+        let mut a = RingBuffers::new(2, 3, &mut tr);
+        let mut b = RingBuffers::new(2, 3, &mut tr);
+        a.add(1, 1, 2, 4.0, 1);
+        let slot = b.slot_of(2);
+        b.row_mut(slot)[2 + 1] += 4.0; // inhibitory half starts at n = 2
+        for _ in 0..4 {
+            assert_eq!(a.current(), b.current());
+            a.advance();
+            b.advance();
+        }
+    }
+
+    #[test]
     fn snapshot_preserves_in_flight_spikes() {
         let mut tr = Tracker::new();
         let mut rb = RingBuffers::new(3, 6, &mut tr);
@@ -240,6 +335,26 @@ mod tests {
             rb.advance();
         }
         assert_eq!(tr2.current(MemKind::Device), tr.current(MemKind::Device));
+    }
+
+    #[test]
+    fn snapshot_byte_format_is_plane_major() {
+        // the on-disk layout predates the merged array: header, then the
+        // full excitatory plane ([slot][neuron]), then the inhibitory one
+        let mut tr = Tracker::new();
+        let mut rb = RingBuffers::new(2, 1, &mut tr); // 2 slots
+        rb.add(0, 0, 1, 1.0, 1); // ex, slot 1, neuron 0
+        rb.add(1, 1, 1, 2.0, 1); // inh, slot 1, neuron 1
+        let mut enc = crate::snapshot::Encoder::new();
+        rb.snapshot_encode(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut dec = crate::snapshot::Decoder::new(&bytes);
+        assert_eq!(dec.u64().unwrap(), 2); // n
+        assert_eq!(dec.u64().unwrap(), 2); // slots
+        assert_eq!(dec.u64().unwrap(), 0); // cursor
+        assert_eq!(dec.vec_f32().unwrap(), vec![0.0, 0.0, 1.0, 0.0]); // ex plane
+        assert_eq!(dec.vec_f32().unwrap(), vec![0.0, 0.0, 0.0, 2.0]); // inh plane
+        dec.finish().unwrap();
     }
 
     #[test]

@@ -5,8 +5,19 @@
 //! PJRT and native paths agree to f32 rounding (checked by unit tests here
 //! and by `rust/tests/it_runtime.rs` against the Python oracle's golden
 //! vectors).
+//!
+//! The update loop is written branchless over fixed-width lane blocks
+//! (select idioms instead of `if`, `LANES`-sized array chunks) so the
+//! autovectorizer can emit SIMD for the whole chunk; `StateChunk` pads to
+//! `MIN_BLOCK` (a multiple of `LANES`), so no scalar tail exists. Every
+//! arithmetic operation and its order match the scalar reference exactly —
+//! `step_equals_scalar_reference_bitwise` below pins that down per element.
 
 use super::{Backend, StateChunk};
+
+/// Fixed inner block width. 8 f32 lanes = one AVX2 register; the compiler
+/// is free to fuse consecutive blocks into wider or narrower vectors.
+const LANES: usize = 8;
 
 #[derive(Debug, Default)]
 pub struct NativeBackend;
@@ -24,26 +35,58 @@ impl Backend for NativeBackend {
 
     fn step(&mut self, c: &mut StateChunk) -> anyhow::Result<()> {
         let [p22, p21ex, p21in, p20, p11ex, p11in, theta, v_reset, t_ref, i_e] = c.params;
-        for i in 0..c.pad_n {
-            let v = c.v[i];
-            let i_ex = c.i_ex[i];
-            let i_in = c.i_in[i];
-            let r = c.r[i];
-            let not_ref = r <= 0.0;
-            // subthreshold propagation with the previous step's currents
-            let v_prop = p22 * v + p21ex * i_ex + p21in * i_in + p20 * i_e;
-            let mut v_new = if not_ref { v_prop } else { v };
-            c.i_ex[i] = p11ex * i_ex + c.w_ex[i];
-            c.i_in[i] = p11in * i_in + c.w_in[i];
-            let spike = not_ref && v_new >= theta;
-            if spike {
-                v_new = v_reset;
+        // same product as the inline `p20 * i_e` per lane — hoisting a
+        // constant subexpression does not change f32 results
+        let drive = p20 * i_e;
+        debug_assert_eq!(c.pad_n % LANES, 0, "MIN_BLOCK padding is a LANES multiple");
+        for b in (0..c.pad_n).step_by(LANES) {
+            let v: &mut [f32; LANES] = (&mut c.v[b..b + LANES]).try_into().unwrap();
+            let i_ex: &mut [f32; LANES] = (&mut c.i_ex[b..b + LANES]).try_into().unwrap();
+            let i_in: &mut [f32; LANES] = (&mut c.i_in[b..b + LANES]).try_into().unwrap();
+            let r: &mut [f32; LANES] = (&mut c.r[b..b + LANES]).try_into().unwrap();
+            let w_ex: &[f32; LANES] = (&c.w_ex[b..b + LANES]).try_into().unwrap();
+            let w_in: &[f32; LANES] = (&c.w_in[b..b + LANES]).try_into().unwrap();
+            let spike: &mut [f32; LANES] = (&mut c.spike[b..b + LANES]).try_into().unwrap();
+            for l in 0..LANES {
+                let (vl, iex, iin, rl) = (v[l], i_ex[l], i_in[l], r[l]);
+                let not_ref = rl <= 0.0;
+                // subthreshold propagation with the previous step's currents
+                let v_prop = p22 * vl + p21ex * iex + p21in * iin + drive;
+                let v_new = if not_ref { v_prop } else { vl };
+                let spiked = not_ref && v_new >= theta;
+                i_ex[l] = p11ex * iex + w_ex[l];
+                i_in[l] = p11in * iin + w_in[l];
+                v[l] = if spiked { v_reset } else { v_new };
+                r[l] = if spiked { t_ref } else { (rl - 1.0).max(0.0) };
+                spike[l] = if spiked { 1.0 } else { 0.0 };
             }
-            c.r[i] = if spike { t_ref } else { (r - 1.0).max(0.0) };
-            c.v[i] = v_new;
-            c.spike[i] = if spike { 1.0 } else { 0.0 };
         }
         Ok(())
+    }
+}
+
+/// The original scalar loop, kept verbatim as the semantic oracle for
+/// `step_equals_scalar_reference_bitwise`.
+#[cfg(test)]
+fn step_scalar_reference(c: &mut StateChunk) {
+    let [p22, p21ex, p21in, p20, p11ex, p11in, theta, v_reset, t_ref, i_e] = c.params;
+    for i in 0..c.pad_n {
+        let v = c.v[i];
+        let i_ex = c.i_ex[i];
+        let i_in = c.i_in[i];
+        let r = c.r[i];
+        let not_ref = r <= 0.0;
+        let v_prop = p22 * v + p21ex * i_ex + p21in * i_in + p20 * i_e;
+        let mut v_new = if not_ref { v_prop } else { v };
+        c.i_ex[i] = p11ex * i_ex + c.w_ex[i];
+        c.i_in[i] = p11in * i_in + c.w_in[i];
+        let spike = not_ref && v_new >= theta;
+        if spike {
+            v_new = v_reset;
+        }
+        c.r[i] = if spike { t_ref } else { (r - 1.0).max(0.0) };
+        c.v[i] = v_new;
+        c.spike[i] = if spike { 1.0 } else { 0.0 };
     }
 }
 
@@ -52,6 +95,7 @@ mod tests {
     use super::*;
     use crate::memory::Tracker;
     use crate::node::neuron::LifParams;
+    use crate::util::rng::Rng;
 
     fn chunk(n: usize) -> StateChunk {
         let mut tr = Tracker::new();
@@ -128,5 +172,48 @@ mod tests {
             }
         }
         assert!(fired, "constant excitatory drive must elicit spikes");
+    }
+
+    #[test]
+    fn step_equals_scalar_reference_bitwise() {
+        // randomized state straddling threshold, refractoriness, and reset,
+        // evolved for many steps: every array must match the scalar oracle
+        // bit for bit at every step
+        let mut a = chunk(700); // pad_n = 768, exercises multiple blocks
+        let mut b = chunk(700);
+        let mut rng = Rng::new(0x51_3D_1F);
+        let theta = a.params[6] as f64;
+        for i in 0..a.pad_n {
+            a.v[i] = rng.uniform_range(theta - 2.0, theta + 2.0) as f32;
+            a.i_ex[i] = rng.uniform_range(0.0, 300.0) as f32;
+            a.i_in[i] = rng.uniform_range(-120.0, 0.0) as f32;
+            a.r[i] = rng.below(4) as f32; // mix of refractory and active
+        }
+        let mut backend = NativeBackend::new();
+        for step in 0..25 {
+            for i in 0..a.pad_n {
+                let wx = rng.uniform_range(0.0, 80.0) as f32;
+                let wi = rng.uniform_range(-30.0, 0.0) as f32;
+                a.w_ex[i] = wx;
+                a.w_in[i] = wi;
+                b.w_ex[i] = wx;
+                b.w_in[i] = wi;
+            }
+            if step == 0 {
+                b.v.copy_from_slice(&a.v);
+                b.i_ex.copy_from_slice(&a.i_ex);
+                b.i_in.copy_from_slice(&a.i_in);
+                b.r.copy_from_slice(&a.r);
+            }
+            backend.step(&mut a).unwrap();
+            step_scalar_reference(&mut b);
+            for i in 0..a.pad_n {
+                assert_eq!(a.v[i].to_bits(), b.v[i].to_bits(), "v[{i}] step {step}");
+                assert_eq!(a.i_ex[i].to_bits(), b.i_ex[i].to_bits(), "i_ex[{i}] step {step}");
+                assert_eq!(a.i_in[i].to_bits(), b.i_in[i].to_bits(), "i_in[{i}] step {step}");
+                assert_eq!(a.r[i].to_bits(), b.r[i].to_bits(), "r[{i}] step {step}");
+                assert_eq!(a.spike[i].to_bits(), b.spike[i].to_bits(), "spike[{i}] step {step}");
+            }
+        }
     }
 }

@@ -9,8 +9,10 @@ Only *regressions* fail the check, with a relative tolerance (default
 +/-15%, override with ``--tolerance`` or the ``BENCH_TOLERANCE`` env
 var):
 
-- higher-is-better metrics (anything named ``*steps_per_s*``) fail when
-  they drop more than the tolerance below the baseline;
+- higher-is-better metrics (anything named ``*steps_per_s*`` or ending
+  in ``_per_s``, e.g. ``records_per_s`` / ``neurons_per_s`` / the
+  ``gb_per_s`` merge throughput) fail when they drop more than the
+  tolerance below the baseline;
 - lower-is-better metrics (``overhead_ratio``, ``overhead_frac``) fail
   when they rise more than the tolerance above it.
 
@@ -40,7 +42,7 @@ def metric_direction(name):
     leaf = name.rsplit(".", 1)[-1]
     if leaf in SKIP_KEYS:
         return None
-    if "steps_per_s" in leaf:
+    if "steps_per_s" in leaf or leaf.endswith("_per_s"):
         return "higher"
     if leaf in ("overhead_ratio", "overhead_frac"):
         return "lower"

@@ -53,6 +53,11 @@ fn main() -> anyhow::Result<()> {
         bal.kin_e() + bal.kin_i()
     );
 
+    // `run_cluster` runs the ranks as threads of this process; the same
+    // model runs bit-identically over real OS processes on the socket
+    // transport (DESIGN.md §15) — `nestgpu launch --ranks 2 balanced`, or
+    // per process `--comm socket --rank R --world N --rendezvous H:P`;
+    // every simulation subcommand prints a world spike hash to compare
     let results = run_cluster(
         2,
         &cfg,

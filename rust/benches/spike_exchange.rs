@@ -1,26 +1,39 @@
 //! Spike-exchange batching: the balanced network (point-to-point mode)
 //! at exchange interval 1 vs the auto interval (= minimum remote synaptic
-//! delay, 15 steps for this model).
+//! delay, 15 steps for this model), plus the same batched workload over
+//! the multi-process socket transport (DESIGN.md §15) — one OS process
+//! per rank, real TCP loopback, whole-frame wire accounting.
 //!
-//! Reports steps/s, p2p message counts and bytes per step, and writes
-//! `BENCH_spike_exchange.json` at the repository root so the perf
-//! trajectory of the exchange path has machine-readable data points.
-//! Expected shape: p2p messages drop by ~interval×, payload bytes stay
-//! within ~1× (same records, fewer envelopes), step rate does not regress.
+//! Reports steps/s, exchanged records/s, p2p message counts and bytes per
+//! step, and writes `BENCH_spike_exchange.json` at the repository root so
+//! the perf trajectory of the exchange path has machine-readable data
+//! points. Expected shape: p2p messages drop by ~interval×, payload bytes
+//! stay within ~1× (same records, fewer envelopes), step rate does not
+//! regress; socket wire bytes exceed thread bytes (24-byte frame headers,
+//! empty rounds framed) while the record stream stays bit-identical.
 //!
 //! Set `SMOKE=1` for the CI-sized run.
 
 use std::path::PathBuf;
 
+use nestgpu::comm::{SocketComm, SocketConfig, MSG_HEADER_BYTES, SPIKE_RECORD_BYTES};
 use nestgpu::engine::{SimConfig, SimResult, Simulator};
-use nestgpu::harness::run_cluster;
+use nestgpu::harness::{free_loopback_addr, run_cluster};
 use nestgpu::models::balanced::{build_balanced, BalancedConfig};
 use nestgpu::obs::stamp::write_bench_json;
 use nestgpu::util::json::Json;
 use nestgpu::util::table::{fmt_bytes, Table};
 
+/// Env protocol for the self-spawned socket rank processes: when
+/// `NESTGPU_BENCH_SOCKET_RANK` is set, this binary runs as that rank of
+/// the socket world instead of as the bench driver.
+const ENV_RANK: &str = "NESTGPU_BENCH_SOCKET_RANK";
+const ENV_WORLD: &str = "NESTGPU_BENCH_SOCKET_WORLD";
+const ENV_RDV: &str = "NESTGPU_BENCH_SOCKET_RDV";
+const CHILD_PREFIX: &str = "BENCH_CHILD ";
+
 struct Point {
-    label: &'static str,
+    label: String,
     interval: u16,
     steps_per_s: f64,
     p2p_messages: u64,
@@ -29,17 +42,42 @@ struct Point {
     coll_calls: u64,
 }
 
+/// The workload shared by the driver and the socket rank children —
+/// deriving it from `SMOKE` alone keeps the processes in agreement
+/// without passing model knobs through the environment.
+fn bench_params(smoke: bool) -> (usize, f64, BalancedConfig) {
+    let ranks = if smoke { 2 } else { 4 };
+    let t_ms = if smoke { 50.0 } else { 200.0 };
+    // dense enough that most steps carry spikes on every rank pair — the
+    // regime where batching approaches the full interval-x reduction
+    // (empty packets are never counted as messages)
+    let bal = BalancedConfig {
+        scale: if smoke { 0.01 } else { 0.1 },
+        k_scale: 0.01,
+        collective: false, // point-to-point exchange
+        ..Default::default()
+    };
+    (ranks, t_ms, bal)
+}
+
+fn bench_sim_config() -> SimConfig {
+    SimConfig {
+        record_spikes: false, // benchmarking runs, as in the paper
+        exchange_interval: None,
+        ..Default::default()
+    }
+}
+
 fn measure(
-    label: &'static str,
+    label: &str,
     interval: Option<u16>,
     ranks: usize,
     bal: &BalancedConfig,
     t_ms: f64,
 ) -> Point {
     let cfg = SimConfig {
-        record_spikes: false, // benchmarking runs, as in the paper
         exchange_interval: interval,
-        ..Default::default()
+        ..bench_sim_config()
     };
     let b = bal.clone();
     let results: Vec<SimResult> = run_cluster(
@@ -59,8 +97,90 @@ fn measure(
     let p2p_bytes: u64 = results.iter().map(|r| r.p2p_bytes).sum();
     let coll_calls: u64 = results.iter().map(|r| r.coll_calls).sum();
     Point {
-        label,
+        label: label.to_string(),
         interval: results[0].exchange_interval,
+        steps_per_s: steps / prop_s,
+        p2p_messages,
+        p2p_bytes,
+        bytes_per_step: p2p_bytes as f64 / steps,
+        coll_calls,
+    }
+}
+
+/// One socket rank process: connect, run the batched workload, print a
+/// single machine-readable record for the driver, exit.
+fn child_rank_main(rank: usize) -> ! {
+    let world: usize = std::env::var(ENV_WORLD)
+        .expect("child env: world")
+        .parse()
+        .expect("child env: world size");
+    let rdv = std::env::var(ENV_RDV).expect("child env: rendezvous");
+    let smoke = std::env::var("SMOKE").is_ok();
+    let (_, t_ms, bal) = bench_params(smoke);
+    let scfg = SocketConfig {
+        rank: Some(rank),
+        ..SocketConfig::new(rdv, world)
+    };
+    let comm = SocketComm::connect(&scfg).expect("socket connect");
+    let mut sim = Simulator::new(Box::new(comm), bench_sim_config());
+    build_balanced(&mut sim, &bal);
+    sim.prepare().expect("prepare");
+    let res = sim.simulate(t_ms).expect("simulate");
+    let record = Json::obj(vec![
+        ("rank", Json::num(rank as f64)),
+        ("interval", Json::num(res.exchange_interval as f64)),
+        (
+            "propagation_s",
+            Json::num(res.phases.propagation.as_secs_f64()),
+        ),
+        ("p2p_messages", Json::num(res.p2p_messages as f64)),
+        ("p2p_bytes", Json::num(res.p2p_bytes as f64)),
+        ("coll_calls", Json::num(res.coll_calls as f64)),
+    ]);
+    println!("{CHILD_PREFIX}{record}");
+    std::process::exit(0);
+}
+
+/// The batched workload over `ranks` OS processes on the socket
+/// transport: spawn this binary once per rank, aggregate their records.
+fn measure_socket(ranks: usize, t_ms: f64, steps: f64) -> Point {
+    let rdv = free_loopback_addr().expect("loopback rendezvous");
+    let exe = std::env::current_exe().expect("own executable");
+    let children: Vec<std::process::Child> = (0..ranks)
+        .map(|rank| {
+            std::process::Command::new(&exe)
+                .env(ENV_RANK, rank.to_string())
+                .env(ENV_WORLD, ranks.to_string())
+                .env(ENV_RDV, &rdv)
+                .stdout(std::process::Stdio::piped())
+                .spawn()
+                .expect("spawn socket rank")
+        })
+        .collect();
+    let mut interval = 0u16;
+    let mut prop_s = 1e-9f64;
+    let (mut p2p_messages, mut p2p_bytes, mut coll_calls) = (0u64, 0u64, 0u64);
+    // children all run concurrently; each prints one short record, so
+    // sequential collection cannot back up a pipe
+    for (rank, child) in children.into_iter().enumerate() {
+        let out = child.wait_with_output().expect("collect socket rank");
+        assert!(out.status.success(), "socket rank {rank} failed: {}", out.status);
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        let line = stdout
+            .lines()
+            .find_map(|l| l.strip_prefix(CHILD_PREFIX))
+            .unwrap_or_else(|| panic!("socket rank {rank} printed no bench record"));
+        let j = Json::parse(line).expect("bench record JSON");
+        let f = |k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        interval = f("interval") as u16;
+        prop_s = prop_s.max(f("propagation_s"));
+        p2p_messages += f("p2p_messages") as u64;
+        p2p_bytes += f("p2p_bytes") as u64;
+        coll_calls += f("coll_calls") as u64;
+    }
+    Point {
+        label: format!("socket {ranks} procs"),
+        interval,
         steps_per_s: steps / prop_s,
         p2p_messages,
         p2p_bytes,
@@ -83,18 +203,11 @@ impl Point {
 }
 
 fn main() {
+    if let Ok(rank) = std::env::var(ENV_RANK) {
+        child_rank_main(rank.parse().expect("child env: rank index"));
+    }
     let smoke = std::env::var("SMOKE").is_ok();
-    let ranks = if smoke { 2 } else { 4 };
-    let t_ms = if smoke { 50.0 } else { 200.0 };
-    // dense enough that most steps carry spikes on every rank pair — the
-    // regime where batching approaches the full interval-x reduction
-    // (empty packets are never counted as messages)
-    let bal = BalancedConfig {
-        scale: if smoke { 0.01 } else { 0.1 },
-        k_scale: 0.01,
-        collective: false, // point-to-point exchange
-        ..Default::default()
-    };
+    let (ranks, t_ms, bal) = bench_params(smoke);
     println!(
         "balanced (p2p), {ranks} ranks x {} neurons, {t_ms} ms, delay {} steps{}",
         bal.neurons_per_rank(),
@@ -104,14 +217,16 @@ fn main() {
 
     let per_step = measure("interval 1", Some(1), ranks, &bal, t_ms);
     let batched = measure("interval min_delay", None, ranks, &bal, t_ms);
+    let steps = (t_ms / SimConfig::default().dt_ms).round();
+    let socket = measure_socket(ranks, t_ms, steps);
 
     let mut t = Table::new(
-        "spike exchange: per-step vs min-delay batching",
+        "spike exchange: per-step vs min-delay batching vs socket procs",
         &["config", "interval", "steps/s", "p2p msgs", "p2p bytes", "bytes/step"],
     );
-    for p in [&per_step, &batched] {
+    for p in [&per_step, &batched, &socket] {
         t.row(vec![
-            p.label.to_string(),
+            p.label.clone(),
             p.interval.to_string(),
             format!("{:.0}", p.steps_per_s),
             p.p2p_messages.to_string(),
@@ -132,6 +247,27 @@ fn main() {
         "batching must reduce the p2p message count"
     );
 
+    // the record stream is bit-identical across transports (the socket
+    // ranks run the same seeds), so the exchanged-record count derives
+    // from the thread run's payload-only accounting; socket bytes add the
+    // 24-byte frame headers and the empty-round framing on top
+    let records = batched
+        .p2p_bytes
+        .saturating_sub(batched.p2p_messages * MSG_HEADER_BYTES)
+        / SPIKE_RECORD_BYTES;
+    let thread_records_per_s = records as f64 * batched.steps_per_s / steps;
+    let socket_records_per_s = records as f64 * socket.steps_per_s / steps;
+    let wire_factor = socket.p2p_bytes as f64 / batched.p2p_bytes.max(1) as f64;
+    println!(
+        "socket transport: {socket_records_per_s:.0} records/s over {} procs \
+         (thread: {thread_records_per_s:.0}); wire bytes {:.2}x thread payload bytes",
+        ranks, wire_factor
+    );
+    assert!(
+        socket.p2p_bytes > batched.p2p_bytes,
+        "socket wire accounting must include frame overhead"
+    );
+
     let fields = vec![
         ("model", Json::str("balanced-p2p")),
         ("ranks", Json::num(ranks as f64)),
@@ -140,7 +276,12 @@ fn main() {
         ("min_delay", Json::num(batched.interval as f64)),
         ("interval_1", per_step.to_json()),
         ("interval_min_delay", batched.to_json()),
+        ("socket_procs", socket.to_json()),
         ("p2p_message_reduction", Json::num(reduction)),
+        ("exchange_records", Json::num(records as f64)),
+        ("thread_records_per_s", Json::num(thread_records_per_s)),
+        ("socket_records_per_s", Json::num(socket_records_per_s)),
+        ("socket_wire_bytes_vs_thread", Json::num(wire_factor)),
     ];
     // at the repository root (one directory above the rust package);
     // stamped with schema version / timestamp / git revision, and

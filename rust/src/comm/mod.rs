@@ -12,9 +12,19 @@
 //! The construction algorithm (the paper's contribution) never calls into
 //! this module — network construction is communication-free by design; only
 //! state propagation and the final validation gathers exchange data.
+//!
+//! Two live transports implement the trait: [`ThreadComm`] (every rank a
+//! thread of one process, the shared-memory wire of the original
+//! reproduction) and [`SocketComm`] (every rank its own OS process, spike
+//! packets and collectives framed over TCP — see [`wire`] and DESIGN.md
+//! §15; CLI: `--comm socket`, `nestgpu launch`). Both are held to the
+//! repo's bit-identity bar (`tests/it_transport.rs`).
 
+mod socket_comm;
 mod thread_comm;
+pub mod wire;
 
+pub use socket_comm::{SocketComm, SocketConfig};
 pub use thread_comm::{CommWorld, ThreadComm};
 
 /// MPI rank index.
@@ -123,6 +133,16 @@ pub trait Communicator: Send {
     fn barrier(&mut self);
 
     fn traffic(&self) -> TrafficStats;
+
+    /// Short name of the transport backend ("thread", "socket", "null"),
+    /// recorded in run manifests and report headers.
+    fn transport_name(&self) -> &'static str;
+
+    /// Advertised per-rank wire endpoints, rank-ordered. Empty for
+    /// in-process transports, which have no wire.
+    fn endpoints(&self) -> Vec<String> {
+        Vec::new()
+    }
 }
 
 /// Communicator for estimation (dry-run) mode: the rank behaves as rank
@@ -173,6 +193,9 @@ impl Communicator for NullComm {
     fn barrier(&mut self) {}
     fn traffic(&self) -> TrafficStats {
         TrafficStats::default()
+    }
+    fn transport_name(&self) -> &'static str {
+        "null"
     }
 }
 

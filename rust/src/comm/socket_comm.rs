@@ -1,0 +1,884 @@
+//! TCP socket transport: a real inter-process [`Communicator`] backend.
+//!
+//! Each rank is its own OS process; all traffic — handshake, point-to-point
+//! spike packets, collectives — travels as frames of the wire protocol in
+//! [`super::wire`] (DESIGN.md §15). The topology is a full mesh of TCP
+//! connections established through a rank-0 *rendezvous*:
+//!
+//! 1. the rank-0 process listens on the rendezvous address; every other
+//!    process connects to it (with bounded retry/backoff, so start order
+//!    does not matter), sends `Hello` (claimed rank or "assign me", world
+//!    size, its own mesh-listener address) and receives `Welcome` (its
+//!    assigned rank plus the rank-ordered endpoint map);
+//! 2. mesh: rank `i` connects to every rank `j < i` (announcing itself
+//!    with `Ident`) and accepts connections from every rank `j > i`.
+//!
+//! After the handshake, one *reader thread per peer* drains incoming frames
+//! into an in-process channel. This is what makes the blocking all-to-all
+//! in [`Communicator::exchange`] deadlock-free: every rank's inbound
+//! direction always makes progress, so a cycle of ranks blocked on
+//! `write_all` against full kernel socket buffers cannot form. The main
+//! thread consumes its peers' inboxes with `recv_timeout`, which is also
+//! where the configured receive timeout turns a silent peer into a loud,
+//! rank-tagged failure instead of a hang.
+//!
+//! The SPMD contract of the [`Communicator`] trait (every rank issues the
+//! same collective calls in the same order) plus per-connection FIFO
+//! ordering is what makes sequential frame matching sound: the next frame
+//! from a peer within an operation *is* that operation's frame, and the
+//! header's (type, channel, seq) triple is validated against the expected
+//! round to catch any violation.
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::wire::{
+    begin_frame, decode_records, decode_words, finish_frame, push_records, push_words,
+    read_frame, FrameHeader, MsgType, WireError,
+};
+use super::{Communicator, GroupId, Rank, SpikeRecord, TrafficStats};
+
+/// Socket-transport configuration (CLI: `--comm socket --rank R --world N
+/// --rendezvous HOST:PORT [--connect-timeout-ms T] [--recv-timeout-ms T]`).
+#[derive(Clone, Debug)]
+pub struct SocketConfig {
+    /// rendezvous address the rank-0 process listens on
+    pub rendezvous: String,
+    /// this process's rank; `None` lets the rendezvous assign one (the
+    /// rank-0 process must always claim rank 0 — it hosts the rendezvous)
+    pub rank: Option<Rank>,
+    /// world size (must agree on every process)
+    pub world: usize,
+    /// total budget for establishing any single outbound connection,
+    /// retried with exponential backoff (covers peers that bind late)
+    pub connect_timeout: Duration,
+    /// how long a blocking receive may wait for a peer's frame
+    pub recv_timeout: Duration,
+}
+
+impl SocketConfig {
+    pub fn new(rendezvous: impl Into<String>, world: usize) -> Self {
+        Self {
+            rendezvous: rendezvous.into(),
+            rank: None,
+            world,
+            connect_timeout: Duration::from_secs(10),
+            recv_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Sentinel claimed-rank value in `Hello`: "assign me any rank".
+const RANK_ASSIGN: u32 = u32::MAX;
+
+/// One established mesh connection: the writer half stays with the main
+/// thread; a dedicated reader thread owns a clone of the stream and feeds
+/// decoded frames (or the first wire error, then exits) into `inbox`.
+struct Peer {
+    writer: TcpStream,
+    inbox: Receiver<std::result::Result<(FrameHeader, Vec<u8>), WireError>>,
+}
+
+impl Drop for Peer {
+    fn drop(&mut self) {
+        // unblock the reader thread even if the remote end keeps the
+        // connection open; it exits on the resulting i/o error
+        let _ = self.writer.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+/// The socket-backed communicator. See the module docs for the protocol.
+pub struct SocketComm {
+    rank: Rank,
+    size: usize,
+    recv_timeout: Duration,
+    /// `peers[r]` is `None` only for `r == rank`
+    peers: Vec<Option<Peer>>,
+    /// advertised mesh endpoints, rank-ordered (from the rendezvous map)
+    endpoints: Vec<String>,
+    groups: Vec<Vec<Rank>>,
+    /// per-group allgather round counters (the frame `seq`)
+    group_seqs: Vec<u64>,
+    exchange_seq: u64,
+    reduce_seq: u64,
+    barrier_seq: u64,
+    traffic: TrafficStats,
+    /// recycled frame-serialization buffer of the send paths
+    send_buf: Vec<u8>,
+}
+
+/// Connect with bounded retry/backoff: loopback/LAN peers refuse instantly
+/// until they bind, so retrying inside `timeout` makes start order
+/// irrelevant (the delayed-bind case in `tests/it_transport.rs`).
+fn connect_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + timeout;
+    let mut backoff = Duration::from_millis(5);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() + backoff >= deadline {
+                    bail!("connect to {addr} failed after {timeout:?} of retries: {e}");
+                }
+                thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_millis(200));
+            }
+        }
+    }
+}
+
+fn read_u32_at(payload: &[u8], off: usize, what: &str) -> Result<u32> {
+    ensure!(payload.len() >= off + 4, "short {what} payload");
+    Ok(u32::from_le_bytes(payload[off..off + 4].try_into().unwrap()))
+}
+
+/// Read one frame directly off a stream (handshake phase, before reader
+/// threads exist), checking the expected type.
+fn read_handshake(stream: &mut TcpStream, expect: MsgType) -> Result<(FrameHeader, Vec<u8>)> {
+    let mut payload = Vec::new();
+    let hdr = read_frame(stream, &mut payload).map_err(|e| anyhow::anyhow!("{e}"))?;
+    ensure!(
+        hdr.msg_type == expect,
+        "handshake expected {:?}, peer sent {:?}",
+        expect,
+        hdr.msg_type
+    );
+    Ok((hdr, payload))
+}
+
+impl SocketComm {
+    /// Establish the full mesh for this process per the module docs.
+    /// Blocks until every connection is up or a timeout/protocol error
+    /// fails it. The rank-0 process (claimed rank `Some(0)`) hosts the
+    /// rendezvous; everyone else connects to it.
+    pub fn connect(cfg: &SocketConfig) -> Result<SocketComm> {
+        ensure!(cfg.world >= 1, "world size must be at least 1");
+        if let Some(r) = cfg.rank {
+            ensure!(r < cfg.world, "rank {r} outside world of {}", cfg.world);
+        }
+        if cfg.world == 1 {
+            ensure!(cfg.rank.unwrap_or(0) == 0, "single-rank world must be rank 0");
+            return Ok(SocketComm {
+                rank: 0,
+                size: 1,
+                recv_timeout: cfg.recv_timeout,
+                peers: vec![None],
+                endpoints: vec!["local".to_string()],
+                groups: Vec::new(),
+                group_seqs: Vec::new(),
+                exchange_seq: 0,
+                reduce_seq: 0,
+                barrier_seq: 0,
+                traffic: TrafficStats::default(),
+                send_buf: Vec::new(),
+            });
+        }
+        let (rank, endpoints, mesh) = if cfg.rank == Some(0) {
+            Self::rendezvous_host(cfg).context("rendezvous host")?
+        } else {
+            Self::rendezvous_client(cfg).context("rendezvous client")?
+        };
+        let streams = Self::build_mesh(cfg, rank, &endpoints, mesh)
+            .with_context(|| format!("rank {rank}: mesh establishment"))?;
+        let peers = streams
+            .into_iter()
+            .enumerate()
+            .map(|(peer_rank, s)| s.map(|s| Self::spawn_reader(s, rank, peer_rank)).transpose())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(SocketComm {
+            rank,
+            size: cfg.world,
+            recv_timeout: cfg.recv_timeout,
+            peers,
+            endpoints,
+            groups: Vec::new(),
+            group_seqs: Vec::new(),
+            exchange_seq: 0,
+            reduce_seq: 0,
+            barrier_seq: 0,
+            traffic: TrafficStats::default(),
+            send_buf: Vec::new(),
+        })
+    }
+
+    /// Rank 0: host the rendezvous, collect every `Hello`, assign ranks,
+    /// distribute the endpoint map via `Welcome`.
+    fn rendezvous_host(cfg: &SocketConfig) -> Result<(Rank, Vec<String>, TcpListener)> {
+        let rdv = TcpListener::bind(&cfg.rendezvous)
+            .with_context(|| format!("bind rendezvous {}", cfg.rendezvous))?;
+        let host_ip = rdv.local_addr()?.ip();
+        let mesh = TcpListener::bind((host_ip, 0)).context("bind mesh listener")?;
+        let my_addr = mesh.local_addr()?.to_string();
+
+        let mut pending: Vec<(u32, String, TcpStream)> = Vec::new();
+        for _ in 1..cfg.world {
+            let (mut s, from) = rdv.accept().context("rendezvous accept")?;
+            s.set_read_timeout(Some(cfg.recv_timeout))?;
+            s.set_nodelay(true)?;
+            let (_, payload) = read_handshake(&mut s, MsgType::Hello)
+                .with_context(|| format!("hello from {from}"))?;
+            let claimed = read_u32_at(&payload, 0, "hello")?;
+            let world = read_u32_at(&payload, 4, "hello")?;
+            ensure!(
+                world as usize == cfg.world,
+                "peer at {from} expects world {world}, this run has {}",
+                cfg.world
+            );
+            let addr = String::from_utf8(payload[8..].to_vec()).context("hello address")?;
+            pending.push((claimed, addr, s));
+        }
+
+        // slot the claimed ranks, then fill the rest in arrival order
+        let mut endpoints = vec![String::new(); cfg.world];
+        endpoints[0] = my_addr;
+        let mut streams: Vec<Option<TcpStream>> = (0..cfg.world).map(|_| None).collect();
+        let mut unclaimed = Vec::new();
+        for (claimed, addr, s) in pending {
+            if claimed == RANK_ASSIGN {
+                unclaimed.push((addr, s));
+                continue;
+            }
+            let r = claimed as usize;
+            ensure!(r > 0 && r < cfg.world, "peer claimed invalid rank {r}");
+            ensure!(streams[r].is_none(), "two peers claimed rank {r}");
+            endpoints[r] = addr;
+            streams[r] = Some(s);
+        }
+        let mut next = unclaimed.into_iter();
+        for r in 1..cfg.world {
+            if streams[r].is_none() {
+                let (addr, s) = next.next().expect("world-count peers connected");
+                endpoints[r] = addr;
+                streams[r] = Some(s);
+            }
+        }
+
+        let map = endpoints.join("\n");
+        let mut buf = Vec::new();
+        for (r, s) in streams.iter_mut().enumerate().skip(1) {
+            let s = s.as_mut().unwrap();
+            buf.clear();
+            let start = begin_frame(&mut buf, MsgType::Welcome, 0, 0);
+            buf.extend_from_slice(&(r as u32).to_le_bytes());
+            buf.extend_from_slice(&(cfg.world as u32).to_le_bytes());
+            buf.extend_from_slice(map.as_bytes());
+            finish_frame(&mut buf, start);
+            s.write_all(&buf)
+                .with_context(|| format!("send welcome to rank {r}"))?;
+        }
+        // rendezvous streams close here; mesh connections replace them
+        Ok((0, endpoints, mesh))
+    }
+
+    /// Non-zero ranks: connect to the rendezvous (retrying while rank 0
+    /// binds), send `Hello`, learn the assigned rank and the endpoint map.
+    fn rendezvous_client(cfg: &SocketConfig) -> Result<(Rank, Vec<String>, TcpListener)> {
+        let mut s = connect_retry(&cfg.rendezvous, cfg.connect_timeout)?;
+        s.set_read_timeout(Some(cfg.recv_timeout))?;
+        s.set_nodelay(true)?;
+        // the interface this host reaches the rendezvous through is the
+        // one peers can reach back — advertise the mesh listener on it
+        let local_ip = s.local_addr()?.ip();
+        let mesh = TcpListener::bind((local_ip, 0)).context("bind mesh listener")?;
+        let my_addr = mesh.local_addr()?.to_string();
+
+        let claimed = cfg.rank.map_or(RANK_ASSIGN, |r| r as u32);
+        let mut buf = Vec::new();
+        let start = begin_frame(&mut buf, MsgType::Hello, 0, 0);
+        buf.extend_from_slice(&claimed.to_le_bytes());
+        buf.extend_from_slice(&(cfg.world as u32).to_le_bytes());
+        buf.extend_from_slice(my_addr.as_bytes());
+        finish_frame(&mut buf, start);
+        s.write_all(&buf).context("send hello")?;
+
+        let (_, payload) = read_handshake(&mut s, MsgType::Welcome)?;
+        let rank = read_u32_at(&payload, 0, "welcome")? as usize;
+        let world = read_u32_at(&payload, 4, "welcome")? as usize;
+        ensure!(world == cfg.world, "welcome names world {world}, expected {}", cfg.world);
+        ensure!(rank > 0 && rank < world, "welcome assigned invalid rank {rank}");
+        if let Some(r) = cfg.rank {
+            ensure!(rank == r, "claimed rank {r} but was assigned {rank}");
+        }
+        let endpoints: Vec<String> = String::from_utf8(payload[8..].to_vec())
+            .context("welcome endpoint map")?
+            .split('\n')
+            .map(str::to_string)
+            .collect();
+        ensure!(
+            endpoints.len() == world,
+            "endpoint map has {} entries for a world of {world}",
+            endpoints.len()
+        );
+        Ok((rank, endpoints, mesh))
+    }
+
+    /// Full mesh: connect to every lower rank (announcing with `Ident`),
+    /// accept from every higher rank. Lower-before-accept avoids the
+    /// connect/accept cycle: rank 0 only accepts, the top rank only
+    /// connects.
+    fn build_mesh(
+        cfg: &SocketConfig,
+        rank: Rank,
+        endpoints: &[String],
+        mesh: TcpListener,
+    ) -> Result<Vec<Option<TcpStream>>> {
+        let mut streams: Vec<Option<TcpStream>> = (0..cfg.world).map(|_| None).collect();
+        let mut buf = Vec::new();
+        for (j, addr) in endpoints.iter().enumerate().take(rank) {
+            let mut s = connect_retry(addr, cfg.connect_timeout)
+                .with_context(|| format!("mesh connect to rank {j}"))?;
+            s.set_nodelay(true)?;
+            buf.clear();
+            let start = begin_frame(&mut buf, MsgType::Ident, rank as u32, 0);
+            finish_frame(&mut buf, start);
+            s.write_all(&buf)
+                .with_context(|| format!("send ident to rank {j}"))?;
+            streams[j] = Some(s);
+        }
+        for _ in rank + 1..cfg.world {
+            let (mut s, from) = mesh.accept().context("mesh accept")?;
+            s.set_read_timeout(Some(cfg.recv_timeout))?;
+            s.set_nodelay(true)?;
+            let (hdr, _) = read_handshake(&mut s, MsgType::Ident)
+                .with_context(|| format!("ident from {from}"))?;
+            let peer = hdr.channel as usize;
+            ensure!(
+                peer > rank && peer < cfg.world,
+                "mesh peer announced rank {peer}, expected one of {}..{}",
+                rank + 1,
+                cfg.world
+            );
+            ensure!(streams[peer].is_none(), "rank {peer} connected twice");
+            streams[peer] = Some(s);
+        }
+        Ok(streams)
+    }
+
+    /// Wrap an established stream in a [`Peer`]: a detached reader thread
+    /// owns a clone and pumps frames into the inbox until the connection
+    /// dies or the `SocketComm` drops (which shuts the socket down).
+    fn spawn_reader(stream: TcpStream, my_rank: Rank, peer_rank: Rank) -> Result<Peer> {
+        // reader threads block indefinitely on the socket; receive
+        // timeouts are enforced at the inbox instead
+        stream.set_read_timeout(None)?;
+        let mut reader = stream.try_clone().context("clone stream for reader")?;
+        let (tx, inbox) = mpsc::channel();
+        thread::Builder::new()
+            .name(format!("sockcomm-{my_rank}-from-{peer_rank}"))
+            .spawn(move || {
+                let mut payload = Vec::new();
+                loop {
+                    match read_frame(&mut reader, &mut payload) {
+                        Ok(hdr) => {
+                            if tx.send(Ok((hdr, std::mem::take(&mut payload)))).is_err() {
+                                return; // comm dropped
+                            }
+                        }
+                        Err(e) => {
+                            let _ = tx.send(Err(e));
+                            return;
+                        }
+                    }
+                }
+            })
+            .context("spawn reader thread")?;
+        Ok(Peer {
+            writer: stream,
+            inbox,
+        })
+    }
+
+    /// Next frame from `peer`, or a loud error on timeout / connection
+    /// loss / wire corruption.
+    fn recv_from(&mut self, peer: Rank) -> Result<(FrameHeader, Vec<u8>)> {
+        let p = self.peers[peer].as_ref().expect("no connection to self");
+        match p.inbox.recv_timeout(self.recv_timeout) {
+            Ok(Ok(frame)) => Ok(frame),
+            Ok(Err(e)) => bail!("wire error on the connection from rank {peer}: {e}"),
+            Err(RecvTimeoutError::Timeout) => bail!(
+                "receive from rank {peer} timed out after {:?}",
+                self.recv_timeout
+            ),
+            Err(RecvTimeoutError::Disconnected) => {
+                bail!("connection from rank {peer} closed mid-run")
+            }
+        }
+    }
+
+    /// Validate a data frame against the expected round.
+    fn check_frame(
+        &self,
+        hdr: &FrameHeader,
+        from: Rank,
+        ty: MsgType,
+        channel: u32,
+        seq: u64,
+    ) -> Result<()> {
+        ensure!(
+            hdr.msg_type == ty && hdr.channel == channel && hdr.seq == seq,
+            "protocol violation from rank {from}: frame is {:?} channel {} seq {}, \
+             this rank is in {ty:?} channel {channel} seq {seq} (SPMD call order diverged?)",
+            hdr.msg_type,
+            hdr.channel,
+            hdr.seq
+        );
+        Ok(())
+    }
+
+    /// Serialize one data frame into the recycled send buffer and write it
+    /// to `to`; returns the frame's wire size (header + payload) for
+    /// traffic accounting. An empty body is still a frame — every round
+    /// sends one frame to every participating peer, which is what keeps
+    /// rounds delimited and the sequence numbers checkable.
+    fn send_frame(
+        &mut self,
+        ty: MsgType,
+        channel: u32,
+        seq: u64,
+        to: Rank,
+        body: FrameBody<'_>,
+    ) -> Result<u64> {
+        let mut buf = std::mem::take(&mut self.send_buf);
+        buf.clear();
+        let start = begin_frame(&mut buf, ty, channel, seq);
+        match body {
+            FrameBody::Records(r) => push_records(&mut buf, r),
+            FrameBody::Words(w) => push_words(&mut buf, w),
+        }
+        finish_frame(&mut buf, start);
+        let wire_bytes = buf.len() as u64;
+        let res = self.peers[to]
+            .as_mut()
+            .expect("no connection to self")
+            .writer
+            .write_all(&buf)
+            .with_context(|| format!("send {ty:?} to rank {to}"));
+        self.send_buf = buf;
+        res?;
+        Ok(wire_bytes)
+    }
+
+    fn exchange_impl(
+        &mut self,
+        mut bufs: Vec<Vec<SpikeRecord>>,
+    ) -> Result<Vec<Vec<SpikeRecord>>> {
+        let n = self.size;
+        assert_eq!(bufs.len(), n, "exchange() needs one packet per rank");
+        let me = self.rank;
+        let seq = self.exchange_seq;
+        self.exchange_seq += 1;
+        for t in 0..n {
+            if t == me {
+                continue;
+            }
+            let records = std::mem::take(&mut bufs[t]);
+            let wire_bytes =
+                self.send_frame(MsgType::Exchange, 0, seq, t, FrameBody::Records(&records))?;
+            self.traffic.p2p_bytes += wire_bytes;
+            if !records.is_empty() {
+                self.traffic.p2p_messages += 1;
+            }
+            bufs[t] = records;
+        }
+        // own packet round-trips locally (same as the thread mailbox);
+        // each peer's slot is recycled for that peer's incoming packet
+        for s in 0..n {
+            if s == me {
+                continue;
+            }
+            let (hdr, payload) = self.recv_from(s)?;
+            self.check_frame(&hdr, s, MsgType::Exchange, 0, seq)?;
+            decode_records(&payload, &mut bufs[s])
+                .map_err(|e| anyhow::anyhow!("exchange payload from rank {s}: {e}"))?;
+        }
+        Ok(bufs)
+    }
+
+    fn allgather_impl(&mut self, group: GroupId, data: &[u32], out: &mut Vec<Vec<u32>>) -> Result<()> {
+        let members = std::mem::take(&mut self.groups[group]);
+        let me_pos = members
+            .iter()
+            .position(|&r| r == self.rank)
+            .unwrap_or_else(|| panic!("rank {} is not a member of group {group}", self.rank));
+        let seq = self.group_seqs[group];
+        self.group_seqs[group] += 1;
+        if out.len() < members.len() {
+            out.resize_with(members.len(), Vec::new);
+        }
+        self.traffic.coll_calls += 1;
+        for &m in &members {
+            if m == self.rank {
+                continue;
+            }
+            let wire_bytes =
+                self.send_frame(MsgType::Allgather, group as u32, seq, m, FrameBody::Words(data))?;
+            self.traffic.coll_bytes += wire_bytes;
+        }
+        out[me_pos].clear();
+        out[me_pos].extend_from_slice(data);
+        for (pos, &m) in members.iter().enumerate() {
+            if m == self.rank {
+                continue;
+            }
+            let (hdr, payload) = self.recv_from(m)?;
+            self.check_frame(&hdr, m, MsgType::Allgather, group as u32, seq)?;
+            decode_words(&payload, &mut out[pos])
+                .map_err(|e| anyhow::anyhow!("allgather payload from rank {m}: {e}"))?;
+        }
+        self.groups[group] = members;
+        Ok(())
+    }
+
+    fn allreduce_min_impl(&mut self, value: u32) -> Result<u32> {
+        let seq = self.reduce_seq;
+        self.reduce_seq += 1;
+        let word = [value];
+        for t in 0..self.size {
+            if t == self.rank {
+                continue;
+            }
+            let wire_bytes =
+                self.send_frame(MsgType::ReduceMin, 0, seq, t, FrameBody::Words(&word))?;
+            self.traffic.coll_bytes += wire_bytes;
+        }
+        let mut min = value;
+        let mut words = Vec::new();
+        for s in 0..self.size {
+            if s == self.rank {
+                continue;
+            }
+            let (hdr, payload) = self.recv_from(s)?;
+            self.check_frame(&hdr, s, MsgType::ReduceMin, 0, seq)?;
+            decode_words(&payload, &mut words)
+                .map_err(|e| anyhow::anyhow!("allreduce payload from rank {s}: {e}"))?;
+            ensure!(words.len() == 1, "allreduce frame from rank {s} carries {} words", words.len());
+            min = min.min(words[0]);
+        }
+        Ok(min)
+    }
+
+    fn barrier_impl(&mut self) -> Result<()> {
+        let seq = self.barrier_seq;
+        self.barrier_seq += 1;
+        for t in 0..self.size {
+            if t == self.rank {
+                continue;
+            }
+            let wire_bytes = self.send_frame(MsgType::Barrier, 0, seq, t, FrameBody::Words(&[]))?;
+            self.traffic.coll_bytes += wire_bytes;
+        }
+        for s in 0..self.size {
+            if s == self.rank {
+                continue;
+            }
+            let (hdr, _) = self.recv_from(s)?;
+            self.check_frame(&hdr, s, MsgType::Barrier, 0, seq)?;
+        }
+        Ok(())
+    }
+
+    /// Convert an internal error into the rank-tagged panic the harness
+    /// (`harness::join_ranks`) reports as an `anyhow::Error`. The trait's
+    /// methods are infallible by signature; in a distributed run a comm
+    /// failure is not locally recoverable anyway — the round is lost.
+    fn fail(&self, e: anyhow::Error) -> ! {
+        panic!("socket comm rank {}: {e:#}", self.rank)
+    }
+}
+
+/// Payload of an outbound data frame.
+enum FrameBody<'a> {
+    Records(&'a [SpikeRecord]),
+    Words(&'a [u32]),
+}
+
+impl Communicator for SocketComm {
+    fn rank(&self) -> Rank {
+        self.rank
+    }
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn exchange(&mut self, outgoing: Vec<Vec<SpikeRecord>>) -> Vec<Vec<SpikeRecord>> {
+        self.exchange_impl(outgoing)
+            .unwrap_or_else(|e| self.fail(e))
+    }
+
+    fn register_group(&mut self, members: Vec<Rank>) -> GroupId {
+        // purely local: the SPMD contract has every rank register the same
+        // groups in the same order, so the positional id needs no wire round
+        self.groups.push(members);
+        self.group_seqs.push(0);
+        self.groups.len() - 1
+    }
+
+    fn allgather_into(&mut self, group: GroupId, data: &[u32], out: &mut Vec<Vec<u32>>) {
+        self.allgather_impl(group, data, out)
+            .unwrap_or_else(|e| self.fail(e))
+    }
+
+    fn allreduce_min(&mut self, value: u32) -> u32 {
+        self.allreduce_min_impl(value)
+            .unwrap_or_else(|e| self.fail(e))
+    }
+
+    fn barrier(&mut self) {
+        self.barrier_impl().unwrap_or_else(|e| self.fail(e))
+    }
+
+    fn traffic(&self) -> TrafficStats {
+        self.traffic
+    }
+
+    fn transport_name(&self) -> &'static str {
+        "socket"
+    }
+
+    fn endpoints(&self) -> Vec<String> {
+        self.endpoints.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pick a free loopback address (bind port 0, read it back, release).
+    fn free_addr() -> String {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    }
+
+    fn world(n: usize, rendezvous: &str) -> Vec<SocketComm> {
+        let mut comms: Vec<Option<SocketComm>> = (0..n).map(|_| None).collect();
+        thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|r| {
+                    let cfg = SocketConfig {
+                        rank: Some(r),
+                        ..SocketConfig::new(rendezvous, n)
+                    };
+                    s.spawn(move || SocketComm::connect(&cfg).unwrap())
+                })
+                .collect();
+            for (r, h) in handles.into_iter().enumerate() {
+                comms[r] = Some(h.join().unwrap());
+            }
+        });
+        comms.into_iter().map(Option::unwrap).collect()
+    }
+
+    /// Run one closure per rank over an established world, in parallel.
+    fn on_world<T: Send>(
+        comms: Vec<SocketComm>,
+        f: impl Fn(SocketComm) -> T + Sync,
+    ) -> Vec<T> {
+        let f = &f;
+        thread::scope(|s| {
+            let handles: Vec<_> = comms.into_iter().map(|c| s.spawn(move || f(c))).collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn mesh_forms_and_ranks_are_assigned() {
+        let comms = world(3, &free_addr());
+        for (r, c) in comms.iter().enumerate() {
+            assert_eq!(c.rank(), r);
+            assert_eq!(c.size(), 3);
+            assert_eq!(c.transport_name(), "socket");
+            let eps = c.endpoints();
+            assert_eq!(eps.len(), 3);
+            // every rank agrees on the endpoint map
+            assert_eq!(eps, comms[0].endpoints());
+        }
+    }
+
+    #[test]
+    fn unclaimed_ranks_are_assigned_by_the_rendezvous() {
+        let addr = free_addr();
+        let n = 3;
+        let results = thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|i| {
+                    let cfg = SocketConfig {
+                        // only rank 0 claims (it must host); others get
+                        // assigned whatever is free
+                        rank: (i == 0).then_some(0),
+                        ..SocketConfig::new(addr.as_str(), n)
+                    };
+                    s.spawn(move || {
+                        if i > 0 {
+                            // stagger so assignment order is exercised
+                            thread::sleep(Duration::from_millis(10 * i as u64));
+                        }
+                        let c = SocketComm::connect(&cfg).unwrap();
+                        let rank = c.rank();
+                        // run a barrier so the mesh is actually exercised
+                        let mut c = c;
+                        c.barrier();
+                        rank
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect::<Vec<_>>()
+        });
+        let mut ranks = results;
+        ranks.sort_unstable();
+        assert_eq!(ranks, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn exchange_routes_packets_and_counts_wire_bytes() {
+        let comms = world(3, &free_addr());
+        let results = on_world(comms, |mut c| {
+            let me = c.rank() as u32;
+            let outgoing: Vec<Vec<SpikeRecord>> = (0..3)
+                .map(|t| {
+                    // rank r sends one record {pos: 10r + t} to each t != r;
+                    // rank 2 sends rank 0 an empty packet instead
+                    if t == c.rank() || (c.rank() == 2 && t == 0) {
+                        Vec::new()
+                    } else {
+                        vec![SpikeRecord {
+                            pos: 10 * me + t as u32,
+                            mult: 1 + t as u16,
+                            lag: me as u16,
+                        }]
+                    }
+                })
+                .collect();
+            let incoming = c.exchange(outgoing);
+            (c.rank(), incoming, c.traffic())
+        });
+        for (rank, incoming, traffic) in &results {
+            for (s, packet) in incoming.iter().enumerate() {
+                let expect_empty = s == *rank || (s == 2 && *rank == 0);
+                if expect_empty {
+                    assert!(packet.is_empty(), "rank {rank} from {s}");
+                } else {
+                    assert_eq!(packet.len(), 1);
+                    assert_eq!(packet[0].pos, 10 * s as u32 + *rank as u32);
+                    assert_eq!(packet[0].mult, 1 + *rank as u16);
+                    assert_eq!(packet[0].lag, s as u16);
+                }
+            }
+            // every peer got a frame (2 each), but only non-empty packets
+            // count as messages; bytes include the 24-byte frame headers
+            let msgs = if *rank == 2 { 1 } else { 2 };
+            assert_eq!(traffic.p2p_messages, msgs, "rank {rank}");
+            let header_only = 2 - msgs;
+            assert_eq!(
+                traffic.p2p_bytes,
+                (msgs * (super::super::wire::FRAME_HEADER_BYTES as u64 + 8))
+                    + header_only * super::super::wire::FRAME_HEADER_BYTES as u64,
+                "rank {rank}"
+            );
+        }
+    }
+
+    #[test]
+    fn allgather_matches_thread_comm_semantics() {
+        let comms = world(4, &free_addr());
+        let results = on_world(comms, |mut c| {
+            let g_all = c.register_group(vec![0, 1, 2, 3]);
+            let g_even = c.register_group(vec![0, 2]);
+            let me = c.rank() as u32;
+            let all = c.allgather(g_all, &[me, me * 100]);
+            let even = if c.rank() % 2 == 0 {
+                Some(c.allgather(g_even, &[7 + me]))
+            } else {
+                None
+            };
+            // a second round on the same group must also line up (seq bump)
+            let all2 = c.allgather(g_all, &[me + 1]);
+            (c.rank(), all, even, all2, c.traffic())
+        });
+        for (rank, all, even, all2, traffic) in results {
+            assert_eq!(all.len(), 4);
+            for (pos, data) in all.iter().enumerate() {
+                assert_eq!(data, &[pos as u32, pos as u32 * 100]);
+            }
+            for (pos, data) in all2.iter().enumerate() {
+                assert_eq!(data, &[pos as u32 + 1]);
+            }
+            if rank % 2 == 0 {
+                assert_eq!(even.unwrap(), vec![vec![7], vec![9]]);
+                assert_eq!(traffic.coll_calls, 3);
+            } else {
+                assert!(even.is_none());
+                assert_eq!(traffic.coll_calls, 2);
+            }
+            assert!(traffic.coll_bytes > 0);
+            assert_eq!(traffic.p2p_messages, 0);
+        }
+    }
+
+    #[test]
+    fn allreduce_min_and_barrier() {
+        let comms = world(3, &free_addr());
+        let mins = on_world(comms, |mut c| {
+            let m = c.allreduce_min(40 - c.rank() as u32);
+            c.barrier();
+            let m2 = c.allreduce_min(c.rank() as u32 + 5);
+            (m, m2)
+        });
+        for (m, m2) in mins {
+            assert_eq!(m, 38); // min over {40, 39, 38}
+            assert_eq!(m2, 5); // min over {5, 6, 7}
+        }
+    }
+
+    #[test]
+    fn single_rank_world_needs_no_sockets() {
+        let cfg = SocketConfig {
+            rank: Some(0),
+            ..SocketConfig::new("127.0.0.1:1", 1) // never dialed
+        };
+        let mut c = SocketComm::connect(&cfg).unwrap();
+        let incoming = c.exchange(vec![vec![SpikeRecord {
+            pos: 3,
+            mult: 1,
+            lag: 0,
+        }]]);
+        assert_eq!(incoming[0].len(), 1);
+        let g = c.register_group(vec![0]);
+        assert_eq!(c.allgather(g, &[42]), vec![vec![42]]);
+        assert_eq!(c.allreduce_min(9), 9);
+        c.barrier();
+        assert_eq!(c.traffic(), TrafficStats::default());
+    }
+
+    #[test]
+    fn world_size_disagreement_fails_handshake() {
+        let addr = free_addr();
+        let addr2 = addr.clone();
+        let host = thread::spawn(move || {
+            let cfg = SocketConfig {
+                rank: Some(0),
+                ..SocketConfig::new(addr2, 2)
+            };
+            SocketComm::connect(&cfg)
+        });
+        let cfg = SocketConfig {
+            rank: Some(1),
+            recv_timeout: Duration::from_secs(5),
+            ..SocketConfig::new(addr, 3) // wrong world size
+        };
+        let client = SocketComm::connect(&cfg);
+        assert!(client.is_err(), "client with wrong world must fail");
+        let host = host.join().unwrap();
+        assert!(host.is_err(), "host must reject the mismatched hello");
+        let msg = format!("{:#}", host.unwrap_err());
+        assert!(msg.contains("world"), "{msg}");
+    }
+}

@@ -204,6 +204,10 @@ impl Communicator for ThreadComm {
     fn traffic(&self) -> TrafficStats {
         self.traffic
     }
+
+    fn transport_name(&self) -> &'static str {
+        "thread"
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,425 @@
+//! Framed wire protocol of the socket transport (DESIGN.md §15).
+//!
+//! Every message on a socket-comm connection — handshake and data alike —
+//! travels as one *frame*: a fixed 24-byte header followed by a payload of
+//! [`SpikeRecord`]s, `u32` words, or raw handshake bytes. The header
+//! carries a magic number, a protocol version, the message type, a channel
+//! (the group id for collectives, 0 otherwise) and a per-(type, channel)
+//! sequence number, so a torn frame, a short read, or a frame arriving out
+//! of round fails loudly instead of silently corrupting an exchange round.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic       WIRE_MAGIC
+//!      4     1  version     WIRE_VERSION
+//!      5     1  msg_type    MsgType as u8
+//!      6     2  reserved    0
+//!      8     4  channel     group id (collectives) / sender rank (Ident)
+//!     12     4  payload_len bytes following the header
+//!     16     8  seq         per-(type, channel) round counter
+//! ```
+
+use std::io::Read;
+
+use super::{coll_pack, coll_unpack, SpikeRecord};
+
+/// Frame magic: `b"NGS1"` read as a little-endian u32.
+pub const WIRE_MAGIC: u32 = u32::from_le_bytes(*b"NGS1");
+/// Wire protocol version; bump on any layout change.
+pub const WIRE_VERSION: u8 = 1;
+/// Fixed frame-header size on the wire.
+pub const FRAME_HEADER_BYTES: usize = 24;
+/// Upper bound on a single frame's payload; a length field above this is
+/// rejected before any allocation (a corrupt header must not OOM the rank).
+pub const MAX_PAYLOAD_BYTES: u32 = 64 << 20;
+
+/// Wire size of one [`SpikeRecord`] in an `Exchange` payload.
+pub const RECORD_WIRE_BYTES: usize = 8;
+
+/// Frame message types.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum MsgType {
+    /// client -> rendezvous: claimed rank, world size, mesh-listener addr
+    Hello = 1,
+    /// rendezvous -> client: assigned rank, world size, endpoint map
+    Welcome = 2,
+    /// mesh connector -> acceptor: the connector's rank (in `channel`)
+    Ident = 3,
+    /// one point-to-point spike packet of an exchange round
+    Exchange = 4,
+    /// one member's contribution to a group allgather
+    Allgather = 5,
+    /// one rank's value of an `allreduce_min` round
+    ReduceMin = 6,
+    /// one rank's arrival at a barrier
+    Barrier = 7,
+}
+
+impl MsgType {
+    fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            1 => MsgType::Hello,
+            2 => MsgType::Welcome,
+            3 => MsgType::Ident,
+            4 => MsgType::Exchange,
+            5 => MsgType::Allgather,
+            6 => MsgType::ReduceMin,
+            7 => MsgType::Barrier,
+            _ => return None,
+        })
+    }
+}
+
+/// Decoded frame header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameHeader {
+    pub msg_type: MsgType,
+    pub channel: u32,
+    pub payload_len: u32,
+    pub seq: u64,
+}
+
+/// Everything that can go wrong while decoding a frame. A short read
+/// surfaces as `Io(UnexpectedEof)`; everything else names the field that
+/// failed validation.
+#[derive(Debug)]
+pub enum WireError {
+    Io(std::io::Error),
+    BadMagic(u32),
+    BadVersion(u8),
+    BadType(u8),
+    Oversized { len: u32, max: u32 },
+    /// payload length is not a whole number of `unit`-byte elements
+    TornPayload { len: usize, unit: usize },
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "i/o: {e}"),
+            WireError::BadMagic(m) => {
+                write!(f, "bad frame magic {m:#010x} (expected {WIRE_MAGIC:#010x})")
+            }
+            WireError::BadVersion(v) => {
+                write!(f, "wire version {v} (this build speaks {WIRE_VERSION})")
+            }
+            WireError::BadType(t) => write!(f, "unknown message type {t}"),
+            WireError::Oversized { len, max } => {
+                write!(f, "payload length {len} exceeds the {max}-byte frame limit")
+            }
+            WireError::TornPayload { len, unit } => {
+                write!(f, "torn payload: {len} bytes is not a multiple of {unit}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+/// Append a frame header to `buf` with a zero payload length; returns the
+/// header's start offset for [`finish_frame`]. The begin/finish split lets
+/// callers serialize payloads straight into the same buffer — the hot
+/// exchange path reuses one send buffer with no intermediate allocation.
+pub fn begin_frame(buf: &mut Vec<u8>, msg_type: MsgType, channel: u32, seq: u64) -> usize {
+    let start = buf.len();
+    buf.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
+    buf.push(WIRE_VERSION);
+    buf.push(msg_type as u8);
+    buf.extend_from_slice(&0u16.to_le_bytes());
+    buf.extend_from_slice(&channel.to_le_bytes());
+    buf.extend_from_slice(&0u32.to_le_bytes()); // payload_len, patched below
+    buf.extend_from_slice(&seq.to_le_bytes());
+    debug_assert_eq!(buf.len() - start, FRAME_HEADER_BYTES);
+    start
+}
+
+/// Patch the payload length of the frame begun at `start` (everything
+/// appended to `buf` after its header is the payload).
+pub fn finish_frame(buf: &mut Vec<u8>, start: usize) {
+    let len = (buf.len() - start - FRAME_HEADER_BYTES) as u32;
+    buf[start + 12..start + 16].copy_from_slice(&len.to_le_bytes());
+}
+
+/// Decode and validate a frame header.
+pub fn decode_header(bytes: &[u8; FRAME_HEADER_BYTES]) -> Result<FrameHeader, WireError> {
+    let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+    if magic != WIRE_MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    if bytes[4] != WIRE_VERSION {
+        return Err(WireError::BadVersion(bytes[4]));
+    }
+    let msg_type = MsgType::from_u8(bytes[5]).ok_or(WireError::BadType(bytes[5]))?;
+    let channel = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    let payload_len = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
+    if payload_len > MAX_PAYLOAD_BYTES {
+        return Err(WireError::Oversized {
+            len: payload_len,
+            max: MAX_PAYLOAD_BYTES,
+        });
+    }
+    let seq = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+    Ok(FrameHeader {
+        msg_type,
+        channel,
+        payload_len,
+        seq,
+    })
+}
+
+/// Read one whole frame: header, validation, then exactly `payload_len`
+/// bytes into `payload` (cleared first). `read_exact` loops over partial
+/// reads, so arbitrary TCP segmentation reassembles correctly; a
+/// connection that dies mid-frame yields `Io(UnexpectedEof)` — loud, never
+/// a half-filled payload.
+pub fn read_frame<R: Read>(r: &mut R, payload: &mut Vec<u8>) -> Result<FrameHeader, WireError> {
+    let mut hdr = [0u8; FRAME_HEADER_BYTES];
+    r.read_exact(&mut hdr)?;
+    let header = decode_header(&hdr)?;
+    payload.clear();
+    payload.resize(header.payload_len as usize, 0);
+    r.read_exact(payload)?;
+    Ok(header)
+}
+
+/// Append spike records to a payload (8 bytes each, little-endian).
+pub fn push_records(buf: &mut Vec<u8>, records: &[SpikeRecord]) {
+    for r in records {
+        buf.extend_from_slice(&r.pos.to_le_bytes());
+        // the (lag, mult) pair packs exactly like a collective word
+        buf.extend_from_slice(&coll_pack(r.lag, r.mult).to_le_bytes());
+    }
+}
+
+/// Decode an `Exchange` payload into `out` (cleared first).
+pub fn decode_records(payload: &[u8], out: &mut Vec<SpikeRecord>) -> Result<(), WireError> {
+    if payload.len() % RECORD_WIRE_BYTES != 0 {
+        return Err(WireError::TornPayload {
+            len: payload.len(),
+            unit: RECORD_WIRE_BYTES,
+        });
+    }
+    out.clear();
+    out.reserve(payload.len() / RECORD_WIRE_BYTES);
+    for chunk in payload.chunks_exact(RECORD_WIRE_BYTES) {
+        let pos = u32::from_le_bytes(chunk[0..4].try_into().unwrap());
+        let (lag, mult) = coll_unpack(u32::from_le_bytes(chunk[4..8].try_into().unwrap()));
+        out.push(SpikeRecord { pos, mult, lag });
+    }
+    Ok(())
+}
+
+/// Append `u32` words to a payload (collective contributions).
+pub fn push_words(buf: &mut Vec<u8>, words: &[u32]) {
+    for w in words {
+        buf.extend_from_slice(&w.to_le_bytes());
+    }
+}
+
+/// Decode an `Allgather`/`ReduceMin` payload into `out` (cleared first).
+pub fn decode_words(payload: &[u8], out: &mut Vec<u32>) -> Result<(), WireError> {
+    if payload.len() % 4 != 0 {
+        return Err(WireError::TornPayload {
+            len: payload.len(),
+            unit: 4,
+        });
+    }
+    out.clear();
+    out.reserve(payload.len() / 4);
+    for chunk in payload.chunks_exact(4) {
+        out.push(u32::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// A reader that hands out the underlying bytes in random-sized chunks,
+    /// emulating arbitrary TCP segmentation of a frame stream.
+    struct SplitReader<'a> {
+        data: &'a [u8],
+        pos: usize,
+        rng: Rng,
+    }
+
+    impl<'a> SplitReader<'a> {
+        fn new(data: &'a [u8], seed: u64) -> Self {
+            Self {
+                data,
+                pos: 0,
+                rng: Rng::new(seed),
+            }
+        }
+    }
+
+    impl Read for SplitReader<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            let left = self.data.len() - self.pos;
+            let max = buf.len().min(left);
+            if max == 0 {
+                return Ok(0);
+            }
+            let n = 1 + (self.rng.next_u64() as usize) % max;
+            buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    fn random_records(rng: &mut Rng, n: usize) -> Vec<SpikeRecord> {
+        (0..n)
+            .map(|_| SpikeRecord {
+                pos: rng.next_u64() as u32,
+                mult: rng.next_u64() as u16,
+                lag: rng.next_u64() as u16,
+            })
+            .collect()
+    }
+
+    fn frame_with_records(records: &[SpikeRecord], channel: u32, seq: u64) -> Vec<u8> {
+        let mut buf = Vec::new();
+        let start = begin_frame(&mut buf, MsgType::Exchange, channel, seq);
+        push_records(&mut buf, records);
+        finish_frame(&mut buf, start);
+        buf
+    }
+
+    #[test]
+    fn record_frame_roundtrips() {
+        let mut rng = Rng::new(7);
+        for n in [0usize, 1, 3, 257] {
+            let records = random_records(&mut rng, n);
+            let buf = frame_with_records(&records, 9, 42);
+            let mut payload = Vec::new();
+            let hdr = read_frame(&mut &buf[..], &mut payload).unwrap();
+            assert_eq!(hdr.msg_type, MsgType::Exchange);
+            assert_eq!(hdr.channel, 9);
+            assert_eq!(hdr.seq, 42);
+            assert_eq!(hdr.payload_len as usize, n * RECORD_WIRE_BYTES);
+            let mut out = Vec::new();
+            decode_records(&payload, &mut out).unwrap();
+            assert_eq!(out, records);
+        }
+    }
+
+    #[test]
+    fn word_frame_roundtrips() {
+        let words: Vec<u32> = vec![0, 1, u32::MAX, 0xDEAD_BEEF, 7];
+        let mut buf = Vec::new();
+        let start = begin_frame(&mut buf, MsgType::Allgather, 3, 11);
+        push_words(&mut buf, &words);
+        finish_frame(&mut buf, start);
+        let mut payload = Vec::new();
+        let hdr = read_frame(&mut &buf[..], &mut payload).unwrap();
+        assert_eq!(hdr.msg_type, MsgType::Allgather);
+        let mut out = Vec::new();
+        decode_words(&payload, &mut out).unwrap();
+        assert_eq!(out, words);
+    }
+
+    #[test]
+    fn truncation_at_every_prefix_is_rejected() {
+        let records = random_records(&mut Rng::new(1), 5);
+        let buf = frame_with_records(&records, 0, 0);
+        let mut payload = Vec::new();
+        for cut in 0..buf.len() {
+            let err = read_frame(&mut &buf[..cut], &mut payload).unwrap_err();
+            match err {
+                WireError::Io(e) => {
+                    assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof, "cut {cut}")
+                }
+                other => panic!("cut {cut}: unexpected error {other}"),
+            }
+        }
+        // the untruncated frame still parses
+        assert!(read_frame(&mut &buf[..], &mut payload).is_ok());
+    }
+
+    #[test]
+    fn bad_magic_version_type_and_oversize_are_rejected() {
+        let good = frame_with_records(&[], 0, 0);
+
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        let mut payload = Vec::new();
+        assert!(matches!(
+            read_frame(&mut &bad[..], &mut payload),
+            Err(WireError::BadMagic(_))
+        ));
+
+        let mut bad = good.clone();
+        bad[4] = WIRE_VERSION + 1;
+        assert!(matches!(
+            read_frame(&mut &bad[..], &mut payload),
+            Err(WireError::BadVersion(_))
+        ));
+
+        let mut bad = good.clone();
+        bad[5] = 0xEE;
+        assert!(matches!(
+            read_frame(&mut &bad[..], &mut payload),
+            Err(WireError::BadType(0xEE))
+        ));
+
+        let mut bad = good;
+        bad[12..16].copy_from_slice(&(MAX_PAYLOAD_BYTES + 1).to_le_bytes());
+        // rejected from the header alone — no payload bytes are consumed
+        assert!(matches!(
+            read_frame(&mut &bad[..], &mut payload),
+            Err(WireError::Oversized { .. })
+        ));
+    }
+
+    #[test]
+    fn torn_payload_lengths_are_rejected() {
+        let mut out = Vec::new();
+        assert!(matches!(
+            decode_records(&[0u8; 12], &mut out),
+            Err(WireError::TornPayload { len: 12, unit: 8 })
+        ));
+        let mut words = Vec::new();
+        assert!(matches!(
+            decode_words(&[0u8; 7], &mut words),
+            Err(WireError::TornPayload { len: 7, unit: 4 })
+        ));
+    }
+
+    #[test]
+    fn random_split_reassembly() {
+        // a stream of several frames, delivered in random-sized chunks,
+        // must reassemble into exactly the original frames
+        let mut rng = Rng::new(0xF00D);
+        let mut stream = Vec::new();
+        let mut expect = Vec::new();
+        for seq in 0..20u64 {
+            let records = random_records(&mut rng, (rng.next_u64() % 64) as usize);
+            stream.extend_from_slice(&frame_with_records(&records, seq as u32, seq));
+            expect.push(records);
+        }
+        for trial in 0..10u64 {
+            let mut r = SplitReader::new(&stream, 0xBEEF + trial);
+            let mut payload = Vec::new();
+            for (seq, records) in expect.iter().enumerate() {
+                let hdr = read_frame(&mut r, &mut payload).unwrap();
+                assert_eq!(hdr.seq, seq as u64);
+                let mut out = Vec::new();
+                decode_records(&payload, &mut out).unwrap();
+                assert_eq!(&out, records);
+            }
+            // stream fully consumed
+            assert_eq!(r.pos, stream.len());
+        }
+    }
+}

@@ -549,6 +549,8 @@ impl Simulator {
                     sample_interval: obs.cfg.sample_interval,
                     max_delay_steps: self.cfg.max_delay_steps,
                     record_spikes: self.cfg.record_spikes,
+                    transport: self.comm.transport_name().to_string(),
+                    endpoints: self.comm.endpoints(),
                 };
                 crate::obs::manifest::write_manifest(&dir, &info)?;
             }
@@ -746,5 +748,32 @@ impl Simulator {
     /// (valid after `prepare()`).
     pub fn plasticity_engine(&self) -> Option<&PlasticityEngine> {
         self.plasticity.as_ref()
+    }
+
+    /// World-combined spike-train hash: every rank contributes the
+    /// order-sensitive hash of its recorded `(step, node)` events through
+    /// one allgather, and all ranks return the identical rank-ordered fold
+    /// ([`crate::stats::combine_rank_hashes`]). Collective call — every
+    /// rank must reach it at the same point (normally right after
+    /// `simulate`); like the obs world group, the group is registered on
+    /// the raw communicator so it never joins the exchange rounds.
+    ///
+    /// This is the cross-process bit-identity witness: a multi-process
+    /// socket run and a thread-comm run of the same model agree on this
+    /// value iff every rank's spike train matched.
+    pub fn world_spike_hash(&mut self) -> u64 {
+        let local = crate::stats::spike_hash(&self.recorder.events);
+        let n = self.n_ranks();
+        if n <= 1 {
+            return crate::stats::combine_rank_hashes(&[local]);
+        }
+        let group = self.comm.register_group((0..n).collect());
+        let words = [(local >> 32) as u32, local as u32];
+        let all = self.comm.allgather(group, &words);
+        let hashes: Vec<u64> = all
+            .iter()
+            .map(|w| ((w[0] as u64) << 32) | w[1] as u64)
+            .collect();
+        crate::stats::combine_rank_hashes(&hashes)
     }
 }

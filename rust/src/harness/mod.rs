@@ -16,7 +16,7 @@ use std::thread;
 
 use anyhow::Context;
 
-use crate::comm::{CommWorld, Communicator, NullComm};
+use crate::comm::{CommWorld, Communicator, NullComm, SocketComm, SocketConfig};
 use crate::engine::{SimConfig, SimResult, Simulator};
 
 /// Render a rank thread's panic payload for error reporting.
@@ -221,6 +221,170 @@ pub fn run_cluster_from_snapshot(dir: &Path, t_ms: f64) -> anyhow::Result<Vec<Si
     results.into_iter().collect()
 }
 
+/// Pick a free loopback rendezvous address: bind an ephemeral port, read
+/// the assignment back, release it. The tiny bind race this leaves open is
+/// irrelevant on a test/CI loopback; real deployments pass a fixed
+/// `HOST:PORT`.
+pub fn free_loopback_addr() -> anyhow::Result<String> {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").context("bind loopback port")?;
+    Ok(l.local_addr().context("read loopback addr")?.to_string())
+}
+
+/// Run a live simulation with every rank holding a [`SocketComm`]: the
+/// ranks are still threads of this process (so tests can compare full
+/// per-rank results in one address space), but every spike packet and
+/// collective travels through real TCP loopback connections — the exact
+/// wire path the multi-process launcher uses. `socket` supplies the
+/// rendezvous address and timeouts; rank and world are assigned here.
+pub fn run_cluster_socket<M: ModelBuilder>(
+    n_ranks: usize,
+    cfg: &SimConfig,
+    socket: &SocketConfig,
+    model: &M,
+    t_ms: f64,
+) -> anyhow::Result<Vec<SimResult>> {
+    let results: Vec<anyhow::Result<SimResult>> = thread::scope(|s| {
+        let handles: Vec<_> = (0..n_ranks)
+            .map(|rank| {
+                let cfg = cfg.clone();
+                let scfg = SocketConfig {
+                    rank: Some(rank),
+                    world: n_ranks,
+                    ..socket.clone()
+                };
+                s.spawn(move || -> anyhow::Result<SimResult> {
+                    let comm = SocketComm::connect(&scfg)?;
+                    let mut sim = Simulator::new(Box::new(comm), cfg);
+                    model.build(&mut sim);
+                    sim.prepare()?;
+                    sim.simulate(t_ms)
+                })
+            })
+            .collect();
+        join_ranks(handles)
+    });
+    results.into_iter().collect()
+}
+
+/// Run ONE rank of a (normally multi-process) world in this process:
+/// build, prepare, simulate, then gather the world-combined spike hash —
+/// the per-process body behind `nestgpu <cmd> --comm socket` and
+/// `nestgpu launch`. The hash gather is collective, so every rank process
+/// must run the same subcommand to completion.
+pub fn run_rank<M: ModelBuilder>(
+    comm: Box<dyn Communicator>,
+    cfg: &SimConfig,
+    model: &M,
+    t_ms: f64,
+) -> anyhow::Result<(SimResult, u64)> {
+    let mut sim = Simulator::new(comm, cfg.clone());
+    model.build(&mut sim);
+    sim.prepare()?;
+    let res = sim.simulate(t_ms)?;
+    let hash = sim.world_spike_hash();
+    Ok((res, hash))
+}
+
+/// One-rank counterpart of [`run_cluster_with_snapshot`]: propagate
+/// `t_ms` (0 = construction cache), write this rank's snapshot into
+/// `dir`, return the result and the world spike hash.
+pub fn run_rank_with_snapshot<M: ModelBuilder>(
+    comm: Box<dyn Communicator>,
+    cfg: &SimConfig,
+    model: &M,
+    t_ms: f64,
+    dir: &Path,
+) -> anyhow::Result<(SimResult, u64)> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("cannot create snapshot directory {}", dir.display()))?;
+    let mut sim = Simulator::new(comm, cfg.clone());
+    model.build(&mut sim);
+    sim.prepare()?;
+    let res = if t_ms > 0.0 {
+        sim.simulate(t_ms)?
+    } else {
+        sim.result(0.0, 0.0)
+    };
+    let path = dir.join(crate::snapshot::rank_file_name(sim.rank()));
+    sim.save_snapshot(&path)?;
+    let hash = sim.world_spike_hash();
+    Ok((res, hash))
+}
+
+/// One-rank counterpart of [`run_cluster_from_snapshot`]: restore this
+/// rank from its file in `dir` (the snapshot's recorded rank/world must
+/// match the communicator's) and propagate `t_ms`.
+pub fn run_rank_from_snapshot(
+    comm: Box<dyn Communicator>,
+    dir: &Path,
+    t_ms: f64,
+) -> anyhow::Result<(SimResult, u64)> {
+    let path = dir.join(crate::snapshot::rank_file_name(comm.rank()));
+    let mut sim = Simulator::load_snapshot(comm, &path)?;
+    let res = if t_ms > 0.0 {
+        sim.simulate(t_ms)?
+    } else {
+        sim.result(0.0, 0.0)
+    };
+    let hash = sim.world_spike_hash();
+    Ok((res, hash))
+}
+
+/// Spawn `n_ranks` real OS processes running `exe args... --comm socket
+/// --rank R --world N --rendezvous ADDR` and wait for all of them —
+/// the engine behind `nestgpu launch`. Each child's output is drained by
+/// its own thread (a full pipe must never stall a rank mid-collective).
+/// Returns the per-rank outputs in rank order; any non-zero exit fails
+/// with every failing rank's status and stderr.
+pub fn run_cluster_processes(
+    exe: &Path,
+    n_ranks: usize,
+    args: &[String],
+    rendezvous: &str,
+) -> anyhow::Result<Vec<std::process::Output>> {
+    let mut children = Vec::new();
+    for rank in 0..n_ranks {
+        let child = std::process::Command::new(exe)
+            .args(args)
+            .args(["--comm", "socket"])
+            .args(["--rank", &rank.to_string()])
+            .args(["--world", &n_ranks.to_string()])
+            .args(["--rendezvous", rendezvous])
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::piped())
+            .spawn()
+            .with_context(|| format!("spawn rank {rank} ({})", exe.display()))?;
+        children.push(child);
+    }
+    let outputs: Vec<std::io::Result<std::process::Output>> = thread::scope(|s| {
+        let handles: Vec<_> = children
+            .into_iter()
+            .map(|child| s.spawn(move || child.wait_with_output()))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("output-drain thread panicked"))
+            .collect()
+    });
+    let mut results = Vec::new();
+    let mut failures = Vec::new();
+    for (rank, out) in outputs.into_iter().enumerate() {
+        let out = out.with_context(|| format!("collect output of rank {rank}"))?;
+        if !out.status.success() {
+            failures.push(format!(
+                "rank {rank} exited with {}: {}",
+                out.status,
+                String::from_utf8_lossy(&out.stderr).trim()
+            ));
+        }
+        results.push(out);
+    }
+    if !failures.is_empty() {
+        anyhow::bail!("{}", failures.join("\n"));
+    }
+    Ok(results)
+}
+
 /// Keep only the communicator-independent part of a world: helper to run a
 /// single-rank simulation without threads (examples, tests).
 pub fn run_single<M: ModelBuilder>(
@@ -333,6 +497,28 @@ mod tests {
         let err = res.unwrap_err().to_string();
         assert!(err.contains("rank 1"), "{err}");
         assert!(err.contains("intentional test panic"), "{err}");
+    }
+
+    #[test]
+    fn socket_cluster_matches_thread_cluster() {
+        // the full cross-backend matrix lives in tests/it_transport.rs;
+        // this is the fast in-crate smoke check of the socket harness path
+        let cfg = SimConfig::default();
+        let thread = run_cluster(2, &cfg, &TinyModel, 30.0).unwrap();
+        let socket = run_cluster_socket(
+            2,
+            &cfg,
+            &SocketConfig::new(free_loopback_addr().unwrap(), 2),
+            &TinyModel,
+            30.0,
+        )
+        .unwrap();
+        for (t, s) in thread.iter().zip(socket.iter()) {
+            assert_eq!(t.spikes, s.spikes, "rank {}", t.rank);
+        }
+        // socket traffic counts whole frames (24-byte headers, empty
+        // rounds included), so its byte count must exceed thread-comm's
+        assert!(socket[0].p2p_bytes > thread[0].p2p_bytes);
     }
 
     #[test]

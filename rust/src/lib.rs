@@ -31,6 +31,16 @@
 //! 0's `SimResult`. `nestgpu report <trace-dir>` analyzes the traces
 //! offline. Results are bit-identical with observability on or off, at
 //! <2% steps/s overhead (`DESIGN.md` §13).
+//!
+//! Ranks can be real OS processes: the socket transport
+//! ([`comm::SocketComm`]) implements the full [`comm::Communicator`]
+//! contract over TCP with a framed wire protocol, a rank-0 rendezvous
+//! handshake and a full connection mesh (`DESIGN.md` §15). Select it per
+//! process with `--comm socket --rank R --world N --rendezvous HOST:PORT`,
+//! or let `nestgpu launch --ranks N <subcommand...>` spawn and wire up N
+//! local rank processes. Spike trains are bit-identical across transports;
+//! every simulation subcommand prints a world-combined spike hash
+//! ([`stats::spike_hash`] folded over ranks) as the cross-process witness.
 
 pub mod comm;
 pub mod connection;

@@ -27,6 +27,21 @@
 //!                            per-rank/per-phase p50/p95/max tables plus
 //!                            comm and memory series, and a
 //!                            machine-readable summary JSON
+//!   nestgpu launch    [--ranks N] [--rendezvous HOST:PORT]
+//!                     <balanced|phases|snapshot> [args...] — spawn N
+//!                            local processes of the given subcommand over
+//!                            the socket transport (loopback rendezvous
+//!                            picked automatically unless given) and
+//!                            verify their world spike hashes agree
+//!
+//! Transport (DESIGN.md §15): every simulation subcommand accepts
+//! `--comm socket --rank R --world N --rendezvous HOST:PORT` to run as one
+//! rank of a multi-process world over TCP instead of in-process threads
+//! (`--connect-timeout-ms` / `--recv-timeout-ms` tune the failure
+//! detectors). `nestgpu launch` wires those flags up for N local
+//! processes; spreading the same commands across machines only changes
+//! the rendezvous host. Spike trains are bit-identical across transports;
+//! after propagation every rank prints the world-combined spike hash.
 //!
 //! Observability (DESIGN.md §13): `--obs-dir D` writes per-rank JSONL
 //! traces + a run manifest into D; `--obs-interval N` samples a trace
@@ -46,16 +61,21 @@
 
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::time::Duration;
 
+use nestgpu::comm::{Communicator, SocketComm, SocketConfig};
 use nestgpu::engine::{SimConfig, SimResult, Simulator};
 use nestgpu::harness::{
-    estimate_cluster, run_cluster, run_cluster_from_snapshot, run_cluster_with_snapshot,
+    estimate_cluster, free_loopback_addr, run_cluster, run_cluster_from_snapshot,
+    run_cluster_processes, run_cluster_with_snapshot, run_rank, run_rank_from_snapshot,
+    run_rank_with_snapshot,
 };
 use nestgpu::models::balanced::{build_balanced, BalancedConfig, StdpScenario};
 use nestgpu::models::mam::{MamConfig, MamModel};
 use nestgpu::obs::{report::read_trace_dir, CounterId, HistId, ObsConfig};
 use nestgpu::remote::GpuMemLevel;
 use nestgpu::runtime::BackendKind;
+use nestgpu::stats::{combine_rank_hashes, spike_hash};
 use nestgpu::util::json::Json;
 use nestgpu::util::table::{fmt_bytes, fmt_secs, Table};
 use nestgpu::util::timer::ALL_STEP_PHASES;
@@ -189,6 +209,69 @@ fn obs_config(args: &Args, label: &str) -> Option<ObsConfig> {
     })
 }
 
+/// The `--comm` knobs: `Some(SocketConfig)` iff this process should run as
+/// one rank of a multi-process socket world (`--comm socket --rank R
+/// --world N --rendezvous HOST:PORT`); `None` selects the in-process
+/// thread transport (the default, also spelled `--comm thread`).
+fn socket_config(args: &Args) -> anyhow::Result<Option<SocketConfig>> {
+    match args.flags.get("comm").map(String::as_str) {
+        None | Some("thread") => Ok(None),
+        Some("socket") => {
+            let rendezvous = args.flags.get("rendezvous").cloned().ok_or_else(|| {
+                anyhow::anyhow!("--comm socket requires --rendezvous HOST:PORT")
+            })?;
+            let world = args.get("world", 0usize);
+            anyhow::ensure!(world >= 1, "--comm socket requires --world N (N >= 1)");
+            let mut cfg = SocketConfig::new(rendezvous, world);
+            if let Some(r) = args.flags.get("rank") {
+                let r: usize = r
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--rank must be a rank index"))?;
+                anyhow::ensure!(r < world, "--rank {r} outside --world {world}");
+                cfg.rank = Some(r);
+            }
+            let connect_ms = args.get("connect-timeout-ms", 0u64);
+            if connect_ms > 0 {
+                cfg.connect_timeout = Duration::from_millis(connect_ms);
+            }
+            let recv_ms = args.get("recv-timeout-ms", 0u64);
+            if recv_ms > 0 {
+                cfg.recv_timeout = Duration::from_millis(recv_ms);
+            }
+            Ok(Some(cfg))
+        }
+        Some(other) => anyhow::bail!("unknown --comm backend '{other}' (thread | socket)"),
+    }
+}
+
+/// Connect this process's rank to the socket world, with a banner naming
+/// the endpoint (start order is free — the rendezvous retries/blocks).
+fn connect_socket(scfg: &SocketConfig) -> anyhow::Result<SocketComm> {
+    let comm = SocketComm::connect(scfg)?;
+    println!(
+        "socket transport: rank {} of {} via rendezvous {}",
+        comm.rank(),
+        comm.size(),
+        scfg.rendezvous
+    );
+    Ok(comm)
+}
+
+const WORLD_HASH_PREFIX: &str = "world spike hash: ";
+
+/// The cross-transport bit-identity witness line; `nestgpu launch` and CI
+/// compare this value across transports and process layouts.
+fn print_world_hash(hash: u64) {
+    println!("{WORLD_HASH_PREFIX}{hash:016x}");
+}
+
+/// World hash of an in-process run: fold the per-rank spike-train hashes
+/// in rank order (identical to the collective gather the socket ranks do).
+fn world_hash_of(results: &[SimResult]) -> u64 {
+    let hashes: Vec<u64> = results.iter().map(|r| spike_hash(&r.spikes)).collect();
+    combine_rank_hashes(&hashes)
+}
+
 fn sim_config(args: &Args) -> SimConfig {
     sim_config_labeled(args, "cli")
 }
@@ -303,15 +386,26 @@ fn cmd_balanced(args: &Args) -> anyhow::Result<()> {
     let bal = balanced_config(args);
     check_stdp(args, &bal)?;
     let t_ms = args.get("t-ms", 100.0f64);
+    let cfg = sim_config_labeled(args, "balanced");
+    if let Some(scfg) = socket_config(args)? {
+        let comm = connect_socket(&scfg)?;
+        let model = {
+            let bal = bal.clone();
+            move |sim: &mut Simulator| build_balanced(sim, &bal)
+        };
+        let (res, hash) = run_rank(Box::new(comm), &cfg, &model, t_ms)?;
+        print_results(&[res], t_ms);
+        print_world_hash(hash);
+        return Ok(());
+    }
     println!(
         "balanced: {ranks} ranks x {} neurons, K_in {}, {} exchange, level {}{}",
         bal.neurons_per_rank(),
         bal.kin_e() + bal.kin_i(),
         if bal.collective { "collective" } else { "p2p" },
-        sim_config(args).level.name(),
+        cfg.level.name(),
         if bal.stdp.is_some() { ", STDP on E synapses" } else { "" },
     );
-    let cfg = sim_config_labeled(args, "balanced");
     let results = run_cluster(
         ranks,
         &cfg,
@@ -319,6 +413,9 @@ fn cmd_balanced(args: &Args) -> anyhow::Result<()> {
         t_ms,
     )?;
     print_results(&results, t_ms);
+    if t_ms > 0.0 {
+        print_world_hash(world_hash_of(&results));
+    }
     Ok(())
 }
 
@@ -386,12 +483,31 @@ fn cmd_phases(args: &Args) -> anyhow::Result<()> {
     let cfg = sim_config_labeled(args, "phases");
     let stdp_on = bal.stdp.is_some();
     let protocol = if bal.collective { "collective" } else { "p2p" };
-    let results = run_cluster(
-        ranks,
-        &cfg,
-        &move |sim: &mut Simulator| build_balanced(sim, &bal),
-        t_ms,
-    )?;
+    let scfg = socket_config(args)?;
+    let world_ranks = scfg.as_ref().map_or(ranks, |s| s.world);
+    // socket mode: this process is one rank — `per_rank` carries only the
+    // local breakdown; the world hash is still the collective one
+    let (results, world_hash) = match scfg {
+        Some(scfg) => {
+            let comm = connect_socket(&scfg)?;
+            let model = {
+                let bal = bal.clone();
+                move |sim: &mut Simulator| build_balanced(sim, &bal)
+            };
+            let (res, hash) = run_rank(Box::new(comm), &cfg, &model, t_ms)?;
+            (vec![res], Some(hash))
+        }
+        None => {
+            let results = run_cluster(
+                ranks,
+                &cfg,
+                &move |sim: &mut Simulator| build_balanced(sim, &bal),
+                t_ms,
+            )?;
+            let hash = (t_ms > 0.0).then(|| world_hash_of(&results));
+            (results, hash)
+        }
+    };
     let per_rank: Vec<Json> = results
         .iter()
         .map(|r| {
@@ -413,7 +529,7 @@ fn cmd_phases(args: &Args) -> anyhow::Result<()> {
         .collect();
     let out = Json::obj(vec![
         ("model", Json::str("balanced")),
-        ("ranks", Json::num(ranks as f64)),
+        ("ranks", Json::num(world_ranks as f64)),
         ("t_ms", Json::num(t_ms)),
         (
             "exchange_interval",
@@ -432,6 +548,9 @@ fn cmd_phases(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(base) = args.flags.get("compare") {
         print_phase_compare(&out, std::path::Path::new(base))?;
+    }
+    if let Some(hash) = world_hash {
+        print_world_hash(hash);
     }
     Ok(())
 }
@@ -533,6 +652,17 @@ fn cmd_report(argv: &[String]) -> anyhow::Result<()> {
             m.get("git_rev").and_then(|v| v.as_str()).unwrap_or("?"),
             m.get("created").and_then(|v| v.as_str()).unwrap_or("?"),
         );
+        let transport = m.get("transport").and_then(|v| v.as_str()).unwrap_or("thread");
+        let endpoints: Vec<&str> = m
+            .get("endpoints")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|e| e.as_str()).collect())
+            .unwrap_or_default();
+        if endpoints.is_empty() {
+            println!("transport: {transport} (in-process)");
+        } else {
+            println!("transport: {transport}; rank endpoints: {}", endpoints.join(", "));
+        }
     } else {
         println!("(no valid manifest.json in {})", dir.display());
     }
@@ -609,6 +739,18 @@ fn cmd_snapshot(argv: &[String]) -> anyhow::Result<()> {
             // construction cache (save right after prepare())
             let t_ms = args.get("t-ms", 0.0f64);
             let cfg = sim_config(&args);
+            if let Some(scfg) = socket_config(&args)? {
+                let comm = connect_socket(&scfg)?;
+                let model = {
+                    let bal = bal.clone();
+                    move |sim: &mut Simulator| build_balanced(sim, &bal)
+                };
+                let (res, hash) =
+                    run_rank_with_snapshot(Box::new(comm), &cfg, &model, t_ms, &dir)?;
+                print_results(&[res], t_ms);
+                print_world_hash(hash);
+                return Ok(());
+            }
             println!(
                 "snapshot save: {ranks} ranks x {} neurons, {t_ms} ms pre-roll -> {}/rank_<r>.snap",
                 bal.neurons_per_rank(),
@@ -622,10 +764,20 @@ fn cmd_snapshot(argv: &[String]) -> anyhow::Result<()> {
                 &dir,
             )?;
             print_results(&results, t_ms);
+            if t_ms > 0.0 {
+                print_world_hash(world_hash_of(&results));
+            }
             Ok(())
         }
         "resume" => {
             let t_ms = args.get("t-ms", 100.0f64);
+            if let Some(scfg) = socket_config(&args)? {
+                let comm = connect_socket(&scfg)?;
+                let (res, hash) = run_rank_from_snapshot(Box::new(comm), &dir, t_ms)?;
+                print_results(&[res], t_ms);
+                print_world_hash(hash);
+                return Ok(());
+            }
             let (_, n_ranks, step) = nestgpu::engine::peek_world(
                 &dir.join(nestgpu::snapshot::rank_file_name(0)),
             )?;
@@ -635,6 +787,9 @@ fn cmd_snapshot(argv: &[String]) -> anyhow::Result<()> {
             );
             let results = run_cluster_from_snapshot(&dir, t_ms)?;
             print_results(&results, t_ms);
+            if t_ms > 0.0 {
+                print_world_hash(world_hash_of(&results));
+            }
             Ok(())
         }
         other => {
@@ -644,6 +799,79 @@ fn cmd_snapshot(argv: &[String]) -> anyhow::Result<()> {
             std::process::exit(2);
         }
     }
+}
+
+/// `nestgpu launch`: spawn N local rank processes of a simulation
+/// subcommand over the socket transport (DESIGN.md §15) and verify that
+/// every rank reports the same world spike hash — the multi-process
+/// counterpart of the in-process thread cluster.
+fn cmd_launch(argv: &[String]) -> anyhow::Result<()> {
+    // flags before the first non-flag token belong to `launch`; everything
+    // from that token on is the child subcommand line, forwarded verbatim
+    let mut split = argv.len();
+    let mut i = 0;
+    while i < argv.len() {
+        if argv[i].starts_with("--") {
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                i += 2;
+            } else {
+                i += 1;
+            }
+        } else {
+            split = i;
+            break;
+        }
+    }
+    let own = Args::parse(&argv[..split]);
+    let child: Vec<String> = argv[split..].to_vec();
+    let sub = child.first().map(String::as_str).unwrap_or("");
+    if !matches!(sub, "balanced" | "phases" | "snapshot") {
+        anyhow::bail!(
+            "usage: nestgpu launch [--ranks N] [--rendezvous HOST:PORT] \
+             <balanced|phases|snapshot> [args...]"
+        );
+    }
+    let ranks = own.get("ranks", 2usize);
+    anyhow::ensure!(ranks >= 1, "--ranks must be >= 1");
+    let rendezvous = match own.flags.get("rendezvous") {
+        Some(r) => r.clone(),
+        None => free_loopback_addr()?,
+    };
+    let exe = std::env::current_exe()
+        .map_err(|e| anyhow::anyhow!("locate own executable: {e}"))?;
+    println!(
+        "launch: {ranks} process ranks of `nestgpu {}` via rendezvous {rendezvous}",
+        child.join(" ")
+    );
+    let outputs = run_cluster_processes(&exe, ranks, &child, &rendezvous)?;
+    let mut hashes: Vec<String> = Vec::new();
+    for (rank, out) in outputs.iter().enumerate() {
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        for line in stdout.lines() {
+            println!("[rank {rank}] {line}");
+        }
+        for line in String::from_utf8_lossy(&out.stderr).lines() {
+            eprintln!("[rank {rank}] {line}");
+        }
+        let hash = stdout
+            .lines()
+            .rev()
+            .find_map(|l| l.strip_prefix(WORLD_HASH_PREFIX))
+            .ok_or_else(|| {
+                anyhow::anyhow!("rank {rank} printed no '{WORLD_HASH_PREFIX}' line")
+            })?;
+        hashes.push(hash.to_string());
+    }
+    for (rank, hash) in hashes.iter().enumerate() {
+        anyhow::ensure!(
+            hash == &hashes[0],
+            "world spike hash mismatch: rank 0 reports {}, rank {rank} reports {hash} — \
+             the ranks disagree on the world spike train",
+            hashes[0]
+        );
+    }
+    println!("launch: {ranks} ranks agree; world spike hash {}", hashes[0]);
+    Ok(())
 }
 
 fn cmd_info() {
@@ -674,6 +902,7 @@ fn main() -> anyhow::Result<()> {
         "phases" => cmd_phases(&args),
         "report" => cmd_report(&argv[1.min(argv.len())..]),
         "snapshot" => cmd_snapshot(&argv[1.min(argv.len())..]),
+        "launch" => cmd_launch(&argv[1.min(argv.len())..]),
         "info" | "--help" | "-h" => {
             cmd_info();
             Ok(())
@@ -681,7 +910,7 @@ fn main() -> anyhow::Result<()> {
         other => {
             eprintln!(
                 "unknown subcommand '{other}'; try: info | balanced | mam | estimate | \
-                 phases | report | snapshot"
+                 phases | report | snapshot | launch"
             );
             std::process::exit(2);
         }

@@ -28,6 +28,10 @@ pub struct ManifestInfo {
     pub sample_interval: u64,
     pub max_delay_steps: u16,
     pub record_spikes: bool,
+    /// communicator backend the run used ("thread", "socket", "null")
+    pub transport: String,
+    /// rank-ordered wire endpoints (empty for in-process transports)
+    pub endpoints: Vec<String>,
 }
 
 /// Git revision of the working tree, or "unknown" outside a checkout.
@@ -87,6 +91,11 @@ fn manifest_json(info: &ManifestInfo) -> Json {
         ("sample_interval", Json::num(info.sample_interval as f64)),
         ("max_delay_steps", Json::num(info.max_delay_steps as f64)),
         ("record_spikes", Json::Bool(info.record_spikes)),
+        ("transport", Json::str(&info.transport)),
+        (
+            "endpoints",
+            Json::Arr(info.endpoints.iter().map(|e| Json::str(e)).collect()),
+        ),
         ("crate_version", Json::str(env!("CARGO_PKG_VERSION"))),
         ("git_rev", Json::str(&git_revision())),
         ("created", Json::str(&iso8601_now())),
@@ -160,6 +169,8 @@ mod tests {
             sample_interval: 10,
             max_delay_steps: 32,
             record_spikes: false,
+            transport: "thread".into(),
+            endpoints: Vec::new(),
         }
     }
 
@@ -188,6 +199,8 @@ mod tests {
         assert_eq!(written, read);
         assert_eq!(read.get("n_ranks").unwrap().as_usize(), Some(4));
         assert_eq!(read.get("exchange_interval").unwrap().as_usize(), Some(8));
+        assert_eq!(read.get("transport").unwrap().as_str(), Some("thread"));
+        assert_eq!(read.get("endpoints").unwrap().as_arr().map(|a| a.len()), Some(0));
         assert_eq!(read.get("schema").unwrap().as_usize(), Some(MANIFEST_SCHEMA as usize));
         let _ = std::fs::remove_dir_all(&dir);
     }

@@ -18,5 +18,5 @@ pub mod validate;
 pub mod weights;
 
 pub use emd::emd;
-pub use spikes::SpikeData;
+pub use spikes::{combine_rank_hashes, spike_hash, SpikeData};
 pub use weights::WeightSummary;

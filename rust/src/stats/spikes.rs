@@ -1,4 +1,31 @@
-//! Spike-train statistics: rates, CV ISI, pairwise Pearson correlation.
+//! Spike-train statistics: rates, CV ISI, pairwise Pearson correlation,
+//! and the order-sensitive spike-train hash of the cross-transport
+//! bit-identity checks.
+
+use crate::snapshot::format::{fnv1a64_fold, FNV1A64_OFFSET};
+
+/// Order-sensitive FNV-1a hash of a rank's recorded `(step, node)` spike
+/// events — the compact bit-identity witness used when full spike lists
+/// cannot be compared in one process (multi-process socket runs, CI
+/// cross-transport smoke checks).
+pub fn spike_hash(events: &[(u32, u32)]) -> u64 {
+    let mut h = FNV1A64_OFFSET;
+    for &(step, node) in events {
+        h = fnv1a64_fold(h, &step.to_le_bytes());
+        h = fnv1a64_fold(h, &node.to_le_bytes());
+    }
+    h
+}
+
+/// Fold per-rank spike hashes (rank order) into one world hash. Two runs
+/// agree on this value iff every rank's spike train matched.
+pub fn combine_rank_hashes(hashes: &[u64]) -> u64 {
+    let mut h = FNV1A64_OFFSET;
+    for &rh in hashes {
+        h = fnv1a64_fold(h, &rh.to_le_bytes());
+    }
+    h
+}
 
 /// Spike data for one population over a recording window.
 pub struct SpikeData {
@@ -131,6 +158,27 @@ impl SpikeData {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn spike_hash_is_order_and_content_sensitive() {
+        let a = vec![(1u32, 2u32), (3, 4)];
+        let swapped = vec![(3u32, 4u32), (1, 2)];
+        let tweaked = vec![(1u32, 2u32), (3, 5)];
+        assert_eq!(spike_hash(&a), spike_hash(&a.clone()));
+        assert_ne!(spike_hash(&a), spike_hash(&swapped));
+        assert_ne!(spike_hash(&a), spike_hash(&tweaked));
+        assert_ne!(spike_hash(&a), spike_hash(&a[..1]));
+        // the empty train hashes to the FNV offset basis, not 0
+        assert_eq!(spike_hash(&[]), crate::snapshot::format::FNV1A64_OFFSET);
+    }
+
+    #[test]
+    fn combined_hash_distinguishes_rank_assignment() {
+        let (h0, h1) = (spike_hash(&[(1, 2)]), spike_hash(&[(3, 4)]));
+        assert_eq!(combine_rank_hashes(&[h0, h1]), combine_rank_hashes(&[h0, h1]));
+        assert_ne!(combine_rank_hashes(&[h0, h1]), combine_rank_hashes(&[h1, h0]));
+        assert_ne!(combine_rank_hashes(&[h0]), combine_rank_hashes(&[h0, h1]));
+    }
 
     #[test]
     fn rates_from_events() {

@@ -1,0 +1,239 @@
+//! Integration: the socket transport (DESIGN.md §15) is bit-identical to
+//! the in-process thread transport — same spike trains, same plastic
+//! weights — across rank counts, exchange protocols and exchange
+//! intervals, and its failure detectors (connect retry, receive timeout)
+//! behave as specified.
+
+use std::time::Duration;
+
+use nestgpu::comm::{Communicator, SocketComm, SocketConfig, SpikeRecord};
+use nestgpu::engine::{SimConfig, SimResult, Simulator};
+use nestgpu::harness::{free_loopback_addr, run_cluster, run_cluster_socket};
+use nestgpu::models::balanced::{build_balanced, BalancedConfig, StdpScenario};
+use nestgpu::stats::{combine_rank_hashes, spike_hash};
+
+fn cfg_with_interval(interval: Option<u16>) -> SimConfig {
+    SimConfig {
+        exchange_interval: interval,
+        ..Default::default()
+    }
+}
+
+fn balanced(collective: bool, stdp: bool) -> BalancedConfig {
+    BalancedConfig {
+        scale: 0.01,
+        k_scale: 0.01,
+        collective,
+        stdp: stdp.then(StdpScenario::default),
+        ..Default::default()
+    }
+}
+
+fn run_thread(
+    bal: &BalancedConfig,
+    interval: Option<u16>,
+    ranks: usize,
+    t_ms: f64,
+) -> Vec<SimResult> {
+    let bal = bal.clone();
+    run_cluster(
+        ranks,
+        &cfg_with_interval(interval),
+        &move |sim: &mut Simulator| build_balanced(sim, &bal),
+        t_ms,
+    )
+    .unwrap()
+}
+
+fn run_socket(
+    bal: &BalancedConfig,
+    interval: Option<u16>,
+    ranks: usize,
+    t_ms: f64,
+) -> Vec<SimResult> {
+    let bal = bal.clone();
+    run_cluster_socket(
+        ranks,
+        &cfg_with_interval(interval),
+        &SocketConfig::new(free_loopback_addr().unwrap(), ranks),
+        &move |sim: &mut Simulator| build_balanced(sim, &bal),
+        t_ms,
+    )
+    .unwrap()
+}
+
+fn world_hash(results: &[SimResult]) -> u64 {
+    let hashes: Vec<u64> = results.iter().map(|r| spike_hash(&r.spikes)).collect();
+    combine_rank_hashes(&hashes)
+}
+
+/// Per-rank spike trains AND the folded world hash must match exactly.
+fn assert_bit_identical(thread: &[SimResult], socket: &[SimResult], label: &str) {
+    assert_eq!(thread.len(), socket.len(), "{label}: world size");
+    assert!(
+        thread.iter().map(|r| r.n_spikes).sum::<u64>() > 50,
+        "{label}: network must spike for the comparison to mean anything"
+    );
+    for (t, s) in thread.iter().zip(socket.iter()) {
+        assert_eq!(t.spikes, s.spikes, "{label}: rank {} spike train", t.rank);
+    }
+    assert_eq!(world_hash(thread), world_hash(socket), "{label}: world hash");
+}
+
+#[test]
+fn socket_matches_thread_p2p_two_ranks() {
+    let bal = balanced(false, false);
+    for interval in [Some(1), None] {
+        let thread = run_thread(&bal, interval, 2, 30.0);
+        let socket = run_socket(&bal, interval, 2, 30.0);
+        assert_bit_identical(&thread, &socket, &format!("p2p interval {interval:?}"));
+    }
+}
+
+#[test]
+fn socket_matches_thread_collective_two_ranks() {
+    let bal = balanced(true, false);
+    for interval in [Some(1), None] {
+        let thread = run_thread(&bal, interval, 2, 30.0);
+        let socket = run_socket(&bal, interval, 2, 30.0);
+        assert_bit_identical(
+            &thread,
+            &socket,
+            &format!("collective interval {interval:?}"),
+        );
+        // the collective protocol must actually exercise the allgather path
+        assert!(socket[0].coll_calls > 0, "collective run must allgather");
+    }
+}
+
+#[test]
+fn socket_matches_thread_four_ranks_both_protocols() {
+    for collective in [false, true] {
+        let bal = balanced(collective, false);
+        let thread = run_thread(&bal, None, 4, 30.0);
+        let socket = run_socket(&bal, None, 4, 30.0);
+        assert_bit_identical(&thread, &socket, &format!("4 ranks collective={collective}"));
+    }
+}
+
+#[test]
+fn socket_matches_thread_with_stdp() {
+    let bal = balanced(false, true);
+    let thread = run_thread(&bal, None, 2, 40.0);
+    let socket = run_socket(&bal, None, 2, 40.0);
+    assert_bit_identical(&thread, &socket, "stdp");
+    for (t, s) in thread.iter().zip(socket.iter()) {
+        let (tp, sp) = (t.plastic.as_ref().unwrap(), s.plastic.as_ref().unwrap());
+        assert!(tp.n > 0, "rank {} must own plastic synapses", t.rank);
+        assert_eq!(tp.hash, sp.hash, "rank {} plastic weight hash", t.rank);
+    }
+}
+
+/// Socket traffic accounts whole frames (24-byte headers, empty-round
+/// framing included), so its byte counters must strictly exceed the
+/// thread transport's payload-only accounting on the same run.
+#[test]
+fn socket_wire_accounting_exceeds_thread_accounting() {
+    let bal = balanced(false, false);
+    let thread = run_thread(&bal, None, 2, 30.0);
+    let socket = run_socket(&bal, None, 2, 30.0);
+    for (t, s) in thread.iter().zip(socket.iter()) {
+        assert!(
+            s.p2p_bytes > t.p2p_bytes,
+            "rank {}: socket {} must exceed thread {}",
+            t.rank,
+            s.p2p_bytes,
+            t.p2p_bytes
+        );
+        // non-empty packet counts are defined identically on both
+        assert_eq!(s.p2p_messages, t.p2p_messages, "rank {}", t.rank);
+    }
+}
+
+/// Start order is free: a rank may dial the rendezvous before rank 0 has
+/// bound it — the bounded retry/backoff must absorb the gap.
+#[test]
+fn connect_retries_until_rendezvous_binds() {
+    let rdv = free_loopback_addr().unwrap();
+    let results: Vec<anyhow::Result<(usize, Vec<SpikeRecord>)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..2)
+            .map(|rank| {
+                let cfg = SocketConfig {
+                    rank: Some(rank),
+                    connect_timeout: Duration::from_secs(10),
+                    ..SocketConfig::new(rdv.clone(), 2)
+                };
+                s.spawn(move || -> anyhow::Result<(usize, Vec<SpikeRecord>)> {
+                    if rank == 0 {
+                        // rendezvous host binds late; rank 1 is already dialing
+                        std::thread::sleep(Duration::from_millis(300));
+                    }
+                    let mut comm = SocketComm::connect(&cfg)?;
+                    let rec = SpikeRecord { pos: 7 + rank as u32, mult: 1, lag: 0 };
+                    let mut out = vec![Vec::new(); 2];
+                    out[1 - rank] = vec![rec];
+                    let got = comm.exchange(out);
+                    Ok((comm.rank(), got[1 - rank].clone()))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("rank thread panicked"))
+            .collect()
+    });
+    for (rank, res) in results.into_iter().enumerate() {
+        let (got_rank, received) = res.unwrap();
+        assert_eq!(got_rank, rank);
+        let peer = 1 - rank;
+        assert_eq!(
+            received,
+            vec![SpikeRecord { pos: 7 + peer as u32, mult: 1, lag: 0 }],
+            "rank {rank} must receive the peer's record through the late mesh"
+        );
+    }
+}
+
+/// A peer that goes silent mid-protocol must surface as a rank-tagged
+/// receive-timeout error, never as a hang.
+#[test]
+fn recv_timeout_is_rank_tagged() {
+    let rdv = free_loopback_addr().unwrap();
+    let payload = std::thread::scope(|s| {
+        let silent = {
+            let cfg = SocketConfig {
+                rank: Some(0),
+                ..SocketConfig::new(rdv.clone(), 2)
+            };
+            s.spawn(move || {
+                let comm = SocketComm::connect(&cfg).unwrap();
+                // hold the mesh open without ever exchanging, then hang up
+                std::thread::sleep(Duration::from_millis(1000));
+                drop(comm);
+            })
+        };
+        let victim = {
+            let cfg = SocketConfig {
+                rank: Some(1),
+                recv_timeout: Duration::from_millis(100),
+                ..SocketConfig::new(rdv.clone(), 2)
+            };
+            s.spawn(move || {
+                let mut comm = SocketComm::connect(&cfg).unwrap();
+                let _ = comm.exchange(vec![Vec::new(), Vec::new()]);
+            })
+        };
+        let err = victim.join().expect_err("exchange against a silent peer must fail");
+        silent.join().unwrap();
+        err
+    });
+    let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        String::new()
+    };
+    assert!(msg.contains("socket comm rank 1"), "rank tag missing: {msg}");
+    assert!(msg.contains("timed out"), "timeout cause missing: {msg}");
+}

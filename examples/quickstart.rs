@@ -30,6 +30,11 @@ fn main() -> anyhow::Result<()> {
         // DESIGN.md §11); set Some(1) to force per-step exchange or pass
         // --exchange-interval on the nestgpu CLI
         exchange_interval: None,
+        // set `connectivity: Connectivity::Procedural` (CLI:
+        // `--connectivity procedural`) to keep static connectivity as
+        // compact RNG-seeded descriptors and regenerate fanouts at spike
+        // time — bit-identical spike trains at a fraction of the per-rank
+        // connectivity memory (DESIGN.md §16)
         // observe the run with `obs: Some(ObsConfig { trace_dir:
         // Some("trace".into()), ..Default::default() })` — per-rank JSONL
         // traces + a merged cross-rank metrics summary on rank 0, analyzed

@@ -1,0 +1,165 @@
+//! Procedural connectivity: per-rank connectivity memory and throughput,
+//! procedural vs materialized, on the identical balanced network.
+//!
+//! The procedural mode (DESIGN.md §16) keeps static connectivity as
+//! compact connect-call descriptors and regenerates each spiking neuron's
+//! fanout from captured RNG state at delivery time, trading construction
+//! memory for a bounded regeneration cost. This bench measures both sides
+//! of that trade: the connectivity-state bytes per rank (`conn_bytes`:
+//! materialized store + delivery plan, or descriptor store + fanout-cache
+//! residency) and steps/s, and writes `BENCH_procedural.json` at the
+//! repository root. The full-size run asserts the >= 5x memory-reduction
+//! acceptance bar; the ratio is size-dependent (the fanout cache has a
+//! 64 KiB floor that dominates at toy scale), so the CI smoke run only
+//! records it.
+//!
+//! Set `SMOKE=1` for the CI-sized run.
+
+use std::path::PathBuf;
+
+use nestgpu::connection::Connectivity;
+use nestgpu::engine::{SimConfig, SimResult, Simulator};
+use nestgpu::harness::run_cluster;
+use nestgpu::models::balanced::{build_balanced, BalancedConfig};
+use nestgpu::obs::stamp::write_bench_json;
+use nestgpu::util::json::Json;
+use nestgpu::util::table::{fmt_bytes, Table};
+
+struct Point {
+    label: &'static str,
+    steps_per_s: f64,
+    /// connectivity-state bytes, max over ranks
+    conn_bytes: u64,
+    /// tracker device peak, max over ranks
+    device_peak: u64,
+    n_connections: u64,
+    construction_s: f64,
+}
+
+fn measure(
+    label: &'static str,
+    mode: Connectivity,
+    ranks: usize,
+    t_ms: f64,
+    scale: f64,
+) -> Point {
+    let cfg = SimConfig {
+        record_spikes: false, // benchmarking runs, as in the paper
+        connectivity: mode,
+        ..Default::default()
+    };
+    let bal = BalancedConfig {
+        scale,
+        k_scale: scale,
+        ..Default::default()
+    };
+    let results: Vec<SimResult> = run_cluster(
+        ranks,
+        &cfg,
+        &move |sim: &mut Simulator| build_balanced(sim, &bal),
+        t_ms,
+    )
+    .expect("bench run");
+    let steps = (t_ms / cfg.dt_ms).round();
+    let prop_s = results
+        .iter()
+        .map(|r| r.phases.propagation.as_secs_f64())
+        .fold(0.0, f64::max)
+        .max(1e-9);
+    Point {
+        label,
+        steps_per_s: steps / prop_s,
+        conn_bytes: results.iter().map(|r| r.conn_bytes).max().unwrap_or(0),
+        device_peak: results.iter().map(|r| r.device_peak).max().unwrap_or(0),
+        n_connections: results.iter().map(|r| r.n_connections).sum(),
+        construction_s: results
+            .iter()
+            .map(|r| r.phases.construction().as_secs_f64())
+            .fold(0.0, f64::max),
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("SMOKE").is_ok();
+    let ranks = 2usize;
+    let t_ms = if smoke { 50.0 } else { 200.0 };
+    let scale = if smoke { 0.01 } else { 0.04 };
+
+    let mat = measure("materialized", Connectivity::Materialized, ranks, t_ms, scale);
+    let proc_ = measure("procedural", Connectivity::Procedural, ranks, t_ms, scale);
+    println!(
+        "balanced, {ranks} ranks, {t_ms} ms, scale {scale}{}",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let mut t = Table::new(
+        "procedural connectivity: memory and throughput vs materialized",
+        &["mode", "steps/s", "conn bytes/rank", "dev peak/rank", "conns", "constr s"],
+    );
+    for p in [&mat, &proc_] {
+        t.row(vec![
+            p.label.to_string(),
+            format!("{:.0}", p.steps_per_s),
+            fmt_bytes(p.conn_bytes),
+            fmt_bytes(p.device_peak),
+            p.n_connections.to_string(),
+            format!("{:.3}", p.construction_s),
+        ]);
+    }
+    t.print();
+
+    // the same network must exist in both modes (the spike-hash identity
+    // itself is asserted by tests/it_procedural.rs and the CI launch smoke)
+    assert_eq!(
+        mat.n_connections, proc_.n_connections,
+        "procedural run must describe the same connection count"
+    );
+
+    let mem_ratio = mat.conn_bytes as f64 / proc_.conn_bytes.max(1) as f64;
+    let slowdown = mat.steps_per_s / proc_.steps_per_s.max(1e-9);
+    println!(
+        "\nconnectivity memory: {} -> {} per rank ({mem_ratio:.1}x lower); \
+         throughput: {slowdown:.2}x slowdown",
+        fmt_bytes(mat.conn_bytes),
+        fmt_bytes(proc_.conn_bytes),
+    );
+    // acceptance bar (full size only: the cache's 64 KiB floor dominates
+    // the toy smoke network, see module docs)
+    if !smoke {
+        assert!(
+            mem_ratio >= 5.0,
+            "procedural mode must cut per-rank connectivity memory >= 5x \
+             (got {mem_ratio:.1}x)"
+        );
+    }
+
+    let fields = vec![
+        ("model", Json::str("balanced-procedural")),
+        ("ranks", Json::num(ranks as f64)),
+        ("t_ms", Json::num(t_ms)),
+        ("scale", Json::num(scale)),
+        ("smoke", Json::Bool(smoke)),
+        ("materialized_steps_per_s", Json::num(mat.steps_per_s)),
+        ("procedural_steps_per_s", Json::num(proc_.steps_per_s)),
+        // tracked lower-is-better by check_bench_regression.py
+        ("overhead_ratio", Json::num(slowdown)),
+        ("conn_bytes_materialized", Json::num(mat.conn_bytes as f64)),
+        ("conn_bytes_procedural", Json::num(proc_.conn_bytes as f64)),
+        ("conn_mem_ratio", Json::num(mem_ratio)),
+        ("device_peak_materialized", Json::num(mat.device_peak as f64)),
+        ("device_peak_procedural", Json::num(proc_.device_peak as f64)),
+        ("construction_s_materialized", Json::num(mat.construction_s)),
+        ("construction_s_procedural", Json::num(proc_.construction_s)),
+    ];
+    // at the repository root (one directory above the rust package);
+    // stamped with schema version / timestamp / git revision (obs::stamp)
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .join("BENCH_procedural.json");
+    if let Err(e) = write_bench_json(&path, fields) {
+        eprintln!("cannot write {}: {e}", path.display());
+        std::process::exit(1);
+    }
+    println!("[written {}]", path.display());
+}

@@ -3,9 +3,13 @@
 //! the offboard (host-built) baseline ([`offboard`]).
 
 pub mod offboard;
+pub mod procedural;
 pub mod rules;
 pub mod store;
 
+pub use procedural::{
+    ConnCallDescriptor, Connectivity, DescSources, DescriptorStore, ProceduralState,
+};
 pub use rules::ConnRule;
 pub use store::Connections;
 

@@ -1,0 +1,1237 @@
+//! Procedural connectivity: regenerate static synapses from RNG state at
+//! spike time instead of storing them (DESIGN.md §16).
+//!
+//! The construction algorithm is bit-reproducible from its seeds: every
+//! connect call forks a source-position generator from the rank's
+//! construction stream (or consumes the aligned per-(σ,τ) stream for
+//! remote calls) and draws synaptic parameters from the local stream in a
+//! fixed two-phase order — first the full `(source_pos, target_pos)` pair
+//! stream, then one `SynSpec::draw` per pair. Capturing the raw states of
+//! both generators *before* the call therefore suffices to rematerialize
+//! the call's connections, bit-identically, at any later time.
+//!
+//! In procedural mode the simulator records each static connect call as a
+//! [`ConnCallDescriptor`] (rule + node sets + synapse spec + the two
+//! captured RNG states) instead of pushing rows into
+//! [`crate::connection::Connections`]. When a source neuron spikes, the
+//! descriptors covering it are rematerialized on demand into a
+//! [`DescFanout`] — the same per-node, delay-merged run layout the
+//! materialized [`crate::engine::delivery::DeliveryPlan`] uses — and the
+//! fanout is accumulated straight into the ring buffers. A byte-capped
+//! LRU [`FanoutCache`] memoizes regenerated fanouts; because a fanout is a
+//! pure function of its descriptor, cache policy cannot affect results.
+//!
+//! Plastic (STDP) synapses mutate their weights and therefore stay fully
+//! materialized; so do device-sourced calls (Poisson input is delivered
+//! from the materialized plan every step, not at spike events).
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::connection::{ConnRule, Dist, NodeSet, SynSpec};
+use crate::memory::{MemKind, Tracker};
+use crate::node::RingBuffers;
+use crate::snapshot::{Decoder, Encoder};
+use crate::util::rng::Rng;
+
+/// How static connectivity is held between construction and delivery.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Connectivity {
+    /// every synapse stored in `Connections` + the `DeliveryPlan`
+    #[default]
+    Materialized,
+    /// static calls stored as descriptors, fanouts regenerated on spike
+    Procedural,
+}
+
+impl Connectivity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Connectivity::Materialized => "materialized",
+            Connectivity::Procedural => "procedural",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "materialized" => Some(Connectivity::Materialized),
+            "procedural" => Some(Connectivity::Procedural),
+            _ => None,
+        }
+    }
+}
+
+/// Where a descriptor's source positions resolve to node ids.
+#[derive(Clone, Debug)]
+pub enum DescSources {
+    /// local connect call: position `i` is `set.get(i)`
+    Local(NodeSet),
+    /// remote target-side call: the `l` array of §0.3.1 — position `i` is
+    /// the image node `l[i]` (`u32::MAX` marks positions the rule never
+    /// emitted, which by construction are never queried)
+    RemoteImages(Vec<u32>),
+}
+
+impl DescSources {
+    pub fn len(&self) -> usize {
+        match self {
+            DescSources::Local(s) => s.len(),
+            DescSources::RemoteImages(l) => l.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Node id of source position `sp`.
+    #[inline]
+    pub fn node_at(&self, sp: u32) -> u32 {
+        match self {
+            DescSources::Local(s) => s.get(sp),
+            DescSources::RemoteImages(l) => {
+                let node = l[sp as usize];
+                debug_assert!(node != u32::MAX, "unused l position queried");
+                node
+            }
+        }
+    }
+
+    pub fn is_remote(&self) -> bool {
+        matches!(self, DescSources::RemoteImages(_))
+    }
+}
+
+/// One recorded static connect call: everything needed to rematerialize
+/// its connections bit-identically (DESIGN.md §16).
+#[derive(Clone, Debug)]
+pub struct ConnCallDescriptor {
+    pub sources: DescSources,
+    pub targets: NodeSet,
+    pub rule: ConnRule,
+    pub syn: SynSpec,
+    /// raw xoshiro state of the source-position generator at call time
+    /// (the `Rng::new(src_seed)` fork for local calls, the aligned
+    /// `RNG[σ,τ]` stream for remote calls), captured before `generate`
+    pub src_state: [u64; 4],
+    pub src_gauss: Option<f64>,
+    /// raw state of the target rank's private stream, captured before
+    /// `generate` (it feeds target-position draws *and* parameter draws)
+    pub local_state: [u64; 4],
+    pub local_gauss: Option<f64>,
+    /// exact connection count of the call (known at record time)
+    pub n_conns: u64,
+}
+
+impl ConnCallDescriptor {
+    /// Resident bytes of the descriptor (struct + owned heap).
+    pub fn bytes(&self) -> u64 {
+        let heap = match &self.sources {
+            DescSources::Local(NodeSet::List(v)) => v.len() * 4,
+            DescSources::Local(NodeSet::Range { .. }) => 0,
+            DescSources::RemoteImages(l) => l.len() * 4,
+        } + match &self.targets {
+            NodeSet::List(v) => v.len() * 4,
+            NodeSet::Range { .. } => 0,
+        } + match &self.rule {
+            ConnRule::AssignedNodes(pairs) => pairs.len() * 8,
+            _ => 0,
+        };
+        (std::mem::size_of::<Self>() + heap) as u64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// descriptor codec (snapshot v4 PROC section)
+
+fn encode_dist(d: &Dist, e: &mut Encoder) {
+    match *d {
+        Dist::Const(x) => {
+            e.u8(0);
+            e.f64(x);
+        }
+        Dist::Normal { mean, sd } => {
+            e.u8(1);
+            e.f64(mean);
+            e.f64(sd);
+        }
+        Dist::Uniform { lo, hi } => {
+            e.u8(2);
+            e.f64(lo);
+            e.f64(hi);
+        }
+    }
+}
+
+fn decode_dist(d: &mut Decoder) -> Result<Dist> {
+    Ok(match d.u8()? {
+        0 => Dist::Const(d.f64()?),
+        1 => Dist::Normal {
+            mean: d.f64()?,
+            sd: d.f64()?,
+        },
+        2 => Dist::Uniform {
+            lo: d.f64()?,
+            hi: d.f64()?,
+        },
+        tag => bail!("unknown distribution tag {tag} in descriptor"),
+    })
+}
+
+fn encode_nodeset(s: &NodeSet, e: &mut Encoder) {
+    match s {
+        NodeSet::Range { start, n } => {
+            e.u8(0);
+            e.u32(*start);
+            e.u32(*n);
+        }
+        NodeSet::List(v) => {
+            e.u8(1);
+            e.slice_u32(v);
+        }
+    }
+}
+
+fn decode_nodeset(d: &mut Decoder) -> Result<NodeSet> {
+    Ok(match d.u8()? {
+        0 => NodeSet::Range {
+            start: d.u32()?,
+            n: d.u32()?,
+        },
+        1 => NodeSet::List(d.vec_u32()?),
+        tag => bail!("unknown node-set tag {tag} in descriptor"),
+    })
+}
+
+fn encode_rule(r: &ConnRule, e: &mut Encoder) {
+    match r {
+        ConnRule::OneToOne => e.u8(0),
+        ConnRule::AllToAll => e.u8(1),
+        ConnRule::FixedIndegree { k } => {
+            e.u8(2);
+            e.u32(*k);
+        }
+        ConnRule::FixedOutdegree { k } => {
+            e.u8(3);
+            e.u32(*k);
+        }
+        ConnRule::FixedTotalNumber { n } => {
+            e.u8(4);
+            e.u64(*n);
+        }
+        ConnRule::AssignedNodes(pairs) => {
+            e.u8(5);
+            e.seq_len(pairs.len());
+            for &(i, j) in pairs {
+                e.u32(i);
+                e.u32(j);
+            }
+        }
+        ConnRule::TripletBucket {
+            state,
+            k,
+            n_ranks,
+            sigma,
+        } => {
+            e.u8(6);
+            for w in state {
+                e.u64(*w);
+            }
+            e.u32(*k);
+            e.u32(*n_ranks);
+            e.u32(*sigma);
+        }
+    }
+}
+
+fn decode_rule(d: &mut Decoder) -> Result<ConnRule> {
+    Ok(match d.u8()? {
+        0 => ConnRule::OneToOne,
+        1 => ConnRule::AllToAll,
+        2 => ConnRule::FixedIndegree { k: d.u32()? },
+        3 => ConnRule::FixedOutdegree { k: d.u32()? },
+        4 => ConnRule::FixedTotalNumber { n: d.u64()? },
+        5 => {
+            let n = d.seq_len(8)?;
+            let mut pairs = Vec::with_capacity(n);
+            for _ in 0..n {
+                pairs.push((d.u32()?, d.u32()?));
+            }
+            ConnRule::AssignedNodes(pairs)
+        }
+        6 => ConnRule::TripletBucket {
+            state: [d.u64()?, d.u64()?, d.u64()?, d.u64()?],
+            k: d.u32()?,
+            n_ranks: d.u32()?,
+            sigma: d.u32()?,
+        },
+        tag => bail!("unknown connection-rule tag {tag} in descriptor"),
+    })
+}
+
+fn encode_raw_rng(s: &[u64; 4], gauss: Option<f64>, e: &mut Encoder) {
+    for w in s {
+        e.u64(*w);
+    }
+    match gauss {
+        None => e.bool(false),
+        Some(z) => {
+            e.bool(true);
+            e.f64(z);
+        }
+    }
+}
+
+fn decode_raw_rng(d: &mut Decoder) -> Result<([u64; 4], Option<f64>)> {
+    let s = [d.u64()?, d.u64()?, d.u64()?, d.u64()?];
+    let gauss = if d.bool()? { Some(d.f64()?) } else { None };
+    Ok((s, gauss))
+}
+
+fn encode_descriptor(desc: &ConnCallDescriptor, e: &mut Encoder) {
+    debug_assert!(
+        desc.syn.stdp.is_none(),
+        "plastic calls must stay materialized, never become descriptors"
+    );
+    match &desc.sources {
+        DescSources::Local(s) => {
+            e.u8(0);
+            encode_nodeset(s, e);
+        }
+        DescSources::RemoteImages(l) => {
+            e.u8(1);
+            e.slice_u32(l);
+        }
+    }
+    encode_nodeset(&desc.targets, e);
+    encode_rule(&desc.rule, e);
+    encode_dist(&desc.syn.weight, e);
+    encode_dist(&desc.syn.delay, e);
+    e.u8(desc.syn.port);
+    encode_raw_rng(&desc.src_state, desc.src_gauss, e);
+    encode_raw_rng(&desc.local_state, desc.local_gauss, e);
+    e.u64(desc.n_conns);
+}
+
+fn decode_descriptor(d: &mut Decoder) -> Result<ConnCallDescriptor> {
+    let sources = match d.u8()? {
+        0 => DescSources::Local(decode_nodeset(d)?),
+        1 => DescSources::RemoteImages(d.vec_u32()?),
+        tag => bail!("unknown descriptor-sources tag {tag}"),
+    };
+    let targets = decode_nodeset(d)?;
+    let rule = decode_rule(d)?;
+    let weight = decode_dist(d)?;
+    let delay = decode_dist(d)?;
+    let port = d.u8()?;
+    let (src_state, src_gauss) = decode_raw_rng(d)?;
+    let (local_state, local_gauss) = decode_raw_rng(d)?;
+    let n_conns = d.u64()?;
+    Ok(ConnCallDescriptor {
+        sources,
+        targets,
+        rule,
+        syn: SynSpec {
+            weight,
+            delay,
+            port,
+            stdp: None,
+        },
+        src_state,
+        src_gauss,
+        local_state,
+        local_gauss,
+        n_conns,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// descriptor store
+
+/// All recorded connect calls of a rank, plus the node → descriptor CSR
+/// built at prepare time. Descriptors are looked up in *creation order*
+/// per node — that order is what makes procedural delivery bit-identical
+/// to the materialized plan (see [`DescFanout`]).
+#[derive(Default)]
+pub struct DescriptorStore {
+    descs: Vec<ConnCallDescriptor>,
+    /// CSR offsets: descriptors covering node `v` are
+    /// `node_descs[node_first[v]..node_first[v+1]]`, ascending by id
+    node_first: Vec<u32>,
+    node_descs: Vec<u32>,
+    desc_bytes: u64,
+    index_bytes: u64,
+    total_conns: u64,
+}
+
+impl DescriptorStore {
+    pub fn len(&self) -> usize {
+        self.descs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.descs.is_empty()
+    }
+
+    pub fn desc(&self, id: u32) -> &ConnCallDescriptor {
+        &self.descs[id as usize]
+    }
+
+    /// Total connections across all descriptors (the procedural share of
+    /// `SimResult::n_connections`).
+    pub fn total_conns(&self) -> u64 {
+        self.total_conns
+    }
+
+    /// Resident bytes: descriptors + the node → descriptor index.
+    pub fn device_bytes(&self) -> u64 {
+        self.desc_bytes + self.index_bytes
+    }
+
+    /// Record a call; returns its descriptor id.
+    pub fn push(&mut self, desc: ConnCallDescriptor, tr: &mut Tracker) -> u32 {
+        let id = self.descs.len() as u32;
+        let b = desc.bytes();
+        tr.alloc(MemKind::Device, b);
+        self.desc_bytes += b;
+        self.total_conns += desc.n_conns;
+        self.descs.push(desc);
+        id
+    }
+
+    fn covered_nodes(desc: &ConnCallDescriptor, mut f: impl FnMut(u32)) {
+        match &desc.sources {
+            DescSources::Local(s) => {
+                for node in s.iter() {
+                    f(node);
+                }
+            }
+            DescSources::RemoteImages(l) => {
+                for &node in l {
+                    if node != u32::MAX {
+                        f(node);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Build the node → descriptor CSR (call once, after construction or
+    /// after a snapshot restore). Per node, descriptor ids come out
+    /// ascending — i.e. in creation order.
+    pub fn build_index(&mut self, n_nodes: u32, tr: &mut Tracker) {
+        let mut counts = vec![0u32; n_nodes as usize + 1];
+        for desc in &self.descs {
+            Self::covered_nodes(desc, |node| counts[node as usize + 1] += 1);
+        }
+        for i in 1..counts.len() {
+            counts[i] += counts[i - 1];
+        }
+        let total = counts[n_nodes as usize] as usize;
+        let mut node_descs = vec![0u32; total];
+        let mut cursor = counts.clone();
+        for (id, desc) in self.descs.iter().enumerate() {
+            Self::covered_nodes(desc, |node| {
+                node_descs[cursor[node as usize] as usize] = id as u32;
+                cursor[node as usize] += 1;
+            });
+        }
+        self.node_first = counts;
+        self.node_descs = node_descs;
+        let b = ((self.node_first.len() + self.node_descs.len()) * 4) as u64;
+        tr.alloc(MemKind::Device, b);
+        self.index_bytes = b;
+    }
+
+    /// Index range into the descriptor-id array for `node` (empty when the
+    /// node is covered by no descriptor or the index is not built).
+    #[inline]
+    pub fn desc_span(&self, node: u32) -> (usize, usize) {
+        let v = node as usize;
+        if v + 1 >= self.node_first.len() {
+            return (0, 0);
+        }
+        (self.node_first[v] as usize, self.node_first[v + 1] as usize)
+    }
+
+    #[inline]
+    pub fn node_desc(&self, idx: usize) -> u32 {
+        self.node_descs[idx]
+    }
+
+    /// Descriptor ids covering `node`, in creation order.
+    pub fn descs_of(&self, node: u32) -> &[u32] {
+        let (lo, hi) = self.desc_span(node);
+        &self.node_descs[lo..hi]
+    }
+
+    /// Minimum possible delay over remote-origin descriptors (folds into
+    /// the exchange-batching bound exactly like materialized image
+    /// connections do).
+    pub fn min_remote_delay(&self) -> Option<u16> {
+        self.descs
+            .iter()
+            .filter(|d| d.sources.is_remote())
+            .map(|d| d.syn.min_delay_steps())
+            .min()
+    }
+
+    /// Estimated bytes a full materialization of every fanout would take —
+    /// the reference the cache budget is derived from.
+    pub fn est_fanout_bytes(&self) -> u64 {
+        // per connection: dest u32 + weight f32; runs/node directory are
+        // secondary and covered by the same estimate's slack
+        self.total_conns * 8
+    }
+
+    pub fn snapshot_encode(&self, e: &mut Encoder) {
+        e.seq_len(self.descs.len());
+        for desc in &self.descs {
+            encode_descriptor(desc, e);
+        }
+    }
+
+    /// Decode descriptors (the CSR index is derived state: call
+    /// [`DescriptorStore::build_index`] after).
+    pub fn snapshot_decode(d: &mut Decoder, tr: &mut Tracker) -> Result<Self> {
+        let n = d.seq_len(1)?;
+        let mut store = Self::default();
+        for _ in 0..n {
+            let desc = decode_descriptor(d)?;
+            store.push(desc, tr);
+        }
+        Ok(store)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fanout regeneration
+
+/// One descriptor's rematerialized fanout, in the materialized plan's
+/// delivery layout: per covered source node, delay-merged runs of
+/// port-baked destinations and weights.
+///
+/// Bit-identity argument (DESIGN.md §16): a ring-buffer cell is addressed
+/// by (slot, destination); f32 accumulation order only matters *within* a
+/// cell. The materialized plan stable-sorts each node's connections by
+/// (delay, port), so same-cell entries keep creation order — descriptor
+/// order, then `generate` emission order. Regeneration reproduces exactly
+/// that: descriptors are walked in creation order, and each fanout is
+/// stable-sorted by (node, delay, port), preserving emission order within
+/// equal keys. Direct accumulation therefore adds every cell's terms in
+/// the same sequence the queue drain would.
+#[derive(Clone, Debug, Default)]
+pub struct DescFanout {
+    dest: Vec<u32>,
+    weight: Vec<f32>,
+    /// delay-merged runs `(delay, start, end)` into `dest`/`weight`
+    runs: Vec<(u16, u32, u32)>,
+    /// per covered node `(node, run_lo, run_hi)`, ascending by node
+    node_runs: Vec<(u32, u32, u32)>,
+}
+
+impl DescFanout {
+    pub fn bytes(&self) -> u64 {
+        (self.dest.len() * 4
+            + self.weight.len() * 4
+            + self.runs.len() * std::mem::size_of::<(u16, u32, u32)>()
+            + self.node_runs.len() * std::mem::size_of::<(u32, u32, u32)>()) as u64
+    }
+
+    pub fn n_entries(&self) -> usize {
+        self.dest.len()
+    }
+
+    /// Accumulate `node`'s runs into the ring buffers, matching the
+    /// delivery queue's drain arithmetic exactly (`+= w` for mult 1, else
+    /// `+= w * mult`). `shift` is the exchange-batching lag shift (0 for
+    /// the local plane).
+    pub fn deliver(&self, node: u32, mult: u16, shift: i32, rb: &mut RingBuffers) {
+        let Ok(ix) = self.node_runs.binary_search_by_key(&node, |&(n, _, _)| n) else {
+            return;
+        };
+        let (_, lo, hi) = self.node_runs[ix];
+        for &(delay, start, end) in &self.runs[lo as usize..hi as usize] {
+            let d = delay as i32 + shift;
+            debug_assert!(
+                d >= 1 && rb.supports(d as u16),
+                "shifted delay {d} outside ring of {} slots",
+                rb.n_slots()
+            );
+            let slot = rb.slot_of(d as u16);
+            let row = rb.row_mut(slot);
+            let dests = &self.dest[start as usize..end as usize];
+            let weights = &self.weight[start as usize..end as usize];
+            if mult == 1 {
+                for (&dst, &w) in dests.iter().zip(weights) {
+                    row[dst as usize] += w;
+                }
+            } else {
+                let m = mult as f32;
+                for (&dst, &w) in dests.iter().zip(weights) {
+                    row[dst as usize] += w * m;
+                }
+            }
+        }
+    }
+}
+
+/// entry during fanout construction: (source node, delay, port, dest, w)
+type Entry = (u32, u16, u8, u32, f32);
+
+/// Rematerialize a descriptor's connections. Replays the exact two-phase
+/// order of construction — the full pair stream first, then one parameter
+/// draw per pair — from the captured RNG states, then groups by source
+/// node with the plan's stable (delay, port) ordering.
+pub fn build_fanout(
+    desc: &ConnCallDescriptor,
+    state_lut: &[u32],
+    n_state: u32,
+    pairs: &mut Vec<(u32, u32)>,
+    entries: &mut Vec<Entry>,
+) -> DescFanout {
+    let mut src = Rng::from_raw_state(desc.src_state, desc.src_gauss);
+    let mut local = Rng::from_raw_state(desc.local_state, desc.local_gauss);
+    pairs.clear();
+    pairs.reserve(desc.n_conns as usize);
+    desc.rule.generate(
+        desc.sources.len(),
+        desc.targets.len(),
+        &mut src,
+        &mut local,
+        |sp, tp| pairs.push((sp, tp)),
+    );
+    debug_assert_eq!(pairs.len() as u64, desc.n_conns);
+    entries.clear();
+    entries.reserve(pairs.len());
+    for &(sp, tp) in pairs.iter() {
+        let (w, delay) = desc.syn.draw(&mut local);
+        let node = desc.sources.node_at(sp);
+        let state = state_lut[desc.targets.get(tp) as usize];
+        debug_assert!(state != u32::MAX, "descriptor targets a non-neuron node");
+        let dest = u32::from(desc.syn.port) * n_state + state;
+        entries.push((node, delay, desc.syn.port, dest, w));
+    }
+    // stable: same-cell entries keep generate order (the bit-identity
+    // invariant above)
+    entries.sort_by_key(|&(node, delay, port, _, _)| (node, delay, port));
+
+    let mut fo = DescFanout::default();
+    fo.dest.reserve(entries.len());
+    fo.weight.reserve(entries.len());
+    let mut i = 0;
+    while i < entries.len() {
+        let node = entries[i].0;
+        let run_lo = fo.runs.len() as u32;
+        while i < entries.len() && entries[i].0 == node {
+            let (_, delay, _, dest, w) = entries[i];
+            let pos = fo.dest.len() as u32;
+            fo.dest.push(dest);
+            fo.weight.push(w);
+            let cur_runs = fo.runs.len() as u32;
+            match fo.runs.last_mut() {
+                Some(r) if cur_runs > run_lo && r.0 == delay => r.2 = pos + 1,
+                _ => fo.runs.push((delay, pos, pos + 1)),
+            }
+            i += 1;
+        }
+        fo.node_runs.push((node, run_lo, fo.runs.len() as u32));
+    }
+    fo
+}
+
+// ---------------------------------------------------------------------------
+// fanout cache
+
+/// Byte-capped memo of regenerated fanouts, keyed by descriptor id.
+///
+/// Deterministic by construction: a dense `Vec` slot per descriptor (no
+/// hashing) and strict tick-LRU eviction — and since a fanout is a pure
+/// function of its descriptor, even a *wrong* eviction choice could only
+/// cost time, never correctness.
+pub struct FanoutCache {
+    cap: u64,
+    used: u64,
+    tick: u64,
+    slots: Vec<Option<(u64, DescFanout)>>,
+}
+
+impl FanoutCache {
+    /// Floor so tiny models still get a working cache.
+    pub const MIN_CAP_BYTES: u64 = 64 * 1024;
+
+    /// Budget policy: a quarter of the estimated full-materialization
+    /// bytes, so the resident procedural footprint (descriptors + cache)
+    /// stays well under the ≥5× reduction bar while hot fanouts persist.
+    pub fn cap_for(est_fanout_bytes: u64) -> u64 {
+        (est_fanout_bytes / 4).max(Self::MIN_CAP_BYTES)
+    }
+
+    pub fn new(n_descs: usize, cap: u64) -> Self {
+        Self {
+            cap,
+            used: 0,
+            tick: 0,
+            slots: vec![None; n_descs],
+        }
+    }
+
+    pub fn cap_bytes(&self) -> u64 {
+        self.cap
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used
+    }
+
+    /// Cached fanout for a descriptor, refreshing its LRU tick.
+    pub fn touch(&mut self, id: u32) -> Option<&DescFanout> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.slots.get_mut(id as usize) {
+            Some(Some((last, fo))) => {
+                *last = tick;
+                Some(fo)
+            }
+            _ => None,
+        }
+    }
+
+    /// Insert a freshly regenerated fanout, evicting least-recently-used
+    /// entries until it fits. A fanout larger than the whole budget is
+    /// dropped (it was already delivered from; only reuse is lost).
+    pub fn admit(&mut self, id: u32, fo: DescFanout, tr: &mut Tracker) {
+        debug_assert!(self.slots[id as usize].is_none(), "admit over a live entry");
+        let b = fo.bytes();
+        if b > self.cap {
+            return;
+        }
+        while self.used + b > self.cap {
+            let victim = self
+                .slots
+                .iter()
+                .enumerate()
+                .filter_map(|(i, s)| s.as_ref().map(|(t, _)| (*t, i)))
+                .min()
+                .map(|(_, i)| i);
+            let Some(v) = victim else { break };
+            if let Some((_, old)) = self.slots[v].take() {
+                let ob = old.bytes();
+                self.used -= ob;
+                tr.free(MemKind::Device, ob);
+            }
+        }
+        self.tick += 1;
+        self.used += b;
+        tr.alloc(MemKind::Device, b);
+        self.slots[id as usize] = Some((self.tick, fo));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-rank procedural state
+
+/// Descriptor store + fanout cache + regeneration statistics: the
+/// procedural counterpart of the materialized `DeliveryPlan`.
+pub struct ProceduralState {
+    pub store: DescriptorStore,
+    cache: FanoutCache,
+    /// fanout served from cache
+    pub cache_hits: u64,
+    /// fanout rematerialized
+    pub cache_misses: u64,
+    /// wall-clock nanoseconds spent rematerializing (the `regen` phase)
+    pub regen_ns: u64,
+    scratch_pairs: Vec<(u32, u32)>,
+    scratch_entries: Vec<Entry>,
+}
+
+impl ProceduralState {
+    pub fn new(store: DescriptorStore) -> Self {
+        let cache = FanoutCache::new(0, FanoutCache::MIN_CAP_BYTES);
+        Self {
+            store,
+            cache,
+            cache_hits: 0,
+            cache_misses: 0,
+            regen_ns: 0,
+            scratch_pairs: Vec::new(),
+            scratch_entries: Vec::new(),
+        }
+    }
+
+    /// Build the node index and size the cache (prepare/restore time).
+    pub fn prepare(&mut self, n_nodes: u32, tr: &mut Tracker) {
+        self.store.build_index(n_nodes, tr);
+        self.cache = FanoutCache::new(
+            self.store.len(),
+            FanoutCache::cap_for(self.store.est_fanout_bytes()),
+        );
+    }
+
+    pub fn cache_used_bytes(&self) -> u64 {
+        self.cache.used_bytes()
+    }
+
+    /// Deliver `node`'s procedural fanout into the ring buffers:
+    /// descriptors in creation order, each fanout cached or rematerialized
+    /// on the spot. `shift` is 0 for the local plane and the exchange
+    /// lag shift (`lag + 1 − interval_len`) for the remote plane.
+    #[allow(clippy::too_many_arguments)]
+    pub fn deliver(
+        &mut self,
+        node: u32,
+        mult: u16,
+        shift: i32,
+        state_lut: &[u32],
+        n_state: u32,
+        rb: &mut RingBuffers,
+        tr: &mut Tracker,
+    ) {
+        let (lo, hi) = self.store.desc_span(node);
+        for idx in lo..hi {
+            let di = self.store.node_desc(idx);
+            if let Some(fo) = self.cache.touch(di) {
+                self.cache_hits += 1;
+                fo.deliver(node, mult, shift, rb);
+                continue;
+            }
+            self.cache_misses += 1;
+            let t0 = Instant::now();
+            let fo = build_fanout(
+                self.store.desc(di),
+                state_lut,
+                n_state,
+                &mut self.scratch_pairs,
+                &mut self.scratch_entries,
+            );
+            self.regen_ns += t0.elapsed().as_nanos() as u64;
+            fo.deliver(node, mult, shift, rb);
+            self.cache.admit(di, fo, tr);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ident_lut(n: u32) -> Vec<u32> {
+        (0..n).collect()
+    }
+
+    fn desc_with(
+        sources: DescSources,
+        targets: NodeSet,
+        rule: ConnRule,
+        syn: SynSpec,
+        src_seed: u64,
+        local_seed: u64,
+    ) -> ConnCallDescriptor {
+        let src = Rng::new(src_seed);
+        let local = Rng::new(local_seed);
+        let (src_state, src_gauss) = src.raw_state();
+        let (local_state, local_gauss) = local.raw_state();
+        let mut a = src.clone();
+        let mut l = local.clone();
+        let mut n = 0u64;
+        rule.generate(sources.len(), targets.len(), &mut a, &mut l, |_, _| n += 1);
+        ConnCallDescriptor {
+            sources,
+            targets,
+            rule,
+            syn,
+            src_state,
+            src_gauss,
+            local_state,
+            local_gauss,
+            n_conns: n,
+        }
+    }
+
+    #[test]
+    fn fanout_replays_two_phase_construction_order() {
+        // FixedOutdegree consumes the local stream during generate AND for
+        // random weights after — the regeneration must interleave exactly
+        // as construction did (all pairs first, then all parameter draws).
+        let syn = SynSpec {
+            weight: Dist::Normal { mean: 2.0, sd: 0.5 },
+            delay: Dist::Uniform { lo: 1.0, hi: 4.0 },
+            port: 0,
+            stdp: None,
+        };
+        let rule = ConnRule::FixedOutdegree { k: 7 };
+        let (ns, nt) = (11usize, 13usize);
+        let desc = desc_with(
+            DescSources::Local(NodeSet::range(0, ns as u32)),
+            NodeSet::range(0, nt as u32),
+            rule.clone(),
+            syn,
+            42,
+            77,
+        );
+
+        // reference: the materialized construction sequence
+        let mut a = Rng::from_raw_state(desc.src_state, desc.src_gauss);
+        let mut l = Rng::from_raw_state(desc.local_state, desc.local_gauss);
+        let mut pairs = Vec::new();
+        rule.generate(ns, nt, &mut a, &mut l, |i, j| pairs.push((i, j)));
+        let mut expect: Vec<(u32, u16, u32, f32)> = Vec::new(); // node, delay, dest, w
+        for &(sp, tp) in &pairs {
+            let (w, d) = syn.draw(&mut l);
+            expect.push((sp, d, tp, w));
+        }
+        expect.sort_by_key(|&(n, d, _, _)| (n, d)); // stable, port constant
+
+        let lut = ident_lut(nt as u32);
+        let (mut sp_, mut se_) = (Vec::new(), Vec::new());
+        let fo = build_fanout(&desc, &lut, nt as u32, &mut sp_, &mut se_);
+        assert_eq!(fo.n_entries(), expect.len());
+        // flatten the fanout back to (node, delay, dest, weight) sequence
+        let mut got = Vec::new();
+        for &(node, rlo, rhi) in &fo.node_runs {
+            for &(delay, s, e) in &fo.runs[rlo as usize..rhi as usize] {
+                for k in s as usize..e as usize {
+                    got.push((node, delay, fo.dest[k], fo.weight[k]));
+                }
+            }
+        }
+        // port 0 → dest == state == target position under the identity LUT
+        assert_eq!(got.len(), expect.len());
+        for (g, x) in got.iter().zip(expect.iter()) {
+            assert_eq!((g.0, g.1, g.2), (x.0, x.1, x.2));
+            assert_eq!(g.3.to_bits(), x.3.to_bits(), "weights must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn fanout_delivery_matches_queue_drain_arithmetic() {
+        let syn = SynSpec::new(1.5, 2);
+        let desc = desc_with(
+            DescSources::Local(NodeSet::range(0, 6)),
+            NodeSet::range(0, 9),
+            ConnRule::FixedIndegree { k: 4 },
+            syn,
+            3,
+            4,
+        );
+        let lut = ident_lut(9);
+        let (mut sp_, mut se_) = (Vec::new(), Vec::new());
+        let fo = build_fanout(&desc, &lut, 9, &mut sp_, &mut se_);
+
+        let mut tr = Tracker::new();
+        let mut rb_a = RingBuffers::new(9, 5, &mut tr);
+        let mut rb_b = RingBuffers::new(9, 5, &mut tr);
+        // reference: per-entry add_dest in fanout order (mult folds in)
+        for &(node, rlo, rhi) in &fo.node_runs {
+            let _ = node;
+            for &(delay, s, e) in &fo.runs[rlo as usize..rhi as usize] {
+                for k in s as usize..e as usize {
+                    rb_a.add_dest(fo.dest[k], delay, fo.weight[k], 3);
+                }
+            }
+        }
+        for node in 0..6 {
+            fo.deliver(node, 3, 0, &mut rb_b);
+        }
+        for _ in 0..6 {
+            let (ea, ia) = rb_a.current();
+            let (eb, ib) = rb_b.current();
+            assert_eq!(
+                ea.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                eb.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!(
+                ia.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                ib.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+            rb_a.advance();
+            rb_b.advance();
+        }
+    }
+
+    #[test]
+    fn descriptor_codec_roundtrips_every_variant() {
+        let descs = vec![
+            desc_with(
+                DescSources::Local(NodeSet::range(5, 4)),
+                NodeSet::range(0, 4),
+                ConnRule::OneToOne,
+                SynSpec::new(1.0, 1),
+                1,
+                2,
+            ),
+            desc_with(
+                DescSources::Local(NodeSet::List(vec![9, 2, 5])),
+                NodeSet::List(vec![1, 0]),
+                ConnRule::AllToAll,
+                SynSpec {
+                    weight: Dist::Normal { mean: 1.0, sd: 0.1 },
+                    delay: Dist::Uniform { lo: 1.0, hi: 3.0 },
+                    port: 1,
+                    stdp: None,
+                },
+                3,
+                4,
+            ),
+            desc_with(
+                DescSources::RemoteImages(vec![7, u32::MAX, 8]),
+                NodeSet::range(0, 5),
+                ConnRule::FixedIndegree { k: 2 },
+                SynSpec::new(-2.0, 2),
+                5,
+                6,
+            ),
+            desc_with(
+                DescSources::Local(NodeSet::range(0, 3)),
+                NodeSet::range(0, 3),
+                ConnRule::AssignedNodes(vec![(0, 1), (2, 2)]),
+                SynSpec::new(0.5, 3),
+                7,
+                8,
+            ),
+            desc_with(
+                DescSources::Local(NodeSet::range(0, 10)),
+                NodeSet::range(0, 10),
+                ConnRule::TripletBucket {
+                    state: Rng::new(99).raw_state().0,
+                    k: 3,
+                    n_ranks: 4,
+                    sigma: 2,
+                },
+                SynSpec::new(1.0, 1),
+                9,
+                10,
+            ),
+            desc_with(
+                DescSources::Local(NodeSet::range(0, 8)),
+                NodeSet::range(0, 8),
+                ConnRule::FixedTotalNumber { n: 12 },
+                SynSpec::new(1.0, 1),
+                11,
+                12,
+            ),
+            desc_with(
+                DescSources::Local(NodeSet::range(0, 8)),
+                NodeSet::range(0, 8),
+                ConnRule::FixedOutdegree { k: 2 },
+                SynSpec::new(1.0, 1),
+                13,
+                14,
+            ),
+        ];
+        let mut tr = Tracker::new();
+        let mut store = DescriptorStore::default();
+        for d in descs {
+            store.push(d, &mut tr);
+        }
+        assert_eq!(tr.current(MemKind::Device), store.desc_bytes);
+
+        let mut e = Encoder::new();
+        store.snapshot_encode(&mut e);
+        let bytes = e.into_bytes();
+        let mut tr2 = Tracker::new();
+        let mut dec = Decoder::new(&bytes);
+        let back = DescriptorStore::snapshot_decode(&mut dec, &mut tr2).unwrap();
+        dec.finish().unwrap();
+        assert_eq!(back.len(), store.len());
+        assert_eq!(back.total_conns(), store.total_conns());
+        assert_eq!(back.desc_bytes, store.desc_bytes);
+        // regenerated fanouts must agree descriptor by descriptor
+        let lut = ident_lut(16);
+        let (mut p1, mut e1) = (Vec::new(), Vec::new());
+        let (mut p2, mut e2) = (Vec::new(), Vec::new());
+        for id in 0..store.len() as u32 {
+            let a = build_fanout(store.desc(id), &lut, 16, &mut p1, &mut e1);
+            let b = build_fanout(back.desc(id), &lut, 16, &mut p2, &mut e2);
+            assert_eq!(a.dest, b.dest);
+            assert_eq!(
+                a.weight.iter().map(|w| w.to_bits()).collect::<Vec<_>>(),
+                b.weight.iter().map(|w| w.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!(a.runs, b.runs);
+            assert_eq!(a.node_runs, b.node_runs);
+        }
+    }
+
+    #[test]
+    fn index_lists_descriptors_in_creation_order() {
+        let mut tr = Tracker::new();
+        let mut store = DescriptorStore::default();
+        // both descriptors cover node 1; id order must be preserved
+        store.push(
+            desc_with(
+                DescSources::Local(NodeSet::range(0, 3)),
+                NodeSet::range(0, 3),
+                ConnRule::AllToAll,
+                SynSpec::new(1.0, 1),
+                1,
+                2,
+            ),
+            &mut tr,
+        );
+        store.push(
+            desc_with(
+                DescSources::RemoteImages(vec![u32::MAX, 1]),
+                NodeSet::range(0, 3),
+                ConnRule::FixedIndegree { k: 1 },
+                SynSpec::new(1.0, 1),
+                3,
+                4,
+            ),
+            &mut tr,
+        );
+        store.build_index(4, &mut tr);
+        assert_eq!(store.descs_of(1), &[0, 1]);
+        assert_eq!(store.descs_of(0), &[0]);
+        assert_eq!(store.descs_of(3), &[] as &[u32]);
+        assert_eq!(
+            tr.current(MemKind::Device),
+            store.device_bytes(),
+            "tracker and store byte accounting must agree"
+        );
+    }
+
+    #[test]
+    fn min_remote_delay_folds_remote_descriptors_only() {
+        let mut tr = Tracker::new();
+        let mut store = DescriptorStore::default();
+        store.push(
+            desc_with(
+                DescSources::Local(NodeSet::range(0, 2)),
+                NodeSet::range(0, 2),
+                ConnRule::AllToAll,
+                SynSpec::new(1.0, 1), // local delay 1 must NOT count
+                1,
+                2,
+            ),
+            &mut tr,
+        );
+        assert_eq!(store.min_remote_delay(), None);
+        store.push(
+            desc_with(
+                DescSources::RemoteImages(vec![5]),
+                NodeSet::range(0, 2),
+                ConnRule::AllToAll,
+                SynSpec::new(1.0, 3),
+                3,
+                4,
+            ),
+            &mut tr,
+        );
+        assert_eq!(store.min_remote_delay(), Some(3));
+    }
+
+    #[test]
+    fn cache_lru_eviction_is_deterministic_and_tracked() {
+        let lut = ident_lut(64);
+        let mut tr = Tracker::new();
+        let mut store = DescriptorStore::default();
+        for seed in 0..6u64 {
+            store.push(
+                desc_with(
+                    DescSources::Local(NodeSet::range(0, 16)),
+                    NodeSet::range(0, 64),
+                    ConnRule::FixedIndegree { k: 32 },
+                    SynSpec::new(1.0, 2),
+                    seed * 2 + 1,
+                    seed * 2 + 2,
+                ),
+                &mut tr,
+            );
+        }
+        let (mut sp_, mut se_) = (Vec::new(), Vec::new());
+        let one = build_fanout(store.desc(0), &lut, 64, &mut sp_, &mut se_).bytes();
+        // room for exactly three fanouts
+        let mut cache = FanoutCache::new(store.len(), one * 3 + one / 2);
+        let mut ctr = Tracker::new();
+        for id in 0..6u32 {
+            assert!(cache.touch(id).is_none());
+            let fo = build_fanout(store.desc(id), &lut, 64, &mut sp_, &mut se_);
+            cache.admit(id, fo, &mut ctr);
+        }
+        // LRU keeps the three most recently admitted: 3, 4, 5
+        assert!(cache.touch(0).is_none());
+        assert!(cache.touch(1).is_none());
+        assert!(cache.touch(2).is_none());
+        assert!(cache.touch(3).is_some());
+        assert!(cache.touch(4).is_some());
+        assert!(cache.touch(5).is_some());
+        assert!(cache.used_bytes() <= cache.cap_bytes());
+        assert_eq!(ctr.current(MemKind::Device), cache.used_bytes());
+        // touching 3 makes 4 the eviction victim on the next admit
+        assert!(cache.touch(3).is_some());
+        let fo = build_fanout(store.desc(0), &lut, 64, &mut sp_, &mut se_);
+        cache.admit(0, fo, &mut ctr);
+        assert!(cache.touch(4).is_none(), "LRU victim must be the stalest");
+        assert!(cache.touch(3).is_some());
+        assert!(cache.touch(5).is_some());
+        assert!(cache.touch(0).is_some());
+    }
+
+    #[test]
+    fn procedural_delivery_is_cache_invariant() {
+        // same spikes delivered twice: cold cache vs warmed cache must be
+        // bitwise identical (memoization cannot affect results)
+        let lut = ident_lut(32);
+        let mut tr = Tracker::new();
+        let mut store = DescriptorStore::default();
+        for seed in 0..3u64 {
+            store.push(
+                desc_with(
+                    DescSources::Local(NodeSet::range(0, 8)),
+                    NodeSet::range(0, 32),
+                    ConnRule::FixedIndegree { k: 5 },
+                    SynSpec {
+                        weight: Dist::Uniform { lo: 0.5, hi: 2.0 },
+                        delay: Dist::Uniform { lo: 1.0, hi: 4.0 },
+                        port: 0,
+                        stdp: None,
+                    },
+                    seed + 10,
+                    seed + 20,
+                ),
+                &mut tr,
+            );
+        }
+        let mut ps = ProceduralState::new(store);
+        ps.prepare(8, &mut tr);
+        let mut rb_a = RingBuffers::new(32, 6, &mut tr);
+        let mut rb_b = RingBuffers::new(32, 6, &mut tr);
+        for node in [3u32, 1, 3, 7] {
+            ps.deliver(node, 1, 0, &lut, 32, &mut rb_a, &mut tr);
+        }
+        let (hits_a, misses_a) = (ps.cache_hits, ps.cache_misses);
+        assert!(misses_a > 0);
+        for node in [3u32, 1, 3, 7] {
+            ps.deliver(node, 1, 0, &lut, 32, &mut rb_b, &mut tr);
+        }
+        assert!(ps.cache_hits > hits_a, "second pass must hit the cache");
+        for _ in 0..7 {
+            let (ea, ia) = rb_a.current();
+            let (eb, ib) = rb_b.current();
+            assert_eq!(
+                ea.iter().chain(ia).map(|x| x.to_bits()).collect::<Vec<_>>(),
+                eb.iter().chain(ib).map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+            rb_a.advance();
+            rb_b.advance();
+        }
+    }
+
+    #[test]
+    fn connectivity_parse_and_name() {
+        assert_eq!(
+            Connectivity::parse("procedural"),
+            Some(Connectivity::Procedural)
+        );
+        assert_eq!(
+            Connectivity::parse("materialized"),
+            Some(Connectivity::Materialized)
+        );
+        assert_eq!(Connectivity::parse("nope"), None);
+        assert_eq!(Connectivity::default(), Connectivity::Materialized);
+        assert_eq!(Connectivity::Procedural.name(), "procedural");
+    }
+}

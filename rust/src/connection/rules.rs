@@ -30,6 +30,63 @@ pub enum ConnRule {
     /// §0.3.5 assigned-nodes: endpoints already drawn by the distributed
     /// fixed-in-degree driver, given as (source_pos, target_pos) pairs
     AssignedNodes(Vec<(u32, u32)>),
+    /// §0.3.5 distributed fixed-in-degree, replayed from the stream seed:
+    /// a self-contained triplet stream draws, per target position, `k`
+    /// (source-rank, source-pos) pairs; the call keeps the pairs whose
+    /// drawn rank equals `sigma`, sorted ascending by (source, target).
+    ///
+    /// `state` is the raw xoshiro state of the per-(pass, τ) stream,
+    /// captured by the driver (`models/balanced.rs`) *before* any draw.
+    /// The rule consumes neither the aligned nor the local generator, so
+    /// the same call is bit-identical on every rank — and, unlike
+    /// [`ConnRule::AssignedNodes`], its descriptor is constant-size, which
+    /// is what makes procedural connectivity pay off for the balanced
+    /// model (the pairs would otherwise dominate descriptor memory).
+    TripletBucket {
+        /// raw xoshiro256** state of the triplet stream
+        state: [u64; 4],
+        /// in-degree drawn per target position
+        k: u32,
+        /// world size the source-rank draws range over
+        n_ranks: u32,
+        /// the source rank whose bucket this call materializes
+        sigma: u32,
+    },
+}
+
+/// Replay a [`ConnRule::TripletBucket`] stream, emitting this bucket's
+/// (source_pos, target_pos) pairs sorted ascending — the single
+/// implementation behind `generate`, `replay_sources` and `conn_count`,
+/// so the three can never drift on stream consumption.
+fn triplet_bucket_pairs(
+    state: [u64; 4],
+    k: u32,
+    n_ranks: u32,
+    sigma: u32,
+    n_source: usize,
+    n_target: usize,
+    mut sink: impl FnMut(u32, u32),
+) -> u64 {
+    let mut rng = Rng::from_raw_state(state, None);
+    let mut bucket: Vec<(u32, u32)> = Vec::new();
+    for j in 0..n_target as u32 {
+        for _ in 0..k {
+            // both draws always consumed, keeping the stream position
+            // identical for every sigma (Lemire rejection draws a
+            // variable number of words)
+            let sg = rng.below(n_ranks);
+            let sp = rng.below(n_source as u32);
+            if sg == sigma {
+                bucket.push((sp, j));
+            }
+        }
+    }
+    bucket.sort_unstable();
+    let n = bucket.len() as u64;
+    for (i, j) in bucket {
+        sink(i, j);
+    }
+    n
 }
 
 impl ConnRule {
@@ -41,10 +98,12 @@ impl ConnRule {
             ConnRule::FixedIndegree { .. }
                 | ConnRule::FixedTotalNumber { .. }
                 | ConnRule::AssignedNodes(_)
+                | ConnRule::TripletBucket { .. }
         )
     }
 
-    /// Number of connections the call will create (exact for every rule).
+    /// Number of connections the call will create (exact for every rule;
+    /// for [`ConnRule::TripletBucket`] this replays the stream).
     pub fn conn_count(&self, n_source: usize, n_target: usize) -> u64 {
         match self {
             ConnRule::OneToOne => n_source.min(n_target) as u64,
@@ -53,6 +112,20 @@ impl ConnRule {
             ConnRule::FixedOutdegree { k } => *k as u64 * n_source as u64,
             ConnRule::FixedTotalNumber { n } => *n,
             ConnRule::AssignedNodes(pairs) => pairs.len() as u64,
+            ConnRule::TripletBucket {
+                state,
+                k,
+                n_ranks,
+                sigma,
+            } => triplet_bucket_pairs(
+                *state,
+                *k,
+                *n_ranks,
+                *sigma,
+                n_source,
+                n_target,
+                |_, _| {},
+            ),
         }
     }
 
@@ -122,6 +195,16 @@ impl ConnRule {
                     sink(i, j);
                 }
             }
+            ConnRule::TripletBucket {
+                state,
+                k,
+                n_ranks,
+                sigma,
+            } => {
+                triplet_bucket_pairs(
+                    *state, *k, *n_ranks, *sigma, n_source, n_target, sink,
+                );
+            }
         }
     }
 
@@ -174,6 +257,24 @@ impl ConnRule {
                     sink(i);
                 }
             }
+            ConnRule::TripletBucket {
+                state,
+                k,
+                n_ranks,
+                sigma,
+            } => {
+                // the triplet stream is self-seeded: neither the aligned
+                // nor any local generator is consumed on either side
+                triplet_bucket_pairs(
+                    *state,
+                    *k,
+                    *n_ranks,
+                    *sigma,
+                    n_source,
+                    n_target,
+                    |i, _| sink(i),
+                );
+            }
         }
     }
 }
@@ -212,6 +313,131 @@ mod tests {
             7,
             3,
         );
+        assert_aligned(
+            ConnRule::TripletBucket {
+                state: Rng::new(41).raw_state().0,
+                k: 5,
+                n_ranks: 4,
+                sigma: 2,
+            },
+            9,
+            6,
+        );
+    }
+
+    /// Property test over randomized sizes/seeds: for every rule, the
+    /// sources-only replay emits exactly the full stream's source sequence
+    /// and ends the aligned generator in the same state — the invariant
+    /// procedural regeneration (and the RemoteConnect source variant)
+    /// leans on.
+    #[test]
+    fn replay_matches_generate_randomized() {
+        let mut meta = Rng::new(0xCA5E);
+        for round in 0..40 {
+            let ns = 1 + meta.below(64) as usize;
+            let nt = 1 + meta.below(64) as usize;
+            let k = 1 + meta.below(8);
+            let n = meta.below_u64(200);
+            let n_ranks = 1 + meta.below(6);
+            let rules = [
+                ConnRule::OneToOne,
+                ConnRule::AllToAll,
+                ConnRule::FixedIndegree { k },
+                ConnRule::FixedOutdegree { k },
+                ConnRule::FixedTotalNumber { n },
+                ConnRule::AssignedNodes(
+                    (0..meta.below(32))
+                        .map(|_| (meta.below(ns as u32), meta.below(nt as u32)))
+                        .collect(),
+                ),
+                ConnRule::TripletBucket {
+                    state: Rng::new(meta.next_u64()).raw_state().0,
+                    k,
+                    n_ranks,
+                    sigma: meta.below(n_ranks),
+                },
+            ];
+            for rule in rules {
+                let (ns, nt) = match rule {
+                    ConnRule::OneToOne => (ns, ns),
+                    _ => (ns, nt),
+                };
+                let seed = meta.next_u64();
+                let mut a1 = Rng::new(seed);
+                let mut a2 = Rng::new(seed);
+                let mut local = Rng::new(meta.next_u64());
+                let mut gen_src = Vec::new();
+                rule.generate(ns, nt, &mut a1, &mut local, |s, _| {
+                    gen_src.push(s)
+                });
+                let mut rep_src = Vec::new();
+                rule.replay_sources(ns, nt, &mut a2, |s| rep_src.push(s));
+                assert_eq!(gen_src, rep_src, "round {round}: {rule:?}");
+                assert_eq!(
+                    a1.raw_state().0,
+                    a2.raw_state().0,
+                    "round {round}: aligned stream positions diverged: {rule:?}"
+                );
+                assert_eq!(
+                    gen_src.len() as u64,
+                    rule.conn_count(ns, nt),
+                    "round {round}: {rule:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn triplet_bucket_partitions_the_stream_across_sigmas() {
+        // the union of every sigma's bucket is exactly the full triplet
+        // stream: each target position gets k connections world-wide, and
+        // every bucket is sorted (the AssignedNodes contract)
+        let (ns, nt, k, n_ranks) = (37usize, 11usize, 6u32, 4u32);
+        let state = Rng::new(77).raw_state().0;
+        let mut total = 0u64;
+        let mut indeg = vec![0u32; nt];
+        for sigma in 0..n_ranks {
+            let rule = ConnRule::TripletBucket {
+                state,
+                k,
+                n_ranks,
+                sigma,
+            };
+            let mut pairs = Vec::new();
+            rule.generate(ns, nt, &mut Rng::new(1), &mut Rng::new(2), |s, t| {
+                assert!((s as usize) < ns && (t as usize) < nt);
+                pairs.push((s, t));
+            });
+            assert!(pairs.windows(2).all(|w| w[0] <= w[1]), "bucket sorted");
+            for &(_, t) in &pairs {
+                indeg[t as usize] += 1;
+            }
+            total += pairs.len() as u64;
+            assert_eq!(pairs.len() as u64, rule.conn_count(ns, nt));
+        }
+        assert_eq!(total, k as u64 * nt as u64);
+        assert!(indeg.iter().all(|&d| d == k));
+    }
+
+    #[test]
+    fn triplet_bucket_ignores_passed_generators() {
+        let rule = ConnRule::TripletBucket {
+            state: Rng::new(5).raw_state().0,
+            k: 3,
+            n_ranks: 2,
+            sigma: 0,
+        };
+        let collect = |a_seed: u64, l_seed: u64| {
+            let mut out = Vec::new();
+            let mut a = Rng::new(a_seed);
+            let mut l = Rng::new(l_seed);
+            rule.generate(10, 10, &mut a, &mut l, |s, t| out.push((s, t)));
+            // neither generator may have been consumed
+            assert_eq!(a.raw_state().0, Rng::new(a_seed).raw_state().0);
+            assert_eq!(l.raw_state().0, Rng::new(l_seed).raw_state().0);
+            out
+        };
+        assert_eq!(collect(1, 2), collect(900, 901));
     }
 
     #[test]

@@ -185,12 +185,19 @@ impl Connections {
         // so a single-pass stable *counting scatter* replaces the generic
         // radix argsort (one count pass + one scatter pass per array
         // instead of up to four radix passes over a permutation). The
-        // scatter permutation is accounted as the transient device scratch
-        // — the dominant term of the Fig. 5 memory peak.
-        let scratch = (n * 4) as u64;
+        // scatter permutation and the per-node cursor are accounted as the
+        // transient device scratch — the dominant term of the Fig. 5
+        // memory peak.
+        let scratch = (n * 4 + (n_nodes + 1) * 4) as u64;
         tr.alloc(MemKind::Device, scratch);
         tr.transient_events += 1;
-        // counting pass -> CSR offsets
+        // counting pass -> CSR offsets (device-resident, tracked: the CSR
+        // is what delivery indexes at step time)
+        tr.realloc(
+            MemKind::Device,
+            (self.first_out.len() * 4) as u64,
+            ((n_nodes + 1) * 4) as u64,
+        );
         self.first_out = vec![0u32; n_nodes + 1];
         for &s in self.source.as_slice() {
             debug_assert!((s as usize) < n_nodes, "source {s} out of node space");
@@ -314,6 +321,7 @@ impl Connections {
         c.delay.extend_from_slice(&dec.vec_u16()?, tr);
         c.port.extend_from_slice(&dec.vec_u8()?, tr);
         c.first_out = dec.vec_u32()?;
+        tr.alloc(MemKind::Device, (c.first_out.len() * 4) as u64);
         let n = c.source.len();
         if c.target.len() != n || c.weight.len() != n || c.delay.len() != n || c.port.len() != n
         {
@@ -345,13 +353,16 @@ impl Connections {
         Ok(c)
     }
 
-    /// Total device bytes of the SoA arrays.
+    /// Total device bytes of the SoA arrays, the CSR offsets built by
+    /// [`Connections::sort_by_source`], and the per-connection rule-id
+    /// slice (when materialized).
     pub fn device_bytes(&self) -> u64 {
         self.source.bytes()
             + self.target.bytes()
             + self.weight.bytes()
             + self.delay.bytes()
             + self.port.bytes()
+            + (self.first_out.len() * 4) as u64
             + self.rule.as_ref().map_or(0, |r| r.bytes())
     }
 }

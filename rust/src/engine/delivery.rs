@@ -33,6 +33,7 @@
 //! per-cell addition order is exactly the naive order.
 
 use crate::connection::Connections;
+use crate::memory::{MemKind, Tracker};
 use crate::node::{NodeKind, NodeSpace, RingBuffers};
 use crate::plasticity::PlasticityEngine;
 
@@ -55,8 +56,11 @@ pub struct PlasticLink {
 }
 
 /// Prepared per-node delivery layout (derived state: rebuilt at
-/// `prepare()` and at snapshot restore, never persisted or tracked —
-/// like the node→state LUT it replaces in the hot loop).
+/// `prepare()` and at snapshot restore, never persisted — like the
+/// node→state LUT it replaces in the hot loop). Its device residency IS
+/// tracked ([`DeliveryPlan::bytes`]): the plan mirrors the connection
+/// store entry-for-entry, so omitting it would halve the apparent
+/// per-rank connectivity footprint in `fig5_memory_peak`.
 #[derive(Debug, Default)]
 pub struct DeliveryPlan {
     /// port-baked destination `port · n_state + state`, plan order
@@ -194,6 +198,21 @@ impl DeliveryPlan {
     pub fn n_runs(&self) -> usize {
         self.runs.len()
     }
+
+    /// Device bytes of the plan: entry SoA, per-node CSR offsets, run
+    /// directory, and plastic side lists. Registered with the tracker by
+    /// the owner at build time so the procedural-vs-materialized memory
+    /// comparison counts delivery state on both sides.
+    pub fn bytes(&self) -> u64 {
+        (self.dest.len() * 4
+            + self.weight.len() * 4
+            + self.delay.len() * 2
+            + self.first.len() * 4
+            + self.runs.len() * std::mem::size_of::<Run>()
+            + self.run_first.len() * 4
+            + self.plastic.len() * std::mem::size_of::<PlasticLink>()
+            + self.plastic_first.len() * 4) as u64
+    }
 }
 
 /// Slot-bucketed batch of delivery runs: the step's (or the exchange
@@ -206,9 +225,33 @@ impl DeliveryPlan {
 pub struct DeliveryQueue {
     /// per ring slot: queued `(start, end, mult)` runs
     buckets: Vec<Vec<(u32, u32, u16)>>,
+    /// bytes currently registered with the memory tracker
+    tracked: u64,
 }
 
 impl DeliveryQueue {
+    /// Host bytes held by the queue's buckets (capacities, not lengths —
+    /// the buckets persist across steps at their high-water capacity).
+    pub fn bytes(&self) -> u64 {
+        let inner: usize = self
+            .buckets
+            .iter()
+            .map(|b| b.capacity() * std::mem::size_of::<(u32, u32, u16)>())
+            .sum();
+        (self.buckets.capacity() * std::mem::size_of::<Vec<(u32, u32, u16)>>() + inner) as u64
+    }
+
+    /// Re-register the queue's current footprint with the tracker. Only
+    /// touches the tracker when the byte count actually changed — an
+    /// unconditional realloc would momentarily double-count and inflate
+    /// the peak on every call.
+    pub fn sync_tracker(&mut self, tr: &mut Tracker) {
+        let now = self.bytes();
+        if now != self.tracked {
+            tr.realloc(MemKind::Host, self.tracked, now);
+            self.tracked = now;
+        }
+    }
     /// Grow to cover `slots` ring slots (idempotent; buckets persist
     /// across steps, so this is allocation-free at steady state).
     pub fn ensure_slots(&mut self, slots: usize) {
@@ -282,7 +325,6 @@ pub fn merge_planes(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::memory::Tracker;
     use crate::util::rng::Rng;
 
     /// 3 neurons + 1 device; node→state identity for the neurons.
@@ -291,6 +333,30 @@ mod tests {
         nodes.create_neurons(0, 3);
         nodes.create_device(0);
         (nodes, vec![0, 1, 2, u32::MAX])
+    }
+
+    #[test]
+    fn queue_bytes_tracked_without_peak_inflation() {
+        let mut tr = Tracker::new();
+        let mut q = DeliveryQueue::default();
+        q.sync_tracker(&mut tr);
+        assert_eq!(tr.current(MemKind::Host), 0);
+        q.ensure_slots(8);
+        for _ in 0..100 {
+            q.push(3, 0, 10, 1);
+        }
+        q.sync_tracker(&mut tr);
+        let b = q.bytes();
+        assert!(b > 0);
+        assert_eq!(tr.current(MemKind::Host), b);
+        let peak = tr.peak(MemKind::Host);
+        // repeated syncs with unchanged capacity must not move the peak
+        // (an unconditional realloc would double-count old + new)
+        for _ in 0..10 {
+            q.sync_tracker(&mut tr);
+        }
+        assert_eq!(tr.current(MemKind::Host), b);
+        assert_eq!(tr.peak(MemKind::Host), peak);
     }
 
     #[test]

@@ -6,7 +6,10 @@
 
 use crate::comm::Communicator;
 use crate::connection::offboard::{HostConn, OffboardBuilder};
-use crate::connection::{ConnRule, Connections, NodeSet, SynSpec};
+use crate::connection::{
+    ConnCallDescriptor, ConnRule, Connections, Connectivity, DescSources, DescriptorStore,
+    NodeSet, ProceduralState, SynSpec,
+};
 use crate::memory::{MemKind, Tracker};
 use crate::node::device::{PoissonGenerator, SpikeRecorder};
 use crate::node::{LifParams, NodeKind, NodeSpace, RingBuffers};
@@ -48,6 +51,12 @@ pub struct SimConfig {
     /// (DESIGN.md §13); `None` disables the whole layer. Not persisted in
     /// snapshots — telemetry is per-run, not simulation state.
     pub obs: Option<crate::obs::ObsConfig>,
+    /// static-connectivity representation (DESIGN.md §16): `Materialized`
+    /// stores every synapse; `Procedural` records connect calls as compact
+    /// RNG-seeded descriptors and rematerializes a neuron's fanout when it
+    /// spikes. Plastic, device-sourced and offboard-built synapses are
+    /// always materialized. Incompatible with `offboard`.
+    pub connectivity: Connectivity,
 }
 
 impl Default for SimConfig {
@@ -63,6 +72,7 @@ impl Default for SimConfig {
             offboard: false,
             exchange_interval: None,
             obs: None,
+            connectivity: Connectivity::Materialized,
         }
     }
 }
@@ -86,6 +96,11 @@ pub struct SimResult {
     pub map_entries: u64,
     pub device_peak: u64,
     pub device_current: u64,
+    /// device bytes held by connectivity state at the end of the run:
+    /// materialized store + delivery plan, plus (procedural mode) the
+    /// descriptor store and the current fanout-cache residency — the
+    /// quantity the procedural mode exists to shrink
+    pub conn_bytes: u64,
     /// host-memory peak/current from `memory/tracker.rs` (per rank)
     pub host_peak: u64,
     pub host_current: u64,
@@ -152,7 +167,8 @@ pub struct Simulator {
     /// prepared delivery layout: per-node (delay, port)-sorted runs with
     /// port-baked destinations + creation-order plastic links (DESIGN.md
     /// §14). Derived state — rebuilt at `prepare()` and snapshot restore,
-    /// never persisted, untracked (like `state_lut` and the scratch).
+    /// never persisted; its device residency is tracked (it is the bulk of
+    /// a materialized rank's connectivity footprint).
     pub(super) plan: DeliveryPlan,
     /// node index -> state index (u32::MAX for non-neurons); built at prepare
     pub(super) state_lut: Vec<u32>,
@@ -160,6 +176,12 @@ pub struct Simulator {
     /// owns the plastic-synapse index, traces, arrival events and the
     /// per-step deposit plane (DESIGN.md §12)
     pub(super) plasticity: Option<PlasticityEngine>,
+    /// procedural connectivity (`Some` iff `cfg.connectivity` is
+    /// [`Connectivity::Procedural`]): the descriptor store filled by
+    /// connect calls, plus the fanout cache and regeneration counters.
+    /// The store is persisted in snapshots (format v4); the node index
+    /// and cache are derived state, rebuilt by `ProceduralState::prepare`.
+    pub(super) procedural: Option<ProceduralState>,
     /// persistent hot-loop buffers (see [`StepScratch`]); sized at prepare
     pub(super) scratch: StepScratch,
     /// observability state (`Some` iff `cfg.obs` is set; built at
@@ -177,6 +199,11 @@ pub struct Simulator {
 impl Simulator {
     /// Initialization phase: simulator state, communicator binding.
     pub fn new(comm: Box<dyn Communicator>, cfg: SimConfig) -> Self {
+        assert!(
+            !(cfg.offboard && cfg.connectivity == Connectivity::Procedural),
+            "the offboard construction baseline materializes every synapse \
+             on the host and cannot run with procedural connectivity"
+        );
         let mut timer = PhaseTimer::new();
         timer.enter(Phase::Initialization);
         let rank = comm.rank();
@@ -184,6 +211,8 @@ impl Simulator {
         let remote = RemoteState::new(cfg.seed, rank, n_ranks, cfg.level, cfg.xi);
         let local_rng = Rng::stream(cfg.seed, &[0x6C6F63616C, rank as u64]); // "local"
         let offboard_local = cfg.offboard.then(OffboardBuilder::new);
+        let procedural = (cfg.connectivity == Connectivity::Procedural)
+            .then(|| ProceduralState::new(DescriptorStore::default()));
         let record = cfg.record_spikes;
         let mut sim = Self {
             cfg,
@@ -206,6 +235,7 @@ impl Simulator {
             plan: DeliveryPlan::default(),
             state_lut: Vec::new(),
             plasticity: None,
+            procedural,
             scratch: StepScratch::default(),
             obs: None,
             step_times: StepTimes::default(),
@@ -274,6 +304,54 @@ impl Simulator {
             "the offboard construction baseline does not support plastic synapses"
         );
         self.timer.enter(Phase::LocalConnection);
+        // procedural mode records neuron-sourced static calls as
+        // descriptors; plastic calls and device-sourced calls (delivered
+        // outside the spike path) stay materialized
+        let descriptor_eligible = self.procedural.is_some()
+            && syn.stdp.is_none()
+            && s.iter()
+                .all(|n| matches!(self.nodes.kind(n), NodeKind::Neuron { .. }));
+        if descriptor_eligible {
+            // capture-then-replay (DESIGN.md §16): fork the source stream
+            // off the local one exactly as the materialized path below
+            // does, capture both raw states, then consume the same
+            // randomness a materialized build would — first the full pair
+            // stream, then one parameter draw per pair — so later calls
+            // see an identical generator and the descriptor replays
+            // bit-for-bit
+            let src_seed = self.local_rng.next_u64();
+            let (src_state, src_gauss) = Rng::new(src_seed).raw_state();
+            let (local_state, local_gauss) = self.local_rng.raw_state();
+            let mut n_conns = 0u64;
+            {
+                let mut src_rng = Rng::new(src_seed);
+                rule.generate(s.len(), t.len(), &mut src_rng, &mut self.local_rng, |_, _| {
+                    n_conns += 1;
+                });
+            }
+            if syn.weight.is_random() || syn.delay.is_random() {
+                for _ in 0..n_conns {
+                    syn.draw(&mut self.local_rng);
+                }
+            }
+            let ps = self.procedural.as_mut().expect("checked eligible above");
+            ps.store.push(
+                ConnCallDescriptor {
+                    sources: DescSources::Local(s.clone()),
+                    targets: t.clone(),
+                    rule: rule.clone(),
+                    syn: *syn,
+                    src_state,
+                    src_gauss,
+                    local_state,
+                    local_gauss,
+                    n_conns,
+                },
+                &mut self.tracker,
+            );
+            self.timer.stop();
+            return;
+        }
         let conn_start = self.conns.len();
         // local draws use the rank-private generator; the rule API takes
         // separate source/target generators (needed for the aligned remote
@@ -368,6 +446,39 @@ impl Simulator {
             }
         }
         if me == tgt_rank {
+            // procedural mode: static remote calls become descriptors with
+            // image-neuron sources; plastic remote synapses stay
+            // materialized (the STDP engine owns their weights)
+            if self.procedural.is_some() && syn.stdp.is_none() {
+                let call = self.remote.connect_target_procedural(
+                    src_rank,
+                    s,
+                    t,
+                    rule,
+                    syn,
+                    group,
+                    &mut self.nodes,
+                    &mut self.local_rng,
+                    &mut self.tracker,
+                );
+                let ps = self.procedural.as_mut().expect("checked above");
+                ps.store.push(
+                    ConnCallDescriptor {
+                        sources: DescSources::RemoteImages(call.images),
+                        targets: t.clone(),
+                        rule: rule.clone(),
+                        syn: *syn,
+                        src_state: call.src_state,
+                        src_gauss: call.src_gauss,
+                        local_state: call.local_state,
+                        local_gauss: call.local_gauss,
+                        n_conns: call.outcome.conns_created,
+                    },
+                    &mut self.tracker,
+                );
+                self.timer.stop();
+                return;
+            }
             let conn_start = self.conns.len();
             let out = self.remote.connect_target(
                 src_rank,
@@ -437,6 +548,10 @@ impl Simulator {
         let m = self.nodes.m() as usize;
         self.conns.sort_by_source(m, &mut self.tracker);
         self.remote.prepare(m, &mut self.tracker);
+        if let Some(ps) = self.procedural.as_mut() {
+            // node → descriptor index + fanout cache sizing
+            ps.prepare(m as u32, &mut self.tracker);
+        }
 
         self.alloc_level_structures();
         self.build_chunks();
@@ -462,6 +577,7 @@ impl Simulator {
             self.n_state,
             self.plasticity.as_ref(),
         );
+        self.tracker.alloc(MemKind::Device, self.plan.bytes());
 
         self.buffers = Some(RingBuffers::new(
             self.n_state as usize,
@@ -549,6 +665,7 @@ impl Simulator {
                     sample_interval: obs.cfg.sample_interval,
                     max_delay_steps: self.cfg.max_delay_steps,
                     record_spikes: self.cfg.record_spikes,
+                    connectivity: self.cfg.connectivity.name().to_string(),
                     transport: self.comm.transport_name().to_string(),
                     endpoints: self.comm.endpoints(),
                 };
@@ -568,11 +685,24 @@ impl Simulator {
     pub(super) fn min_remote_delay_local(&self) -> Option<u16> {
         let src = self.conns.source.as_slice();
         let del = self.conns.delay.as_slice();
-        src.iter()
+        let materialized = src
+            .iter()
             .zip(del.iter())
             .filter(|&(&s, _)| self.nodes.is_image(s))
             .map(|(_, &d)| d)
-            .min()
+            .min();
+        // procedural remote descriptors contribute their spec's lower
+        // bound (their delays are not drawn until a spike arrives; the
+        // bound is what the SPMD fold used, so the assert below still
+        // certifies the batching interval)
+        let procedural = self
+            .procedural
+            .as_ref()
+            .and_then(|p| p.store.min_remote_delay());
+        match (materialized, procedural) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
     }
 
     /// Resolve the effective exchange-batching interval from the minimum
@@ -722,10 +852,17 @@ impl Simulator {
             model_time_ms,
             n_neurons: self.nodes.n_neurons() as u64,
             n_images: self.nodes.n_images() as u64,
-            n_connections: self.conns.len() as u64,
+            n_connections: self.conns.len() as u64
+                + self.procedural.as_ref().map_or(0, |p| p.store.total_conns()),
             map_entries: self.remote.total_map_entries() as u64,
             device_peak: tr.peak(MemKind::Device),
             device_current: tr.current(MemKind::Device),
+            conn_bytes: self.conns.device_bytes()
+                + self.plan.bytes()
+                + self
+                    .procedural
+                    .as_ref()
+                    .map_or(0, |p| p.store.device_bytes() + p.cache_used_bytes()),
             host_peak: tr.peak(MemKind::Host),
             host_current: tr.current(MemKind::Host),
             spikes: self.recorder.events.clone(),

@@ -13,8 +13,10 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::comm::Communicator;
-use crate::connection::Connections;
-use crate::memory::Tracker;
+use crate::connection::{
+    Connections, Connectivity, DescSources, DescriptorStore, ProceduralState,
+};
+use crate::memory::{MemKind, Tracker};
 use crate::node::device::{PoissonGenerator, SpikeRecorder};
 use crate::node::{NodeKind, NodeSpace, RingBuffers};
 use crate::plasticity::PlasticityEngine;
@@ -82,6 +84,10 @@ fn decode_config(dec: &mut Decoder) -> Result<SimConfig> {
         // re-enables it by setting `cfg.obs` before `prepare()`-equivalent
         // use, never from the snapshot
         obs: None,
+        // appended at the very end of CONF in v4; the caller overrides
+        // this after reading the trailing byte (v2/v3 files are
+        // materialized by construction)
+        connectivity: Connectivity::Materialized,
     })
 }
 
@@ -123,6 +129,12 @@ impl Simulator {
         e.u32(self.n_state);
         encode_config(&self.cfg, &mut e);
         e.u16(self.exchange_every);
+        // v4 append: connectivity mode — last in CONF, so a v3 payload is
+        // a strict prefix of a v4 one
+        e.u8(match self.cfg.connectivity {
+            Connectivity::Materialized => 0,
+            Connectivity::Procedural => 1,
+        });
         w.section(tags::CONF, e.into_bytes());
 
         // NODE — node index space
@@ -206,6 +218,15 @@ impl Simulator {
             w.section(tags::PLAS, e.into_bytes());
         }
 
+        // PROC — procedural connect-call descriptors (v4; present iff the
+        // run is procedural — the node index and fanout cache are derived
+        // state, rebuilt at restore)
+        if let Some(ps) = self.procedural.as_ref() {
+            let mut e = Encoder::new();
+            ps.store.snapshot_encode(&mut e);
+            w.section(tags::PROC, e.into_bytes());
+        }
+
         Ok(w.finish())
     }
 
@@ -253,8 +274,15 @@ impl Simulator {
         let n_ranks = dec.u64()? as usize;
         let step_now = dec.u32()?;
         let n_state = dec.u32()?;
-        let cfg = decode_config(&mut dec)?;
+        let mut cfg = decode_config(&mut dec)?;
         let exchange_every = dec.u16()?;
+        if reader.version() >= 4 {
+            cfg.connectivity = match dec.u8()? {
+                0 => Connectivity::Materialized,
+                1 => Connectivity::Procedural,
+                tag => bail!("unknown connectivity tag {tag} in snapshot config"),
+            };
+        }
         dec.finish()?;
         if exchange_every == 0 {
             bail!("snapshot carries an exchange interval of 0 (must be >= 1)");
@@ -358,6 +386,24 @@ impl Simulator {
         let local_rng = dec.rng()?;
         dec.finish()?;
 
+        // PROC — descriptor store, present exactly when the run was
+        // procedural (CSR index + fanout cache are rebuilt below)
+        let procedural = match (cfg.connectivity, reader.try_section(tags::PROC)) {
+            (Connectivity::Materialized, None) => None,
+            (Connectivity::Procedural, Some(payload)) => {
+                let mut dec = Decoder::new(payload);
+                let store = DescriptorStore::snapshot_decode(&mut dec, &mut tracker)?;
+                dec.finish()?;
+                Some(ProceduralState::new(store))
+            }
+            (Connectivity::Procedural, None) => {
+                bail!("snapshot config is procedural but the snapshot has no PROC section")
+            }
+            (Connectivity::Materialized, Some(_)) => {
+                bail!("snapshot has a PROC section but a materialized config")
+            }
+        };
+
         // Cross-section consistency: the checksums only catch accidental
         // corruption, not a buggy or mismatched writer. Every structure
         // this rank indexes unchecked in the step hot loop — CSR offsets,
@@ -441,6 +487,20 @@ impl Simulator {
                 bail!("Poisson device bound to node {} outside node space of {m}", g.node);
             }
         }
+        if let Some(ps) = procedural.as_ref() {
+            for id in 0..ps.store.len() as u32 {
+                let d = ps.store.desc(id);
+                let src_ok = match &d.sources {
+                    DescSources::Local(s) => s.iter().all(|n| n < m),
+                    DescSources::RemoteImages(l) => l.iter().all(|&n| n == u32::MAX || n < m),
+                };
+                if !src_ok || d.targets.iter().any(|n| n >= m) {
+                    bail!(
+                        "procedural descriptor {id} references nodes outside node space of {m}"
+                    );
+                }
+            }
+        }
         if remote_buffers.is_some() != (nodes.n_images() > 0) {
             bail!(
                 "snapshot {} a remote ring plane but the node space has {} image neurons",
@@ -471,6 +531,7 @@ impl Simulator {
             plan: Default::default(),
             state_lut: Vec::new(),
             plasticity: None,
+            procedural,
             scratch: Default::default(),
             obs: None,
             step_times: Default::default(),
@@ -484,6 +545,10 @@ impl Simulator {
         sim.rebuild_state_lut();
         sim.alloc_level_structures();
         sim.init_scratch();
+        if let Some(ps) = sim.procedural.as_mut() {
+            // node → descriptor index + fanout cache (derived, like the plan)
+            ps.prepare(sim.nodes.m(), &mut sim.tracker);
+        }
         // plasticity: rebuild the index structures from CONN, then restore
         // the mutable state (traces + pending arrival events) from PLAS
         match (sim.conns.has_plasticity(), reader.try_section(tags::PLAS)) {
@@ -520,6 +585,7 @@ impl Simulator {
             sim.n_state,
             sim.plasticity.as_ref(),
         );
+        sim.tracker.alloc(MemKind::Device, sim.plan.bytes());
         sim.timer.stop();
         Ok(sim)
     }

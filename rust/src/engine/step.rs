@@ -97,6 +97,38 @@ impl Simulator {
         }
     }
 
+    /// Snapshot of the procedural regeneration counters (`regen_ns`,
+    /// `cache_hits`, `cache_misses`), taken before a delivery block so its
+    /// elapsed time can be split into `deliver` + `regen` and the cache
+    /// counter deltas flushed to the metrics registry.
+    #[inline]
+    fn regen_marks(&self) -> (u64, u64, u64) {
+        self.procedural
+            .as_ref()
+            .map_or((0, 0, 0), |p| (p.regen_ns, p.cache_hits, p.cache_misses))
+    }
+
+    /// Charge a delivery block's elapsed time: the rematerialization time
+    /// accumulated by `ProceduralState::deliver` since `marks` goes to the
+    /// `regen` phase, the remainder to `deliver`. Materialized mode
+    /// reduces to a plain `deliver` charge (no zero-valued `regen`
+    /// samples in the histograms).
+    fn note_deliver_split(&mut self, elapsed: std::time::Duration, marks: (u64, u64, u64)) {
+        let Some(p) = self.procedural.as_ref() else {
+            self.note_phase(StepPhase::Deliver, elapsed);
+            return;
+        };
+        let regen = std::time::Duration::from_nanos(p.regen_ns - marks.0);
+        let (hits, misses) = (p.cache_hits - marks.1, p.cache_misses - marks.2);
+        self.note_phase(StepPhase::Deliver, elapsed.saturating_sub(regen));
+        self.note_phase(StepPhase::Regen, regen);
+        if let Some(o) = self.obs.as_mut() {
+            o.registry.add(crate::obs::CounterId::RegenCacheHits, hits);
+            o.registry
+                .add(crate::obs::CounterId::RegenCacheMisses, misses);
+        }
+    }
+
     /// One integration step of the pipeline described in the module docs.
     pub fn step_once(&mut self) -> anyhow::Result<()> {
         assert!(self.is_prepared(), "call prepare() before stepping");
@@ -257,14 +289,19 @@ impl Simulator {
         // ---- deliver (local): own spikes through the delivery plan —
         // plastic links enqueue arrival events in creation order, static
         // runs batch into the slot-bucketed queue and drain as streaming
-        // contiguous adds
+        // contiguous adds. In procedural mode static fanouts are
+        // regenerated (or cache-served) and accumulated directly; the
+        // spiking nodes then have no materialized runs, so the queue path
+        // is a no-op and the two modes never interleave on a cell.
         let t0 = Instant::now();
+        let regen0 = self.regen_marks();
         {
             let rb = self.buffers.as_mut().unwrap();
             let plan = &self.plan;
             let q = &mut self.scratch.local_q;
             q.ensure_slots(rb.n_slots());
             let mut pl = self.plasticity.as_mut();
+            let mut ps = self.procedural.as_mut();
             let emit = self.step_now;
             for &node in &self.scratch.spiking {
                 if let Some(p) = pl.as_deref_mut() {
@@ -277,10 +314,22 @@ impl Simulator {
                     debug_assert!(rb.supports(run.delay));
                     q.push(rb.slot_of(run.delay), run.start, run.end, 1);
                 }
+                if let Some(p) = ps.as_deref_mut() {
+                    p.deliver(
+                        node,
+                        1,
+                        0,
+                        &self.state_lut,
+                        self.n_state,
+                        rb,
+                        &mut self.tracker,
+                    );
+                }
             }
             q.drain_into(rb, plan);
+            q.sync_tracker(&mut self.tracker);
         }
-        self.note_phase(StepPhase::Deliver, t0.elapsed());
+        self.note_deliver_split(t0.elapsed(), regen0);
 
         // ---- exchange + deliver (remote), once per interval
         self.scratch.interval_pos += 1;
@@ -418,6 +467,7 @@ impl Simulator {
 
         // ---- delivery enqueue in canonical (lag, σ, group-member) order
         let t0 = Instant::now();
+        let regen0 = self.regen_marks();
         let mut pkt_cursor = std::mem::take(&mut self.scratch.pkt_cursor);
         let mut coll_cursor = std::mem::take(&mut self.scratch.coll_cursor);
         pkt_cursor.clear();
@@ -498,7 +548,8 @@ impl Simulator {
         if let Some(rb) = self.remote_buffers.as_mut() {
             self.scratch.remote_q.drain_into(rb, &self.plan);
         }
-        self.note_phase(StepPhase::Deliver, t0.elapsed());
+        self.scratch.remote_q.sync_tracker(&mut self.tracker);
+        self.note_deliver_split(t0.elapsed(), regen0);
 
         // recycle all buffers: incoming packets become the next interval's
         // outgoing packets (steady-state allocation-free)
@@ -531,12 +582,13 @@ impl Simulator {
     ) {
         let rb = self
             .remote_buffers
-            .as_ref()
+            .as_mut()
             .expect("remote spike record arrived on a rank without image neurons");
         let plan = &self.plan;
         let q = &mut self.scratch.remote_q;
         q.ensure_slots(rb.n_slots());
         let mut pl = self.plasticity.as_mut();
+        let mut ps = self.procedural.as_mut();
         for &(image, mult, lag) in staged {
             debug_assert!(self.nodes.is_image(image));
             let shift = lag as i32 + 1 - interval_len as i32;
@@ -558,6 +610,21 @@ impl Simulator {
                     "shifted delay {d} outside the ring (interval exceeds a remote delay?)"
                 );
                 q.push(rb.slot_of(d as u16), run.start, run.end, mult);
+            }
+            // procedural: the image's static fanout accumulates directly,
+            // re-slotted by the same lag shift; records arrive here in
+            // canonical order, and `runs_of(image)` is empty in this mode,
+            // so per-cell summation order matches the materialized drain
+            if let Some(p) = ps.as_deref_mut() {
+                p.deliver(
+                    image,
+                    mult,
+                    shift,
+                    &self.state_lut,
+                    self.n_state,
+                    rb,
+                    &mut self.tracker,
+                );
             }
         }
     }

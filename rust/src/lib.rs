@@ -22,6 +22,17 @@
 //! carry the plastic state (format v3; v2 files still load as
 //! all-static).
 //!
+//! Static connectivity can be *procedural*: with
+//! [`engine::SimConfig::connectivity`] set to
+//! [`connection::Connectivity::Procedural`] (CLI: `--connectivity
+//! procedural`), connect calls are recorded as compact RNG-seeded
+//! descriptors and each spiking neuron's fanout is regenerated on demand
+//! behind a bounded LRU cache, instead of materializing every synapse at
+//! construction — breaking the per-rank connectivity memory wall at
+//! scale. Spike trains are bit-identical to the materialized default;
+//! plastic synapses stay materialized; snapshots carry the descriptors
+//! (format v4; v2/v3 files still load) (`DESIGN.md` §16).
+//!
 //! Every run can be observed without perturbing it: setting
 //! [`engine::SimConfig::obs`] (CLI: `--obs-dir` / `--obs-interval`)
 //! turns on the [`obs`] subsystem — an allocation-free metrics registry

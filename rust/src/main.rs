@@ -7,6 +7,7 @@
 //!   nestgpu balanced  [--ranks N] [--scale S] [--k-scale K] [--level 0..3]
 //!                     [--t-ms T] [--seed X] [--p2p] [--pjrt] [--offboard]
 //!                     [--exchange-interval I] [--stdp ...]
+//!                     [--connectivity materialized|procedural]
 //!   nestgpu mam       [--ranks N] [--n-scale S] [--k-scale K] [--chi C]
 //!                     [--t-ms T] [--seed X] [--pjrt] [--offboard]
 //!                     [--exchange-interval I]
@@ -52,6 +53,14 @@
 //! steps (I is clamped to the minimum remote synaptic delay; 0 or absent =
 //! auto, i.e. the min delay itself — bit-identical to per-step exchange).
 //!
+//! `--connectivity procedural` (DESIGN.md §16) keeps static connectivity
+//! as compact connect-call descriptors and regenerates each spiking
+//! neuron's fanout from the captured RNG state at delivery time, instead
+//! of materializing every synapse at construction. Spike trains are
+//! bit-identical to the default `materialized` mode; plastic (STDP)
+//! synapses stay materialized in both modes. Accepted by `balanced`,
+//! `phases` and `snapshot save` (the mode travels inside snapshots).
+//!
 //! `--stdp` enables trace-based STDP on the recurrent excitatory synapses
 //! of the balanced model (DESIGN.md §12). Knobs: `--stdp-lambda L`
 //! (learning rate), `--stdp-alpha A` (depression asymmetry),
@@ -64,6 +73,7 @@ use std::path::PathBuf;
 use std::time::Duration;
 
 use nestgpu::comm::{Communicator, SocketComm, SocketConfig};
+use nestgpu::connection::Connectivity;
 use nestgpu::engine::{SimConfig, SimResult, Simulator};
 use nestgpu::harness::{
     estimate_cluster, free_loopback_addr, run_cluster, run_cluster_from_snapshot,
@@ -272,12 +282,33 @@ fn world_hash_of(results: &[SimResult]) -> u64 {
     combine_rank_hashes(&hashes)
 }
 
-fn sim_config(args: &Args) -> SimConfig {
+/// The `--connectivity` knob (default: materialized). Rejected early when
+/// combined with `--offboard` — the offboard construction baseline always
+/// materializes, so the combination would only panic inside a rank thread.
+fn connectivity(args: &Args) -> anyhow::Result<Connectivity> {
+    let mode = match args.flags.get("connectivity") {
+        None => Connectivity::Materialized,
+        Some(v) => Connectivity::parse(v).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown --connectivity mode '{v}' (materialized | procedural)"
+            )
+        })?,
+    };
+    if mode == Connectivity::Procedural && args.has("offboard") {
+        anyhow::bail!(
+            "--connectivity procedural cannot be combined with --offboard \
+             (the offboard construction baseline materializes every synapse)"
+        );
+    }
+    Ok(mode)
+}
+
+fn sim_config(args: &Args) -> anyhow::Result<SimConfig> {
     sim_config_labeled(args, "cli")
 }
 
-fn sim_config_labeled(args: &Args, label: &str) -> SimConfig {
-    SimConfig {
+fn sim_config_labeled(args: &Args, label: &str) -> anyhow::Result<SimConfig> {
+    Ok(SimConfig {
         seed: args.get("seed", 123u64),
         level: GpuMemLevel::from_index(args.get("level", 2usize)).unwrap_or_default(),
         backend: backend(args),
@@ -287,9 +318,10 @@ fn sim_config_labeled(args: &Args, label: &str) -> SimConfig {
             0 => None, // auto: once per minimum remote synaptic delay
             k => Some(k),
         },
+        connectivity: connectivity(args)?,
         obs: obs_config(args, label),
         ..Default::default()
-    }
+    })
 }
 
 fn print_results(results: &[SimResult], t_ms: f64) {
@@ -386,7 +418,7 @@ fn cmd_balanced(args: &Args) -> anyhow::Result<()> {
     let bal = balanced_config(args);
     check_stdp(args, &bal)?;
     let t_ms = args.get("t-ms", 100.0f64);
-    let cfg = sim_config_labeled(args, "balanced");
+    let cfg = sim_config_labeled(args, "balanced")?;
     if let Some(scfg) = socket_config(args)? {
         let comm = connect_socket(&scfg)?;
         let model = {
@@ -399,11 +431,12 @@ fn cmd_balanced(args: &Args) -> anyhow::Result<()> {
         return Ok(());
     }
     println!(
-        "balanced: {ranks} ranks x {} neurons, K_in {}, {} exchange, level {}{}",
+        "balanced: {ranks} ranks x {} neurons, K_in {}, {} exchange, level {}, {} connectivity{}",
         bal.neurons_per_rank(),
         bal.kin_e() + bal.kin_i(),
         if bal.collective { "collective" } else { "p2p" },
         cfg.level.name(),
+        cfg.connectivity.name(),
         if bal.stdp.is_some() { ", STDP on E synapses" } else { "" },
     );
     let results = run_cluster(
@@ -434,7 +467,7 @@ fn cmd_mam(args: &Args) -> anyhow::Result<()> {
         m.total_neurons(),
         mam_cfg.chi
     );
-    let cfg = sim_config_labeled(args, "mam");
+    let cfg = sim_config_labeled(args, "mam")?;
     let results = run_cluster(
         ranks,
         &cfg,
@@ -461,7 +494,7 @@ fn cmd_estimate(args: &Args) -> anyhow::Result<()> {
         "estimation: {live} live ranks dry-running a {ranks}-rank world \
          (construction + preparation only)"
     );
-    let cfg = sim_config(args);
+    let cfg = sim_config(args)?;
     let results = estimate_cluster(
         live,
         ranks,
@@ -480,9 +513,10 @@ fn cmd_phases(args: &Args) -> anyhow::Result<()> {
     let bal = balanced_config(args);
     check_stdp(args, &bal)?;
     let t_ms = args.get("t-ms", 100.0f64);
-    let cfg = sim_config_labeled(args, "phases");
+    let cfg = sim_config_labeled(args, "phases")?;
     let stdp_on = bal.stdp.is_some();
     let protocol = if bal.collective { "collective" } else { "p2p" };
+    let conn_mode = cfg.connectivity.name();
     let scfg = socket_config(args)?;
     let world_ranks = scfg.as_ref().map_or(ranks, |s| s.world);
     // socket mode: this process is one rank — `per_rank` carries only the
@@ -537,6 +571,7 @@ fn cmd_phases(args: &Args) -> anyhow::Result<()> {
         ),
         ("protocol", Json::str(protocol)),
         ("stdp", Json::Bool(stdp_on)),
+        ("connectivity", Json::str(conn_mode)),
         ("per_rank", Json::Arr(per_rank)),
     ]);
     let text = out.to_string();
@@ -652,6 +687,13 @@ fn cmd_report(argv: &[String]) -> anyhow::Result<()> {
             m.get("git_rev").and_then(|v| v.as_str()).unwrap_or("?"),
             m.get("created").and_then(|v| v.as_str()).unwrap_or("?"),
         );
+        // pre-v16 manifests carry no connectivity field; they were all
+        // materialized by construction
+        let connectivity = m
+            .get("connectivity")
+            .and_then(|v| v.as_str())
+            .unwrap_or("materialized");
+        println!("connectivity: {connectivity}");
         let transport = m.get("transport").and_then(|v| v.as_str()).unwrap_or("thread");
         let endpoints: Vec<&str> = m
             .get("endpoints")
@@ -738,7 +780,7 @@ fn cmd_snapshot(argv: &[String]) -> anyhow::Result<()> {
             // model time to propagate before checkpointing; 0 = pure
             // construction cache (save right after prepare())
             let t_ms = args.get("t-ms", 0.0f64);
-            let cfg = sim_config(&args);
+            let cfg = sim_config(&args)?;
             if let Some(scfg) = socket_config(&args)? {
                 let comm = connect_socket(&scfg)?;
                 let model = {
@@ -889,6 +931,58 @@ fn cmd_info() {
             "missing — run `make artifacts`"
         }
     );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn phases_doc(phases: &[(&str, f64)]) -> Json {
+        let obj: Vec<(&str, Json)> =
+            phases.iter().map(|&(n, v)| (n, Json::num(v))).collect();
+        Json::obj(vec![(
+            "per_rank",
+            Json::Arr(vec![Json::obj(vec![("step_phases_ns", Json::obj(obj))])]),
+        )])
+    }
+
+    /// `--compare` must tolerate baselines whose phase set differs from
+    /// the current run's — e.g. a JSON captured before the `regen` phase
+    /// existed, or a materialized baseline compared against a procedural
+    /// run. Missing phases count as 0 ns, never panic.
+    #[test]
+    fn phase_compare_tolerates_differing_phase_sets() {
+        let base = phases_doc(&[("deliver", 100.0), ("input", 50.0)]);
+        let current = phases_doc(&[("deliver", 80.0), ("regen", 40.0)]);
+        let path = std::env::temp_dir().join(format!(
+            "nestgpu_phase_cmp_{}.json",
+            std::process::id()
+        ));
+        std::fs::write(&path, base.to_string()).unwrap();
+        print_phase_compare(&current, &path).unwrap();
+        // symmetric direction: the current run lacks phases the baseline has
+        std::fs::write(&path, current.to_string()).unwrap();
+        print_phase_compare(&base, &path).unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn connectivity_flag_parses_and_rejects() {
+        let argv = |s: &str| -> Args {
+            Args::parse(&s.split(' ').map(String::from).collect::<Vec<_>>())
+        };
+        assert_eq!(
+            connectivity(&argv("--connectivity procedural")).unwrap(),
+            Connectivity::Procedural
+        );
+        assert_eq!(
+            connectivity(&argv("--connectivity materialized")).unwrap(),
+            Connectivity::Materialized
+        );
+        assert_eq!(connectivity(&argv("--t-ms 10")).unwrap(), Connectivity::Materialized);
+        assert!(connectivity(&argv("--connectivity lazy")).is_err());
+        assert!(connectivity(&argv("--connectivity procedural --offboard")).is_err());
+    }
 }
 
 fn main() -> anyhow::Result<()> {

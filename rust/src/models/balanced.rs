@@ -249,46 +249,51 @@ fn distributed_fixed_indegree(
     let pass_tag = if exc_sources { 0u64 } else { 1u64 };
 
     for tau in 0..n_ranks {
-        // skip replays that cannot concern this rank: in p2p mode a rank
-        // only needs the streams where it is source or target; in
-        // collective mode it needs every stream (H is mirrored, Eq. 12)
-        // — but H only needs the source *sets*, which are the full source
-        // populations here, so the skip also applies when this rank is
-        // not a member of any bucket's (σ, τ) pair... conservatively,
-        // replay all τ when collective (the paper's SPMD scripts do).
-        if group.is_none() && tau != me {
-            // p2p: only σ == me buckets of this stream matter
-        }
-        let mut rng = Rng::stream(sim.cfg.seed, &[BAL_TAG, pass_tag, tau as u64]);
-        // triplet buckets by source rank σ: (source local id, target node)
-        let mut buckets: Vec<Vec<(u32, u32)>> = vec![Vec::new(); n_ranks];
-        for t_node in 0..n_local {
-            for _ in 0..k {
-                let sigma = rng.below(n_ranks as u32) as usize;
-                let s_local = src_base + rng.below(src_n);
-                if tau == me || sigma == me || group.is_some() {
-                    buckets[sigma].push((s_local, t_node));
+        // per-(pass, τ) triplet stream, shared by every rank; capture its
+        // raw state *before* any draw — the [`ConnRule::TripletBucket`]
+        // calls below replay the stream from this state
+        let rng = Rng::stream(sim.cfg.seed, &[BAL_TAG, pass_tag, tau as u64]);
+        let (state, _) = rng.raw_state();
+        // one counting pass over the stream: per-σ bucket sizes, so empty
+        // buckets issue no connect call — exactly as when the buckets were
+        // materialized eagerly. The draws mirror `triplet_bucket_pairs`.
+        let mut counts = vec![0u64; n_ranks];
+        {
+            let mut rng = Rng::from_raw_state(state, None);
+            for _ in 0..n_local {
+                for _ in 0..k {
+                    let sigma = rng.below(n_ranks as u32) as usize;
+                    let _ = rng.below(src_n);
+                    counts[sigma] += 1;
                 }
             }
         }
-        // Eq. 20: process per source rank, sorted by source id within the
-        // bucket (stable for determinism). The RemoteConnect `s` argument
-        // is the *full* source subpopulation of rank σ (Eq. 17) — the
-        // assigned pairs index into it — so that level 0's flagging (only
-        // used sources get images) vs level ≥1 (all of s gets images)
-        // behaves as in §0.3.6.
-        for (sigma, mut bucket) in buckets.into_iter().enumerate() {
-            if bucket.is_empty() {
+        // Eq. 20: process per source rank σ, each bucket sorted by
+        // (source, target) inside the rule's replay (sorting positions is
+        // equivalent to sorting absolute ids: `src_base` is constant). The
+        // RemoteConnect `s` argument is the *full* source subpopulation of
+        // rank σ (Eq. 17) — the replayed pairs index into it — so level
+        // 0's flagging (only used sources get images) vs level ≥1 (all of
+        // s gets images) behaves as in §0.3.6. Skip the (σ, τ) replays
+        // that cannot concern this rank: in p2p mode a rank only needs the
+        // buckets where it is source or target; in collective mode every
+        // member mirrors H, so it replays all of them (the paper's SPMD
+        // scripts do). The stream-seeded rule keeps each call's descriptor
+        // constant-size, which is what makes procedural connectivity pay
+        // off for this model.
+        let s_set = NodeSet::range(src_base, src_n);
+        let t_set = NodeSet::range(0, n_local);
+        for (sigma, &count) in counts.iter().enumerate() {
+            let relevant = tau == me || sigma == me || group.is_some();
+            if !relevant || count == 0 {
                 continue;
             }
-            bucket.sort_unstable();
-            let pairs: Vec<(u32, u32)> = bucket
-                .iter()
-                .map(|&(s, t)| (s - src_base, t))
-                .collect();
-            let s_set = NodeSet::range(src_base, src_n);
-            let t_set = NodeSet::range(0, n_local);
-            let rule = ConnRule::AssignedNodes(pairs);
+            let rule = ConnRule::TripletBucket {
+                state,
+                k,
+                n_ranks: n_ranks as u32,
+                sigma: sigma as u32,
+            };
             if sigma == tau {
                 if sigma == me {
                     sim.connect(&s_set, &t_set, &rule, &syn);

@@ -28,6 +28,8 @@ pub struct ManifestInfo {
     pub sample_interval: u64,
     pub max_delay_steps: u16,
     pub record_spikes: bool,
+    /// connectivity mode ("materialized", "procedural")
+    pub connectivity: String,
     /// communicator backend the run used ("thread", "socket", "null")
     pub transport: String,
     /// rank-ordered wire endpoints (empty for in-process transports)
@@ -91,6 +93,7 @@ fn manifest_json(info: &ManifestInfo) -> Json {
         ("sample_interval", Json::num(info.sample_interval as f64)),
         ("max_delay_steps", Json::num(info.max_delay_steps as f64)),
         ("record_spikes", Json::Bool(info.record_spikes)),
+        ("connectivity", Json::str(&info.connectivity)),
         ("transport", Json::str(&info.transport)),
         (
             "endpoints",
@@ -169,6 +172,7 @@ mod tests {
             sample_interval: 10,
             max_delay_steps: 32,
             record_spikes: false,
+            connectivity: "materialized".into(),
             transport: "thread".into(),
             endpoints: Vec::new(),
         }
@@ -200,6 +204,10 @@ mod tests {
         assert_eq!(read.get("n_ranks").unwrap().as_usize(), Some(4));
         assert_eq!(read.get("exchange_interval").unwrap().as_usize(), Some(8));
         assert_eq!(read.get("transport").unwrap().as_str(), Some("thread"));
+        assert_eq!(
+            read.get("connectivity").unwrap().as_str(),
+            Some("materialized")
+        );
         assert_eq!(read.get("endpoints").unwrap().as_arr().map(|a| a.len()), Some(0));
         assert_eq!(read.get("schema").unwrap().as_usize(), Some(MANIFEST_SCHEMA as usize));
         let _ = std::fs::remove_dir_all(&dir);

@@ -148,9 +148,13 @@ pub enum CounterId {
     TraceRecords,
     /// JSONL trace records dropped at the bound
     TraceDropped,
+    /// procedural fanouts served from the regeneration cache
+    RegenCacheHits,
+    /// procedural fanouts rematerialized (cache misses)
+    RegenCacheMisses,
 }
 
-pub const ALL_COUNTERS: [CounterId; 7] = [
+pub const ALL_COUNTERS: [CounterId; 9] = [
     CounterId::Steps,
     CounterId::SpikesEmitted,
     CounterId::RecordsSent,
@@ -158,6 +162,8 @@ pub const ALL_COUNTERS: [CounterId; 7] = [
     CounterId::Exchanges,
     CounterId::TraceRecords,
     CounterId::TraceDropped,
+    CounterId::RegenCacheHits,
+    CounterId::RegenCacheMisses,
 ];
 
 impl CounterId {
@@ -170,6 +176,8 @@ impl CounterId {
             CounterId::Exchanges => "exchanges",
             CounterId::TraceRecords => "trace_records",
             CounterId::TraceDropped => "trace_dropped",
+            CounterId::RegenCacheHits => "regen_cache_hits",
+            CounterId::RegenCacheMisses => "regen_cache_misses",
         }
     }
     fn index(self) -> usize {
@@ -254,6 +262,7 @@ pub const ALL_HISTS: [HistId; N_HISTS] = [
     HistId::PhaseNs(StepPhase::Route),
     HistId::PhaseNs(StepPhase::Exchange),
     HistId::PhaseNs(StepPhase::Deliver),
+    HistId::PhaseNs(StepPhase::Regen),
     HistId::SpikesPerStep,
     HistId::RecordsPerExchange,
     HistId::BytesPerExchange,

@@ -14,4 +14,4 @@ pub mod state;
 pub mod tables;
 
 pub use levels::GpuMemLevel;
-pub use state::{GroupState, RemoteConnectOutcome, RemoteState};
+pub use state::{GroupState, ProceduralRemoteCall, RemoteConnectOutcome, RemoteState};

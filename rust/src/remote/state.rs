@@ -22,6 +22,26 @@ pub struct RemoteConnectOutcome {
     pub flagged: bool,
 }
 
+/// Result of a *procedural* target-side `RemoteConnect`
+/// ([`RemoteState::connect_target_procedural`]): the map/image state is
+/// updated exactly as in the materialized path, but instead of pushing
+/// connections the call hands back everything the engine needs to record
+/// a [`crate::connection::ConnCallDescriptor`].
+pub struct ProceduralRemoteCall {
+    pub outcome: RemoteConnectOutcome,
+    /// the `l` array of §0.3.1: source position → image node id
+    /// (`u32::MAX` for positions the rule never used)
+    pub images: Vec<u32>,
+    /// raw state of the aligned `RNG[σ,τ]` stream, captured before
+    /// `generate` consumed the call's source draws
+    pub src_state: [u64; 4],
+    pub src_gauss: Option<f64>,
+    /// raw state of the target rank's private stream, captured before
+    /// `generate` (feeds target-position draws and parameter draws)
+    pub local_state: [u64; 4],
+    pub local_gauss: Option<f64>,
+}
+
 /// Collective-communication state for one MPI group (§0.3.2, §0.3.4).
 pub struct GroupState {
     /// communicator group handle (for MPI_Allgather)
@@ -248,6 +268,109 @@ impl RemoteState {
             conns_created: n_conns,
             new_images: n_new_images,
             flagged,
+        }
+    }
+
+    /// Procedural twin of [`RemoteState::connect_target`] (DESIGN.md §16):
+    /// consumes the exact same randomness (full pair stream from the
+    /// aligned generator + local target/parameter draws), performs the
+    /// same ξ-flagging, ũ/s̃ compaction and map/image updates — but skips
+    /// connection materialization, returning the captured RNG states and
+    /// the `l` array so the caller records a descriptor instead.
+    #[allow(clippy::too_many_arguments)]
+    pub fn connect_target_procedural(
+        &mut self,
+        src_rank: usize,
+        s: &NodeSet,
+        t: &NodeSet,
+        rule: &ConnRule,
+        syn: &SynSpec,
+        group: Option<usize>,
+        nodes: &mut NodeSpace,
+        local_rng: &mut Rng,
+        tr: &mut Tracker,
+    ) -> ProceduralRemoteCall {
+        assert!(!self.prepared, "RemoteConnect after prepare()");
+        assert_ne!(src_rank, self.me, "use Connect for local connections");
+        let n_src = s.len();
+        let n_tgt = t.len();
+        let flagged = self.use_flagging(rule, n_src, n_tgt);
+
+        // same l + b transient as the materialized path; the l array that
+        // survives in the descriptor is accounted by the descriptor store
+        let transient_bytes = (n_src * (4 + 1)) as u64;
+        tr.alloc(MemKind::Device, transient_bytes);
+        tr.transient_events += 1;
+
+        let (src_state, src_gauss) = self.aligned.pair(src_rank, self.me).raw_state();
+        let (local_state, local_gauss) = local_rng.raw_state();
+        let mut b = vec![false; n_src];
+        let mut n_conns = 0u64;
+        {
+            let aligned = self.aligned.pair(src_rank, self.me);
+            rule.generate(n_src, n_tgt, aligned, local_rng, |sp, _tp| {
+                b[sp as usize] = true;
+                n_conns += 1;
+            });
+        }
+        // the materialized path draws one (weight, delay) per pair after
+        // the full pair stream; consume the identical randomness so the
+        // local generator leaves this call in the same state
+        if syn.weight.is_random() || syn.delay.is_random() {
+            for _ in 0..n_conns {
+                syn.draw(local_rng);
+            }
+        }
+
+        // ũ / s̃ compaction and map update, identical to connect_target
+        let mut us: Vec<(u32, u32)> = if flagged {
+            (0..n_src as u32)
+                .filter(|&u| b[u as usize])
+                .map(|u| (s.get(u), u))
+                .collect()
+        } else {
+            (0..n_src as u32).map(|u| (s.get(u), u)).collect()
+        };
+        if !s.is_sorted() {
+            us.sort_unstable();
+        }
+        debug_assert!(
+            us.windows(2).all(|w| w[0].0 < w[1].0),
+            "source node sets must not contain duplicate ids"
+        );
+        let s_tilde: Vec<u32> = us.iter().map(|&(sid, _)| sid).collect();
+
+        let map = match group {
+            None => &mut self.p2p_maps[src_rank],
+            Some(g) => {
+                let gs = &mut self.groups[g];
+                let mi = gs
+                    .member_index(src_rank)
+                    .expect("source rank not in group");
+                &mut gs.maps[mi]
+            }
+        };
+        let images_before = nodes.n_images();
+        let imgs = map.ensure_images(&s_tilde, tr, || nodes.create_image(src_rank as u16));
+        let n_new_images = (nodes.n_images() - images_before) as u64;
+
+        let mut l = vec![u32::MAX; n_src];
+        for (k, &(_, u)) in us.iter().enumerate() {
+            l[u as usize] = imgs[k];
+        }
+        tr.free(MemKind::Device, transient_bytes);
+
+        ProceduralRemoteCall {
+            outcome: RemoteConnectOutcome {
+                conns_created: n_conns,
+                new_images: n_new_images,
+                flagged,
+            },
+            images: l,
+            src_state,
+            src_gauss,
+            local_state,
+            local_gauss,
         }
     }
 

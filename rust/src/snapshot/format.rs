@@ -28,9 +28,13 @@ pub const MAGIC: [u8; 8] = *b"NGSNAPv1";
 ///   per-connection rule ids, and a `PLAS` section carries traces and
 ///   pending plastic arrival events. The v3 CONN fields are strictly
 ///   appended, so v2 files (all-static by construction) still load.
+/// - **4** — procedural connectivity: CONF appends the connectivity-mode
+///   byte and a `PROC` section carries the connect-call descriptor store
+///   (rules, sets, RNG raw states). Both are strict appends — v2/v3
+///   files (materialized by construction) still load.
 ///
 /// Version-1 files predate min-delay exchange batching and are rejected.
-pub const FORMAT_VERSION: u32 = 3;
+pub const FORMAT_VERSION: u32 = 4;
 /// Oldest version this build still reads.
 pub const MIN_FORMAT_VERSION: u32 = 2;
 
@@ -59,6 +63,9 @@ pub mod tags {
     /// plasticity state: traces + pending arrival events (v3, optional —
     /// present iff the network has plastic synapses)
     pub const PLAS: [u8; 4] = *b"PLAS";
+    /// procedural connectivity: the connect-call descriptor store (v4,
+    /// optional — present iff the run uses procedural connectivity)
+    pub const PROC: [u8; 4] = *b"PROC";
 }
 
 /// One parsed section-table entry (shared by the in-memory and the

@@ -184,9 +184,13 @@ pub enum StepPhase {
     Exchange,
     /// ring-buffer delivery (local spikes + incoming remote spikes)
     Deliver,
+    /// procedural connectivity: fanout rematerialization on cache miss
+    /// (carved out of Deliver so regeneration cost is visible per rank;
+    /// zero in materialized mode)
+    Regen,
 }
 
-pub const ALL_STEP_PHASES: [StepPhase; 8] = [
+pub const ALL_STEP_PHASES: [StepPhase; 9] = [
     StepPhase::Input,
     StepPhase::PreUpdate,
     StepPhase::Dynamics,
@@ -195,6 +199,7 @@ pub const ALL_STEP_PHASES: [StepPhase; 8] = [
     StepPhase::Route,
     StepPhase::Exchange,
     StepPhase::Deliver,
+    StepPhase::Regen,
 ];
 
 impl StepPhase {
@@ -211,6 +216,7 @@ impl StepPhase {
             StepPhase::Route => 5,
             StepPhase::Exchange => 6,
             StepPhase::Deliver => 7,
+            StepPhase::Regen => 8,
         }
     }
 
@@ -224,6 +230,7 @@ impl StepPhase {
             StepPhase::Route => "route",
             StepPhase::Exchange => "exchange",
             StepPhase::Deliver => "deliver",
+            StepPhase::Regen => "regen",
         }
     }
 }
@@ -239,6 +246,7 @@ pub struct StepTimes {
     pub route: Duration,
     pub exchange: Duration,
     pub deliver: Duration,
+    pub regen: Duration,
 }
 
 impl StepTimes {
@@ -252,6 +260,7 @@ impl StepTimes {
             StepPhase::Route => self.route,
             StepPhase::Exchange => self.exchange,
             StepPhase::Deliver => self.deliver,
+            StepPhase::Regen => self.regen,
         }
     }
 
@@ -265,6 +274,7 @@ impl StepTimes {
             StepPhase::Route => &mut self.route,
             StepPhase::Exchange => &mut self.exchange,
             StepPhase::Deliver => &mut self.deliver,
+            StepPhase::Regen => &mut self.regen,
         }
     }
 

@@ -264,13 +264,18 @@ fn static_single() -> Simulator {
     sim
 }
 
-/// Rewrite a v3 snapshot of a *static* network as a genuine v2 container:
-/// strip the (empty) rules block appended to CONN and stamp version 2.
-/// This is byte-exact: the v3 CONN payload of a static store is its v2
-/// payload plus the empty rules block.
+/// Rewrite a v4 snapshot of a *static, materialized* network as a genuine
+/// v2 container: strip the (empty) rules block appended to CONN, the
+/// trailing connectivity byte appended to CONF, and stamp version 2. This
+/// is byte-exact: both v3 and v4 additions are strict appends, so the
+/// truncated payloads are exactly what a v2 writer would have produced.
 fn downgrade_to_v2(bytes: &[u8]) -> Vec<u8> {
     let r = SnapshotReader::open(bytes).unwrap();
     assert!(r.try_section(tags::PLAS).is_none(), "static snapshot expected");
+    assert!(
+        r.try_section(tags::PROC).is_none(),
+        "materialized snapshot expected"
+    );
     let mut empty_rules = Encoder::new();
     empty_rules.seq_len(0);
     empty_rules.bool(false);
@@ -280,6 +285,10 @@ fn downgrade_to_v2(bytes: &[u8]) -> Vec<u8> {
         let mut payload = r.section(tag).unwrap().to_vec();
         if tag == tags::CONN {
             payload.truncate(payload.len() - strip);
+        }
+        if tag == tags::CONF {
+            // v4 appended one connectivity byte at the very end of CONF
+            payload.truncate(payload.len() - 1);
         }
         w.section(tag, payload);
     }
@@ -318,7 +327,7 @@ fn newer_snapshot_version_rejected_naming_versions() {
         .unwrap_err()
         .to_string();
     assert!(err.contains("version 9"), "{err}");
-    assert!(err.contains("2..=3"), "{err}");
+    assert!(err.contains("2..=4"), "{err}");
 }
 
 #[test]

@@ -1,0 +1,323 @@
+//! Integration: procedural connectivity (DESIGN.md §16).
+//!
+//! The procedural mode records static connect calls as compact RNG-seeded
+//! descriptors and regenerates each spiking neuron's fanout at delivery
+//! time. The contract is *bit-identity*: spike trains (and plastic
+//! weights, which stay materialized) must match the materialized mode
+//! exactly —
+//!
+//! - for 1, 2 and 4 ranks, over both communication protocols, for static
+//!   and STDP scenarios, over the thread and socket transports;
+//! - through snapshot format v4 (descriptor store + captured RNG states
+//!   travel in the `PROC` section; construction cache and mid-run
+//!   checkpoints both resume bit-identically);
+//! - while v3 containers (materialized by construction) still load;
+//! - with >= 5x lower per-rank connectivity memory at a scale where the
+//!   fanout cache's 64 KiB floor no longer dominates.
+
+use std::path::PathBuf;
+
+use nestgpu::comm::SocketConfig;
+use nestgpu::connection::Connectivity;
+use nestgpu::engine::{SimConfig, SimResult, Simulator};
+use nestgpu::harness::{
+    free_loopback_addr, run_cluster, run_cluster_from_snapshot, run_cluster_socket,
+    run_cluster_with_snapshot,
+};
+use nestgpu::models::balanced::{build_balanced, BalancedConfig, StdpScenario};
+use nestgpu::obs::{CounterId, ObsConfig};
+use nestgpu::snapshot::format::tags;
+use nestgpu::snapshot::{SnapshotReader, SnapshotWriter};
+use nestgpu::util::table::fmt_bytes;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("nestgpu_it_proc_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Small balanced network: 45 neurons per rank, K_in = 45.
+fn small_bal(collective: bool, stdp: bool) -> BalancedConfig {
+    BalancedConfig {
+        scale: 0.004,
+        k_scale: 0.004,
+        collective,
+        stdp: stdp.then(|| StdpScenario {
+            lambda: 0.05,
+            ..Default::default()
+        }),
+        ..Default::default()
+    }
+}
+
+fn cfg_with(mode: Connectivity) -> SimConfig {
+    SimConfig {
+        connectivity: mode,
+        ..Default::default()
+    }
+}
+
+fn run_mode(
+    mode: Connectivity,
+    ranks: usize,
+    collective: bool,
+    stdp: bool,
+    t_ms: f64,
+) -> Vec<SimResult> {
+    let bal = small_bal(collective, stdp);
+    run_cluster(
+        ranks,
+        &cfg_with(mode),
+        &move |sim: &mut Simulator| build_balanced(sim, &bal),
+        t_ms,
+    )
+    .unwrap()
+}
+
+/// Per-rank (spike train, plastic-weight hash) — the bit-identity witness.
+fn fingerprints(results: &[SimResult]) -> Vec<(&[(u32, u32)], Option<u64>)> {
+    results
+        .iter()
+        .map(|r| (r.spikes.as_slice(), r.plastic.map(|p| p.hash)))
+        .collect()
+}
+
+#[test]
+fn procedural_matches_materialized_static_1_2_4_ranks_both_protocols() {
+    for ranks in [1usize, 2, 4] {
+        for collective in [true, false] {
+            let mat = run_mode(Connectivity::Materialized, ranks, collective, false, 100.0);
+            let proc_ = run_mode(Connectivity::Procedural, ranks, collective, false, 100.0);
+            let spikes: u64 = mat.iter().map(|r| r.n_spikes).sum();
+            assert!(
+                spikes > 20,
+                "{ranks} ranks: network must spike ({spikes})"
+            );
+            assert_eq!(
+                fingerprints(&mat),
+                fingerprints(&proc_),
+                "{ranks} ranks, collective={collective}: procedural spike \
+                 trains diverged from materialized"
+            );
+            for (m, p) in mat.iter().zip(proc_.iter()) {
+                assert_eq!(
+                    m.n_connections, p.n_connections,
+                    "rank {}: connection counts diverged",
+                    m.rank
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn procedural_matches_materialized_with_stdp() {
+    // plastic (STDP) synapses stay materialized in procedural mode; the
+    // static remainder is regenerated — final weights must be bit-equal
+    for ranks in [1usize, 2, 4] {
+        for collective in [true, false] {
+            let mat = run_mode(Connectivity::Materialized, ranks, collective, true, 80.0);
+            let proc_ = run_mode(Connectivity::Procedural, ranks, collective, true, 80.0);
+            for r in &proc_ {
+                assert!(r.n_plastic > 0, "rank {} has no plastic synapses", r.rank);
+            }
+            assert_eq!(
+                fingerprints(&mat),
+                fingerprints(&proc_),
+                "{ranks} ranks, collective={collective}: STDP procedural run \
+                 diverged (spikes or plastic weights)"
+            );
+        }
+    }
+}
+
+#[test]
+fn procedural_socket_transport_matches_thread() {
+    let mat = run_mode(Connectivity::Materialized, 2, true, false, 60.0);
+    let scfg = SocketConfig::new(free_loopback_addr().unwrap(), 2);
+    let bal = small_bal(true, false);
+    let proc_ = run_cluster_socket(
+        2,
+        &cfg_with(Connectivity::Procedural),
+        &scfg,
+        &move |sim: &mut Simulator| build_balanced(sim, &bal),
+        60.0,
+    )
+    .unwrap();
+    assert_eq!(
+        fingerprints(&mat),
+        fingerprints(&proc_),
+        "procedural over TCP loopback diverged from materialized threads"
+    );
+}
+
+#[test]
+fn procedural_snapshot_v4_roundtrips() {
+    let dir = tmp_dir("v4");
+    let baseline = run_mode(Connectivity::Procedural, 2, true, false, 100.0);
+
+    // construction cache: save right after prepare(), resume the full run
+    run_cluster_with_snapshot(
+        2,
+        &cfg_with(Connectivity::Procedural),
+        &|sim: &mut Simulator| build_balanced(sim, &small_bal(true, false)),
+        0.0,
+        &dir,
+    )
+    .unwrap();
+
+    // the on-disk container is format v4 and carries the PROC section
+    let bytes = std::fs::read(dir.join(nestgpu::snapshot::rank_file_name(0))).unwrap();
+    let r = SnapshotReader::open(&bytes).unwrap();
+    assert_eq!(r.version(), 4);
+    assert!(r.try_section(tags::PROC).is_some(), "PROC section missing");
+
+    let restored = run_cluster_from_snapshot(&dir, 100.0).unwrap();
+    assert_eq!(fingerprints(&baseline), fingerprints(&restored));
+    for r in &restored {
+        assert_eq!(
+            r.phases.construction().as_nanos(),
+            0,
+            "restored rank {} paid construction",
+            r.rank
+        );
+    }
+
+    // mid-run checkpoint: 50 ms + 50 ms resumed == 100 ms uninterrupted
+    let dir2 = tmp_dir("v4mid");
+    run_cluster_with_snapshot(
+        2,
+        &cfg_with(Connectivity::Procedural),
+        &|sim: &mut Simulator| build_balanced(sim, &small_bal(true, false)),
+        50.0,
+        &dir2,
+    )
+    .unwrap();
+    let resumed = run_cluster_from_snapshot(&dir2, 50.0).unwrap();
+    assert_eq!(fingerprints(&baseline), fingerprints(&resumed));
+
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&dir2);
+}
+
+/// Rewrite a v4 *materialized* snapshot as a genuine v3 container: strip
+/// the trailing connectivity byte the v4 CONF appends and re-stamp the
+/// version. Byte-exact, since v4 is a strict append over v3.
+fn downgrade_to_v3(bytes: &[u8]) -> Vec<u8> {
+    let r = SnapshotReader::open(bytes).unwrap();
+    assert!(
+        r.try_section(tags::PROC).is_none(),
+        "materialized snapshot expected"
+    );
+    let mut w = SnapshotWriter::new();
+    for tag in r.section_tags() {
+        let mut payload = r.section(tag).unwrap().to_vec();
+        if tag == tags::CONF {
+            payload.truncate(payload.len() - 1);
+        }
+        w.section(tag, payload);
+    }
+    w.finish_with_version(3)
+}
+
+#[test]
+fn v3_snapshots_still_load_as_materialized() {
+    let dir = tmp_dir("v3");
+    let baseline = run_mode(Connectivity::Materialized, 2, true, false, 100.0);
+    run_cluster_with_snapshot(
+        2,
+        &SimConfig::default(),
+        &|sim: &mut Simulator| build_balanced(sim, &small_bal(true, false)),
+        0.0,
+        &dir,
+    )
+    .unwrap();
+    for rank in 0..2 {
+        let path = dir.join(nestgpu::snapshot::rank_file_name(rank));
+        let v3 = downgrade_to_v3(&std::fs::read(&path).unwrap());
+        assert_eq!(SnapshotReader::open(&v3).unwrap().version(), 3);
+        std::fs::write(&path, v3).unwrap();
+    }
+    let restored = run_cluster_from_snapshot(&dir, 100.0).unwrap();
+    assert_eq!(fingerprints(&baseline), fingerprints(&restored));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn procedural_cuts_connectivity_memory_5x() {
+    // large enough that est/4 bounds the fanout cache instead of its
+    // 64 KiB floor: ~337 neurons, K_in ~337 -> ~110k connections per rank
+    let bal = BalancedConfig {
+        scale: 0.03,
+        k_scale: 0.03,
+        ..Default::default()
+    };
+    let run = |mode: Connectivity| -> Vec<SimResult> {
+        let bal = bal.clone();
+        run_cluster(
+            1,
+            &cfg_with(mode),
+            &move |sim: &mut Simulator| build_balanced(sim, &bal),
+            20.0,
+        )
+        .unwrap()
+    };
+    let mat = run(Connectivity::Materialized);
+    let proc_ = run(Connectivity::Procedural);
+    assert_eq!(fingerprints(&mat), fingerprints(&proc_));
+
+    let (mb, pb) = (mat[0].conn_bytes, proc_[0].conn_bytes);
+    let ratio = mb as f64 / pb.max(1) as f64;
+    // steps/s regression is reported, not asserted (timing-noisy in CI)
+    let steps_per_s = |r: &SimResult| 200.0 / r.phases.propagation.as_secs_f64().max(1e-9);
+    println!(
+        "connectivity memory {} -> {} ({ratio:.1}x); steps/s {:.0} -> {:.0}",
+        fmt_bytes(mb),
+        fmt_bytes(pb),
+        steps_per_s(&mat[0]),
+        steps_per_s(&proc_[0]),
+    );
+    assert!(
+        ratio >= 5.0,
+        "procedural mode must cut per-rank connectivity memory >= 5x \
+         (materialized {mb} B, procedural {pb} B, {ratio:.1}x)"
+    );
+    assert!(
+        proc_[0].device_peak < mat[0].device_peak,
+        "procedural device peak must drop ({} vs {})",
+        proc_[0].device_peak,
+        mat[0].device_peak
+    );
+}
+
+#[test]
+fn procedural_regen_counters_are_recorded() {
+    let cfg = SimConfig {
+        connectivity: Connectivity::Procedural,
+        obs: Some(ObsConfig {
+            sample_interval: 5,
+            label: "it-proc".into(),
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let results = run_cluster(
+        2,
+        &cfg,
+        &|sim: &mut Simulator| build_balanced(sim, &small_bal(true, false)),
+        60.0,
+    )
+    .unwrap();
+    let obs = results
+        .iter()
+        .find_map(|r| r.obs.as_ref())
+        .expect("rank 0 carries the merged obs summary");
+    let misses = obs.merged.counter(CounterId::RegenCacheMisses);
+    let hits = obs.merged.counter(CounterId::RegenCacheHits);
+    assert!(misses > 0, "a spiking procedural run must regenerate fanouts");
+    assert!(
+        hits > 0,
+        "repeated spikes of the same neurons must hit the fanout cache"
+    );
+}

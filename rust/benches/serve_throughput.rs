@@ -1,0 +1,169 @@
+//! Construction-cache service throughput: cold vs warm jobs through a
+//! live `nestgpu serve` daemon (DESIGN.md §17).
+//!
+//! Three phases against one in-process server on an ephemeral port:
+//! (1) *cold* — distinct seeds, every job constructs; (2) *warm* — the
+//! same specs resubmitted, every job resumes from the snapshot cache;
+//! (3) *hammer* — several client threads replaying a mixed schedule
+//! over the now-warm keys, measuring the served hit rate under
+//! concurrency. Writes a stamped `BENCH_serve.json` at the repository
+//! root; `cold_jobs_per_s` / `warm_jobs_per_s` ride the CI regression
+//! gate. On the full-size run the warm path must clear >= 2x the cold
+//! throughput — the payable-once construction claim, end to end.
+//!
+//! Set `SMOKE=1` for the CI-sized run.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use nestgpu::obs::stamp::write_bench_json;
+use nestgpu::serve::{JobSpec, ServeClient, ServeConfig, Server};
+use nestgpu::util::json::Json;
+use nestgpu::util::table::Table;
+
+fn spec(scale: f64, seed: u64) -> JobSpec {
+    JobSpec {
+        t_ms: 10.0,
+        scale,
+        k_scale: scale,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("SMOKE").is_ok();
+    // full size matches benches/snapshot_reload.rs (900 neurons/rank,
+    // ~810k synapses/rank): construction dominates, as in the paper
+    let scale = if smoke { 0.02 } else { 0.08 };
+    let n_specs = if smoke { 3usize } else { 4 };
+    let warm_rounds = if smoke { 2usize } else { 3 };
+    let hammer_threads = if smoke { 2usize } else { 4 };
+    let hammer_jobs = if smoke { 4usize } else { 8 };
+
+    let base = std::env::temp_dir();
+    let cache_dir = base.join(format!("nestgpu_serve_bench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&cache_dir);
+    let server = Server::bind(ServeConfig {
+        listen: "127.0.0.1:0".to_string(),
+        cache_dir: cache_dir.clone(),
+        cache_bytes: 1 << 30,
+        max_jobs: 2,
+        obs_dir: None,
+    })
+    .expect("bind serve daemon");
+    let handle = server.spawn();
+    let addr = handle.addr().to_string();
+    println!(
+        "serve_throughput: daemon at {addr}, {n_specs} specs at scale {scale}{}",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let specs: Vec<JobSpec> = (0..n_specs).map(|i| spec(scale, 1000 + i as u64)).collect();
+    let mut client = ServeClient::connect(&addr).expect("connect");
+
+    // (1) cold: every spec constructs
+    let t0 = Instant::now();
+    for s in &specs {
+        let o = client.submit(s).expect("cold submit");
+        assert!(!o.hit, "cold phase must construct (seed {})", s.seed);
+    }
+    let cold_s = t0.elapsed().as_secs_f64();
+    let cold_jobs_per_s = n_specs as f64 / cold_s.max(1e-9);
+
+    // (2) warm: the same specs resume from the cache
+    let t0 = Instant::now();
+    for _ in 0..warm_rounds {
+        for s in &specs {
+            let o = client.submit(s).expect("warm submit");
+            assert!(o.hit, "warm phase must hit (seed {})", s.seed);
+        }
+    }
+    let warm_s = t0.elapsed().as_secs_f64();
+    let warm_jobs = warm_rounds * n_specs;
+    let warm_jobs_per_s = warm_jobs as f64 / warm_s.max(1e-9);
+
+    // (3) hammer: concurrent clients replaying a mixed schedule — the
+    // warm keys plus one fresh seed per thread, so the measured hit
+    // rate reflects a realistic warm/cold traffic mix
+    let before = client.stats().expect("stats");
+    std::thread::scope(|scope| {
+        for t in 0..hammer_threads {
+            let addr = addr.clone();
+            let specs = &specs;
+            scope.spawn(move || {
+                let mut c = ServeClient::connect(&addr).expect("hammer connect");
+                for j in 0..hammer_jobs {
+                    let s = &specs[(t + j) % specs.len()];
+                    c.submit(s).expect("hammer submit");
+                }
+                let fresh = spec(scale, 2000 + t as u64);
+                c.submit(&fresh).expect("hammer cold submit");
+            });
+        }
+    });
+    let after = client.stats().expect("stats");
+    let count = |j: &Json, k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    let hits = count(&after, "hits") - count(&before, "hits");
+    let misses = count(&after, "misses") - count(&before, "misses");
+    let hammer_hit_rate = hits / (hits + misses).max(1.0);
+
+    let mut c = ServeClient::connect(&addr).expect("connect for shutdown");
+    c.shutdown().expect("shutdown");
+    handle.join().expect("server exits cleanly");
+    let _ = std::fs::remove_dir_all(&cache_dir);
+
+    let warm_over_cold = warm_jobs_per_s / cold_jobs_per_s.max(1e-9);
+    let mut t = Table::new(
+        "serve throughput: cold construction vs warm cache",
+        &["phase", "jobs", "jobs/s"],
+    );
+    t.row(vec![
+        "cold (construct+save)".into(),
+        format!("{n_specs}"),
+        format!("{cold_jobs_per_s:.2}"),
+    ]);
+    t.row(vec![
+        "warm (cache resume)".into(),
+        format!("{warm_jobs}"),
+        format!("{warm_jobs_per_s:.2}"),
+    ]);
+    t.row(vec![
+        "hammer hit rate".into(),
+        format!("{}", hammer_threads * (hammer_jobs + 1)),
+        format!("{:.0}%", hammer_hit_rate * 100.0),
+    ]);
+    t.print();
+    println!(
+        "\nwarm/cold throughput: {warm_over_cold:.1}x (target >= 2x: {})",
+        if warm_over_cold >= 2.0 { "PASS" } else { "MISS" }
+    );
+    // asserted only at full size; smoke worlds construct in milliseconds
+    // where runner noise alone can cross the bar
+    if !smoke {
+        assert!(
+            warm_over_cold >= 2.0,
+            "warm jobs/s must be >= 2x cold (got {warm_over_cold:.2}x)"
+        );
+    }
+
+    let fields = vec![
+        ("model", Json::str("balanced-serve")),
+        ("scale", Json::num(scale)),
+        ("n_specs", Json::num(n_specs as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("cold_jobs_per_s", Json::num(cold_jobs_per_s)),
+        ("warm_jobs_per_s", Json::num(warm_jobs_per_s)),
+        ("warm_over_cold", Json::num(warm_over_cold)),
+        ("hammer_hit_rate", Json::num(hammer_hit_rate)),
+    ];
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .join("BENCH_serve.json");
+    if let Err(e) = write_bench_json(&path, fields) {
+        eprintln!("cannot write {}: {e}", path.display());
+        std::process::exit(1);
+    }
+    println!("[written {}]", path.display());
+}

@@ -56,6 +56,16 @@ pub enum MsgType {
     ReduceMin = 6,
     /// one rank's arrival at a barrier
     Barrier = 7,
+    /// serve client -> server: a job spec (JSON payload, DESIGN.md §17)
+    SubmitJob = 8,
+    /// serve server -> client: job state transition or error (JSON)
+    JobStatus = 9,
+    /// serve server -> client: final job outcome (JSON)
+    JobResult = 10,
+    /// serve client <-> server: cache statistics request / reply (JSON)
+    CacheStats = 11,
+    /// serve client -> server: orderly daemon shutdown request
+    Shutdown = 12,
 }
 
 impl MsgType {
@@ -68,6 +78,11 @@ impl MsgType {
             5 => MsgType::Allgather,
             6 => MsgType::ReduceMin,
             7 => MsgType::Barrier,
+            8 => MsgType::SubmitJob,
+            9 => MsgType::JobStatus,
+            10 => MsgType::JobResult,
+            11 => MsgType::CacheStats,
+            12 => MsgType::Shutdown,
             _ => return None,
         })
     }

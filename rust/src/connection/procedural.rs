@@ -33,6 +33,7 @@ use crate::connection::{ConnRule, Dist, NodeSet, SynSpec};
 use crate::memory::{MemKind, Tracker};
 use crate::node::RingBuffers;
 use crate::snapshot::{Decoder, Encoder};
+use crate::util::lru::TickLru;
 use crate::util::rng::Rng;
 
 /// How static connectivity is held between construction and delivery.
@@ -646,15 +647,12 @@ pub fn build_fanout(
 
 /// Byte-capped memo of regenerated fanouts, keyed by descriptor id.
 ///
-/// Deterministic by construction: a dense `Vec` slot per descriptor (no
-/// hashing) and strict tick-LRU eviction — and since a fanout is a pure
-/// function of its descriptor, even a *wrong* eviction choice could only
-/// cost time, never correctness.
+/// Deterministic by construction: a dense slot per descriptor (no
+/// hashing) and strict tick-LRU eviction ([`TickLru`]) — and since a
+/// fanout is a pure function of its descriptor, even a *wrong* eviction
+/// choice could only cost time, never correctness.
 pub struct FanoutCache {
-    cap: u64,
-    used: u64,
-    tick: u64,
-    slots: Vec<Option<(u64, DescFanout)>>,
+    lru: TickLru<DescFanout>,
 }
 
 impl FanoutCache {
@@ -670,62 +668,34 @@ impl FanoutCache {
 
     pub fn new(n_descs: usize, cap: u64) -> Self {
         Self {
-            cap,
-            used: 0,
-            tick: 0,
-            slots: vec![None; n_descs],
+            lru: TickLru::new(n_descs, cap),
         }
     }
 
     pub fn cap_bytes(&self) -> u64 {
-        self.cap
+        self.lru.cap_bytes()
     }
 
     pub fn used_bytes(&self) -> u64 {
-        self.used
+        self.lru.used_bytes()
     }
 
     /// Cached fanout for a descriptor, refreshing its LRU tick.
     pub fn touch(&mut self, id: u32) -> Option<&DescFanout> {
-        self.tick += 1;
-        let tick = self.tick;
-        match self.slots.get_mut(id as usize) {
-            Some(Some((last, fo))) => {
-                *last = tick;
-                Some(fo)
-            }
-            _ => None,
-        }
+        self.lru.touch(id as usize)
     }
 
     /// Insert a freshly regenerated fanout, evicting least-recently-used
     /// entries until it fits. A fanout larger than the whole budget is
     /// dropped (it was already delivered from; only reuse is lost).
     pub fn admit(&mut self, id: u32, fo: DescFanout, tr: &mut Tracker) {
-        debug_assert!(self.slots[id as usize].is_none(), "admit over a live entry");
         let b = fo.bytes();
-        if b > self.cap {
-            return;
+        if self
+            .lru
+            .admit(id as usize, fo, b, |_, _, ob| tr.free(MemKind::Device, ob))
+        {
+            tr.alloc(MemKind::Device, b);
         }
-        while self.used + b > self.cap {
-            let victim = self
-                .slots
-                .iter()
-                .enumerate()
-                .filter_map(|(i, s)| s.as_ref().map(|(t, _)| (*t, i)))
-                .min()
-                .map(|(_, i)| i);
-            let Some(v) = victim else { break };
-            if let Some((_, old)) = self.slots[v].take() {
-                let ob = old.bytes();
-                self.used -= ob;
-                tr.free(MemKind::Device, ob);
-            }
-        }
-        self.tick += 1;
-        self.used += b;
-        tr.alloc(MemKind::Device, b);
-        self.slots[id as usize] = Some((self.tick, fo));
     }
 }
 

@@ -192,13 +192,102 @@ pub fn run_cluster_with_snapshot<M: ModelBuilder>(
     results.into_iter().collect()
 }
 
+/// Construct-and-cache in one pass: build, prepare, write the
+/// construction snapshot (step 0, before any propagation) into `dir`,
+/// then propagate `t_ms` in the *same* prepared simulators. The saved
+/// files are exactly what [`run_cluster_with_snapshot`] with `t_ms = 0`
+/// would have written, but the caller also gets the live `t_ms` results
+/// without reloading — the cold path of the serve snapshot cache, whose
+/// warm path ([`run_cluster_from_snapshot`] on `dir`) then reproduces
+/// the returned spike trains bit-identically.
+pub fn run_cluster_construct_save<M: ModelBuilder>(
+    n_ranks: usize,
+    cfg: &SimConfig,
+    model: &M,
+    t_ms: f64,
+    dir: &Path,
+) -> anyhow::Result<Vec<SimResult>> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("cannot create snapshot directory {}", dir.display()))?;
+    let world = CommWorld::new(n_ranks);
+    let comms = world.communicators();
+    let results: Vec<anyhow::Result<SimResult>> = thread::scope(|s| {
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                let cfg = cfg.clone();
+                s.spawn(move || -> anyhow::Result<SimResult> {
+                    let mut sim = Simulator::new(Box::new(comm), cfg);
+                    model.build(&mut sim);
+                    sim.prepare()?;
+                    let path = dir.join(crate::snapshot::rank_file_name(sim.rank()));
+                    sim.save_snapshot(&path)?;
+                    if t_ms > 0.0 {
+                        sim.simulate(t_ms)
+                    } else {
+                        Ok(sim.result(0.0, 0.0))
+                    }
+                })
+            })
+            .collect();
+        join_ranks(handles)
+    });
+    results.into_iter().collect()
+}
+
+/// Validate that `dir` holds a *complete* world of rank snapshot files
+/// and return `(n_ranks, step_now)` from the lowest present rank's
+/// header. A missing or partial file set fails with a "found K of N
+/// rank snapshots" message naming the absent ranks — not a raw
+/// `io::Error` from whichever file happened to be opened first.
+pub fn snapshot_world(dir: &Path) -> anyhow::Result<(usize, u32)> {
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("cannot read snapshot directory {}", dir.display()))?;
+    let mut found: Vec<usize> = Vec::new();
+    for entry in entries {
+        let name = entry
+            .with_context(|| format!("cannot list snapshot directory {}", dir.display()))?
+            .file_name();
+        let name = name.to_string_lossy();
+        if let Some(rank) = name
+            .strip_prefix("rank_")
+            .and_then(|s| s.strip_suffix(".snap"))
+            .and_then(|s| s.parse::<usize>().ok())
+        {
+            found.push(rank);
+        }
+    }
+    if found.is_empty() {
+        anyhow::bail!("no rank snapshots (rank_<r>.snap) found in {}", dir.display());
+    }
+    found.sort_unstable();
+    let lowest = found[0];
+    let (_, n_ranks, step_now) =
+        crate::engine::peek_world(&dir.join(crate::snapshot::rank_file_name(lowest)))?;
+    let missing: Vec<usize> = (0..n_ranks).filter(|r| !found.contains(r)).collect();
+    if !missing.is_empty() {
+        let shown: Vec<String> = missing.iter().take(8).map(|r| r.to_string()).collect();
+        let ellipsis = if missing.len() > 8 { ", ..." } else { "" };
+        anyhow::bail!(
+            "found {} of {} rank snapshots in {} (missing rank(s) {}{}) — \
+             incomplete or interrupted save?",
+            n_ranks - missing.len(),
+            n_ranks,
+            dir.display(),
+            shown.join(", "),
+            ellipsis
+        );
+    }
+    Ok((n_ranks, step_now))
+}
+
 /// Restore a whole cluster from per-rank snapshot files in `dir` and
 /// propagate `t_ms` of model time (0 = restore only, e.g. to measure
-/// reload cost). The world size is read from rank 0's snapshot header;
-/// construction and preparation are skipped on every rank.
+/// reload cost). The world size is read from the snapshot headers after
+/// a completeness check ([`snapshot_world`]); construction and
+/// preparation are skipped on every rank.
 pub fn run_cluster_from_snapshot(dir: &Path, t_ms: f64) -> anyhow::Result<Vec<SimResult>> {
-    let rank0 = dir.join(crate::snapshot::rank_file_name(0));
-    let (_, n_ranks, _) = crate::engine::peek_world(&rank0)?;
+    let (n_ranks, _) = snapshot_world(dir)?;
     let world = CommWorld::new(n_ranks);
     let comms = world.communicators();
     let results: Vec<anyhow::Result<SimResult>> = thread::scope(|s| {

@@ -52,6 +52,17 @@
 //! local rank processes. Spike trains are bit-identical across transports;
 //! every simulation subcommand prints a world-combined spike hash
 //! ([`stats::spike_hash`] folded over ranks) as the cross-process witness.
+//!
+//! Construction can be *served*, not just cached: `nestgpu serve` runs
+//! the multi-tenant construction-cache daemon ([`serve`]). Jobs are
+//! content-addressed by [`serve::JobSpec::cache_key`] — an FNV-1a fold
+//! of every construction-relevant parameter — and served from a
+//! byte-capped LRU of snapshot worlds on disk: the first submit
+//! constructs and admits, identical concurrent submits collapse to that
+//! one construction (single-flight), and later submits resume warm,
+//! skipping construction entirely. `nestgpu submit balanced ...` is the
+//! blocking client; every reply carries the world spike hash, so a warm
+//! hit is checkably bit-identical to its cold run (`DESIGN.md` §17).
 
 pub mod comm;
 pub mod connection;
@@ -64,6 +75,7 @@ pub mod obs;
 pub mod plasticity;
 pub mod remote;
 pub mod runtime;
+pub mod serve;
 pub mod snapshot;
 pub mod stats;
 pub mod util;

@@ -12,7 +12,6 @@
 //!                     [--t-ms T] [--seed X] [--pjrt] [--offboard]
 //!                     [--exchange-interval I]
 //!   nestgpu estimate  [--live K] [--ranks N] [--scale S] [--level 0..3]
-//!   nestgpu validate  [--seeds N] [--t-ms T]
 //!   nestgpu phases    [same knobs as balanced] [--json-out PATH]
 //!                     [--compare BASE.json] — run the balanced model and
 //!                     dump `SimResult::step_phases` as JSON (per-rank
@@ -34,6 +33,24 @@
 //!                            the socket transport (loopback rendezvous
 //!                            picked automatically unless given) and
 //!                            verify their world spike hashes agree
+//!   nestgpu serve     [--listen HOST:PORT] [--cache-dir D] [--cache-bytes B]
+//!                     [--max-jobs J] [--obs-dir D] — construction-cache
+//!                            daemon (DESIGN.md §17): serves balanced-model
+//!                            jobs from a content-addressed snapshot cache,
+//!                            so repeated submits of the same construction
+//!                            resume instead of rebuilding
+//!   nestgpu submit    [--server HOST:PORT] balanced [--ranks N] [--scale S]
+//!                     [--k-scale K] [--t-ms T] [--seed X] [--level 0..3]
+//!                     [--exchange-interval I] [--connectivity ...] [--p2p]
+//!                     [--stdp ...] — submit one job to a serve daemon and
+//!                            print its outcome: cache hit/miss plus the
+//!                            world spike hash; `--stats` / `--shutdown`
+//!                            query or stop the daemon instead
+//!
+//! Flag parsing is strict: each subcommand declares its flag vocabulary,
+//! a valued flag must be followed by a value, and an unknown or
+//! misspelled flag aborts with a `did you mean --...?` hint instead of
+//! silently falling back to a default.
 //!
 //! Transport (DESIGN.md §15): every simulation subcommand accepts
 //! `--comm socket --rank R --world N --rendezvous HOST:PORT` to run as one
@@ -78,13 +95,14 @@ use nestgpu::engine::{SimConfig, SimResult, Simulator};
 use nestgpu::harness::{
     estimate_cluster, free_loopback_addr, run_cluster, run_cluster_from_snapshot,
     run_cluster_processes, run_cluster_with_snapshot, run_rank, run_rank_from_snapshot,
-    run_rank_with_snapshot,
+    run_rank_with_snapshot, snapshot_world,
 };
 use nestgpu::models::balanced::{build_balanced, BalancedConfig, StdpScenario};
 use nestgpu::models::mam::{MamConfig, MamModel};
 use nestgpu::obs::{report::read_trace_dir, CounterId, HistId, ObsConfig};
 use nestgpu::remote::GpuMemLevel;
 use nestgpu::runtime::BackendKind;
+use nestgpu::serve::{JobSpec, ServeClient, ServeConfig, Server};
 use nestgpu::stats::{combine_rank_hashes, spike_hash};
 use nestgpu::util::json::Json;
 use nestgpu::util::table::{fmt_bytes, fmt_secs, Table};
@@ -93,28 +111,78 @@ use nestgpu::util::timer::ALL_STEP_PHASES;
 struct Args {
     flags: HashMap<String, String>,
     bools: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Flag vocabulary groups: each subcommand passes the union of the
+/// groups it understands to [`Args::parse_checked`], so a flag that one
+/// subcommand accepts is still a hard error on another.
+const COMM_VALUED: &[&str] =
+    &["comm", "rank", "world", "rendezvous", "connect-timeout-ms", "recv-timeout-ms"];
+const OBS_VALUED: &[&str] = &["obs-dir", "obs-interval"];
+const SIM_VALUED: &[&str] = &["seed", "level", "exchange-interval", "connectivity"];
+const SIM_BOOLEAN: &[&str] = &["pjrt", "offboard", "no-record"];
+const STDP_VALUED: &[&str] = &[
+    "stdp-lambda", "stdp-alpha", "stdp-tau-plus", "stdp-tau-minus", "stdp-wmax-factor",
+];
+const STDP_BOOLEAN: &[&str] = &["stdp", "stdp-mult"];
+const BALANCED_VALUED: &[&str] = &[
+    "ranks", "t-ms", "scale", "k-scale", "in-degree-scale", "j", "g", "rate-ext", "j-ext",
+];
+const BALANCED_BOOLEAN: &[&str] = &["p2p"];
+const MAM_VALUED: &[&str] = &["ranks", "n-scale", "k-scale", "chi", "t-ms"];
+const ESTIMATE_VALUED: &[&str] = &["live", "ranks", "scale", "k-scale"];
+const SUBMIT_VALUED: &[&str] = &[
+    "ranks", "t-ms", "scale", "k-scale", "seed", "level", "exchange-interval", "connectivity",
+];
+
+/// Default `nestgpu serve` / `nestgpu submit` endpoint (loopback);
+/// override with `--listen` / `--server`.
+const DEFAULT_SERVE_ADDR: &str = "127.0.0.1:9123";
+
+/// The full flag vocabulary `(valued, boolean)` of the balanced-model
+/// simulation subcommands (`balanced`, `phases`, `snapshot save`).
+fn balanced_flags() -> (Vec<&'static str>, Vec<&'static str>) {
+    (
+        [BALANCED_VALUED, STDP_VALUED, SIM_VALUED, OBS_VALUED, COMM_VALUED].concat(),
+        [BALANCED_BOOLEAN, STDP_BOOLEAN, SIM_BOOLEAN].concat(),
+    )
 }
 
 impl Args {
-    fn parse(argv: &[String]) -> Self {
+    /// Parse `argv` against an explicit flag vocabulary: `valued` flags
+    /// consume the next token, `boolean` flags never do, and anything
+    /// else starting with `--` is rejected with a hint naming the
+    /// closest known flag — a misspelled `--connectivty` must abort the
+    /// run, not silently fall back to a default.
+    fn parse_checked(argv: &[String], valued: &[&str], boolean: &[&str]) -> anyhow::Result<Args> {
         let mut flags = HashMap::new();
         let mut bools = Vec::new();
+        let mut positional = Vec::new();
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
-            if let Some(name) = a.strip_prefix("--") {
-                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
-                    flags.insert(name.to_string(), argv[i + 1].clone());
-                    i += 2;
-                } else {
-                    bools.push(name.to_string());
-                    i += 1;
-                }
-            } else {
+            let Some(name) = a.strip_prefix("--") else {
+                positional.push(a.clone());
                 i += 1;
+                continue;
+            };
+            if valued.contains(&name) {
+                match argv.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => {
+                        flags.insert(name.to_string(), v.clone());
+                        i += 2;
+                    }
+                    _ => anyhow::bail!("flag --{name} requires a value"),
+                }
+            } else if boolean.contains(&name) {
+                bools.push(name.to_string());
+                i += 1;
+            } else {
+                return Err(unknown_flag(name, valued, boolean));
             }
         }
-        Self { flags, bools }
+        Ok(Args { flags, bools, positional })
     }
 
     fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
@@ -127,6 +195,46 @@ impl Args {
     fn has(&self, name: &str) -> bool {
         self.bools.iter().any(|b| b == name)
     }
+
+    /// Bail on stray positional tokens for subcommands that take none.
+    fn no_positionals(&self, cmd: &str) -> anyhow::Result<()> {
+        if let Some(p) = self.positional.first() {
+            anyhow::bail!("unexpected argument {p:?} to `nestgpu {cmd}`");
+        }
+        Ok(())
+    }
+}
+
+/// The reject-with-hint error for an unknown flag: names the closest
+/// known flag by edit distance, when one is reasonably close.
+fn unknown_flag(name: &str, valued: &[&str], boolean: &[&str]) -> anyhow::Error {
+    let best = valued
+        .iter()
+        .chain(boolean)
+        .min_by_key(|k| edit_distance(name, k))
+        .copied();
+    match best {
+        Some(b) if edit_distance(name, b) <= 1 + name.len() / 3 => {
+            anyhow::anyhow!("unknown flag --{name} (did you mean --{b}?)")
+        }
+        _ => anyhow::anyhow!("unknown flag --{name}"),
+    }
+}
+
+/// Levenshtein distance, two-row DP — powers the did-you-mean hint.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, ca) in a.chars().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 fn backend(args: &Args) -> BackendKind {
@@ -413,7 +521,11 @@ fn print_results(results: &[SimResult], t_ms: f64) {
     }
 }
 
-fn cmd_balanced(args: &Args) -> anyhow::Result<()> {
+fn cmd_balanced(argv: &[String]) -> anyhow::Result<()> {
+    let (valued, boolean) = balanced_flags();
+    let parsed = Args::parse_checked(argv, &valued, &boolean)?;
+    let args = &parsed;
+    args.no_positionals("balanced")?;
     let ranks = args.get("ranks", 2usize);
     let bal = balanced_config(args);
     check_stdp(args, &bal)?;
@@ -452,7 +564,11 @@ fn cmd_balanced(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_mam(args: &Args) -> anyhow::Result<()> {
+fn cmd_mam(argv: &[String]) -> anyhow::Result<()> {
+    let valued = [MAM_VALUED, SIM_VALUED, OBS_VALUED].concat();
+    let parsed = Args::parse_checked(argv, &valued, SIM_BOOLEAN)?;
+    let args = &parsed;
+    args.no_positionals("mam")?;
     let ranks = args.get("ranks", 4usize);
     let mam_cfg = MamConfig {
         n_scale: args.get("n-scale", 0.001f64),
@@ -482,7 +598,11 @@ fn cmd_mam(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_estimate(args: &Args) -> anyhow::Result<()> {
+fn cmd_estimate(argv: &[String]) -> anyhow::Result<()> {
+    let valued = [ESTIMATE_VALUED, SIM_VALUED, OBS_VALUED].concat();
+    let parsed = Args::parse_checked(argv, &valued, SIM_BOOLEAN)?;
+    let args = &parsed;
+    args.no_positionals("estimate")?;
     let live = args.get("live", 2usize);
     let ranks = args.get("ranks", 1024usize);
     let bal = BalancedConfig {
@@ -508,7 +628,12 @@ fn cmd_estimate(args: &Args) -> anyhow::Result<()> {
 /// `nestgpu phases`: run the balanced model and dump the per-rank
 /// step-phase breakdown as JSON, so bench trajectories can track where
 /// propagation time goes as pipeline phases are added.
-fn cmd_phases(args: &Args) -> anyhow::Result<()> {
+fn cmd_phases(argv: &[String]) -> anyhow::Result<()> {
+    let (mut valued, boolean) = balanced_flags();
+    valued.extend_from_slice(&["json-out", "compare"]);
+    let parsed = Args::parse_checked(argv, &valued, &boolean)?;
+    let args = &parsed;
+    args.no_positionals("phases")?;
     let ranks = args.get("ranks", 2usize);
     let bal = balanced_config(args);
     check_stdp(args, &bal)?;
@@ -648,26 +773,12 @@ fn fmt_delta(base: f64, cur: f64) -> String {
 /// comm and memory statistics extracted from a run's JSONL traces, and
 /// write the machine-readable summary JSON.
 fn cmd_report(argv: &[String]) -> anyhow::Result<()> {
-    // first positional (non-flag, non-flag-value) argument is the dir;
-    // `--dir D` also accepted
-    let args = Args::parse(argv);
-    let mut positional: Option<String> = None;
-    let mut i = 0;
-    while i < argv.len() {
-        let a = &argv[i];
-        if a.starts_with("--") {
-            // skip the flag and its value (mirrors Args::parse)
-            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
-                i += 2;
-            } else {
-                i += 1;
-            }
-        } else {
-            positional = Some(a.clone());
-            break;
-        }
-    }
-    let dir = positional
+    // first positional argument is the trace dir; `--dir D` also accepted
+    let args = Args::parse_checked(argv, &["dir", "json-out"], &[])?;
+    let dir = args
+        .positional
+        .first()
+        .cloned()
         .or_else(|| args.flags.get("dir").cloned())
         .map(PathBuf::from)
         .ok_or_else(|| {
@@ -763,17 +874,21 @@ fn cmd_report(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `--dir` with the historical default.
+fn snapshot_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.flags.get("dir").cloned().unwrap_or_else(|| "snapshots".to_string()))
+}
+
 fn cmd_snapshot(argv: &[String]) -> anyhow::Result<()> {
     let sub = argv.first().map(|s| s.as_str()).unwrap_or("");
-    let args = Args::parse(&argv[1.min(argv.len())..]);
-    let dir = PathBuf::from(
-        args.flags
-            .get("dir")
-            .cloned()
-            .unwrap_or_else(|| "snapshots".to_string()),
-    );
+    let rest = &argv[1.min(argv.len())..];
     match sub {
         "save" => {
+            let (mut valued, boolean) = balanced_flags();
+            valued.push("dir");
+            let args = Args::parse_checked(rest, &valued, &boolean)?;
+            args.no_positionals("snapshot save")?;
+            let dir = snapshot_dir(&args);
             let ranks = args.get("ranks", 2usize);
             let bal = balanced_config(&args);
             check_stdp(&args, &bal)?;
@@ -812,6 +927,10 @@ fn cmd_snapshot(argv: &[String]) -> anyhow::Result<()> {
             Ok(())
         }
         "resume" => {
+            let valued = [&["dir", "t-ms"][..], COMM_VALUED].concat();
+            let args = Args::parse_checked(rest, &valued, &[])?;
+            args.no_positionals("snapshot resume")?;
+            let dir = snapshot_dir(&args);
             let t_ms = args.get("t-ms", 100.0f64);
             if let Some(scfg) = socket_config(&args)? {
                 let comm = connect_socket(&scfg)?;
@@ -820,9 +939,10 @@ fn cmd_snapshot(argv: &[String]) -> anyhow::Result<()> {
                 print_world_hash(hash);
                 return Ok(());
             }
-            let (_, n_ranks, step) = nestgpu::engine::peek_world(
-                &dir.join(nestgpu::snapshot::rank_file_name(0)),
-            )?;
+            // completeness is checked up front (missing/partial rank
+            // files give the `found K of N rank snapshots` error instead
+            // of a worker panic mid-restore)
+            let (n_ranks, step) = snapshot_world(&dir)?;
             println!(
                 "snapshot resume: {n_ranks} ranks from {} (checkpoint at step {step}), {t_ms} ms",
                 dir.display()
@@ -864,7 +984,7 @@ fn cmd_launch(argv: &[String]) -> anyhow::Result<()> {
             break;
         }
     }
-    let own = Args::parse(&argv[..split]);
+    let own = Args::parse_checked(&argv[..split], &["ranks", "rendezvous"], &[])?;
     let child: Vec<String> = argv[split..].to_vec();
     let sub = child.first().map(String::as_str).unwrap_or("");
     if !matches!(sub, "balanced" | "phases" | "snapshot") {
@@ -916,6 +1036,108 @@ fn cmd_launch(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `nestgpu serve`: run the construction-cache daemon (DESIGN.md §17)
+/// until a client asks for shutdown (`nestgpu submit --shutdown`).
+fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
+    let valued: &[&str] = &["listen", "cache-dir", "cache-bytes", "max-jobs", "obs-dir"];
+    let args = Args::parse_checked(argv, valued, &[])?;
+    args.no_positionals("serve")?;
+    let d = ServeConfig::default();
+    let cfg = ServeConfig {
+        listen: args
+            .flags
+            .get("listen")
+            .cloned()
+            .unwrap_or_else(|| DEFAULT_SERVE_ADDR.to_string()),
+        cache_dir: args
+            .flags
+            .get("cache-dir")
+            .map(PathBuf::from)
+            .unwrap_or(d.cache_dir),
+        cache_bytes: args.get("cache-bytes", d.cache_bytes),
+        max_jobs: args.get("max-jobs", d.max_jobs).max(1),
+        obs_dir: args.flags.get("obs-dir").map(PathBuf::from),
+    };
+    let server = Server::bind(cfg.clone())?;
+    println!(
+        "serve: listening on {} (cache {}, budget {}, max {} concurrent job(s))",
+        server.local_addr(),
+        cfg.cache_dir.display(),
+        fmt_bytes(cfg.cache_bytes),
+        cfg.max_jobs,
+    );
+    server.run()
+}
+
+/// `nestgpu submit`: submit one balanced-model job to a serve daemon
+/// (or query `--stats` / request `--shutdown`). The `cache: hit|miss`
+/// line plus the standard world-spike-hash line are the CI-greppable
+/// witnesses that a warm resubmit skipped construction yet reproduced
+/// the cold spike train bit-identically.
+fn cmd_submit(argv: &[String]) -> anyhow::Result<()> {
+    let valued = [&["server"][..], SUBMIT_VALUED, STDP_VALUED].concat();
+    let boolean = [&["stats", "shutdown", "p2p"][..], STDP_BOOLEAN].concat();
+    let args = Args::parse_checked(argv, &valued, &boolean)?;
+    let server = args
+        .flags
+        .get("server")
+        .cloned()
+        .unwrap_or_else(|| DEFAULT_SERVE_ADDR.to_string());
+    let mut client = ServeClient::connect(&server)?;
+    if args.has("stats") {
+        let stats = client.stats()?.to_string();
+        println!("{stats}");
+        return Ok(());
+    }
+    if args.has("shutdown") {
+        client.shutdown()?;
+        println!("submit: shutdown requested at {server}");
+        return Ok(());
+    }
+    if args.positional.len() != 1 || args.positional[0] != "balanced" {
+        anyhow::bail!(
+            "usage: nestgpu submit [--server HOST:PORT] balanced [--ranks N] [--scale S] \
+             [--k-scale K] [--t-ms T] [--seed X] [--level 0..3] [--exchange-interval I] \
+             [--connectivity ...] [--p2p] [--stdp ...] — or --stats / --shutdown"
+        );
+    }
+    let d = JobSpec::default();
+    let spec = JobSpec {
+        ranks: args.get("ranks", d.ranks),
+        t_ms: args.get("t-ms", d.t_ms),
+        scale: args.get("scale", d.scale),
+        k_scale: args.get("k-scale", d.k_scale),
+        seed: args.get("seed", d.seed),
+        level: args.get("level", d.level),
+        exchange_interval: match args.get("exchange-interval", 0u16) {
+            0 => None, // auto: once per minimum remote synaptic delay
+            k => Some(k),
+        },
+        connectivity: connectivity(&args)?,
+        collective: !args.has("p2p"),
+        stdp: stdp_scenario(&args),
+    };
+    println!("submit: {} -> {server}", spec.describe());
+    let outcome = client.submit_with(&spec, |state, detail| {
+        if detail.is_empty() {
+            println!("submit: job {state}");
+        } else {
+            println!("submit: job {state} ({detail})");
+        }
+    })?;
+    println!(
+        "cache: {}{}; construction {:.3}s, wall {:.3}s",
+        if outcome.hit { "hit" } else { "miss" },
+        if outcome.coalesced { " (coalesced)" } else { "" },
+        outcome.construction_s,
+        outcome.wall_s,
+    );
+    let result = outcome.result.to_string();
+    println!("result: {result}");
+    print_world_hash(outcome.world_hash);
+    Ok(())
+}
+
 fn cmd_info() {
     println!("nestgpu-rs — Scalable Construction of Spiking Neural Networks (CS.DC 2025)");
     println!("three-layer reproduction: Rust coordinator / JAX model / Pallas kernel (AOT via PJRT)");
@@ -931,6 +1153,12 @@ fn cmd_info() {
             "missing — run `make artifacts`"
         }
     );
+    println!();
+    println!(
+        "subcommands: info | balanced | mam | estimate | phases | report | snapshot | \
+         launch | serve | submit"
+    );
+    println!("construction cache: `nestgpu serve` + `nestgpu submit balanced` (DESIGN.md §17)");
 }
 
 #[cfg(test)]
@@ -966,37 +1194,80 @@ mod tests {
         let _ = std::fs::remove_file(&path);
     }
 
+    fn parse_bal(s: &str) -> Args {
+        let argv: Vec<String> = s.split(' ').map(String::from).collect();
+        let (valued, boolean) = balanced_flags();
+        Args::parse_checked(&argv, &valued, &boolean).unwrap()
+    }
+
     #[test]
     fn connectivity_flag_parses_and_rejects() {
-        let argv = |s: &str| -> Args {
-            Args::parse(&s.split(' ').map(String::from).collect::<Vec<_>>())
-        };
         assert_eq!(
-            connectivity(&argv("--connectivity procedural")).unwrap(),
+            connectivity(&parse_bal("--connectivity procedural")).unwrap(),
             Connectivity::Procedural
         );
         assert_eq!(
-            connectivity(&argv("--connectivity materialized")).unwrap(),
+            connectivity(&parse_bal("--connectivity materialized")).unwrap(),
             Connectivity::Materialized
         );
-        assert_eq!(connectivity(&argv("--t-ms 10")).unwrap(), Connectivity::Materialized);
-        assert!(connectivity(&argv("--connectivity lazy")).is_err());
-        assert!(connectivity(&argv("--connectivity procedural --offboard")).is_err());
+        assert_eq!(connectivity(&parse_bal("--t-ms 10")).unwrap(), Connectivity::Materialized);
+        assert!(connectivity(&parse_bal("--connectivity lazy")).is_err());
+        assert!(connectivity(&parse_bal("--connectivity procedural --offboard")).is_err());
+    }
+
+    /// Satellite guarantee: a misspelled flag aborts with a hint naming
+    /// the closest known flag instead of silently running defaults.
+    #[test]
+    fn unknown_flags_are_rejected_with_a_hint() {
+        let (valued, boolean) = balanced_flags();
+        let argv = vec!["--connectivty".to_string(), "procedural".to_string()];
+        let err = Args::parse_checked(&argv, &valued, &boolean).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown flag --connectivty"), "{msg}");
+        assert!(msg.contains("did you mean --connectivity?"), "{msg}");
+        // a flag with no plausible neighbour gets no misleading hint
+        let argv = vec!["--frobnicate-quux".to_string()];
+        let err = Args::parse_checked(&argv, &valued, &boolean).unwrap_err();
+        assert!(!err.to_string().contains("did you mean"), "{err}");
+    }
+
+    #[test]
+    fn valued_flags_require_values_and_boolean_flags_take_none() {
+        let (valued, boolean) = balanced_flags();
+        let argv = vec!["--seed".to_string()];
+        let err = Args::parse_checked(&argv, &valued, &boolean).unwrap_err();
+        assert!(err.to_string().contains("--seed requires a value"), "{err}");
+        // a boolean flag must not swallow the token after it
+        let argv = vec!["--stdp".to_string(), "stray".to_string()];
+        let args = Args::parse_checked(&argv, &valued, &boolean).unwrap();
+        assert!(args.has("stdp"));
+        assert_eq!(args.positional, vec!["stray".to_string()]);
+        assert!(args.no_positionals("balanced").is_err());
+    }
+
+    #[test]
+    fn edit_distance_is_levenshtein() {
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("abc", ""), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+        assert_eq!(edit_distance("connectivty", "connectivity"), 1);
     }
 }
 
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = argv.first().map(|s| s.as_str()).unwrap_or("info");
-    let args = Args::parse(&argv[1.min(argv.len())..]);
+    let rest = &argv[1.min(argv.len())..];
     match cmd {
-        "balanced" => cmd_balanced(&args),
-        "mam" => cmd_mam(&args),
-        "estimate" => cmd_estimate(&args),
-        "phases" => cmd_phases(&args),
-        "report" => cmd_report(&argv[1.min(argv.len())..]),
-        "snapshot" => cmd_snapshot(&argv[1.min(argv.len())..]),
-        "launch" => cmd_launch(&argv[1.min(argv.len())..]),
+        "balanced" => cmd_balanced(rest),
+        "mam" => cmd_mam(rest),
+        "estimate" => cmd_estimate(rest),
+        "phases" => cmd_phases(rest),
+        "report" => cmd_report(rest),
+        "snapshot" => cmd_snapshot(rest),
+        "launch" => cmd_launch(rest),
+        "serve" => cmd_serve(rest),
+        "submit" => cmd_submit(rest),
         "info" | "--help" | "-h" => {
             cmd_info();
             Ok(())
@@ -1004,7 +1275,7 @@ fn main() -> anyhow::Result<()> {
         other => {
             eprintln!(
                 "unknown subcommand '{other}'; try: info | balanced | mam | estimate | \
-                 phases | report | snapshot | launch"
+                 phases | report | snapshot | launch | serve | submit"
             );
             std::process::exit(2);
         }

@@ -152,9 +152,15 @@ pub enum CounterId {
     RegenCacheHits,
     /// procedural fanouts rematerialized (cache misses)
     RegenCacheMisses,
+    /// serve jobs answered from the construction snapshot cache
+    CacheHits,
+    /// serve jobs that had to construct (cache misses)
+    CacheMisses,
+    /// snapshot cache entries evicted under the byte budget
+    CacheEvictions,
 }
 
-pub const ALL_COUNTERS: [CounterId; 9] = [
+pub const ALL_COUNTERS: [CounterId; 12] = [
     CounterId::Steps,
     CounterId::SpikesEmitted,
     CounterId::RecordsSent,
@@ -164,6 +170,9 @@ pub const ALL_COUNTERS: [CounterId; 9] = [
     CounterId::TraceDropped,
     CounterId::RegenCacheHits,
     CounterId::RegenCacheMisses,
+    CounterId::CacheHits,
+    CounterId::CacheMisses,
+    CounterId::CacheEvictions,
 ];
 
 impl CounterId {
@@ -178,6 +187,9 @@ impl CounterId {
             CounterId::TraceDropped => "trace_dropped",
             CounterId::RegenCacheHits => "regen_cache_hits",
             CounterId::RegenCacheMisses => "regen_cache_misses",
+            CounterId::CacheHits => "cache_hits",
+            CounterId::CacheMisses => "cache_misses",
+            CounterId::CacheEvictions => "cache_evictions",
         }
     }
     fn index(self) -> usize {
@@ -205,9 +217,11 @@ pub enum GaugeId {
     HostCurrent,
     /// host bytes peak
     HostPeak,
+    /// snapshot cache resident bytes (serve)
+    CacheBytes,
 }
 
-pub const ALL_GAUGES: [GaugeId; 8] = [
+pub const ALL_GAUGES: [GaugeId; 9] = [
     GaugeId::PacketBacklog,
     GaugeId::GroupBacklog,
     GaugeId::LocalRingSlots,
@@ -216,6 +230,7 @@ pub const ALL_GAUGES: [GaugeId; 8] = [
     GaugeId::DevicePeak,
     GaugeId::HostCurrent,
     GaugeId::HostPeak,
+    GaugeId::CacheBytes,
 ];
 
 impl GaugeId {
@@ -229,6 +244,7 @@ impl GaugeId {
             GaugeId::DevicePeak => "dev_peak",
             GaugeId::HostCurrent => "host_cur",
             GaugeId::HostPeak => "host_peak",
+            GaugeId::CacheBytes => "cache_bytes",
         }
     }
     fn index(self) -> usize {

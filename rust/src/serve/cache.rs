@@ -1,0 +1,391 @@
+//! Content-addressed snapshot cache (DESIGN.md §17).
+//!
+//! One cache entry = one complete world of construction snapshots
+//! (`rank_<r>.snap`, step 0) living in `cache_dir/<key:016x>/`, where
+//! `key` is [`JobSpec::cache_key`](super::proto::JobSpec::cache_key).
+//! Entries are admitted by *renaming* a fully written staging directory
+//! into place — atomic on one filesystem — so the cache never holds a
+//! half-written world; anything left under `cache_dir/staging/` is a
+//! crashed job and is swept at open.
+//!
+//! Eviction is byte-capped LRU over [`TickLru`] (the policy shared with
+//! the procedural fanout cache), with one serve-specific twist: entries
+//! a warm job is currently resuming from are *pinned* and skipped when
+//! choosing a victim, so a running simulation never has its snapshot
+//! files deleted underneath it. Hit/miss/eviction counts and resident
+//! bytes are kept in an [`MetricsRegistry`] (`cache_hits` /
+//! `cache_misses` / `cache_evictions` / `cache_bytes`), the same
+//! catalog `nestgpu report` renders.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::obs::{CounterId, GaugeId, MetricsRegistry};
+use crate::util::json::Json;
+use crate::util::lru::TickLru;
+
+/// Subdirectory for in-progress (not yet admitted) job snapshots.
+pub const STAGING_DIR: &str = "staging";
+
+struct Entry {
+    key: u64,
+    /// warm jobs currently resuming from this entry (eviction shield)
+    pins: u32,
+}
+
+/// Byte-capped LRU of snapshot worlds on disk, keyed by construction
+/// content hash. Not internally synchronized — the server wraps it in a
+/// mutex and keeps simulations *outside* that lock (pinning bridges the
+/// gap).
+pub struct SnapshotCache {
+    dir: PathBuf,
+    lru: TickLru<Entry>,
+    slot_of: HashMap<u64, usize>,
+    free_slots: Vec<usize>,
+    metrics: MetricsRegistry,
+}
+
+impl SnapshotCache {
+    /// Open (or create) a cache directory, sweep stale staging debris,
+    /// and re-index any complete entries a previous daemon left behind —
+    /// restarts start warm. Entries beyond `cap_bytes` are evicted
+    /// oldest-name-first (no access history survives a restart).
+    pub fn open(dir: &Path, cap_bytes: u64) -> anyhow::Result<Self> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("cannot create cache directory {}", dir.display()))?;
+        let staging = dir.join(STAGING_DIR);
+        if staging.exists() {
+            std::fs::remove_dir_all(&staging)
+                .with_context(|| format!("cannot sweep staging {}", staging.display()))?;
+        }
+        std::fs::create_dir_all(&staging)
+            .with_context(|| format!("cannot create staging {}", staging.display()))?;
+
+        let mut found: Vec<(u64, u64)> = Vec::new(); // (key, bytes)
+        for entry in std::fs::read_dir(dir)
+            .with_context(|| format!("cannot read cache directory {}", dir.display()))?
+        {
+            let entry = entry?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy().into_owned();
+            if name == STAGING_DIR || !entry.path().is_dir() {
+                continue;
+            }
+            let Some(key) = parse_key(&name) else {
+                continue; // not ours; leave foreign files alone
+            };
+            // an admitted entry is complete by construction (atomic
+            // rename), but guard against manual tampering
+            if !entry.path().join(crate::snapshot::rank_file_name(0)).is_file() {
+                eprintln!(
+                    "serve: cache: dropping incomplete entry {}",
+                    entry.path().display()
+                );
+                let _ = std::fs::remove_dir_all(entry.path());
+                continue;
+            }
+            found.push((key, dir_bytes(&entry.path())?));
+        }
+        found.sort_unstable(); // deterministic slot/tick assignment
+
+        let mut cache = Self {
+            dir: dir.to_path_buf(),
+            lru: TickLru::new(found.len(), cap_bytes),
+            slot_of: HashMap::new(),
+            free_slots: Vec::new(),
+            metrics: MetricsRegistry::new(),
+        };
+        for (slot, (key, bytes)) in found.into_iter().enumerate() {
+            cache.lru.insert(slot, Entry { key, pins: 0 }, bytes);
+            cache.slot_of.insert(key, slot);
+        }
+        while cache.lru.used_bytes() > cap_bytes {
+            match cache.lru.victim(|_, _| false) {
+                Some(v) => cache.evict_slot(v),
+                None => break,
+            }
+        }
+        cache.update_bytes_gauge();
+        Ok(cache)
+    }
+
+    /// Look up `key`; on a hit, refresh its LRU tick, pin it against
+    /// eviction and return its directory. Counts a `cache_hits` event.
+    /// The caller must [`release`](Self::release) after the warm run.
+    pub fn acquire(&mut self, key: u64) -> Option<PathBuf> {
+        let slot = *self.slot_of.get(&key)?;
+        self.lru.touch(slot)?;
+        if let Some(e) = self.lru.peek_mut(slot) {
+            e.pins += 1;
+        }
+        self.metrics.add(CounterId::CacheHits, 1);
+        Some(self.entry_dir(key))
+    }
+
+    /// Drop one pin on `key` (no-op if the entry is gone).
+    pub fn release(&mut self, key: u64) {
+        if let Some(&slot) = self.slot_of.get(&key) {
+            if let Some(e) = self.lru.peek_mut(slot) {
+                e.pins = e.pins.saturating_sub(1);
+            }
+        }
+    }
+
+    /// Count a `cache_misses` event (the job is going to construct).
+    pub fn note_miss(&mut self) {
+        self.metrics.add(CounterId::CacheMisses, 1);
+    }
+
+    /// Admit the fully written snapshot world at `staged` as `key`:
+    /// evict unpinned LRU victims until it fits, then rename it into
+    /// place. Returns `false` (and removes `staged`) if the entry is
+    /// larger than the whole budget — the job itself already ran, it is
+    /// just not cacheable. A concurrent duplicate admit is a no-op.
+    pub fn admit(&mut self, key: u64, staged: &Path) -> anyhow::Result<bool> {
+        if self.slot_of.contains_key(&key) {
+            std::fs::remove_dir_all(staged).ok();
+            return Ok(true);
+        }
+        let bytes = dir_bytes(staged)?;
+        if bytes > self.lru.cap_bytes() {
+            std::fs::remove_dir_all(staged).ok();
+            return Ok(false);
+        }
+        while self.lru.used_bytes() + bytes > self.lru.cap_bytes() {
+            match self.lru.victim(|_, e| e.pins > 0) {
+                Some(v) => self.evict_slot(v),
+                // everything live is pinned: admit over budget rather
+                // than delete files under a running job; the next admit
+                // or release re-converges
+                None => break,
+            }
+        }
+        let target = self.entry_dir(key);
+        if target.exists() {
+            std::fs::remove_dir_all(&target)
+                .with_context(|| format!("cannot clear stale entry {}", target.display()))?;
+        }
+        std::fs::rename(staged, &target).with_context(|| {
+            format!("cannot admit {} -> {}", staged.display(), target.display())
+        })?;
+        let slot = match self.free_slots.pop() {
+            Some(s) => s,
+            None => {
+                let s = self.lru.n_slots();
+                self.lru.ensure_slots(s + 1);
+                s
+            }
+        };
+        self.lru.insert(slot, Entry { key, pins: 0 }, bytes);
+        self.slot_of.insert(key, slot);
+        self.update_bytes_gauge();
+        Ok(true)
+    }
+
+    /// A fresh staging directory path for a job about to construct.
+    pub fn staging_dir(&self, key: u64, job_id: u32) -> PathBuf {
+        self.dir.join(STAGING_DIR).join(format!("{key:016x}.{job_id}"))
+    }
+
+    fn evict_slot(&mut self, slot: usize) {
+        let Some((entry, _)) = self.lru.remove(slot) else {
+            return;
+        };
+        self.slot_of.remove(&entry.key);
+        self.free_slots.push(slot);
+        let dir = self.entry_dir(entry.key);
+        if let Err(e) = std::fs::remove_dir_all(&dir) {
+            eprintln!("serve: cache: cannot evict {}: {e}", dir.display());
+        }
+        self.metrics.add(CounterId::CacheEvictions, 1);
+        self.update_bytes_gauge();
+    }
+
+    fn update_bytes_gauge(&mut self) {
+        self.metrics.set(GaugeId::CacheBytes, self.lru.used_bytes());
+    }
+
+    fn entry_dir(&self, key: u64) -> PathBuf {
+        self.dir.join(format!("{key:016x}"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.lru.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lru.is_empty()
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.lru.used_bytes()
+    }
+
+    pub fn cap_bytes(&self) -> u64 {
+        self.lru.cap_bytes()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.metrics.counter(CounterId::CacheHits)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.metrics.counter(CounterId::CacheMisses)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.metrics.counter(CounterId::CacheEvictions)
+    }
+
+    /// The cache's metrics registry (hit/miss/eviction counters and the
+    /// resident-bytes gauge) — merged into obs traces and `CacheStats`.
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
+    /// Cache-local part of the `CacheStats` reply body.
+    pub fn stats_json(&self) -> Vec<(&'static str, Json)> {
+        vec![
+            ("entries", Json::num(self.len() as f64)),
+            ("used_bytes", Json::num(self.used_bytes() as f64)),
+            ("cap_bytes", Json::num(self.cap_bytes() as f64)),
+            ("hits", Json::num(self.hits() as f64)),
+            ("misses", Json::num(self.misses() as f64)),
+            ("evictions", Json::num(self.evictions() as f64)),
+        ]
+    }
+}
+
+/// Parse a 16-hex-digit entry directory name back into its key.
+fn parse_key(name: &str) -> Option<u64> {
+    if name.len() != 16 || !name.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    u64::from_str_radix(name, 16).ok()
+}
+
+/// Total size of the regular files directly inside `dir` (snapshot
+/// worlds are flat: one `rank_<r>.snap` per rank).
+fn dir_bytes(dir: &Path) -> anyhow::Result<u64> {
+    let mut total = 0u64;
+    for entry in std::fs::read_dir(dir)
+        .with_context(|| format!("cannot size cache entry {}", dir.display()))?
+    {
+        let entry = entry?;
+        let meta = entry.metadata()?;
+        if meta.is_file() {
+            total += meta.len();
+        }
+    }
+    Ok(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "nestgpu_serve_cache_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// Write a fake staged snapshot world of `bytes` total size.
+    fn stage(cache: &SnapshotCache, key: u64, job: u32, bytes: usize) -> PathBuf {
+        let dir = cache.staging_dir(key, job);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(crate::snapshot::rank_file_name(0)), vec![0u8; bytes]).unwrap();
+        dir
+    }
+
+    #[test]
+    fn admit_acquire_evict_cycle() {
+        let root = temp_dir("cycle");
+        let mut cache = SnapshotCache::open(&root, 100).unwrap();
+        assert!(cache.is_empty());
+        assert_eq!(cache.acquire(1), None, "cold cache has no entries");
+
+        let staged = stage(&cache, 1, 1, 60);
+        assert!(cache.admit(1, &staged).unwrap());
+        assert!(!staged.exists(), "staging dir is renamed away");
+        let hit = cache.acquire(1).expect("admitted entry hits");
+        assert!(hit.join(crate::snapshot::rank_file_name(0)).is_file());
+        cache.release(1);
+
+        // a second entry that does not fit evicts the (unpinned) first
+        let staged = stage(&cache, 2, 2, 60);
+        assert!(cache.admit(2, &staged).unwrap());
+        assert_eq!(cache.evictions(), 1);
+        assert_eq!(cache.acquire(1), None, "evicted entry misses");
+        cache.note_miss();
+        assert!(cache.acquire(2).is_some());
+        cache.release(2);
+        assert_eq!((cache.hits(), cache.misses()), (2, 1));
+        assert_eq!(cache.used_bytes(), 60);
+
+        // oversized entries are rejected and swept, cache untouched
+        let staged = stage(&cache, 3, 3, 200);
+        assert!(!cache.admit(3, &staged).unwrap());
+        assert!(!staged.exists());
+        assert_eq!(cache.len(), 1);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn pinned_entries_survive_eviction_pressure() {
+        let root = temp_dir("pins");
+        let mut cache = SnapshotCache::open(&root, 100).unwrap();
+        let staged = stage(&cache, 7, 1, 80);
+        cache.admit(7, &staged).unwrap();
+        let pinned = cache.acquire(7).unwrap();
+
+        // over-budget admit while the only victim is pinned: the new
+        // entry still lands and the pinned files stay on disk
+        let staged = stage(&cache, 8, 2, 80);
+        cache.admit(8, &staged).unwrap();
+        assert_eq!(cache.evictions(), 0);
+        assert!(pinned.join(crate::snapshot::rank_file_name(0)).is_file());
+        assert_eq!(cache.len(), 2);
+        assert!(cache.used_bytes() > cache.cap_bytes());
+
+        // once released, the LRU entry becomes evictable again
+        cache.release(7);
+        let staged = stage(&cache, 9, 3, 80);
+        cache.admit(9, &staged).unwrap();
+        assert!(cache.evictions() >= 1);
+        assert!(cache.acquire(7).is_none(), "7 was the LRU victim");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn reopen_reindexes_entries_and_sweeps_staging() {
+        let root = temp_dir("reopen");
+        {
+            let mut cache = SnapshotCache::open(&root, 1000).unwrap();
+            let staged = stage(&cache, 11, 1, 40);
+            cache.admit(11, &staged).unwrap();
+            let _ = stage(&cache, 12, 2, 40); // crashed job: never admitted
+        }
+        let mut cache = SnapshotCache::open(&root, 1000).unwrap();
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.used_bytes(), 40);
+        assert!(cache.acquire(11).is_some());
+        assert!(
+            !root.join(STAGING_DIR).join(format!("{:016x}.2", 12)).exists(),
+            "stale staging is swept at open"
+        );
+        // reopening with a smaller budget evicts down to fit
+        cache.release(11);
+        drop(cache);
+        let cache = SnapshotCache::open(&root, 10).unwrap();
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.evictions(), 1);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,97 @@
+//! Blocking client of the construction-cache daemon (`nestgpu submit`).
+
+use std::io::Write;
+use std::net::TcpStream;
+
+use anyhow::Context;
+
+use crate::comm::wire::{read_frame, FrameHeader, MsgType};
+use crate::util::json::Json;
+
+use super::proto::{self, JobOutcome, JobSpec};
+
+/// One connection to a `nestgpu serve` daemon. Submissions are
+/// synchronous: [`submit`](Self::submit) blocks until the job's final
+/// `JobResult` (or error status) arrives.
+pub struct ServeClient {
+    stream: TcpStream,
+    payload: Vec<u8>,
+    out: Vec<u8>,
+    seq: u64,
+}
+
+impl ServeClient {
+    pub fn connect(server: &str) -> anyhow::Result<ServeClient> {
+        let stream = TcpStream::connect(server)
+            .with_context(|| format!("cannot connect to serve daemon at {server}"))?;
+        Ok(ServeClient {
+            stream,
+            payload: Vec::new(),
+            out: Vec::new(),
+            seq: 0,
+        })
+    }
+
+    fn send(&mut self, t: MsgType, body: &Json) -> anyhow::Result<()> {
+        proto::send_json(&mut self.stream, &mut self.out, t, 0, self.seq, body)
+            .context("send to serve daemon")?;
+        self.seq += 1;
+        self.stream.flush().ok();
+        Ok(())
+    }
+
+    fn recv(&mut self) -> anyhow::Result<(FrameHeader, Json)> {
+        let hdr = read_frame(&mut self.stream, &mut self.payload)
+            .map_err(|e| anyhow::anyhow!("serve daemon connection: {e}"))?;
+        let body = proto::parse_body(&self.payload)?;
+        Ok((hdr, body))
+    }
+
+    /// Submit a job and block until its outcome. Intermediate
+    /// `JobStatus` updates are reported through `on_status`; an error
+    /// status terminates the job as an `Err`.
+    pub fn submit_with(
+        &mut self,
+        spec: &JobSpec,
+        mut on_status: impl FnMut(&str, &str),
+    ) -> anyhow::Result<JobOutcome> {
+        self.send(MsgType::SubmitJob, &spec.to_json())?;
+        loop {
+            let (hdr, body) = self.recv()?;
+            match hdr.msg_type {
+                MsgType::JobStatus => {
+                    let state = body.get("state").and_then(Json::as_str).unwrap_or("?");
+                    let detail = body.get("detail").and_then(Json::as_str).unwrap_or("");
+                    if state == "error" {
+                        anyhow::bail!("job failed on the server: {detail}");
+                    }
+                    on_status(state, detail);
+                }
+                MsgType::JobResult => return JobOutcome::from_json(&body),
+                other => anyhow::bail!("unexpected {other:?} reply to SubmitJob"),
+            }
+        }
+    }
+
+    /// [`submit_with`](Self::submit_with) discarding status updates.
+    pub fn submit(&mut self, spec: &JobSpec) -> anyhow::Result<JobOutcome> {
+        self.submit_with(spec, |_, _| {})
+    }
+
+    /// Fetch the daemon's cache/executor statistics.
+    pub fn stats(&mut self) -> anyhow::Result<Json> {
+        self.send(MsgType::CacheStats, &Json::obj(Vec::new()))?;
+        let (hdr, body) = self.recv()?;
+        if hdr.msg_type != MsgType::CacheStats {
+            anyhow::bail!("unexpected {:?} reply to CacheStats", hdr.msg_type);
+        }
+        Ok(body)
+    }
+
+    /// Ask the daemon to shut down (acknowledged before it exits).
+    pub fn shutdown(&mut self) -> anyhow::Result<()> {
+        self.send(MsgType::Shutdown, &Json::obj(Vec::new()))?;
+        let _ = self.recv(); // best-effort ack; the daemon is going away
+        Ok(())
+    }
+}

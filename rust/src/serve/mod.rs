@@ -1,0 +1,34 @@
+//! Construction-cache service (DESIGN.md §17): `nestgpu serve`.
+//!
+//! The paper's bottom line is that network construction dominates
+//! repeated-run workflows; snapshots (DESIGN.md §10) already make it a
+//! payable-once cost for one user. This subsystem composes the shelf —
+//! versioned snapshots, the framed `NGS1` wire protocol, the obs metrics
+//! registry and the tick-LRU — into a multi-tenant daemon that makes
+//! construction payable-once *per content hash across users*:
+//!
+//! - [`cache`]: a content-addressed, byte-capped LRU of snapshot worlds
+//!   on disk ([`SnapshotCache`]), keyed by
+//!   [`JobSpec::cache_key`] — an FNV-1a 64 fold of every
+//!   construction-relevant parameter.
+//! - [`server`]: the job executor ([`Server`]) — single-flight
+//!   deduplication of identical in-flight constructions, a concurrency
+//!   bound, cold construct-then-save vs warm resume, all through the
+//!   existing `harness` entry points.
+//! - [`client`] / [`proto`]: the framed JSON protocol
+//!   (`SubmitJob` / `JobStatus` / `JobResult` / `CacheStats` /
+//!   `Shutdown`) and the blocking [`ServeClient`] behind
+//!   `nestgpu submit`.
+//!
+//! Every job outcome carries the world spike hash, so a client can
+//! verify that a cache hit reproduced the cold run bit-identically.
+
+pub mod cache;
+pub mod client;
+pub mod proto;
+pub mod server;
+
+pub use cache::SnapshotCache;
+pub use client::ServeClient;
+pub use proto::{JobOutcome, JobSpec};
+pub use server::{ServeConfig, Server, ServerHandle};

@@ -1,0 +1,477 @@
+//! Serve-protocol message bodies (DESIGN.md §17).
+//!
+//! Every serve message is one NGS1 frame (`comm::wire`) whose payload is
+//! a JSON document (`util::json`) — the daemon reuses the socket
+//! transport's framing, validation and size limits rather than inventing
+//! a second wire format. Frame `msg_type` selects the message
+//! ([`MsgType::SubmitJob`] / `JobStatus` / `JobResult` / `CacheStats` /
+//! `Shutdown`); `channel` carries the job id on job-scoped replies.
+//!
+//! [`JobSpec`] is the unit of content addressing: its
+//! [`cache_key`](JobSpec::cache_key) folds every construction-relevant
+//! parameter (model, rank layout, `SimConfig` knobs, connectivity mode,
+//! snapshot format version) through FNV-1a 64 — deliberately *excluding*
+//! the simulated duration `t_ms`, because the cached artifact is the
+//! post-`prepare()` construction snapshot (step 0), which jobs of any
+//! duration share.
+
+use std::io::Write;
+
+use anyhow::Context;
+
+use crate::comm::wire::{begin_frame, finish_frame, MsgType};
+use crate::connection::Connectivity;
+use crate::engine::{SimConfig, SimResult};
+use crate::models::balanced::{BalancedConfig, StdpScenario};
+use crate::remote::levels::ALL_LEVELS;
+use crate::remote::GpuMemLevel;
+use crate::snapshot::format::fnv1a64;
+use crate::snapshot::FORMAT_VERSION;
+use crate::stats::{combine_rank_hashes, spike_hash};
+use crate::util::json::Json;
+
+/// Bump on any change to the canonical key string below: old cache
+/// directories must miss, never alias, after a key-derivation change.
+pub const CACHE_KEY_VERSION: u32 = 1;
+
+/// Upper bound on the rank count a daemon will run for one job — each
+/// rank is a live thread with its own engine state, so an unchecked
+/// client integer must not fork a thousand threads.
+pub const MAX_JOB_RANKS: usize = 64;
+
+/// One simulation request: the balanced model plus the
+/// construction-relevant `SimConfig` knobs a client may vary.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub ranks: usize,
+    /// simulated model time (ms). *Not* part of the cache key (see the
+    /// module docs).
+    pub t_ms: f64,
+    pub scale: f64,
+    pub k_scale: f64,
+    pub seed: u64,
+    /// GPU memory level index (0..=3)
+    pub level: usize,
+    /// spike-exchange batching interval; `None` = auto (min delay)
+    pub exchange_interval: Option<u16>,
+    pub connectivity: Connectivity,
+    /// collective (true) vs point-to-point spike exchange
+    pub collective: bool,
+    pub stdp: Option<StdpScenario>,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        let bal = BalancedConfig::default();
+        let sim = SimConfig::default();
+        Self {
+            ranks: 2,
+            t_ms: 100.0,
+            scale: bal.scale,
+            k_scale: bal.k_scale,
+            seed: sim.seed,
+            level: ALL_LEVELS
+                .iter()
+                .position(|&l| l == sim.level)
+                .expect("default level is in ALL_LEVELS"),
+            exchange_interval: sim.exchange_interval,
+            connectivity: sim.connectivity,
+            collective: bal.collective,
+            stdp: None,
+        }
+    }
+}
+
+impl JobSpec {
+    /// Content-address of this spec's construction: FNV-1a 64 over a
+    /// canonical string of every parameter that changes the constructed
+    /// network or the snapshot bytes. Floats are keyed by their exact
+    /// bit patterns, so two specs collide only if they construct
+    /// bit-identical networks.
+    pub fn cache_key(&self) -> u64 {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = write!(
+            s,
+            "serve-key-v{CACHE_KEY_VERSION};snap-v{FORMAT_VERSION};model=balanced;\
+             ranks={};seed={};level={};interval={};conn={};collective={};\
+             scale={:016x};k_scale={:016x}",
+            self.ranks,
+            self.seed,
+            self.level,
+            match self.exchange_interval {
+                Some(i) => i.to_string(),
+                None => "auto".to_string(),
+            },
+            self.connectivity.name(),
+            self.collective,
+            self.scale.to_bits(),
+            self.k_scale.to_bits(),
+        );
+        match &self.stdp {
+            None => s.push_str(";stdp=none"),
+            Some(st) => {
+                let _ = write!(
+                    s,
+                    ";stdp={:016x},{:016x},{:016x},{:016x},{:016x},{}",
+                    st.lambda.to_bits(),
+                    st.alpha.to_bits(),
+                    st.tau_plus_ms.to_bits(),
+                    st.tau_minus_ms.to_bits(),
+                    st.w_max_factor.to_bits(),
+                    st.multiplicative,
+                );
+            }
+        }
+        fnv1a64(s.as_bytes())
+    }
+
+    /// The balanced-model configuration this spec constructs.
+    pub fn balanced(&self) -> BalancedConfig {
+        BalancedConfig {
+            scale: self.scale,
+            k_scale: self.k_scale,
+            collective: self.collective,
+            stdp: self.stdp.clone(),
+            ..Default::default()
+        }
+    }
+
+    /// The engine configuration this spec runs under (spike recording
+    /// on: the world spike hash is the bit-identity witness).
+    pub fn sim_config(&self) -> anyhow::Result<SimConfig> {
+        let level = GpuMemLevel::from_index(self.level).ok_or_else(|| {
+            anyhow::anyhow!(
+                "level index {} out of range (0..={})",
+                self.level,
+                ALL_LEVELS.len() - 1
+            )
+        })?;
+        Ok(SimConfig {
+            seed: self.seed,
+            level,
+            exchange_interval: self.exchange_interval,
+            connectivity: self.connectivity,
+            ..Default::default()
+        })
+    }
+
+    /// One-line description for server logs.
+    pub fn describe(&self) -> String {
+        format!(
+            "balanced ranks={} scale={} k_scale={} seed={} t_ms={} conn={}{}",
+            self.ranks,
+            self.scale,
+            self.k_scale,
+            self.seed,
+            self.t_ms,
+            self.connectivity.name(),
+            if self.stdp.is_some() { " stdp" } else { "" },
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("model", Json::str("balanced")),
+            ("ranks", Json::num(self.ranks as f64)),
+            ("t_ms", Json::num(self.t_ms)),
+            ("scale", Json::num(self.scale)),
+            ("k_scale", Json::num(self.k_scale)),
+            ("seed", Json::num(self.seed as f64)),
+            ("level", Json::num(self.level as f64)),
+            ("connectivity", Json::str(self.connectivity.name())),
+            ("collective", Json::Bool(self.collective)),
+        ];
+        if let Some(i) = self.exchange_interval {
+            pairs.push(("exchange_interval", Json::num(f64::from(i))));
+        }
+        if let Some(st) = &self.stdp {
+            pairs.push((
+                "stdp",
+                Json::obj(vec![
+                    ("lambda", Json::num(st.lambda)),
+                    ("alpha", Json::num(st.alpha)),
+                    ("tau_plus_ms", Json::num(st.tau_plus_ms)),
+                    ("tau_minus_ms", Json::num(st.tau_minus_ms)),
+                    ("w_max_factor", Json::num(st.w_max_factor)),
+                    ("multiplicative", Json::Bool(st.multiplicative)),
+                ]),
+            ));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Decode and validate a client-submitted spec. Absent fields take
+    /// the [`Default`] values; out-of-range ones are rejected here, at
+    /// the trust boundary, before any engine state exists.
+    pub fn from_json(j: &Json) -> anyhow::Result<JobSpec> {
+        let model = j.get("model").and_then(Json::as_str).unwrap_or("balanced");
+        if model != "balanced" {
+            anyhow::bail!("unknown model {model:?} (this server serves \"balanced\")");
+        }
+        let d = JobSpec::default();
+        let num = |key: &str, dv: f64| j.get(key).and_then(Json::as_f64).unwrap_or(dv);
+        let spec = JobSpec {
+            ranks: num("ranks", d.ranks as f64) as usize,
+            t_ms: num("t_ms", d.t_ms),
+            scale: num("scale", d.scale),
+            k_scale: num("k_scale", d.k_scale),
+            seed: num("seed", d.seed as f64) as u64,
+            level: num("level", d.level as f64) as usize,
+            exchange_interval: j.get("exchange_interval").and_then(Json::as_f64).map(|x| x as u16),
+            connectivity: match j.get("connectivity").and_then(Json::as_str) {
+                None => d.connectivity,
+                Some(s) => Connectivity::parse(s)
+                    .ok_or_else(|| anyhow::anyhow!("unknown connectivity {s:?}"))?,
+            },
+            collective: match j.get("collective") {
+                Some(Json::Bool(b)) => *b,
+                _ => d.collective,
+            },
+            stdp: match j.get("stdp") {
+                None => None,
+                Some(st) => {
+                    let ds = StdpScenario::default();
+                    let snum =
+                        |key: &str, dv: f64| st.get(key).and_then(Json::as_f64).unwrap_or(dv);
+                    Some(StdpScenario {
+                        lambda: snum("lambda", ds.lambda),
+                        alpha: snum("alpha", ds.alpha),
+                        tau_plus_ms: snum("tau_plus_ms", ds.tau_plus_ms),
+                        tau_minus_ms: snum("tau_minus_ms", ds.tau_minus_ms),
+                        w_max_factor: snum("w_max_factor", ds.w_max_factor),
+                        multiplicative: matches!(st.get("multiplicative"), Some(Json::Bool(true))),
+                    })
+                }
+            },
+        };
+        if spec.ranks == 0 || spec.ranks > MAX_JOB_RANKS {
+            anyhow::bail!("ranks must be in 1..={MAX_JOB_RANKS} (got {})", spec.ranks);
+        }
+        if !spec.t_ms.is_finite() || spec.t_ms < 0.0 {
+            anyhow::bail!("t_ms must be finite and >= 0 (got {})", spec.t_ms);
+        }
+        if !(spec.scale.is_finite() && spec.scale > 0.0)
+            || !(spec.k_scale.is_finite() && spec.k_scale > 0.0)
+        {
+            anyhow::bail!(
+                "scale and k_scale must be finite and > 0 (got {} / {})",
+                spec.scale,
+                spec.k_scale
+            );
+        }
+        spec.sim_config()?; // validates the level index
+        Ok(spec)
+    }
+}
+
+/// Final reply to one `SubmitJob`.
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    pub job_id: u32,
+    /// served from the snapshot cache — construction skipped entirely
+    pub hit: bool,
+    /// waited on an identical in-flight construction (single-flight)
+    pub coalesced: bool,
+    /// world-combined spike hash — the bit-identity witness
+    pub world_hash: u64,
+    /// max-over-ranks construction wall time (0 on the warm path)
+    pub construction_s: f64,
+    /// end-to-end job wall time as measured by the server
+    pub wall_s: f64,
+    /// world totals + per-rank rows (see [`results_json`])
+    pub result: Json,
+}
+
+impl JobOutcome {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("job_id", Json::num(f64::from(self.job_id))),
+            ("cache", Json::str(if self.hit { "hit" } else { "miss" })),
+            ("coalesced", Json::Bool(self.coalesced)),
+            ("world_spike_hash", Json::str(&format!("{:016x}", self.world_hash))),
+            ("construction_s", Json::num(self.construction_s)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("result", self.result.clone()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<JobOutcome> {
+        let hash = j
+            .get("world_spike_hash")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("JobResult without world_spike_hash"))?;
+        let world_hash = u64::from_str_radix(hash, 16)
+            .with_context(|| format!("bad world_spike_hash {hash:?}"))?;
+        Ok(JobOutcome {
+            job_id: j.get("job_id").and_then(Json::as_f64).unwrap_or(0.0) as u32,
+            hit: j.get("cache").and_then(Json::as_str) == Some("hit"),
+            coalesced: matches!(j.get("coalesced"), Some(Json::Bool(true))),
+            world_hash,
+            construction_s: j.get("construction_s").and_then(Json::as_f64).unwrap_or(0.0),
+            wall_s: j.get("wall_s").and_then(Json::as_f64).unwrap_or(0.0),
+            result: j.get("result").cloned().unwrap_or(Json::Null),
+        })
+    }
+}
+
+/// World-combined spike hash of a cluster run: per-rank
+/// [`spike_hash`] folded through [`combine_rank_hashes`] — the same
+/// derivation every simulation subcommand prints.
+pub fn world_hash(results: &[SimResult]) -> u64 {
+    let hashes: Vec<u64> = results.iter().map(|r| spike_hash(&r.spikes)).collect();
+    combine_rank_hashes(&hashes)
+}
+
+/// Compact result summary shipped inside a [`JobOutcome`]: world totals
+/// plus one small row per rank.
+pub fn results_json(results: &[SimResult]) -> Json {
+    let n_neurons: u64 = results.iter().map(|r| r.n_neurons).sum();
+    let n_connections: u64 = results.iter().map(|r| r.n_connections).sum();
+    let n_spikes: u64 = results.iter().map(|r| r.n_spikes).sum();
+    let ranks: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("rank", Json::num(r.rank as f64)),
+                ("n_neurons", Json::num(r.n_neurons as f64)),
+                ("n_connections", Json::num(r.n_connections as f64)),
+                ("n_spikes", Json::num(r.n_spikes as f64)),
+                ("rtf", Json::num(r.rtf)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("n_ranks", Json::num(results.len() as f64)),
+        ("n_neurons", Json::num(n_neurons as f64)),
+        ("n_connections", Json::num(n_connections as f64)),
+        ("n_spikes", Json::num(n_spikes as f64)),
+        ("model_time_ms", Json::num(results.first().map_or(0.0, |r| r.model_time_ms))),
+        ("ranks", Json::Arr(ranks)),
+    ])
+}
+
+/// `JobStatus` body: a state transition ("running") or an error report
+/// (state "error" with the failure in `detail`).
+pub fn status_json(job_id: u32, state: &str, detail: &str) -> Json {
+    Json::obj(vec![
+        ("job_id", Json::num(f64::from(job_id))),
+        ("state", Json::str(state)),
+        ("detail", Json::str(detail)),
+    ])
+}
+
+/// Serialize one JSON-bodied frame into `buf` (cleared first) and write
+/// it to `w` whole.
+pub fn send_json<W: Write>(
+    w: &mut W,
+    buf: &mut Vec<u8>,
+    msg_type: MsgType,
+    channel: u32,
+    seq: u64,
+    body: &Json,
+) -> std::io::Result<()> {
+    buf.clear();
+    let start = begin_frame(buf, msg_type, channel, seq);
+    buf.extend_from_slice(body.to_string().as_bytes());
+    finish_frame(buf, start);
+    w.write_all(buf)
+}
+
+/// Parse a frame payload as a JSON document.
+pub fn parse_body(payload: &[u8]) -> anyhow::Result<Json> {
+    let text = std::str::from_utf8(payload).context("frame payload is not UTF-8")?;
+    Json::parse(text).map_err(|e| anyhow::anyhow!("frame payload is not JSON: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_spec_roundtrips_through_json() {
+        let spec = JobSpec {
+            ranks: 3,
+            t_ms: 40.0,
+            scale: 0.02,
+            k_scale: 0.03,
+            seed: 777,
+            level: 1,
+            exchange_interval: Some(5),
+            connectivity: Connectivity::Procedural,
+            collective: false,
+            stdp: Some(StdpScenario {
+                lambda: 0.05,
+                multiplicative: true,
+                ..Default::default()
+            }),
+        };
+        let back = JobSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back.cache_key(), spec.cache_key());
+        assert_eq!(back.ranks, 3);
+        assert_eq!(back.t_ms, 40.0);
+        assert_eq!(back.exchange_interval, Some(5));
+        assert_eq!(back.connectivity, Connectivity::Procedural);
+        assert!(!back.collective);
+        let st = back.stdp.expect("stdp survives the roundtrip");
+        assert_eq!(st.lambda, 0.05);
+        assert!(st.multiplicative);
+    }
+
+    #[test]
+    fn cache_key_ignores_t_ms_but_not_construction_params() {
+        let a = JobSpec::default();
+        let longer = JobSpec {
+            t_ms: a.t_ms * 10.0,
+            ..a.clone()
+        };
+        assert_eq!(a.cache_key(), longer.cache_key(), "t_ms must not key");
+        for other in [
+            JobSpec { ranks: a.ranks + 1, ..a.clone() },
+            JobSpec { seed: a.seed + 1, ..a.clone() },
+            JobSpec { scale: a.scale * 2.0, ..a.clone() },
+            JobSpec { k_scale: a.k_scale * 2.0, ..a.clone() },
+            JobSpec { level: 0, ..a.clone() },
+            JobSpec { exchange_interval: Some(1), ..a.clone() },
+            JobSpec { connectivity: Connectivity::Procedural, ..a.clone() },
+            JobSpec { collective: !a.collective, ..a.clone() },
+            JobSpec { stdp: Some(StdpScenario::default()), ..a.clone() },
+        ] {
+            assert_ne!(a.cache_key(), other.cache_key(), "{other:?}");
+        }
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_at_the_trust_boundary() {
+        for (field, value) in [
+            ("ranks", Json::num(0.0)),
+            ("ranks", Json::num(1e9)),
+            ("t_ms", Json::num(-1.0)),
+            ("scale", Json::num(0.0)),
+            ("level", Json::num(99.0)),
+            ("connectivity", Json::str("quantum")),
+            ("model", Json::str("mam")),
+        ] {
+            let body = Json::obj(vec![(field, value)]);
+            assert!(JobSpec::from_json(&body).is_err(), "{field} must reject");
+        }
+    }
+
+    #[test]
+    fn job_outcome_roundtrips_through_json() {
+        let out = JobOutcome {
+            job_id: 9,
+            hit: true,
+            coalesced: true,
+            world_hash: 0xDEAD_BEEF_0123_4567,
+            construction_s: 0.0,
+            wall_s: 1.5,
+            result: Json::obj(vec![("n_spikes", Json::num(42.0))]),
+        };
+        let back = JobOutcome::from_json(&out.to_json()).unwrap();
+        assert_eq!(back.job_id, 9);
+        assert!(back.hit && back.coalesced);
+        assert_eq!(back.world_hash, out.world_hash);
+        assert_eq!(back.result.get("n_spikes").and_then(Json::as_f64), Some(42.0));
+    }
+}

@@ -1,0 +1,557 @@
+//! The construction-cache daemon (DESIGN.md §17).
+//!
+//! One handler thread per client connection; each `SubmitJob` frame
+//! becomes a job that either *resumes* from the snapshot cache (warm:
+//! construction skipped entirely) or *constructs* through
+//! [`run_cluster_construct_save`] and admits the resulting snapshot
+//! world (cold). Three coordination pieces keep a multi-tenant daemon
+//! honest:
+//!
+//! - **single-flight**: identical concurrent submits (same cache key)
+//!   trigger exactly one construction — the first submitter builds, the
+//!   rest wait on its [`Flight`] and then re-check the cache, landing as
+//!   hits. If the builder fails, one waiter is promoted to builder.
+//! - **bounded concurrency**: a [`Semaphore`] caps the number of
+//!   simulations (cold or warm) running at once; each simulation is a
+//!   thread-per-rank cluster, so admission control is what keeps N
+//!   clients from forking N·ranks threads.
+//! - **pinning**: a warm job pins its cache entry for the duration of
+//!   the resume, so LRU eviction can never delete snapshot files under
+//!   a running simulation (see `cache.rs`).
+//!
+//! Bit-identity of warm vs cold runs holds by construction: the cold
+//! path saves the post-`prepare()` state (step 0) and then simulates in
+//! the same prepared simulators, while the warm path restores exactly
+//! that state — the snapshot subsystem's resume-equivalence invariant
+//! (`tests/it_snapshot.rs`) does the rest. The world spike hash in every
+//! [`JobOutcome`] is the client-checkable witness.
+
+use std::collections::HashMap;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use anyhow::Context;
+
+use crate::comm::wire::{read_frame, MsgType, WireError};
+use crate::engine::Simulator;
+use crate::harness::{run_cluster_construct_save, run_cluster_from_snapshot};
+use crate::models::balanced::build_balanced;
+use crate::util::json::Json;
+
+use super::cache::SnapshotCache;
+use super::proto::{self, JobOutcome, JobSpec};
+
+/// Daemon configuration (`nestgpu serve` flags).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// bind address; port 0 picks an ephemeral port (tests/benches)
+    pub listen: String,
+    pub cache_dir: PathBuf,
+    pub cache_bytes: u64,
+    /// max simulations (cold or warm) running concurrently
+    pub max_jobs: usize,
+    /// write a `nestgpu report`-readable trace with the cache counters
+    /// here at shutdown
+    pub obs_dir: Option<PathBuf>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            listen: "127.0.0.1:0".to_string(),
+            cache_dir: PathBuf::from("serve-cache"),
+            cache_bytes: 256 << 20,
+            max_jobs: 2,
+            obs_dir: None,
+        }
+    }
+}
+
+/// One in-flight construction; waiters block until the builder calls
+/// [`finish`](Flight::finish) (after the cache admit).
+#[derive(Default)]
+struct Flight {
+    done: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Flight {
+    fn wait(&self) {
+        let mut done = self.done.lock().unwrap();
+        while !*done {
+            done = self.cv.wait(done).unwrap();
+        }
+    }
+
+    fn finish(&self) {
+        *self.done.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Counting semaphore (the offline crate set has no tokio/parking_lot;
+/// a mutex + condvar is all a blocking daemon needs).
+struct Semaphore {
+    permits: Mutex<usize>,
+    cv: Condvar,
+}
+
+struct SemPermit<'a> {
+    sem: &'a Semaphore,
+}
+
+impl Semaphore {
+    fn new(n: usize) -> Self {
+        Self {
+            permits: Mutex::new(n),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn acquire(&self) -> SemPermit<'_> {
+        let mut p = self.permits.lock().unwrap();
+        while *p == 0 {
+            p = self.cv.wait(p).unwrap();
+        }
+        *p -= 1;
+        SemPermit { sem: self }
+    }
+}
+
+impl Drop for SemPermit<'_> {
+    fn drop(&mut self) {
+        *self.sem.permits.lock().unwrap() += 1;
+        self.sem.cv.notify_one();
+    }
+}
+
+/// Shared daemon state.
+struct State {
+    cache: Mutex<SnapshotCache>,
+    inflight: Mutex<HashMap<u64, Arc<Flight>>>,
+    /// live client sockets (clones), force-closed at shutdown so
+    /// handlers parked in `read_frame` on idle connections unblock
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    sem: Semaphore,
+    next_job: AtomicU32,
+    next_conn: AtomicU64,
+    constructions: AtomicU64,
+    coalesced: AtomicU64,
+    jobs_done: AtomicU64,
+    proto_errors: AtomicU64,
+    shutdown: AtomicBool,
+    addr: SocketAddr,
+    obs_dir: Option<PathBuf>,
+}
+
+impl State {
+    /// `CacheStats` reply body: cache counters plus executor totals.
+    fn stats_json(&self) -> Json {
+        let mut fields = self.cache.lock().unwrap().stats_json();
+        let load = |a: &AtomicU64| Json::num(a.load(Ordering::SeqCst) as f64);
+        fields.push(("coalesced", load(&self.coalesced)));
+        fields.push(("constructions", load(&self.constructions)));
+        fields.push(("jobs_done", load(&self.jobs_done)));
+        fields.push(("proto_errors", load(&self.proto_errors)));
+        Json::obj(fields)
+    }
+
+    fn begin_shutdown(&self) {
+        if !self.shutdown.swap(true, Ordering::SeqCst) {
+            // unblock handlers parked in read_frame on idle connections
+            // (running jobs still finish; their send just fails)
+            for c in self.conns.lock().unwrap().values() {
+                let _ = c.shutdown(Shutdown::Both);
+            }
+            // wake the accept loop with a throwaway connection
+            let _ = TcpStream::connect(self.addr);
+        }
+    }
+
+    /// Write a single-rank trace (`rank0000.jsonl` with one summary
+    /// record carrying the cache registry) that `nestgpu report` and
+    /// `obs::report::read_trace_dir` understand.
+    fn write_obs_trace(&self, dir: &Path) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("cannot create obs dir {}", dir.display()))?;
+        let registry = self.cache.lock().unwrap().registry().to_json();
+        let line = Json::obj(vec![
+            ("t", Json::str("summary")),
+            ("schema", Json::num(1.0)),
+            ("rank", Json::num(0.0)),
+            ("registry", registry),
+        ]);
+        let mut text = line.to_string();
+        text.push('\n');
+        let path = dir.join("rank0000.jsonl");
+        std::fs::write(&path, text).with_context(|| format!("cannot write {}", path.display()))?;
+        Ok(())
+    }
+}
+
+/// A bound daemon: listener plus shared state. [`run`](Server::run)
+/// blocks (the CLI); [`spawn`](Server::spawn) runs it on a thread
+/// (tests and benches).
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<State>,
+}
+
+impl Server {
+    pub fn bind(cfg: ServeConfig) -> anyhow::Result<Server> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("cannot listen on {}", cfg.listen))?;
+        let addr = listener.local_addr().context("read listen addr")?;
+        let cache = SnapshotCache::open(&cfg.cache_dir, cfg.cache_bytes)?;
+        let state = Arc::new(State {
+            cache: Mutex::new(cache),
+            inflight: Mutex::new(HashMap::new()),
+            conns: Mutex::new(HashMap::new()),
+            sem: Semaphore::new(cfg.max_jobs.max(1)),
+            next_job: AtomicU32::new(0),
+            next_conn: AtomicU64::new(0),
+            constructions: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            jobs_done: AtomicU64::new(0),
+            proto_errors: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+            addr,
+            obs_dir: cfg.obs_dir,
+        });
+        Ok(Server { listener, state })
+    }
+
+    /// The actual bound address (resolves a `:0` ephemeral port).
+    pub fn local_addr(&self) -> String {
+        self.state.addr.to_string()
+    }
+
+    /// Accept clients until a `Shutdown` frame arrives, then drain the
+    /// handler threads, dump the obs trace (if configured) and return.
+    pub fn run(self) -> anyhow::Result<()> {
+        let state = self.state;
+        let mut handlers = Vec::new();
+        for stream in self.listener.incoming() {
+            if state.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match stream {
+                Ok(s) => {
+                    let id = state.next_conn.fetch_add(1, Ordering::SeqCst);
+                    if let Ok(clone) = s.try_clone() {
+                        state.conns.lock().unwrap().insert(id, clone);
+                    }
+                    let st = Arc::clone(&state);
+                    handlers.push(thread::spawn(move || {
+                        handle_conn(s, &st);
+                        st.conns.lock().unwrap().remove(&id);
+                    }));
+                }
+                Err(e) => eprintln!("serve: accept failed: {e}"),
+            }
+        }
+        for h in handlers {
+            let _ = h.join();
+        }
+        if let Some(dir) = state.obs_dir.clone() {
+            if let Err(e) = state.write_obs_trace(&dir) {
+                eprintln!("serve: {e:#}");
+            }
+        }
+        let stats = state.stats_json().to_string();
+        println!("serve: shutdown; final stats: {stats}");
+        Ok(())
+    }
+
+    /// Run the daemon on a background thread; returns a handle carrying
+    /// the bound address.
+    pub fn spawn(self) -> ServerHandle {
+        let addr = self.local_addr();
+        ServerHandle {
+            addr,
+            thread: thread::spawn(move || self.run()),
+        }
+    }
+}
+
+pub struct ServerHandle {
+    addr: String,
+    thread: thread::JoinHandle<anyhow::Result<()>>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Wait for the daemon to shut down (send it a `Shutdown` frame
+    /// first, e.g. via `ServeClient::shutdown`).
+    pub fn join(self) -> anyhow::Result<()> {
+        match self.thread.join() {
+            Ok(r) => r,
+            Err(_) => Err(anyhow::anyhow!("server thread panicked")),
+        }
+    }
+}
+
+/// Write one reply frame; `false` = the client is gone (drop the
+/// connection, never the daemon).
+fn send(
+    stream: &mut TcpStream,
+    out: &mut Vec<u8>,
+    t: MsgType,
+    chan: u32,
+    seq: u64,
+    body: &Json,
+) -> bool {
+    proto::send_json(stream, out, t, chan, seq, body).is_ok()
+}
+
+/// Serve one client connection until it closes, errors, or asks for
+/// shutdown. Malformed frames are counted, logged and terminate only
+/// this connection — a hostile or buggy client must never take the
+/// daemon down.
+fn handle_conn(mut stream: TcpStream, state: &Arc<State>) {
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "?".to_string());
+    let mut payload = Vec::new();
+    let mut out = Vec::new();
+    let mut seq = 0u64;
+    loop {
+        let hdr = match read_frame(&mut stream, &mut payload) {
+            Ok(h) => h,
+            Err(WireError::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(WireError::Io(e)) => {
+                eprintln!("serve: client {peer}: i/o error: {e}");
+                break;
+            }
+            Err(e) => {
+                state.proto_errors.fetch_add(1, Ordering::SeqCst);
+                eprintln!("serve: client {peer}: rejecting malformed frame: {e}");
+                break;
+            }
+        };
+        let keep = match hdr.msg_type {
+            MsgType::SubmitJob => {
+                handle_submit(&mut stream, &mut out, &mut seq, state, &payload, &peer)
+            }
+            MsgType::CacheStats => {
+                let body = state.stats_json();
+                send(&mut stream, &mut out, MsgType::CacheStats, 0, seq, &body)
+            }
+            MsgType::Shutdown => {
+                let body = proto::status_json(0, "shutting-down", "");
+                let _ = send(&mut stream, &mut out, MsgType::JobStatus, 0, seq, &body);
+                state.begin_shutdown();
+                false
+            }
+            other => {
+                state.proto_errors.fetch_add(1, Ordering::SeqCst);
+                eprintln!("serve: client {peer}: unexpected {other:?} frame; closing");
+                false
+            }
+        };
+        seq += 1;
+        if !keep {
+            break;
+        }
+    }
+}
+
+/// One `SubmitJob` request end to end; returns whether the connection
+/// is still usable.
+fn handle_submit(
+    stream: &mut TcpStream,
+    out: &mut Vec<u8>,
+    seq: &mut u64,
+    state: &Arc<State>,
+    payload: &[u8],
+    peer: &str,
+) -> bool {
+    let parsed = proto::parse_body(payload).and_then(|j| JobSpec::from_json(&j));
+    let spec = match parsed {
+        Ok(spec) => spec,
+        Err(e) => {
+            // a well-framed but invalid spec: report it and keep the
+            // connection — this is the client's bug, not a wire fault
+            state.proto_errors.fetch_add(1, Ordering::SeqCst);
+            eprintln!("serve: client {peer}: bad job spec: {e:#}");
+            let body = proto::status_json(0, "error", &format!("{e:#}"));
+            return send(stream, out, MsgType::JobStatus, 0, *seq, &body);
+        }
+    };
+    let job_id = state.next_job.fetch_add(1, Ordering::SeqCst) + 1;
+    println!("serve: job {job_id} ({peer}): {}", spec.describe());
+    // best-effort: even if the client is already gone, run the job to
+    // completion so the cache still fills
+    let body = proto::status_json(job_id, "running", "");
+    let _ = send(stream, out, MsgType::JobStatus, job_id, *seq, &body);
+    *seq += 1;
+    match run_job(state, &spec, job_id) {
+        Ok(outcome) => {
+            println!(
+                "serve: job {job_id}: {} in {:.3}s (world spike hash {:016x})",
+                if outcome.hit { "hit" } else { "miss" },
+                outcome.wall_s,
+                outcome.world_hash
+            );
+            state.jobs_done.fetch_add(1, Ordering::SeqCst);
+            let sent = send(stream, out, MsgType::JobResult, job_id, *seq, &outcome.to_json());
+            if !sent {
+                eprintln!(
+                    "serve: job {job_id}: client {peer} went away before the result; \
+                     job is cached regardless"
+                );
+            }
+            sent
+        }
+        Err(e) => {
+            eprintln!("serve: job {job_id} failed: {e:#}");
+            let body = proto::status_json(job_id, "error", &format!("{e:#}"));
+            send(stream, out, MsgType::JobStatus, job_id, *seq, &body)
+        }
+    }
+}
+
+/// Execute one job: warm fast path, else single-flight construction.
+fn run_job(state: &Arc<State>, spec: &JobSpec, job_id: u32) -> anyhow::Result<JobOutcome> {
+    let key = spec.cache_key();
+    let t0 = Instant::now();
+    let mut coalesced = false;
+    loop {
+        let warm = state.cache.lock().unwrap().acquire(key);
+        if let Some(dir) = warm {
+            return warm_job(state, spec, job_id, t0, coalesced, &dir, key);
+        }
+        // single-flight: first submitter of this key builds; identical
+        // concurrent submits wait, then loop back to the cache check
+        let flight = {
+            let mut inflight = state.inflight.lock().unwrap();
+            match inflight.get(&key) {
+                Some(f) => Some(Arc::clone(f)),
+                None => {
+                    inflight.insert(key, Arc::new(Flight::default()));
+                    None
+                }
+            }
+        };
+        if let Some(f) = flight {
+            coalesced = true;
+            state.coalesced.fetch_add(1, Ordering::SeqCst);
+            f.wait();
+            // on builder success the next acquire hits; on builder
+            // failure the flight is gone and one waiter rebuilds
+            continue;
+        }
+        // we won the builder slot — but a previous builder may have
+        // admitted between our cache miss and the flight insert (it
+        // clears its flight only after the admit, so seeing no flight
+        // means any earlier admit is visible). Re-check before paying
+        // a construction twice.
+        let raced = state.cache.lock().unwrap().acquire(key);
+        let outcome = match raced {
+            Some(dir) => warm_job(state, spec, job_id, t0, coalesced, &dir, key),
+            None => build_job(state, spec, key, job_id, t0, coalesced),
+        };
+        // clear the flight only after the cache admit, so woken waiters
+        // cannot re-miss on a success
+        if let Some(f) = state.inflight.lock().unwrap().remove(&key) {
+            f.finish();
+        }
+        return outcome;
+    }
+}
+
+/// The warm path: resume the pinned cache entry at `dir`, release the
+/// pin, and report a hit with zero construction time.
+fn warm_job(
+    state: &Arc<State>,
+    spec: &JobSpec,
+    job_id: u32,
+    t0: Instant,
+    coalesced: bool,
+    dir: &Path,
+    key: u64,
+) -> anyhow::Result<JobOutcome> {
+    let run = {
+        let _permit = state.sem.acquire();
+        run_cluster_from_snapshot(dir, spec.t_ms)
+    };
+    state.cache.lock().unwrap().release(key);
+    let results =
+        run.with_context(|| format!("warm job {job_id}: resume from {}", dir.display()))?;
+    Ok(JobOutcome {
+        job_id,
+        hit: true,
+        coalesced,
+        world_hash: proto::world_hash(&results),
+        construction_s: 0.0,
+        wall_s: t0.elapsed().as_secs_f64(),
+        result: proto::results_json(&results),
+    })
+}
+
+/// The cold path: construct, save into staging, simulate, admit.
+fn build_job(
+    state: &Arc<State>,
+    spec: &JobSpec,
+    key: u64,
+    job_id: u32,
+    t0: Instant,
+    coalesced: bool,
+) -> anyhow::Result<JobOutcome> {
+    let staging = {
+        let mut cache = state.cache.lock().unwrap();
+        cache.note_miss();
+        cache.staging_dir(key, job_id)
+    };
+    state.constructions.fetch_add(1, Ordering::SeqCst);
+    let bal = spec.balanced();
+    let cfg = spec.sim_config()?;
+    let run = {
+        let _permit = state.sem.acquire();
+        run_cluster_construct_save(
+            spec.ranks,
+            &cfg,
+            &move |sim: &mut Simulator| build_balanced(sim, &bal),
+            spec.t_ms,
+            &staging,
+        )
+    };
+    let results = match run {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = std::fs::remove_dir_all(&staging);
+            return Err(e.context(format!("cold job {job_id}: construct {}", spec.describe())));
+        }
+    };
+    let construction_s = results
+        .iter()
+        .map(|r| r.phases.construction().as_secs_f64())
+        .fold(0.0, f64::max);
+    match state.cache.lock().unwrap().admit(key, &staging) {
+        Ok(true) => {}
+        Ok(false) => {
+            println!("serve: job {job_id}: snapshot exceeds the cache budget; not cached")
+        }
+        Err(e) => {
+            eprintln!("serve: job {job_id}: cache admit failed: {e:#}");
+            let _ = std::fs::remove_dir_all(&staging);
+        }
+    }
+    Ok(JobOutcome {
+        job_id,
+        hit: false,
+        coalesced,
+        world_hash: proto::world_hash(&results),
+        construction_s,
+        wall_s: t0.elapsed().as_secs_f64(),
+        result: proto::results_json(&results),
+    })
+}

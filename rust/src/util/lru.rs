@@ -1,0 +1,213 @@
+//! Byte-capped tick-LRU over a dense slot table.
+//!
+//! Factored out of the procedural-connectivity fanout cache so the serve
+//! subsystem's snapshot cache shares one audited eviction policy. The
+//! design is deliberately simple and deterministic: a dense `Vec` slot
+//! per key (no hashing), a monotonically increasing logical tick stamped
+//! on every touch/insert, and strict min-tick eviction — given the same
+//! access sequence, the same victims fall out in the same order.
+//!
+//! Two usage shapes are supported:
+//!
+//! - [`TickLru::admit`] — the closed loop used by `FanoutCache`: evict
+//!   least-recently-used entries until the newcomer fits, reporting each
+//!   victim to a callback (for allocation-tracker accounting).
+//! - [`TickLru::victim`] / [`TickLru::remove`] — the open loop used by
+//!   the serve snapshot cache, where some entries are *pinned* (a warm
+//!   job is resuming from them) and must be skipped when choosing a
+//!   victim.
+
+/// Dense-slot byte-capped LRU. `T` is the cached value; byte sizes are
+/// supplied by the caller at insert time (the cache never inspects `T`).
+pub struct TickLru<T> {
+    cap: u64,
+    used: u64,
+    tick: u64,
+    slots: Vec<Option<(u64, u64, T)>>,
+}
+
+impl<T> TickLru<T> {
+    pub fn new(n_slots: usize, cap_bytes: u64) -> Self {
+        let mut slots = Vec::new();
+        slots.resize_with(n_slots, || None);
+        Self {
+            cap: cap_bytes,
+            used: 0,
+            tick: 0,
+            slots,
+        }
+    }
+
+    /// Grow the slot table to at least `n` slots (never shrinks).
+    pub fn ensure_slots(&mut self, n: usize) {
+        if n > self.slots.len() {
+            self.slots.resize_with(n, || None);
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn cap_bytes(&self) -> u64 {
+        self.cap
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used
+    }
+
+    /// Number of live entries.
+    pub fn len(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.iter().all(|s| s.is_none())
+    }
+
+    /// Live entry for `id`, refreshing its LRU tick.
+    pub fn touch(&mut self, id: usize) -> Option<&T> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.slots.get_mut(id) {
+            Some(Some((last, _, v))) => {
+                *last = tick;
+                Some(v)
+            }
+            _ => None,
+        }
+    }
+
+    /// Live entry for `id` without refreshing its tick.
+    pub fn peek(&self, id: usize) -> Option<&T> {
+        match self.slots.get(id) {
+            Some(Some((_, _, v))) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Mutable live entry for `id` without refreshing its tick.
+    pub fn peek_mut(&mut self, id: usize) -> Option<&mut T> {
+        match self.slots.get_mut(id) {
+            Some(Some((_, _, v))) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Insert unconditionally (no eviction), stamping a fresh tick. The
+    /// slot must be free; the caller is responsible for staying under
+    /// budget via [`Self::victim`] + [`Self::remove`], or should use
+    /// [`Self::admit`] instead.
+    pub fn insert(&mut self, id: usize, value: T, bytes: u64) {
+        debug_assert!(self.slots[id].is_none(), "insert over a live entry");
+        self.tick += 1;
+        self.used += bytes;
+        self.slots[id] = Some((self.tick, bytes, value));
+    }
+
+    /// Remove `id`'s entry, returning the value and its byte size.
+    pub fn remove(&mut self, id: usize) -> Option<(T, u64)> {
+        match self.slots.get_mut(id).and_then(|s| s.take()) {
+            Some((_, bytes, v)) => {
+                self.used -= bytes;
+                Some((v, bytes))
+            }
+            None => None,
+        }
+    }
+
+    /// Least-recently-used live entry whose `(id, value)` is not excused
+    /// by `skip`. Ties cannot occur (ticks are unique).
+    pub fn victim(&self, mut skip: impl FnMut(usize, &T) -> bool) -> Option<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|(t, _, v)| (t, i, v)))
+            .filter(|&(_, i, v)| !skip(i, v))
+            .min_by_key(|&(t, _, _)| t)
+            .map(|(_, i, _)| i)
+    }
+
+    /// Insert with closed-loop eviction: evict min-tick victims until
+    /// `bytes` fits under the cap, reporting each `(id, value, bytes)`
+    /// victim to `on_evict`. A value larger than the whole budget is
+    /// rejected (returns `false`, `on_evict` untouched).
+    pub fn admit(
+        &mut self,
+        id: usize,
+        value: T,
+        bytes: u64,
+        mut on_evict: impl FnMut(usize, T, u64),
+    ) -> bool {
+        if bytes > self.cap {
+            return false;
+        }
+        while self.used + bytes > self.cap {
+            let Some(v) = self.victim(|_, _| false) else {
+                break;
+            };
+            if let Some((old, ob)) = self.remove(v) {
+                on_evict(v, old, ob);
+            }
+        }
+        self.insert(id, value, bytes);
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn touch_refreshes_and_victim_is_min_tick() {
+        let mut lru = TickLru::new(4, 100);
+        lru.insert(0, "a", 10);
+        lru.insert(1, "b", 10);
+        lru.insert(2, "c", 10);
+        assert_eq!(lru.touch(0), Some(&"a")); // 0 is now freshest
+        assert_eq!(lru.victim(|_, _| false), Some(1));
+        assert_eq!(lru.victim(|i, _| i == 1), Some(2)); // skip pins
+        assert_eq!(lru.peek(1), Some(&"b")); // peek does not refresh
+        assert_eq!(lru.victim(|_, _| false), Some(1));
+        assert_eq!(lru.len(), 3);
+        assert_eq!(lru.used_bytes(), 30);
+    }
+
+    #[test]
+    fn admit_evicts_lru_until_fit_and_rejects_oversize() {
+        let mut lru = TickLru::new(4, 25);
+        assert!(lru.admit(0, "a", 10, |_, _, _| panic!("no eviction")));
+        assert!(lru.admit(1, "b", 10, |_, _, _| panic!("no eviction")));
+        let mut evicted = Vec::new();
+        assert!(lru.admit(2, "c", 10, |i, v, b| evicted.push((i, v, b))));
+        assert_eq!(evicted, vec![(0, "a", 10)]);
+        assert_eq!(lru.used_bytes(), 20);
+        // larger than the whole budget: rejected, state untouched
+        assert!(!lru.admit(3, "huge", 26, |_, _, _| panic!("no eviction")));
+        assert_eq!(lru.used_bytes(), 20);
+        assert_eq!(lru.len(), 2);
+    }
+
+    #[test]
+    fn remove_returns_bytes_and_frees_budget() {
+        let mut lru = TickLru::new(2, 20);
+        lru.insert(0, 7u32, 12);
+        assert_eq!(lru.remove(0), Some((7, 12)));
+        assert_eq!(lru.remove(0), None);
+        assert_eq!(lru.used_bytes(), 0);
+        assert!(lru.is_empty());
+    }
+
+    #[test]
+    fn ensure_slots_grows_but_never_shrinks() {
+        let mut lru: TickLru<u8> = TickLru::new(2, 10);
+        lru.ensure_slots(5);
+        assert_eq!(lru.n_slots(), 5);
+        lru.ensure_slots(1);
+        assert_eq!(lru.n_slots(), 5);
+        lru.insert(4, 9, 1);
+        assert_eq!(lru.touch(4), Some(&9));
+    }
+}

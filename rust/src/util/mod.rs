@@ -2,6 +2,7 @@
 //! serde, or criterion — these modules replace them).
 
 pub mod json;
+pub mod lru;
 pub mod rng;
 pub mod sort;
 pub mod table;

@@ -1,0 +1,227 @@
+//! Integration: the construction-cache service (DESIGN.md §17) end to
+//! end over real TCP — cold-vs-warm bit-identity, single-flight
+//! deduplication of identical concurrent submits, LRU eviction under a
+//! tight byte budget, loud rejection of malformed and oversized frames,
+//! and daemon survival across a client hangup mid-job.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+
+use nestgpu::comm::wire::{read_frame, MsgType, WIRE_VERSION};
+use nestgpu::serve::proto;
+use nestgpu::serve::{JobOutcome, JobSpec, ServeClient, ServeConfig, Server, ServerHandle};
+use nestgpu::util::json::Json;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let base = std::env::temp_dir();
+    let dir = base.join(format!("nestgpu_it_serve_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A tiny 2-rank world (45 neurons per rank): construction is still a
+/// measurable phase, so warm-vs-cold behavior stays observable while
+/// every test runs in well under a second of simulated activity.
+fn small_spec() -> JobSpec {
+    JobSpec {
+        t_ms: 60.0,
+        scale: 0.004,
+        k_scale: 0.004,
+        ..Default::default()
+    }
+}
+
+fn start_server(name: &str, cache_bytes: u64, max_jobs: usize) -> (ServerHandle, PathBuf) {
+    let dir = tmp_dir(name);
+    let server = Server::bind(ServeConfig {
+        listen: "127.0.0.1:0".to_string(),
+        cache_dir: dir.clone(),
+        cache_bytes,
+        max_jobs,
+        obs_dir: None,
+    })
+    .unwrap();
+    (server.spawn(), dir)
+}
+
+fn stat(stats: &Json, key: &str) -> f64 {
+    stats.get(key).and_then(Json::as_f64).unwrap_or(-1.0)
+}
+
+fn stop(handle: ServerHandle) {
+    let mut c = ServeClient::connect(handle.addr()).unwrap();
+    c.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn cold_then_warm_submits_are_bit_identical() {
+    let (handle, dir) = start_server("warm", 256 << 20, 2);
+    let mut client = ServeClient::connect(handle.addr()).unwrap();
+    let spec = small_spec();
+
+    let cold = client.submit(&spec).unwrap();
+    assert!(!cold.hit, "first submit must construct");
+    assert!(cold.construction_s > 0.0, "cold job must report construction time");
+    let spikes = cold.result.get("n_spikes").and_then(Json::as_f64).unwrap_or(0.0);
+    assert!(spikes > 0.0, "the world must spike for bit-identity to mean anything");
+
+    let warm = client.submit(&spec).unwrap();
+    assert!(warm.hit, "second identical submit must be served from the cache");
+    assert_eq!(warm.construction_s, 0.0, "warm path must skip construction");
+    assert_eq!(warm.world_hash, cold.world_hash, "warm run must be bit-identical");
+
+    let stats = client.stats().unwrap();
+    assert_eq!(stat(&stats, "hits"), 1.0);
+    assert_eq!(stat(&stats, "misses"), 1.0);
+    assert_eq!(stat(&stats, "constructions"), 1.0);
+    assert_eq!(stat(&stats, "jobs_done"), 2.0);
+    assert_eq!(stat(&stats, "entries"), 1.0);
+
+    // t_ms is not part of the key: a longer run still resumes warm
+    let longer = JobSpec {
+        t_ms: spec.t_ms * 2.0,
+        ..spec.clone()
+    };
+    assert!(client.submit(&longer).unwrap().hit, "t_ms must not be in the cache key");
+
+    stop(handle);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_identical_submits_collapse_to_one_construction() {
+    let (handle, dir) = start_server("flight", 256 << 20, 4);
+    let addr = handle.addr().to_string();
+    let spec = small_spec();
+    let outcomes: Vec<JobOutcome> = std::thread::scope(|s| {
+        let joins: Vec<_> = (0..4)
+            .map(|_| {
+                let addr = addr.clone();
+                let spec = spec.clone();
+                s.spawn(move || ServeClient::connect(&addr).unwrap().submit(&spec).unwrap())
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+
+    let hash = outcomes[0].world_hash;
+    assert!(outcomes.iter().all(|o| o.world_hash == hash), "hashes diverged");
+    let built = outcomes.iter().filter(|o| !o.hit).count();
+    assert_eq!(built, 1, "exactly one submit pays the construction");
+
+    let mut client = ServeClient::connect(&addr).unwrap();
+    let stats = client.stats().unwrap();
+    let dump = stats.to_string();
+    assert_eq!(stat(&stats, "constructions"), 1.0, "single-flight must dedup: {dump}");
+    assert_eq!(stat(&stats, "misses"), 1.0, "{dump}");
+    assert_eq!(stat(&stats, "hits"), 3.0, "{dump}");
+    assert_eq!(stat(&stats, "jobs_done"), 4.0, "{dump}");
+    stop(handle);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn lru_eviction_under_a_tight_byte_budget() {
+    // probe: measure one cached entry's on-disk size with a roomy budget
+    let (probe, probe_dir) = start_server("probe", 256 << 20, 2);
+    let mut client = ServeClient::connect(probe.addr()).unwrap();
+    let spec_a = small_spec();
+    client.submit(&spec_a).unwrap();
+    let entry_bytes = stat(&client.stats().unwrap(), "used_bytes");
+    assert!(entry_bytes > 0.0, "cached snapshot must have nonzero size");
+    stop(probe);
+    let _ = std::fs::remove_dir_all(&probe_dir);
+
+    // a budget with room for one such entry but not two
+    let budget = (entry_bytes * 1.5) as u64;
+    let (handle, dir) = start_server("evict", budget, 2);
+    let mut client = ServeClient::connect(handle.addr()).unwrap();
+    let spec_b = JobSpec {
+        seed: spec_a.seed + 1,
+        ..spec_a.clone()
+    };
+    assert!(!client.submit(&spec_a).unwrap().hit);
+    assert!(!client.submit(&spec_b).unwrap().hit);
+    let stats = client.stats().unwrap();
+    let dump = stats.to_string();
+    assert!(stat(&stats, "evictions") >= 1.0, "admitting b must evict a: {dump}");
+    assert_eq!(stat(&stats, "entries"), 1.0, "{dump}");
+    // the survivor is warm; the evicted spec is cold again
+    assert!(client.submit(&spec_b).unwrap().hit, "b must have survived");
+    assert!(!client.submit(&spec_a).unwrap().hit, "a must have been evicted");
+    stop(handle);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn malformed_and_oversized_frames_are_rejected_loudly() {
+    let (handle, dir) = start_server("frames", 64 << 20, 1);
+    let mut buf = [0u8; 16];
+
+    // 24 bytes of garbage: a full-size header with a bad magic
+    let mut sock = TcpStream::connect(handle.addr()).unwrap();
+    sock.write_all(b"XXXXGARBAGE-NOT-A-FRAME!").unwrap();
+    sock.flush().unwrap();
+    let n = sock.read(&mut buf).unwrap_or(0);
+    assert_eq!(n, 0, "server must close a malformed connection without replying");
+    drop(sock);
+
+    // a valid header claiming a payload far beyond MAX_PAYLOAD_BYTES
+    let mut sock = TcpStream::connect(handle.addr()).unwrap();
+    let mut hdr = Vec::new();
+    hdr.extend_from_slice(b"NGS1");
+    hdr.push(WIRE_VERSION);
+    hdr.push(MsgType::SubmitJob as u8);
+    hdr.extend_from_slice(&0u16.to_le_bytes()); // reserved
+    hdr.extend_from_slice(&0u32.to_le_bytes()); // channel
+    hdr.extend_from_slice(&u32::MAX.to_le_bytes()); // payload_len: ~4 GiB
+    hdr.extend_from_slice(&0u64.to_le_bytes()); // seq
+    sock.write_all(&hdr).unwrap();
+    sock.flush().unwrap();
+    let n = sock.read(&mut buf).unwrap_or(0);
+    assert_eq!(n, 0, "server must reject an oversized frame before allocating");
+    drop(sock);
+
+    // the daemon survived both: a normal client still gets served
+    let mut client = ServeClient::connect(handle.addr()).unwrap();
+    assert!(!client.submit(&small_spec()).unwrap().hit);
+    let stats = client.stats().unwrap();
+    let dump = stats.to_string();
+    assert!(stat(&stats, "proto_errors") >= 2.0, "{dump}");
+    stop(handle);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn job_survives_client_disconnect_mid_run() {
+    let (handle, dir) = start_server("hangup", 64 << 20, 1);
+    let spec = small_spec();
+    {
+        // hand-rolled submit: send the job, wait for "running", hang up
+        let mut sock = TcpStream::connect(handle.addr()).unwrap();
+        let mut out = Vec::new();
+        let body = spec.to_json();
+        proto::send_json(&mut sock, &mut out, MsgType::SubmitJob, 0, 0, &body).unwrap();
+        let mut payload = Vec::new();
+        let hdr = read_frame(&mut sock, &mut payload).unwrap();
+        assert_eq!(hdr.msg_type, MsgType::JobStatus);
+    } // <- connection dropped while the job is still running
+
+    // the daemon must finish and cache the orphaned job regardless
+    let mut client = ServeClient::connect(handle.addr()).unwrap();
+    for _ in 0..600 {
+        if stat(&client.stats().unwrap(), "jobs_done") >= 1.0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    let outcome = client.submit(&spec).unwrap();
+    assert!(outcome.hit, "the orphaned job's construction must still be cached");
+    let stats = client.stats().unwrap();
+    let dump = stats.to_string();
+    assert_eq!(stat(&stats, "constructions"), 1.0, "{dump}");
+    stop(handle);
+    let _ = std::fs::remove_dir_all(&dir);
+}

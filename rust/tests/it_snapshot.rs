@@ -310,3 +310,30 @@ fn corrupted_snapshot_is_rejected() {
     assert!(msg.contains("checksum"), "{msg}");
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+#[test]
+fn missing_rank_files_fail_with_a_count() {
+    let cfg = SimConfig::default();
+    let dir = tmp_dir("partial");
+    run_cluster_with_snapshot(
+        2,
+        &cfg,
+        &|sim: &mut Simulator| build_balanced(sim, &small_bal()),
+        0.0,
+        &dir,
+    )
+    .unwrap();
+    // simulate an interrupted save: rank 1's file is gone
+    std::fs::remove_file(dir.join(nestgpu::snapshot::rank_file_name(1))).unwrap();
+    let err = run_cluster_from_snapshot(&dir, 10.0).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("found 1 of 2 rank snapshots"), "{msg}");
+    assert!(msg.contains("missing rank(s) 1"), "{msg}");
+    // an empty directory names the expected file pattern instead
+    let empty = tmp_dir("empty");
+    std::fs::create_dir_all(&empty).unwrap();
+    let err = run_cluster_from_snapshot(&empty, 10.0).unwrap_err();
+    assert!(format!("{err:#}").contains("no rank snapshots"), "{err:#}");
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&empty);
+}
